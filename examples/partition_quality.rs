@@ -1,0 +1,60 @@
+//! Partition-quality explorer: run every partitioner in the suite over a
+//! chosen synthetic dataset and partition count, printing the Table II
+//! metrics plus the interior-vertex fraction that drives the inference
+//! engine's static cache (Fig. 15a).
+//!
+//! Run: `cargo run --release --example partition_quality -- --dataset twitter-s --parts 8`
+
+use glisp::cli::Args;
+use glisp::graph::hetero::build_partitions;
+use glisp::graph::{generator, metrics};
+use glisp::harness::{f2, f3, Table};
+use glisp::partition::{quality, AdaDNE, DistributedNE, EdgeCutLDG, Hash1D, Hash2D, Partitioner};
+use glisp::util::timer::Timer;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let name = args.get_str("dataset", "twitter-s");
+    let parts = args.get_usize("parts", 8);
+    let spec = generator::paper_datasets()
+        .into_iter()
+        .find(|d| d.name == name)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {name}"))?;
+    let g = generator::generate(&spec, 1);
+    let s = metrics::summarize(name, &g);
+    println!(
+        "dataset {}: {} vertices, {} edges, avg deg {:.1}, max deg {}, power-law: {}",
+        s.name, s.n, s.m, s.avg_degree, s.max_degree, s.power_law
+    );
+
+    let algos: Vec<Box<dyn Partitioner>> = vec![
+        Box::new(Hash1D),
+        Box::new(Hash2D),
+        Box::new(EdgeCutLDG::default()),
+        Box::new(DistributedNE::default()),
+        Box::new(AdaDNE::default()),
+    ];
+    let mut t = Table::new(
+        &format!("{name} x {parts} partitions"),
+        &["algorithm", "RF", "VB", "EB", "interior %", "time(s)"],
+    );
+    for p in algos {
+        let timer = Timer::start();
+        let ea = p.partition(&g, parts, 1);
+        let secs = timer.secs();
+        let q = quality(&g, &ea);
+        let pgs = build_partitions(&g, &ea.part_of_edge, parts);
+        let interior: usize = pgs.iter().map(|pg| pg.interior_count()).sum();
+        let total: usize = pgs.iter().map(|pg| pg.nv()).sum();
+        t.row(&[
+            p.name().into(),
+            f3(q.rf),
+            f3(q.vb),
+            f3(q.eb),
+            f2(100.0 * interior as f64 / total as f64),
+            f2(secs),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,217 @@
+"""AOT entry point: lower every L2 function to HLO *text* + a JSON manifest.
+
+Run once by `make artifacts`; Rust never imports Python. For each artifact we
+emit `artifacts/<name>.hlo.txt` plus an entry in `artifacts/manifest.json`
+recording the exact input order/shapes/dtypes and output arity, which is the
+only contract the Rust runtime needs (rust/src/runtime/manifest.rs).
+
+HLO text — NOT `.serialize()` — is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+# The two model configurations baked into the artifact set.
+TRAIN_CFG = dict(din=64, hidden=128, classes=8, batch=32, fanouts=(10, 5, 5))
+# Layerwise-inference encoder: 2-layer SAGE, embedding dim == hidden.
+ENC = dict(din=64, hidden=128, fanout=10, chunk=256)
+EMBED_BATCH = 64  # samplewise baseline seed batch
+DECODE_BATCH = 256
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(name, shape, dtype="f32"):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def _sds(spec):
+    dt = {"f32": F32, "i32": I32}[spec["dtype"]]
+    return jax.ShapeDtypeStruct(tuple(spec["shape"]), dt)
+
+
+class Builder:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.entries = []
+
+    def add(self, name, fn, inputs, meta=None):
+        """Lower fn(*inputs) and record the artifact."""
+        lowered = jax.jit(fn).lower(*[_sds(s) for s in inputs])
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        out_avals = jax.eval_shape(fn, *[_sds(s) for s in inputs])
+        if not isinstance(out_avals, (tuple, list)):
+            out_avals = (out_avals,)
+        outputs = [
+            {"shape": list(a.shape), "dtype": "f32" if a.dtype == F32 else str(a.dtype)}
+            for a in jax.tree_util.tree_leaves(out_avals)
+        ]
+        self.entries.append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": inputs,
+                "outputs": outputs,
+                "meta": meta or {},
+            }
+        )
+        print(f"  [aot] {name}: {len(inputs)} inputs -> {len(outputs)} outputs, "
+              f"{len(text)//1024} KiB hlo")
+
+    def finish(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump({"artifacts": self.entries}, f, indent=1)
+        print(f"  [aot] wrote {path} ({len(self.entries)} artifacts)")
+
+
+def level_input_specs(cfg: M.ModelConfig):
+    """xs + masks specs for a tree-format sample of cfg's geometry."""
+    sizes = cfg.level_sizes()
+    xs = [_spec(f"x{k}", (n, cfg.din)) for k, n in enumerate(sizes)]
+    masks = [_spec(f"mask{k+1}", (sizes[k + 1],)) for k in range(cfg.layers)]
+    return xs, masks
+
+
+def add_train_artifacts(b: Builder, kind: str):
+    cfg = M.ModelConfig(kind=kind, **TRAIN_CFG)
+    pspecs = [_spec(n, s) for n, s in M.param_specs(cfg)]
+    xs, masks = level_input_specs(cfg)
+    labels = _spec("labels", (cfg.batch,), "i32")
+    lr = _spec("lr", (1,))
+    np_, nx, nm = len(pspecs), len(xs), len(masks)
+    meta = {
+        "kind": kind, "din": cfg.din, "hidden": cfg.hidden,
+        "classes": cfg.classes, "batch": cfg.batch,
+        "fanouts": list(cfg.fanouts), "n_params": np_,
+    }
+
+    def tstep(*args):
+        ps = list(args[:np_])
+        xs_ = list(args[np_ : np_ + nx])
+        ms_ = list(args[np_ + nx : np_ + nx + nm])
+        lab = args[np_ + nx + nm]
+        lr_ = args[np_ + nx + nm + 1][0]
+        loss, new_ps = M.train_step(cfg, ps, xs_, ms_, lab, lr_)
+        return (jnp.reshape(loss, (1,)), *new_ps)
+
+    b.add(f"{kind}_train", tstep, pspecs + xs + masks + [labels, lr], meta)
+
+    def eval_fn(*args):
+        ps = list(args[:np_])
+        xs_ = list(args[np_ : np_ + nx])
+        ms_ = list(args[np_ + nx :])
+        return M.forward(cfg, ps, xs_, ms_, use_kernel=True)
+
+    b.add(f"{kind}_eval", eval_fn, pspecs + xs + masks, meta)
+
+    if kind == "sage":
+        # Raw-gradient artifact for synchronous multi-trainer data parallelism
+        # (Fig. 12): each trainer computes grads, the coordinator averages.
+        def gstep(*args):
+            ps = list(args[:np_])
+            xs_ = list(args[np_ : np_ + nx])
+            ms_ = list(args[np_ + nx : np_ + nx + nm])
+            lab = args[np_ + nx + nm]
+            loss, grads = M.grad_step(cfg, ps, xs_, ms_, lab)
+            return (jnp.reshape(loss, (1,)), *grads)
+
+        b.add("sage_grad", gstep, pspecs + xs + masks + [labels], meta)
+
+
+def add_inference_artifacts(b: Builder):
+    d, h, f, n = ENC["din"], ENC["hidden"], ENC["fanout"], ENC["chunk"]
+    # Layer slices of the 2-layer SAGE encoder (layerwise inference engine).
+    for j, (di, do, relu) in enumerate([(d, h, True), (h, h, False)]):
+        inputs = [
+            _spec("h_self", (n, di)),
+            _spec("h_neigh", (n, f, di)),
+            _spec("mask", (n, f)),
+            _spec("w_self", (di, do)),
+            _spec("w_neigh", (di, do)),
+            _spec("b", (do,)),
+        ]
+        b.add(
+            f"sage_infer_layer{j}",
+            lambda hs, hn, m, ws, wn, bb, relu=relu: M.sage_layer_slice(
+                hs, hn, m, ws, wn, bb, relu
+            ),
+            inputs,
+            {"layer": j, "relu": relu, "chunk": n, "fanout": f,
+             "din": di, "dout": do},
+        )
+
+    # Samplewise-inference baseline: full 2-hop tree forward to embeddings.
+    ecfg = M.ModelConfig(kind="sage", din=d, hidden=h, classes=1,
+                         batch=EMBED_BATCH, fanouts=(f, f))
+    enc_pspecs = [_spec(nm, s) for nm, s in M.param_specs(ecfg)[:-2]]
+    xs, masks = level_input_specs(ecfg)
+    np_, nx = len(enc_pspecs), len(xs)
+
+    def embed(*args):
+        ps = list(args[:np_]) + [jnp.zeros((h, 1), F32), jnp.zeros((1,), F32)]
+        xs_ = list(args[np_ : np_ + nx])
+        ms_ = list(args[np_ + nx :])
+        return M.embed_forward(ecfg, ps, xs_, ms_)
+
+    b.add("sage_embed", embed, enc_pspecs + xs + masks,
+          {"batch": EMBED_BATCH, "fanouts": [f, f], "din": d, "hidden": h})
+
+    # Link-prediction decoder over cached endpoint embeddings.
+    inputs = [
+        _spec("emb_u", (DECODE_BATCH, h)),
+        _spec("emb_v", (DECODE_BATCH, h)),
+        _spec("w1", (2 * h, h)),
+        _spec("b1", (h,)),
+        _spec("w2", (h, 1)),
+        _spec("b2", (1,)),
+    ]
+    b.add("link_decode", M.link_decode, inputs,
+          {"batch": DECODE_BATCH, "hidden": h})
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="output dir")
+    ap.add_argument("--only", default=None, help="comma list of artifact prefixes")
+    args = ap.parse_args()
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+    b = Builder(out_dir)
+    only = args.only.split(",") if args.only else None
+
+    def want(prefix):
+        return only is None or any(prefix.startswith(o) for o in only)
+
+    for kind in ("sage", "gcn", "gat"):
+        if want(kind):
+            add_train_artifacts(b, kind)
+    if want("infer") or only is None:
+        add_inference_artifacts(b)
+    b.finish()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Layer-1 Pallas kernel: fused masked GAT attention-softmax-aggregate.
+
+Computes, per seed row, attention over the fanout-padded neighbor tile plus
+a self loop (semantics = ref.gat_attn_ref):
+
+    e_j    = leaky_relu(a_s·hw_self + a_n·hw_neigh_j)   (masked to -inf)
+    e_loop = leaky_relu(a_s·hw_self + a_n·hw_self)
+    alpha  = softmax([e_loop, e_1..e_F])
+    out    = alpha_loop·hw_self + Σ_j alpha_j·hw_neigh_j
+
+The softmax is computed with the usual max-subtraction inside the VMEM tile,
+so the kernel performs a single pass over the [BN, F, H] neighbor tile. The
+scores are VPU reductions against the broadcast attention vectors; the
+weighted sum reduces the fanout axis in-register. Used on the GAT
+forward/eval path (no VJP: the GAT train step uses the jnp reference, and
+pytest pins kernel == ref).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BN = 32
+NEG_SLOPE = 0.2
+
+
+def _leaky_relu(x):
+    return jnp.where(x >= 0, x, NEG_SLOPE * x)
+
+
+def _kernel(hw_self_ref, hw_neigh_ref, mask_ref, a_s_ref, a_n_ref, o_ref):
+    hw_self = hw_self_ref[...]      # [BN, H]
+    hw_neigh = hw_neigh_ref[...]    # [BN, F, H]
+    mask = mask_ref[...]            # [BN, F]
+    a_s = a_s_ref[...]              # [H]
+    a_n = a_n_ref[...]              # [H]
+
+    e_self_part = hw_self @ a_s                       # [BN]
+    e_nbr = _leaky_relu(e_self_part[:, None] + hw_neigh @ a_n)  # [BN, F]
+    e_loop = _leaky_relu(e_self_part + hw_self @ a_n)           # [BN]
+    neg = jnp.finfo(jnp.float32).min
+    e_nbr = jnp.where(mask > 0, e_nbr, neg)
+
+    m = jnp.maximum(jnp.max(e_nbr, axis=1), e_loop)   # [BN]
+    w_loop = jnp.exp(e_loop - m)                      # [BN]
+    w_nbr = jnp.exp(e_nbr - m[:, None]) * mask        # [BN, F]
+    denom = w_loop + jnp.sum(w_nbr, axis=1)           # [BN]
+    out = (
+        w_loop[:, None] * hw_self
+        + jnp.sum(w_nbr[..., None] * hw_neigh, axis=1)
+    ) / denom[:, None]
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def gat_attn(hw_self, hw_neigh, mask, a_self, a_neigh):
+    """Fused single-head GAT attention; see module docstring."""
+    n, h = hw_self.shape
+    f = hw_neigh.shape[1]
+    bn = BN if n % BN == 0 else n
+    return pl.pallas_call(
+        _kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, h), lambda i: (i, 0)),
+            pl.BlockSpec((bn, f, h), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bn, f), lambda i: (i, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h), hw_self.dtype),
+        interpret=True,
+    )(hw_self, hw_neigh, mask, a_self, a_neigh)

@@ -1,0 +1,78 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has its semantics defined here first;
+pytest (python/tests/) sweeps shapes/dtypes with hypothesis and asserts
+allclose between the kernel (interpret=True) and these references. The L2
+models also reuse these functions directly for the GCN/GAT train paths,
+so "kernel == ref" is the single correctness contract of Layer 1.
+
+Conventions (the "tree format", DESIGN.md §6):
+  h_self  : [N, D]     node features of a level
+  h_neigh : [N, F, D]  fanout-padded neighbor features (next level reshaped)
+  mask    : [N, F]     1.0 for a real neighbor, 0.0 for padding
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def masked_mean(h_neigh, mask):
+    """Mean over the fanout axis, counting only real neighbors.
+
+    Vertices with zero sampled neighbors get a zero vector (the samplers
+    emit an all-zero mask row for isolated vertices).
+    """
+    m = mask[..., None]
+    cnt = jnp.maximum(jnp.sum(mask, axis=-1, keepdims=True), 1.0)
+    return jnp.sum(h_neigh * m, axis=1) / cnt
+
+
+def sage_agg_ref(h_self, h_neigh, mask, w_self, w_neigh, b):
+    """GraphSAGE-mean aggregation + dual projection (no activation).
+
+    out = h_self @ W_s + masked_mean(h_neigh) @ W_n + b
+    """
+    agg = masked_mean(h_neigh, mask)
+    return h_self @ w_self + agg @ w_neigh + b
+
+
+def gcn_agg_ref(h_self, h_neigh, mask, w, b):
+    """GCN-style aggregation: mean over {self} ∪ neighbors, then project."""
+    cnt = jnp.sum(mask, axis=-1, keepdims=True) + 1.0
+    s = h_self + jnp.sum(h_neigh * mask[..., None], axis=1)
+    return (s / cnt) @ w + b
+
+
+def gat_attn_ref(hw_self, hw_neigh, mask, a_self, a_neigh, negative_slope=0.2):
+    """Single-head GAT attention over fanout-padded neighbors (+ self loop).
+
+    hw_* are features already projected by the layer weight W.
+    score_j    = leaky_relu(a_s·hw_self + a_n·hw_neigh_j)
+    score_self = leaky_relu(a_s·hw_self + a_n·hw_self)
+    alpha      = softmax over {self} ∪ masked neighbors
+    out        = alpha_self * hw_self + Σ_j alpha_j * hw_neigh_j
+    """
+    e_self_part = hw_self @ a_self  # [N]
+    e_nbr = jax.nn.leaky_relu(
+        e_self_part[:, None] + hw_neigh @ a_neigh, negative_slope
+    )  # [N, F]
+    e_loop = jax.nn.leaky_relu(e_self_part + hw_self @ a_neigh, negative_slope)
+    neg = jnp.finfo(hw_self.dtype).min
+    e_nbr = jnp.where(mask > 0, e_nbr, neg)
+    e_all = jnp.concatenate([e_loop[:, None], e_nbr], axis=1)  # [N, 1+F]
+    alpha = jax.nn.softmax(e_all, axis=1)
+    h_all = jnp.concatenate([hw_self[:, None, :], hw_neigh], axis=1)
+    return jnp.sum(alpha[..., None] * h_all, axis=1)
+
+
+def sage_agg_bwd_inputs_ref(g, mask, w_self, w_neigh):
+    """Reference for the input-side VJP of sage_agg.
+
+    d h_self  = g @ W_s^T
+    d h_neigh = (g @ W_n^T / cnt)[:, None, :] * mask[..., None]
+    """
+    d_self = g @ w_self.T
+    cnt = jnp.maximum(jnp.sum(mask, axis=-1, keepdims=True), 1.0)
+    d_agg = g @ w_neigh.T / cnt  # [N, D]
+    d_neigh = d_agg[:, None, :] * mask[..., None]
+    return d_self, d_neigh

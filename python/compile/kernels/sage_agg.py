@@ -1,0 +1,133 @@
+"""Layer-1 Pallas kernel: fused GraphSAGE-mean aggregation + dual projection.
+
+This is the compute hot-spot of GLISP's training and layerwise-inference
+paths: for every level of the tree-format subgraph,
+
+    out = h_self @ W_s + masked_mean(h_neigh) @ W_n + b
+
+The kernel fuses the masked fanout reduction with both projections so the
+[N, F, D] neighbor tensor is read from HBM exactly once and never
+materializes an intermediate [N, D] aggregate in HBM.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles the seed axis
+N into blocks of BN rows; each grid step holds one [BN, F, D] neighbor tile,
+the full [D, H] weight panels and the [BN, H] output tile in VMEM. The
+fanout reduction is a VPU masked sum over axis 1; the two projections are
+MXU matmuls. interpret=True is mandatory on this image (CPU PJRT cannot run
+Mosaic custom-calls), so wall-clock here is meaningless — the §Perf VMEM /
+MXU numbers in DESIGN.md are derived from these BlockSpecs.
+
+A custom VJP makes the kernel trainable: the input-side gradients (the
+large tensors) run as a second Pallas kernel; the weight-side gradients are
+cross-block reductions and stay in jnp, where XLA emits them as plain
+matmuls over the same tiles.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Seed-axis block size. Every level size the Rust samplers emit is a
+# multiple of 32 (level sizes are B·∏f with B a multiple of 32).
+BN = 32
+
+
+def _fwd_kernel(h_self_ref, h_neigh_ref, mask_ref, ws_ref, wn_ref, b_ref, o_ref):
+    h_self = h_self_ref[...]            # [BN, D]
+    h_neigh = h_neigh_ref[...]          # [BN, F, D]
+    mask = mask_ref[...]                # [BN, F]
+    cnt = jnp.maximum(jnp.sum(mask, axis=-1, keepdims=True), 1.0)
+    agg = jnp.sum(h_neigh * mask[..., None], axis=1) / cnt  # [BN, D]
+    out = (
+        jnp.dot(h_self, ws_ref[...], preferred_element_type=jnp.float32)
+        + jnp.dot(agg, wn_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...]
+    )
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def _bwd_kernel(g_ref, mask_ref, ws_ref, wn_ref, d_self_ref, d_neigh_ref):
+    g = g_ref[...]                      # [BN, H]
+    mask = mask_ref[...]                # [BN, F]
+    d_self_ref[...] = jnp.dot(
+        g, ws_ref[...].T, preferred_element_type=jnp.float32
+    ).astype(d_self_ref.dtype)
+    cnt = jnp.maximum(jnp.sum(mask, axis=-1, keepdims=True), 1.0)
+    d_agg = jnp.dot(g, wn_ref[...].T, preferred_element_type=jnp.float32) / cnt
+    d_neigh_ref[...] = (d_agg[:, None, :] * mask[..., None]).astype(
+        d_neigh_ref.dtype
+    )
+
+
+def _block(n):
+    """Seed-axis block size: BN when divisible, else the whole axis."""
+    return BN if n % BN == 0 else n
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def sage_agg(h_self, h_neigh, mask, w_self, w_neigh, b):
+    """Fused SAGE-mean layer. See module docstring; semantics = ref.sage_agg_ref."""
+    out, _ = _sage_agg_fwd(h_self, h_neigh, mask, w_self, w_neigh, b)
+    return out
+
+
+def _sage_agg_fwd(h_self, h_neigh, mask, w_self, w_neigh, b):
+    n, d = h_self.shape
+    f = h_neigh.shape[1]
+    h = w_self.shape[1]
+    bn = _block(n)
+    out = pl.pallas_call(
+        _fwd_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((bn, f, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bn, f), lambda i: (i, 0)),
+            pl.BlockSpec((d, h), lambda i: (0, 0)),
+            pl.BlockSpec((d, h), lambda i: (0, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h), h_self.dtype),
+        interpret=True,
+    )(h_self, h_neigh, mask, w_self, w_neigh, b)
+    return out, (h_self, h_neigh, mask, w_self, w_neigh)
+
+
+def _sage_agg_bwd(res, g):
+    h_self, h_neigh, mask, w_self, w_neigh = res
+    n, d = h_self.shape
+    f = h_neigh.shape[1]
+    h = w_self.shape[1]
+    bn = _block(n)
+    d_self, d_neigh = pl.pallas_call(
+        _bwd_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, h), lambda i: (i, 0)),
+            pl.BlockSpec((bn, f), lambda i: (i, 0)),
+            pl.BlockSpec((d, h), lambda i: (0, 0)),
+            pl.BlockSpec((d, h), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((bn, f, d), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), h_self.dtype),
+            jax.ShapeDtypeStruct((n, f, d), h_neigh.dtype),
+        ],
+        interpret=True,
+    )(g, mask, w_self, w_neigh)
+    # Weight-side grads are reductions across grid blocks: leave them to XLA.
+    cnt = jnp.maximum(jnp.sum(mask, axis=-1, keepdims=True), 1.0)
+    agg = jnp.sum(h_neigh * mask[..., None], axis=1) / cnt
+    d_ws = h_self.T @ g
+    d_wn = agg.T @ g
+    d_b = jnp.sum(g, axis=0)
+    return d_self, d_neigh, None, d_ws, d_wn, d_b
+
+
+sage_agg.defvjp(_sage_agg_fwd, _sage_agg_bwd)

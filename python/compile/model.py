@@ -1,0 +1,245 @@
+"""Layer-2: GLISP's GNN models as JAX functions over tree-format subgraphs.
+
+Three message-passing models from the paper's evaluation — GCN [Kipf &
+Welling], GraphSAGE-mean [Hamilton et al.] and GAT [Velickovic et al.] — plus
+the layerwise-inference slices and the link-prediction decoder used by the
+graph inference engine. Everything here is lowered ONCE by aot.py to HLO
+text; at runtime the Rust coordinator feeds these functions fixed-shape
+tensors produced by the Gather-Apply sampling service.
+
+Tree format (DESIGN.md §6): a K-hop sample with seed batch B and fanouts
+[f1..fK] is K+1 per-level feature arrays xs[k] of shape [n_k, D] with
+n_0 = B, n_k = n_{k-1}·f_k, plus per-level masks (mask[k] in {0,1}^{n_k},
+k ≥ 1). Neighbors of level-k node i are rows [i·f_{k+1}, (i+1)·f_{k+1}) of
+level k+1. Padding subtrees carry mask 0 and cannot influence real nodes.
+
+The GraphSAGE path runs through the Pallas kernel `sage_agg` (with its
+custom VJP) in both training and inference; GCN/GAT train on the jnp
+reference math, and the GAT eval path exercises the `gat_attn` kernel.
+pytest pins kernel == reference so the two paths are interchangeable.
+"""
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.sage_agg import sage_agg
+from compile.kernels.gat_attn import gat_attn
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Static configuration baked into each AOT artifact."""
+
+    kind: str = "sage"  # "gcn" | "sage" | "gat"
+    din: int = 64
+    hidden: int = 128
+    classes: int = 8
+    batch: int = 32
+    fanouts: Tuple[int, ...] = (10, 5, 5)
+    heads: int = 4  # GAT only; hidden % heads == 0
+    lr: float = 0.0  # 0 → lr passed as a runtime input
+
+    @property
+    def layers(self) -> int:
+        return len(self.fanouts)
+
+    def level_sizes(self) -> List[int]:
+        sizes = [self.batch]
+        for f in self.fanouts:
+            sizes.append(sizes[-1] * f)
+        return sizes
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction. Params are a flat list of arrays with a parallel
+# spec list [(name, shape)], so the Rust side can address them by manifest
+# order without any pytree machinery.
+# ---------------------------------------------------------------------------
+
+
+def _glorot(key, shape):
+    fan_in, fan_out = shape[0], shape[-1]
+    limit = math.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, F32, -limit, limit)
+
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Flat (name, shape) list for cfg's model, in artifact input order."""
+    specs = []
+    d_in = cfg.din
+    for j in range(cfg.layers):
+        d_out = cfg.hidden
+        p = f"l{j}_"
+        if cfg.kind == "sage":
+            specs += [
+                (p + "w_self", (d_in, d_out)),
+                (p + "w_neigh", (d_in, d_out)),
+                (p + "b", (d_out,)),
+            ]
+        elif cfg.kind == "gcn":
+            specs += [(p + "w", (d_in, d_out)), (p + "b", (d_out,))]
+        elif cfg.kind == "gat":
+            hd = d_out // cfg.heads
+            specs += [
+                (p + "w", (d_in, d_out)),
+                (p + "a_self", (cfg.heads, hd)),
+                (p + "a_neigh", (cfg.heads, hd)),
+                (p + "b", (d_out,)),
+            ]
+        else:
+            raise ValueError(cfg.kind)
+        d_in = d_out
+    specs += [
+        ("head_w", (cfg.hidden, cfg.classes)),
+        ("head_b", (cfg.classes,)),
+    ]
+    return specs
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> List[jnp.ndarray]:
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("b"):
+            params.append(jnp.zeros(shape, F32))
+        else:
+            params.append(_glorot(sub, shape))
+    return params
+
+
+def _layer_param_count(cfg: ModelConfig) -> int:
+    return {"sage": 3, "gcn": 2, "gat": 4}[cfg.kind]
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _gat_layer(h_self, h_neigh, mask, w, a_s, a_n, b, heads, use_kernel):
+    """Multi-head GAT layer over a fanout block; heads are H-dim chunks."""
+    n, f = mask.shape
+    hw_self = h_self @ w  # [n, H]
+    hw_neigh = h_neigh.reshape(n * f, -1) @ w  # [n·f, H]
+    hd = hw_self.shape[1] // heads
+    outs = []
+    for hidx in range(heads):
+        sl = slice(hidx * hd, (hidx + 1) * hd)
+        hs = hw_self[:, sl]
+        hn = hw_neigh[:, sl].reshape(n, f, hd)
+        if use_kernel:
+            outs.append(gat_attn(hs, hn, mask, a_s[hidx], a_n[hidx]))
+        else:
+            outs.append(ref.gat_attn_ref(hs, hn, mask, a_s[hidx], a_n[hidx]))
+    return jnp.concatenate(outs, axis=1) + b
+
+
+def forward(cfg: ModelConfig, params, xs, masks, use_kernel: bool = True):
+    """Seed logits [B, C] for a K-layer model over the tree-format sample.
+
+    xs:    K+1 level arrays, xs[k] of shape [n_k, din]
+    masks: K level masks,   masks[k] of shape [n_{k+1}] (neighbor validity)
+    """
+    npl = _layer_param_count(cfg)
+    h = list(xs)
+    for j in range(cfg.layers):
+        lp = params[j * npl : (j + 1) * npl]
+        depth = cfg.layers - j  # levels 0..depth-1 get new reps
+        new_h = []
+        for lvl in range(depth):
+            n = h[lvl].shape[0]
+            f = cfg.fanouts[lvl]
+            neigh = h[lvl + 1].reshape(n, f, h[lvl + 1].shape[-1])
+            m = masks[lvl].reshape(n, f)
+            if cfg.kind == "sage":
+                z = sage_agg(h[lvl], neigh, m, *lp)
+            elif cfg.kind == "gcn":
+                z = ref.gcn_agg_ref(h[lvl], neigh, m, *lp)
+            else:
+                z = _gat_layer(h[lvl], neigh, m, *lp, cfg.heads, use_kernel)
+            if j < cfg.layers - 1:
+                z = jax.nn.relu(z)
+            new_h.append(z)
+        h = new_h
+    return h[0] @ params[-2] + params[-1]
+
+
+def embed_forward(cfg: ModelConfig, params, xs, masks):
+    """Like forward() but returns the final hidden embedding [B, hidden]
+    (no classification head) — the samplewise-inference baseline."""
+    head_less = params  # head params are simply unused
+    npl = _layer_param_count(cfg)
+    h = list(xs)
+    for j in range(cfg.layers):
+        lp = head_less[j * npl : (j + 1) * npl]
+        depth = cfg.layers - j
+        new_h = []
+        for lvl in range(depth):
+            n = h[lvl].shape[0]
+            f = cfg.fanouts[lvl]
+            neigh = h[lvl + 1].reshape(n, f, h[lvl + 1].shape[-1])
+            m = masks[lvl].reshape(n, f)
+            z = sage_agg(h[lvl], neigh, m, *lp)
+            if j < cfg.layers - 1:
+                z = jax.nn.relu(z)
+            new_h.append(z)
+        h = new_h
+    return h[0]
+
+
+def sage_layer_slice(h_self, h_neigh, mask, w_self, w_neigh, b, relu: bool):
+    """One GNN slice of the layerwise inference engine (paper §III-D):
+    consumes layer k-1 embeddings of a vertex block + its one-hop sampled
+    neighbors, produces layer k embeddings for the block."""
+    z = sage_agg(h_self, h_neigh, mask, w_self, w_neigh, b)
+    return jax.nn.relu(z) if relu else z
+
+
+def link_decode(emb_u, emb_v, w1, b1, w2, b2):
+    """Edge-score decoder: sigmoid(relu([u‖v]·W1 + b1)·w2 + b2) → [B]."""
+    x = jnp.concatenate([emb_u, emb_v], axis=1)
+    hdn = jax.nn.relu(x @ w1 + b1)
+    return jax.nn.sigmoid(hdn @ w2 + b2)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Training step
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def train_step(cfg: ModelConfig, params, xs, masks, labels, lr):
+    """One SGD step; returns (loss, new_params). GCN/GAT differentiate the
+    jnp reference math; SAGE differentiates through the Pallas custom VJP."""
+
+    def loss_fn(ps):
+        logits = forward(cfg, ps, xs, masks, use_kernel=False)
+        return cross_entropy(logits, labels)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    new_params = [p - lr * g for p, g in zip(params, grads)]
+    return loss, new_params
+
+
+def grad_step(cfg: ModelConfig, params, xs, masks, labels):
+    """Loss + raw gradients (for the multi-trainer synchronous data-parallel
+    path, where the Rust coordinator averages gradients across trainers)."""
+
+    def loss_fn(ps):
+        logits = forward(cfg, ps, xs, masks, use_kernel=False)
+        return cross_entropy(logits, labels)
+
+    return jax.value_and_grad(loss_fn)(params)

@@ -1,0 +1,193 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the CORE numeric signal of the repo: the Rust runtime executes HLO
+lowered from these kernels, so kernel == ref (swept over shapes/dtypes by
+hypothesis) transfers correctness to the whole stack.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.sage_agg import sage_agg, BN
+from compile.kernels.gat_attn import gat_attn
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def _mask(key, n, f, p_real=0.7, ensure_row=False):
+    m = (jax.random.uniform(key, (n, f)) < p_real).astype(jnp.float32)
+    if ensure_row:
+        m = m.at[:, 0].set(1.0)
+    return m
+
+
+def _tols(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=1e-5, atol=1e-5
+    )
+
+
+shape_strategy = st.tuples(
+    st.sampled_from([1, 2, 32, 64, 96]),   # N (32-multiples + ragged tails)
+    st.integers(min_value=1, max_value=17),  # F
+    st.sampled_from([4, 8, 64]),             # D
+    st.sampled_from([8, 16, 128]),           # H
+)
+
+
+class TestSageAgg:
+    @settings(max_examples=25, deadline=None)
+    @given(shape_strategy, st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, shape, seed):
+        n, f, d, h = shape
+        ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+        hs = _rand(ks[0], (n, d), jnp.float32)
+        hn = _rand(ks[1], (n, f, d), jnp.float32)
+        m = _mask(ks[2], n, f)
+        ws = _rand(ks[3], (d, h), jnp.float32)
+        wn = _rand(ks[4], (d, h), jnp.float32)
+        b = _rand(ks[5], (h,), jnp.float32)
+        out = sage_agg(hs, hn, m, ws, wn, b)
+        exp = ref.sage_agg_ref(hs, hn, m, ws, wn, b)
+        np.testing.assert_allclose(out, exp, **_tols(jnp.float32))
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(0), 6)
+        n, f, d, h = 64, 10, 16, 32
+        hs = _rand(ks[0], (n, d), dtype)
+        hn = _rand(ks[1], (n, f, d), dtype)
+        m = _mask(ks[2], n, f)
+        ws = _rand(ks[3], (d, h), dtype)
+        wn = _rand(ks[4], (d, h), dtype)
+        b = _rand(ks[5], (h,), dtype)
+        out = sage_agg(hs, hn, m.astype(dtype), ws, wn, b)
+        exp = ref.sage_agg_ref(
+            hs.astype(jnp.float32), hn.astype(jnp.float32), m,
+            ws.astype(jnp.float32), wn.astype(jnp.float32),
+            b.astype(jnp.float32),
+        )
+        np.testing.assert_allclose(
+            out.astype(jnp.float32), exp, **_tols(dtype)
+        )
+
+    def test_all_padding_rows_are_zero_aggregate(self):
+        """Isolated vertices (all-zero mask) must aggregate to b + h·W_s only."""
+        n, f, d, h = 32, 4, 8, 8
+        hs = jnp.ones((n, d))
+        hn = 100.0 * jnp.ones((n, f, d))  # must NOT leak into the output
+        m = jnp.zeros((n, f))
+        ws = jnp.eye(d, h)
+        wn = jnp.eye(d, h)
+        b = jnp.zeros((h,))
+        out = sage_agg(hs, hn, m, ws, wn, b)
+        np.testing.assert_allclose(out, hs @ ws, rtol=1e-6)
+
+    def test_grid_blocking_equals_single_block(self):
+        """N=96 (3 grid blocks) must agree with the same rows run block-free."""
+        ks = jax.random.split(jax.random.PRNGKey(7), 6)
+        n, f, d, h = 3 * BN, 6, 8, 8
+        hs = _rand(ks[0], (n, d), jnp.float32)
+        hn = _rand(ks[1], (n, f, d), jnp.float32)
+        m = _mask(ks[2], n, f)
+        ws = _rand(ks[3], (d, h), jnp.float32)
+        wn = _rand(ks[4], (d, h), jnp.float32)
+        b = _rand(ks[5], (h,), jnp.float32)
+        full = sage_agg(hs, hn, m, ws, wn, b)
+        for i in range(3):
+            sl = slice(i * BN, (i + 1) * BN)
+            part = sage_agg(hs[sl], hn[sl], m[sl], ws, wn, b)
+            np.testing.assert_allclose(full[sl], part, rtol=1e-5, atol=1e-5)
+
+
+class TestSageAggVjp:
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_input_grads_match_ref(self, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+        n, f, d, h = 64, 7, 8, 16
+        hs = _rand(ks[0], (n, d), jnp.float32)
+        hn = _rand(ks[1], (n, f, d), jnp.float32)
+        m = _mask(ks[2], n, f)
+        ws = _rand(ks[3], (d, h), jnp.float32)
+        wn = _rand(ks[4], (d, h), jnp.float32)
+        b = _rand(ks[5], (h,), jnp.float32)
+
+        def loss_k(hs, hn, ws, wn, b):
+            return jnp.sum(jnp.tanh(sage_agg(hs, hn, m, ws, wn, b)))
+
+        def loss_r(hs, hn, ws, wn, b):
+            return jnp.sum(jnp.tanh(ref.sage_agg_ref(hs, hn, m, ws, wn, b)))
+
+        gk = jax.grad(loss_k, argnums=(0, 1, 2, 3, 4))(hs, hn, ws, wn, b)
+        gr = jax.grad(loss_r, argnums=(0, 1, 2, 3, 4))(hs, hn, ws, wn, b)
+        for a, e in zip(gk, gr):
+            np.testing.assert_allclose(a, e, rtol=1e-4, atol=1e-4)
+
+    def test_bwd_kernel_matches_bwd_ref_directly(self):
+        ks = jax.random.split(jax.random.PRNGKey(3), 4)
+        n, f, d, h = 32, 5, 8, 16
+        g = _rand(ks[0], (n, h), jnp.float32)
+        m = _mask(ks[1], n, f)
+        ws = _rand(ks[2], (d, h), jnp.float32)
+        wn = _rand(ks[3], (d, h), jnp.float32)
+        from compile.kernels.sage_agg import _sage_agg_fwd, _sage_agg_bwd
+
+        hs = _rand(ks[0], (n, d), jnp.float32)
+        hn = _rand(ks[1], (n, f, d), jnp.float32)
+        _, res = _sage_agg_fwd(hs, hn, m, ws, wn, jnp.zeros(h))
+        d_self, d_neigh = _sage_agg_bwd(res, g)[:2]
+        e_self, e_neigh = ref.sage_agg_bwd_inputs_ref(g, m, ws, wn)
+        np.testing.assert_allclose(d_self, e_self, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(d_neigh, e_neigh, rtol=1e-5, atol=1e-5)
+
+
+class TestGatAttn:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        st.sampled_from([1, 32, 64]),
+        st.integers(1, 12),
+        st.sampled_from([8, 16, 32]),
+        st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, n, f, h, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+        hw_s = _rand(ks[0], (n, h), jnp.float32)
+        hw_n = _rand(ks[1], (n, f, h), jnp.float32)
+        m = _mask(ks[2], n, f)
+        a_s = _rand(ks[3], (h,), jnp.float32)
+        a_n = _rand(ks[4], (h,), jnp.float32)
+        out = gat_attn(hw_s, hw_n, m, a_s, a_n)
+        exp = ref.gat_attn_ref(hw_s, hw_n, m, a_s, a_n)
+        np.testing.assert_allclose(out, exp, rtol=1e-4, atol=1e-4)
+
+    def test_all_masked_reduces_to_self_loop(self):
+        """With every neighbor masked, attention collapses onto the self loop."""
+        n, f, h = 32, 4, 8
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        hw_s = _rand(ks[0], (n, h), jnp.float32)
+        hw_n = 1e6 * jnp.ones((n, f, h))
+        m = jnp.zeros((n, f))
+        a_s = _rand(ks[1], (h,), jnp.float32)
+        a_n = _rand(ks[2], (h,), jnp.float32)
+        out = gat_attn(hw_s, hw_n, m, a_s, a_n)
+        np.testing.assert_allclose(out, hw_s, rtol=1e-4, atol=1e-4)
+
+    def test_attention_weights_sum_to_one(self):
+        """Uniform features ⇒ output == that feature row (softmax sums to 1)."""
+        n, f, h = 32, 6, 8
+        row = jnp.arange(h, dtype=jnp.float32)
+        hw_s = jnp.tile(row, (n, 1))
+        hw_n = jnp.tile(row, (n, f, 1))
+        m = jnp.ones((n, f))
+        out = gat_attn(hw_s, hw_n, m, jnp.ones(h), jnp.ones(h))
+        np.testing.assert_allclose(out, hw_s, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,83 @@
+//! Fig. 14: (a) embedding-retrieval speedup of the caching system per
+//! reorder algorithm vs reading every chunk "remotely", and (b) total
+//! chunks read. NS / DS / PS / PDS — the paper's four sort keys.
+//! Expected shape: PDS reads the fewest chunks and wins; DS < PS (DS
+//! discards the partitioner's locality).
+
+use glisp::coordinator::FeatureStore;
+use glisp::graph::generator;
+use glisp::graph::reorder::ReorderAlgo;
+use glisp::harness::{f2, f3, ix, Table};
+use glisp::inference::chunk_store::COST_REMOTE;
+use glisp::inference::{init_encoder_params, EngineConfig, LayerwiseEngine};
+use glisp::partition::{AdaDNE, Partitioner};
+use glisp::runtime::Runtime;
+use glisp::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let Some(art) = glisp::test_artifacts_dir() else {
+        println!("fig14_reorder_cache: artifacts not built; skipping");
+        return Ok(());
+    };
+    println!("== Fig. 14 — caching-system speedup & chunk reads per reorder ==");
+    let n = std::env::var("GLISP_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(6_000usize);
+    let mut rng = Rng::new(1);
+    let g = generator::chung_lu(n, n * 7, 2.1, &mut rng);
+    let ea = AdaDNE::default().partition(&g, 4, 1);
+
+    let mut t = Table::new(
+        &format!("n={n}, 4 partitions, chunk 128, dyn cache 10% FIFO"),
+        &["reorder", "chunk reads", "dyn hits", "hit ratio", "reads vs NS", "speedup vs no-cache"],
+    );
+    // The paper's Fig. 14a baseline is FIXED: reading every chunk remotely
+    // with no caches and no reordering (= the NS access pattern). All four
+    // rows are normalized against it.
+    let mut rows = Vec::new();
+    for algo in [
+        ReorderAlgo::NS,
+        ReorderAlgo::DS,
+        ReorderAlgo::PS,
+        ReorderAlgo::PDS,
+    ] {
+        let work = std::env::temp_dir().join(format!("glisp_fig14_{}", algo.name()));
+        let _ = std::fs::remove_dir_all(&work);
+        let runtime = Runtime::load(&art)?;
+        let enc = init_encoder_params(&runtime, 3)?;
+        let mut engine = LayerwiseEngine::new(
+            &g, &ea, runtime,
+            FeatureStore::unlabeled(64),
+            enc,
+            EngineConfig {
+                reorder: algo,
+                ..Default::default()
+            },
+            work,
+        )?;
+        let (_, rep) = engine.run_vertex_embedding()?;
+        rows.push((algo, rep));
+    }
+    let ns_reads = rows[0].1.chunk_reads;
+    let baseline_cost = ns_reads * COST_REMOTE;
+    for (algo, rep) in &rows {
+        // With a 100% static fill, retrieval cost = chunk fetches at the
+        // local-disk tier (+ the dynamic tier absorbing row reuse for free).
+        let cost = rep.virtual_cost - rep.dynamic_hits; // exclude row-hit pennies
+        t.row(&[
+            algo.name().into(),
+            ix(rep.chunk_reads as usize),
+            ix(rep.dynamic_hits as usize),
+            f3(rep.dynamic_hit_ratio),
+            f2(rep.chunk_reads as f64 / ns_reads as f64),
+            f2(baseline_cost as f64 / cost.max(1) as f64),
+        ]);
+    }
+    t.print();
+    println!("\npaper Fig. 14: NS already gains 2.52x from the caches alone; PDS");
+    println!("reads the fewest chunks (41.5% of NS) with the highest dynamic hit");
+    println!("ratio (>29%), reaching 8.10x; DS lands below PS because plain degree");
+    println!("sort discards the locality the partitioner already mined.");
+    Ok(())
+}

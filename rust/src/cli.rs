@@ -1,0 +1,96 @@
+//! Minimal CLI argument parser (clap is not in the offline vendor set).
+//! Supports `glisp <subcommand> --flag value --switch` with typed lookups.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl Iterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut argv = argv.peekable();
+        if let Some(first) = argv.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = argv.next();
+            }
+        }
+        while let Some(a) = argv.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                match argv.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        let v = argv.next().unwrap();
+                        out.flags.insert(name.to_string(), v);
+                    }
+                    _ => out.switches.push(name.to_string()),
+                }
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("train --model sage --steps 100 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("model"), Some("sage"));
+        assert_eq!(a.get_usize("steps", 0), 100);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.get_usize("x", 7), 7);
+        assert_eq!(a.get_str("m", "gcn"), "gcn");
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = parse("x --alpha -1.5");
+        assert_eq!(a.get_f64("alpha", 0.0), -1.5);
+    }
+}

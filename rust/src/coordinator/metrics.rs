@@ -1,0 +1,76 @@
+//! Training/serving metrics: loss curves, throughput, and the normalized
+//! per-server workload of Fig. 10.
+
+use crate::util::stats::Summary;
+
+#[derive(Clone, Debug, Default)]
+pub struct LossCurve {
+    pub losses: Vec<f32>,
+}
+
+impl LossCurve {
+    pub fn push(&mut self, l: f32) {
+        self.losses.push(l);
+    }
+
+    /// Mean of the first and last `w` points — the convergence check used
+    /// by tests and EXPERIMENTS.md.
+    pub fn head_tail(&self, w: usize) -> (f32, f32) {
+        let n = self.losses.len();
+        let w = w.min(n);
+        let head = self.losses[..w].iter().sum::<f32>() / w as f32;
+        let tail = self.losses[n - w..].iter().sum::<f32>() / w as f32;
+        (head, tail)
+    }
+
+    /// Smoothed curve (window mean) for reports.
+    pub fn smoothed(&self, window: usize) -> Vec<f32> {
+        if window <= 1 {
+            return self.losses.clone();
+        }
+        self.losses
+            .windows(window)
+            .map(|w| w.iter().sum::<f32>() / w.len() as f32)
+            .collect()
+    }
+}
+
+/// Normalized per-server workload (Fig. 10): W̄_i = W_i / min_p(W_p).
+pub fn normalized_workload(raw: &[u64]) -> Vec<f64> {
+    let min = raw.iter().copied().min().unwrap_or(1).max(1) as f64;
+    raw.iter().map(|&w| w as f64 / min).collect()
+}
+
+/// Throughput summary over per-iteration seconds.
+pub fn throughput(items_per_iter: usize, secs: &[f64]) -> Summary {
+    Summary::from_iter(secs.iter().map(|&s| items_per_iter as f64 / s.max(1e-12)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_tail() {
+        let c = LossCurve {
+            losses: vec![4.0, 4.0, 2.0, 1.0, 1.0],
+        };
+        let (h, t) = c.head_tail(2);
+        assert_eq!(h, 4.0);
+        assert_eq!(t, 1.0);
+    }
+
+    #[test]
+    fn normalized_workload_min_is_one() {
+        let w = normalized_workload(&[10, 20, 40]);
+        assert_eq!(w, vec![1.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn smoothing_shrinks() {
+        let c = LossCurve {
+            losses: (0..10).map(|i| i as f32).collect(),
+        };
+        assert_eq!(c.smoothed(3).len(), 8);
+    }
+}

@@ -1,0 +1,167 @@
+//! Model parameter store: the host-side copy of the artifact's parameter
+//! tensors. The AOT train step returns updated parameters as outputs
+//! (buffer donation is not exposed by the crate API), so the store simply
+//! swaps in the returned tensors each step; for the data-parallel path it
+//! averages gradients and applies SGD host-side.
+
+use anyhow::Result;
+
+use crate::runtime::manifest::TensorSpec;
+use crate::runtime::tensor::HostTensor;
+use crate::util::rng::Rng;
+
+#[derive(Clone)]
+pub struct ParamStore {
+    pub specs: Vec<TensorSpec>,
+    pub tensors: Vec<HostTensor>,
+}
+
+impl ParamStore {
+    /// Glorot-uniform init for weight matrices, zeros for vectors (names
+    /// ending in "b" are biases, mirroring python/compile/model.py).
+    pub fn init_glorot(specs: &[TensorSpec], rng: &mut Rng) -> Self {
+        let tensors = specs
+            .iter()
+            .map(|s| {
+                let n: usize = s.shape.iter().product();
+                if s.name.ends_with('b') || s.shape.len() == 1 {
+                    HostTensor::f32(s.shape.clone(), vec![0.0; n])
+                } else {
+                    let fan_in = s.shape[0] as f64;
+                    let fan_out = *s.shape.last().unwrap() as f64;
+                    let limit = (6.0 / (fan_in + fan_out)).sqrt();
+                    HostTensor::f32(
+                        s.shape.clone(),
+                        (0..n)
+                            .map(|_| ((rng.f64() * 2.0 - 1.0) * limit) as f32)
+                            .collect(),
+                    )
+                }
+            })
+            .collect();
+        Self {
+            specs: specs.to_vec(),
+            tensors,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Total parameter count (scalars).
+    pub fn num_parameters(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// Replace with the updated tensors a train-step artifact returned.
+    pub fn replace(&mut self, new: Vec<HostTensor>) -> Result<()> {
+        anyhow::ensure!(new.len() == self.tensors.len(), "param arity changed");
+        self.tensors = new;
+        Ok(())
+    }
+
+    /// SGD with pre-averaged gradients (data-parallel path).
+    pub fn sgd(&mut self, grads: &[HostTensor], lr: f32) {
+        assert_eq!(grads.len(), self.tensors.len());
+        for (p, g) in self.tensors.iter_mut().zip(grads) {
+            if let (HostTensor::F32 { data: pd, .. }, HostTensor::F32 { data: gd, .. }) =
+                (p, g)
+            {
+                for (x, &d) in pd.iter_mut().zip(gd) {
+                    *x -= lr * d;
+                }
+            }
+        }
+    }
+}
+
+/// Average per-trainer gradient lists element-wise (synchronous data
+/// parallelism, Fig. 12).
+pub fn average_grads(all: &[Vec<HostTensor>]) -> Vec<HostTensor> {
+    assert!(!all.is_empty());
+    let t = all.len() as f32;
+    let mut out = all[0].clone();
+    for grads in &all[1..] {
+        for (acc, g) in out.iter_mut().zip(grads) {
+            if let (HostTensor::F32 { data: a, .. }, HostTensor::F32 { data: b, .. }) =
+                (acc, g)
+            {
+                for (x, &y) in a.iter_mut().zip(b) {
+                    *x += y;
+                }
+            }
+        }
+    }
+    for acc in &mut out {
+        if let HostTensor::F32 { data, .. } = acc {
+            for x in data {
+                *x /= t;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::tensor::DType;
+
+    fn specs() -> Vec<TensorSpec> {
+        vec![
+            TensorSpec {
+                name: "w".into(),
+                shape: vec![4, 8],
+                dtype: DType::F32,
+            },
+            TensorSpec {
+                name: "b".into(),
+                shape: vec![8],
+                dtype: DType::F32,
+            },
+        ]
+    }
+
+    #[test]
+    fn glorot_ranges() {
+        let mut rng = Rng::new(200);
+        let ps = ParamStore::init_glorot(&specs(), &mut rng);
+        let limit = (6.0f64 / 12.0).sqrt() as f32;
+        assert!(ps.tensors[0].as_f32().iter().all(|&x| x.abs() <= limit));
+        assert!(ps.tensors[1].as_f32().iter().all(|&x| x == 0.0));
+        assert_eq!(ps.num_parameters(), 40);
+    }
+
+    #[test]
+    fn sgd_moves_against_gradient() {
+        let mut rng = Rng::new(201);
+        let mut ps = ParamStore::init_glorot(&specs(), &mut rng);
+        let before = ps.tensors[0].as_f32()[0];
+        let grads = vec![
+            HostTensor::f32(vec![4, 8], vec![1.0; 32]),
+            HostTensor::f32(vec![8], vec![0.0; 8]),
+        ];
+        ps.sgd(&grads, 0.1);
+        assert!((ps.tensors[0].as_f32()[0] - (before - 0.1)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn average_of_identical_is_identity() {
+        let g = vec![HostTensor::f32(vec![2], vec![2.0, 4.0])];
+        let avg = average_grads(&[g.clone(), g.clone()]);
+        assert_eq!(avg[0].as_f32(), &[2.0, 4.0]);
+    }
+
+    #[test]
+    fn average_mixes_trainers() {
+        let a = vec![HostTensor::f32(vec![2], vec![0.0, 2.0])];
+        let b = vec![HostTensor::f32(vec![2], vec![4.0, 2.0])];
+        let avg = average_grads(&[a, b]);
+        assert_eq!(avg[0].as_f32(), &[2.0, 2.0]);
+    }
+}

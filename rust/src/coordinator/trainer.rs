@@ -1,0 +1,297 @@
+//! The training coordinator: glue between the sampling service (L3), the
+//! feature store, and the AOT train-step artifacts (L2/L1). One
+//! `Trainer` = one logical GPU worker of the paper's Fig. 1; the
+//! data-parallel scalability experiment (Fig. 12) runs several in
+//! synchronous gradient-averaging mode.
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::batcher::Batcher;
+use crate::coordinator::features::FeatureStore;
+use crate::coordinator::params::{average_grads, ParamStore};
+use crate::graph::csr::VId;
+use crate::runtime::tensor::HostTensor;
+use crate::runtime::Runtime;
+use crate::sampling::client::SamplingClient;
+use crate::sampling::request::SampleConfig;
+use crate::sampling::subgraph::{sample_tree, TreeSample};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct TrainerConfig {
+    /// "gcn" | "sage" | "gat" — selects the artifact pair
+    /// `<model>_train` / `<model>_eval`.
+    pub model: String,
+    pub lr: f32,
+}
+
+pub struct Trainer {
+    pub runtime: Runtime,
+    pub params: ParamStore,
+    pub client: SamplingClient,
+    pub features: FeatureStore,
+    pub cfg: TrainerConfig,
+    /// Static geometry from the manifest.
+    pub batch: usize,
+    pub fanouts: Vec<usize>,
+    pub n_params: usize,
+    sample_cfg: SampleConfig,
+}
+
+impl Trainer {
+    pub fn new(
+        artifacts_dir: impl AsRef<std::path::Path>,
+        client: SamplingClient,
+        features: FeatureStore,
+        cfg: TrainerConfig,
+        seed: u64,
+    ) -> Result<Self> {
+        let runtime = Runtime::load(artifacts_dir)?;
+        let spec = runtime.spec(&format!("{}_train", cfg.model))?.clone();
+        let n_params = spec.meta_usize("n_params").context("meta.n_params")?;
+        let batch = spec.meta_usize("batch").context("meta.batch")?;
+        let fanouts = spec.meta_usizes("fanouts").context("meta.fanouts")?;
+        let din = spec.meta_usize("din").context("meta.din")?;
+        anyhow::ensure!(features.din == din, "feature store din {} != artifact {din}", features.din);
+        let mut rng = Rng::new(seed);
+        let params = ParamStore::init_glorot(&spec.inputs[..n_params], &mut rng);
+        Ok(Self {
+            runtime,
+            params,
+            client,
+            features,
+            cfg,
+            batch,
+            fanouts,
+            n_params,
+            sample_cfg: SampleConfig::default(),
+        })
+    }
+
+    /// Assemble the artifact input list for a sampled tree: params ++ level
+    /// features ++ masks [++ labels ++ lr].
+    fn model_inputs(
+        &self,
+        tree: &TreeSample,
+        labels: Option<&[i32]>,
+        lr: Option<f32>,
+    ) -> Vec<HostTensor> {
+        let din = self.features.din;
+        let mut inputs: Vec<HostTensor> = self.params.tensors.clone();
+        for level in &tree.levels {
+            inputs.push(HostTensor::f32(
+                vec![level.len(), din],
+                self.features.batch(level),
+            ));
+        }
+        for mask in &tree.masks {
+            inputs.push(HostTensor::f32(vec![mask.len()], mask.clone()));
+        }
+        if let Some(l) = labels {
+            inputs.push(HostTensor::i32(vec![l.len()], l.to_vec()));
+        }
+        if let Some(lr) = lr {
+            inputs.push(HostTensor::scalar1(lr));
+        }
+        inputs
+    }
+
+    pub fn sample_batch(&mut self, seeds: &[VId]) -> TreeSample {
+        sample_tree(&mut self.client, seeds, &self.fanouts, &self.sample_cfg)
+    }
+
+    /// One SGD step over a seed batch; returns the loss.
+    pub fn train_step(&mut self, seeds: &[VId], labels: &[i32]) -> Result<f32> {
+        assert_eq!(seeds.len(), self.batch);
+        let tree = self.sample_batch(seeds);
+        let inputs = self.model_inputs(&tree, Some(labels), Some(self.cfg.lr));
+        let mut out = self
+            .runtime
+            .execute(&format!("{}_train", self.cfg.model), &inputs)?;
+        let loss = out.remove(0).as_f32()[0];
+        self.params.replace(out)?;
+        Ok(loss)
+    }
+
+    /// Loss + raw gradients (synchronous data-parallel mode; sage only).
+    pub fn grad_step(&mut self, seeds: &[VId], labels: &[i32]) -> Result<(f32, Vec<HostTensor>)> {
+        let tree = self.sample_batch(seeds);
+        let inputs = self.model_inputs(&tree, Some(labels), None);
+        let mut out = self
+            .runtime
+            .execute(&format!("{}_grad", self.cfg.model), &inputs)?;
+        let loss = out.remove(0).as_f32()[0];
+        Ok((loss, out))
+    }
+
+    /// Train for `steps` mini-batches from the batcher; returns loss curve.
+    pub fn train(&mut self, batcher: &mut Batcher, steps: usize) -> Result<Vec<f32>> {
+        let mut losses = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            let (seeds, labels) = batcher.next_batch();
+            losses.push(self.train_step(&seeds, &labels)?);
+        }
+        Ok(losses)
+    }
+
+    /// Predicted class per seed via the eval artifact.
+    pub fn predict(&mut self, seeds: &[VId]) -> Result<Vec<usize>> {
+        assert_eq!(seeds.len(), self.batch);
+        let tree = self.sample_batch(seeds);
+        let inputs = self.model_inputs(&tree, None, None);
+        let out = self
+            .runtime
+            .execute(&format!("{}_eval", self.cfg.model), &inputs)?;
+        let logits = out[0].as_f32();
+        let classes = out[0].shape()[1];
+        Ok((0..seeds.len())
+            .map(|i| {
+                let row = &logits[i * classes..(i + 1) * classes];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0
+            })
+            .collect())
+    }
+
+    /// Accuracy over a labeled evaluation set (batched; remainder dropped).
+    pub fn evaluate(&mut self, seeds: &[VId], labels: &[u16]) -> Result<f64> {
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for (chunk_s, chunk_l) in seeds.chunks(self.batch).zip(labels.chunks(self.batch)) {
+            if chunk_s.len() < self.batch {
+                break;
+            }
+            let preds = self.predict(chunk_s)?;
+            for (p, &l) in preds.iter().zip(chunk_l) {
+                correct += (*p == l as usize) as usize;
+                total += 1;
+            }
+        }
+        anyhow::ensure!(total > 0, "evaluation set smaller than one batch");
+        Ok(correct as f64 / total as f64)
+    }
+}
+
+/// Timing breakdown of one synchronous round. Logical trainers execute
+/// sequentially on this testbed; in the paper's deployment they run in
+/// parallel, so the simulated round time is `max(trainer_secs) +
+/// apply_secs` (stragglers + the synchronization barrier — the mechanism
+/// behind Fig. 12's ~0.8 scaling slope).
+pub struct SyncRoundReport {
+    pub loss: f32,
+    pub trainer_secs: Vec<f64>,
+    pub apply_secs: f64,
+}
+
+impl SyncRoundReport {
+    pub fn simulated_secs(&self) -> f64 {
+        self.trainer_secs.iter().cloned().fold(0f64, f64::max) + self.apply_secs
+    }
+}
+
+/// One synchronous data-parallel round (Fig. 12): every trainer computes
+/// gradients on its own batch from shared parameters; the leader averages
+/// and applies.
+pub fn sync_round(
+    trainers: &mut [Trainer],
+    batchers: &mut [Batcher],
+    lr: f32,
+) -> Result<SyncRoundReport> {
+    // Broadcast leader parameters.
+    let leader_params = trainers[0].params.clone();
+    let mut all_grads = Vec::with_capacity(trainers.len());
+    let mut loss_sum = 0f32;
+    let mut trainer_secs = Vec::with_capacity(trainers.len());
+    for (t, b) in trainers.iter_mut().zip(batchers.iter_mut()) {
+        t.params = leader_params.clone();
+        let (seeds, labels) = b.next_batch();
+        let timer = crate::util::timer::Timer::start();
+        let (loss, grads) = t.grad_step(&seeds, &labels)?;
+        trainer_secs.push(timer.secs());
+        loss_sum += loss;
+        all_grads.push(grads);
+    }
+    let timer = crate::util::timer::Timer::start();
+    let avg = average_grads(&all_grads);
+    let n = trainers.len();
+    trainers[0].params.sgd(&avg, lr);
+    Ok(SyncRoundReport {
+        loss: loss_sum / n as f32,
+        trainer_secs,
+        apply_secs: timer.secs(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator;
+    use crate::partition::{AdaDNE, Partitioner};
+    use crate::sampling::service::SamplingService;
+    use std::sync::Arc;
+
+    fn stack() -> Option<(SamplingService, Trainer, Batcher)> {
+        let dir = crate::test_artifacts_dir()?;
+        let mut rng = Rng::new(210);
+        let g = generator::labeled_community_graph(2000, 24_000, 8, 0.9, &mut rng);
+        let labels = Arc::new(g.label.clone());
+        let ea = AdaDNE::default().partition(&g, 2, 0);
+        let svc = SamplingService::launch(&g, &ea, 1);
+        let features = FeatureStore::labeled(64, labels.clone(), 8, 0.6);
+        let trainer = Trainer::new(
+            &dir,
+            svc.client(3),
+            features,
+            TrainerConfig {
+                model: "sage".into(),
+                lr: 0.1,
+            },
+            7,
+        )
+        .unwrap();
+        let seeds: Vec<VId> = (0..1000).collect();
+        let lab: Vec<u16> = seeds.iter().map(|&v| labels[v as usize]).collect();
+        let batcher = Batcher::new(seeds, lab, trainer.batch, 5);
+        Some((svc, trainer, batcher))
+    }
+
+    #[test]
+    fn train_step_runs_and_updates_params() {
+        let Some((svc, mut t, mut b)) = stack() else { return };
+        let before = t.params.tensors[0].as_f32().to_vec();
+        let (seeds, labels) = b.next_batch();
+        let loss = t.train_step(&seeds, &labels).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        assert_ne!(before, t.params.tensors[0].as_f32());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn loss_decreases_over_training() {
+        let Some((svc, mut t, mut b)) = stack() else { return };
+        let losses = t.train(&mut b, 30).unwrap();
+        let head: f32 = losses[..5].iter().sum::<f32>() / 5.0;
+        let tail: f32 = losses[losses.len() - 5..].iter().sum::<f32>() / 5.0;
+        assert!(
+            tail < head,
+            "loss should fall: head {head:.3} tail {tail:.3} ({losses:?})"
+        );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn grad_step_matches_train_step_arity() {
+        let Some((svc, mut t, mut b)) = stack() else { return };
+        let (seeds, labels) = b.next_batch();
+        let (loss, grads) = t.grad_step(&seeds, &labels).unwrap();
+        assert!(loss.is_finite());
+        assert_eq!(grads.len(), t.params.len());
+        for (g, p) in grads.iter().zip(&t.params.tensors) {
+            assert_eq!(g.shape(), p.shape());
+        }
+        svc.shutdown();
+    }
+}

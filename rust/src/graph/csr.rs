@@ -1,0 +1,314 @@
+//! In-memory full graph in CSR form — the partitioner's input and the
+//! generators' output. Vertex ids are `u32` (the synthetic suite tops out at
+//! a few million vertices); per-vertex/per-edge attributes are optional so
+//! homogeneous graphs pay nothing.
+
+pub type VId = u32;
+pub type EId = u32;
+
+/// Directed multigraph in CSR (out-edges), with optional heterogeneous
+/// vertex/edge types and edge weights.
+#[derive(Clone, Debug, Default)]
+pub struct Graph {
+    pub n: usize,
+    /// CSR row offsets, len n+1.
+    pub indptr: Vec<u64>,
+    /// Destination of each out-edge, len m.
+    pub dst: Vec<VId>,
+    /// Vertex type per vertex (empty = homogeneous).
+    pub vtype: Vec<u8>,
+    /// Edge type per out-edge, aligned with `dst` (empty = homogeneous).
+    pub etype: Vec<u8>,
+    /// Edge weight per out-edge (empty = unweighted/1.0).
+    pub weight: Vec<f32>,
+    /// Class label per vertex (empty = unlabeled); used by Table IV tasks.
+    pub label: Vec<u16>,
+}
+
+impl Graph {
+    /// Build from an edge list (src, dst); attrs attached afterwards.
+    pub fn from_edges(n: usize, edges: &[(VId, VId)]) -> Self {
+        let mut deg = vec![0u64; n];
+        for &(s, _) in edges {
+            deg[s as usize] += 1;
+        }
+        let mut indptr = vec![0u64; n + 1];
+        for i in 0..n {
+            indptr[i + 1] = indptr[i] + deg[i];
+        }
+        let mut cursor = indptr.clone();
+        let mut dst = vec![0 as VId; edges.len()];
+        for &(s, d) in edges {
+            let c = &mut cursor[s as usize];
+            dst[*c as usize] = d;
+            *c += 1;
+        }
+        Graph {
+            n,
+            indptr,
+            dst,
+            ..Default::default()
+        }
+    }
+
+    /// Like `from_edges` but carries (etype, weight) per edge in the same
+    /// order, preserving alignment through the CSR bucket sort.
+    pub fn from_typed_edges(n: usize, edges: &[(VId, VId, u8, f32)]) -> Self {
+        let mut deg = vec![0u64; n];
+        for &(s, ..) in edges {
+            deg[s as usize] += 1;
+        }
+        let mut indptr = vec![0u64; n + 1];
+        for i in 0..n {
+            indptr[i + 1] = indptr[i] + deg[i];
+        }
+        let mut cursor = indptr.clone();
+        let mut dst = vec![0 as VId; edges.len()];
+        let mut etype = vec![0u8; edges.len()];
+        let mut weight = vec![0f32; edges.len()];
+        for &(s, d, t, w) in edges {
+            let c = &mut cursor[s as usize];
+            let i = *c as usize;
+            dst[i] = d;
+            etype[i] = t;
+            weight[i] = w;
+            *c += 1;
+        }
+        Graph {
+            n,
+            indptr,
+            dst,
+            etype,
+            weight,
+            ..Default::default()
+        }
+    }
+
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.dst.len()
+    }
+
+    #[inline]
+    pub fn out_degree(&self, v: VId) -> usize {
+        (self.indptr[v as usize + 1] - self.indptr[v as usize]) as usize
+    }
+
+    #[inline]
+    pub fn out_neighbors(&self, v: VId) -> &[VId] {
+        let (a, b) = self.edge_range(v);
+        &self.dst[a..b]
+    }
+
+    /// Edge-id range [a, b) of v's out-edges.
+    #[inline]
+    pub fn edge_range(&self, v: VId) -> (usize, usize) {
+        (
+            self.indptr[v as usize] as usize,
+            self.indptr[v as usize + 1] as usize,
+        )
+    }
+
+    pub fn avg_degree(&self) -> f64 {
+        self.m() as f64 / self.n.max(1) as f64
+    }
+
+    /// In-degree per vertex (one pass over edges).
+    pub fn in_degrees(&self) -> Vec<u32> {
+        let mut d = vec![0u32; self.n];
+        for &v in &self.dst {
+            d[v as usize] += 1;
+        }
+        d
+    }
+
+    pub fn out_degrees(&self) -> Vec<u32> {
+        (0..self.n).map(|v| self.out_degree(v as VId) as u32).collect()
+    }
+
+    /// Reverse CSR: (in_indptr, in_src, in_eid) where in_eid is the index of
+    /// the corresponding out-edge. Needed by the partitioners (incident
+    /// edges) and the paper's `in_edges` field.
+    pub fn reverse_csr(&self) -> (Vec<u64>, Vec<VId>, Vec<EId>) {
+        let mut deg = vec![0u64; self.n];
+        for &v in &self.dst {
+            deg[v as usize] += 1;
+        }
+        let mut indptr = vec![0u64; self.n + 1];
+        for i in 0..self.n {
+            indptr[i + 1] = indptr[i] + deg[i];
+        }
+        let mut cursor = indptr.clone();
+        let mut src = vec![0 as VId; self.m()];
+        let mut eid = vec![0 as EId; self.m()];
+        for u in 0..self.n {
+            let (a, b) = self.edge_range(u as VId);
+            for e in a..b {
+                let v = self.dst[e] as usize;
+                let c = &mut cursor[v];
+                src[*c as usize] = u as VId;
+                eid[*c as usize] = e as EId;
+                *c += 1;
+            }
+        }
+        (indptr, src, eid)
+    }
+
+    /// Undirected incidence adjacency: for each vertex, the (edge_id,
+    /// other_endpoint) of every incident edge in either direction. This is
+    /// the neighbor-expansion view used by DNE/AdaDNE.
+    pub fn incidence(&self) -> Incidence {
+        let mut deg = vec![0u64; self.n];
+        for u in 0..self.n {
+            let (a, b) = self.edge_range(u as VId);
+            deg[u] += (b - a) as u64;
+            for e in a..b {
+                deg[self.dst[e] as usize] += 1;
+            }
+        }
+        let mut indptr = vec![0u64; self.n + 1];
+        for i in 0..self.n {
+            indptr[i + 1] = indptr[i] + deg[i];
+        }
+        let mut cursor = indptr.clone();
+        let mut eid = vec![0 as EId; 2 * self.m()];
+        let mut other = vec![0 as VId; 2 * self.m()];
+        for u in 0..self.n {
+            let (a, b) = self.edge_range(u as VId);
+            for e in a..b {
+                let v = self.dst[e];
+                let cu = &mut cursor[u];
+                eid[*cu as usize] = e as EId;
+                other[*cu as usize] = v;
+                *cu += 1;
+                let cv = &mut cursor[v as usize];
+                eid[*cv as usize] = e as EId;
+                other[*cv as usize] = u as VId;
+                *cv += 1;
+            }
+        }
+        Incidence {
+            indptr,
+            eid,
+            other,
+        }
+    }
+
+    pub fn edge_weight(&self, e: usize) -> f32 {
+        if self.weight.is_empty() {
+            1.0
+        } else {
+            self.weight[e]
+        }
+    }
+
+    pub fn edge_type(&self, e: usize) -> u8 {
+        if self.etype.is_empty() {
+            0
+        } else {
+            self.etype[e]
+        }
+    }
+
+    pub fn num_edge_types(&self) -> usize {
+        self.etype.iter().map(|&t| t as usize + 1).max().unwrap_or(1)
+    }
+
+    pub fn num_vertex_types(&self) -> usize {
+        self.vtype.iter().map(|&t| t as usize + 1).max().unwrap_or(1)
+    }
+}
+
+/// Undirected incidence view (see [`Graph::incidence`]).
+pub struct Incidence {
+    pub indptr: Vec<u64>,
+    pub eid: Vec<EId>,
+    pub other: Vec<VId>,
+}
+
+impl Incidence {
+    #[inline]
+    pub fn edges_of(&self, v: VId) -> impl Iterator<Item = (EId, VId)> + '_ {
+        let a = self.indptr[v as usize] as usize;
+        let b = self.indptr[v as usize + 1] as usize;
+        (a..b).map(move |i| (self.eid[i], self.other[i]))
+    }
+
+    #[inline]
+    pub fn degree(&self, v: VId) -> usize {
+        (self.indptr[v as usize + 1] - self.indptr[v as usize]) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> Graph {
+        // 0->1, 0->2, 1->3, 2->3, 3->0
+        Graph::from_edges(4, &[(0, 1), (0, 2), (1, 3), (2, 3), (3, 0)])
+    }
+
+    #[test]
+    fn csr_shape() {
+        let g = diamond();
+        assert_eq!(g.n, 4);
+        assert_eq!(g.m(), 5);
+        assert_eq!(g.out_neighbors(0), &[1, 2]);
+        assert_eq!(g.out_neighbors(3), &[0]);
+        assert_eq!(g.out_degree(1), 1);
+    }
+
+    #[test]
+    fn reverse_matches_forward() {
+        let g = diamond();
+        let (ip, src, eid) = g.reverse_csr();
+        // in-neighbors of 3 are {1, 2}
+        let a = ip[3] as usize;
+        let b = ip[4] as usize;
+        let mut ins: Vec<VId> = src[a..b].to_vec();
+        ins.sort_unstable();
+        assert_eq!(ins, vec![1, 2]);
+        // every in-edge id maps back to an out-edge with the right endpoints
+        for v in 0..g.n {
+            for i in ip[v] as usize..ip[v + 1] as usize {
+                let e = eid[i] as usize;
+                assert_eq!(g.dst[e] as usize, v);
+            }
+        }
+    }
+
+    #[test]
+    fn incidence_degree_counts_both_directions() {
+        let g = diamond();
+        let inc = g.incidence();
+        assert_eq!(inc.degree(0), 3); // out:1,2 in:3
+        assert_eq!(inc.degree(3), 3); // in:1,2 out:0
+        let total: usize = (0..4).map(|v| inc.degree(v as VId)).sum();
+        assert_eq!(total, 2 * g.m());
+    }
+
+    #[test]
+    fn typed_edges_alignment() {
+        let g = Graph::from_typed_edges(
+            3,
+            &[(2, 0, 1, 0.5), (0, 1, 0, 1.0), (0, 2, 3, 2.0)],
+        );
+        // vertex 0's edges keep their (etype, weight) pairing
+        let (a, b) = g.edge_range(0);
+        for e in a..b {
+            match g.dst[e] {
+                1 => {
+                    assert_eq!(g.etype[e], 0);
+                    assert_eq!(g.weight[e], 1.0);
+                }
+                2 => {
+                    assert_eq!(g.etype[e], 3);
+                    assert_eq!(g.weight[e], 2.0);
+                }
+                _ => panic!(),
+            }
+        }
+        assert_eq!(g.num_edge_types(), 4);
+    }
+}

@@ -1,0 +1,488 @@
+//! The compact, contiguous, read-only data structure for one vertex-cut
+//! partition — paper Fig. 6. Distinctive properties reproduced here:
+//!
+//! * `global_id` is sorted ascending; the vertex **local ID is implicit**
+//!   (position index), so global→local is a binary search (O(log N)) and
+//!   local→global is an array access (O(1)) — no HashMap, no explicit map.
+//! * out-edges are CSR sorted by `(src_local, edge_type, dst)`, so each
+//!   vertex's neighbors are grouped by edge type; the per-edge type ID is
+//!   NOT stored — it is recovered by binary search over the per-vertex
+//!   run-length type index (`out_et_*`), which stores one (type, cumulative
+//!   end) pair per run instead of one byte per edge.
+//! * the **edge local ID is implicit** too: it is the position in `out_dst`.
+//!   In-edges store `(src_global, edge_local_id)` — the paper's replacement
+//!   of `(dst, src)` by `(dst, edge_id)` for O(1) edge-attribute access.
+//! * `partition_set` is a bit array (vertex × partition) so the client can
+//!   route Gather requests to every replica of a boundary vertex.
+//! * global out/in degrees are carried per local vertex — the distributed
+//!   uniform sampler needs `r = f · local_deg / global_deg`.
+
+use crate::graph::csr::{Graph, VId};
+use crate::util::bitset::BitMatrix;
+
+#[derive(Clone, Debug)]
+pub struct PartitionGraph {
+    pub part_id: usize,
+    pub num_parts: usize,
+    /// Sorted global IDs of the vertices present in this partition.
+    pub global_id: Vec<VId>,
+    // --- out edges (CSR over local vertices, sorted by (etype, dst)) ---
+    pub out_indptr: Vec<u64>,
+    pub out_dst: Vec<VId>,
+    /// Edge weights aligned with out_dst (empty if unweighted).
+    pub out_weight: Vec<f32>,
+    // --- per-vertex edge-type run-length index ---
+    /// Offsets into out_et_ids/out_et_end, len nv()+1.
+    pub out_et_indptr: Vec<u32>,
+    /// Type ID of each run.
+    pub out_et_ids: Vec<u8>,
+    /// Pre-accumulated (exclusive-end) local-edge offset of each run within
+    /// its vertex's edge list.
+    pub out_et_end: Vec<u32>,
+    // --- in edges: (dst_local implicit) -> (src_global, local edge id) ---
+    pub in_indptr: Vec<u64>,
+    pub in_src: Vec<VId>,
+    pub in_eid: Vec<u32>,
+    // --- global degrees of local vertices ---
+    pub out_deg_global: Vec<u32>,
+    pub in_deg_global: Vec<u32>,
+    /// Partition membership: row = local vertex, bit = partition id.
+    pub partition_set: BitMatrix,
+}
+
+impl PartitionGraph {
+    /// Number of (replicated) vertices in this partition.
+    #[inline]
+    pub fn nv(&self) -> usize {
+        self.global_id.len()
+    }
+
+    /// Number of edges owned by this partition.
+    #[inline]
+    pub fn ne(&self) -> usize {
+        self.out_dst.len()
+    }
+
+    /// Global → local: binary search over the sorted global_id array.
+    #[inline]
+    pub fn local_id(&self, gid: VId) -> Option<u32> {
+        self.global_id.binary_search(&gid).ok().map(|i| i as u32)
+    }
+
+    /// Local → global: O(1) array access.
+    #[inline]
+    pub fn global(&self, local: u32) -> VId {
+        self.global_id[local as usize]
+    }
+
+    #[inline]
+    pub fn out_range(&self, local: u32) -> (usize, usize) {
+        (
+            self.out_indptr[local as usize] as usize,
+            self.out_indptr[local as usize + 1] as usize,
+        )
+    }
+
+    #[inline]
+    pub fn out_neighbors(&self, local: u32) -> &[VId] {
+        let (a, b) = self.out_range(local);
+        &self.out_dst[a..b]
+    }
+
+    #[inline]
+    pub fn local_out_degree(&self, local: u32) -> usize {
+        let (a, b) = self.out_range(local);
+        b - a
+    }
+
+    #[inline]
+    pub fn in_range(&self, local: u32) -> (usize, usize) {
+        (
+            self.in_indptr[local as usize] as usize,
+            self.in_indptr[local as usize + 1] as usize,
+        )
+    }
+
+    #[inline]
+    pub fn in_neighbors(&self, local: u32) -> &[VId] {
+        let (a, b) = self.in_range(local);
+        &self.in_src[a..b]
+    }
+
+    #[inline]
+    pub fn local_in_degree(&self, local: u32) -> usize {
+        let (a, b) = self.in_range(local);
+        b - a
+    }
+
+    /// Neighbors of `local` restricted to `etype` — a subslice located via
+    /// the run-length type index (runs per vertex are few; linear scan).
+    pub fn out_neighbors_of_type(&self, local: u32, etype: u8) -> &[VId] {
+        let (e0, _) = self.out_range(local);
+        let (r0, r1) = (
+            self.out_et_indptr[local as usize] as usize,
+            self.out_et_indptr[local as usize + 1] as usize,
+        );
+        let mut start = 0u32;
+        for r in r0..r1 {
+            let end = self.out_et_end[r];
+            if self.out_et_ids[r] == etype {
+                return &self.out_dst[e0 + start as usize..e0 + end as usize];
+            }
+            start = end;
+        }
+        &[]
+    }
+
+    /// Recover the type of a local edge by binary search over its vertex's
+    /// run index — the paper's trade of an O(log) query for per-edge bytes.
+    pub fn edge_type_of(&self, local_edge: u32) -> u8 {
+        // Find the owning vertex: binary search in out_indptr.
+        let v = match self.out_indptr.binary_search(&(local_edge as u64)) {
+            Ok(mut i) => {
+                // Land on a boundary: the edge belongs to the next non-empty
+                // vertex; indptr may contain repeats for empty vertices.
+                while i + 1 < self.out_indptr.len()
+                    && self.out_indptr[i + 1] == local_edge as u64
+                {
+                    i += 1;
+                }
+                i
+            }
+            Err(i) => i - 1,
+        };
+        let off = (local_edge as u64 - self.out_indptr[v]) as u32;
+        let (r0, r1) = (
+            self.out_et_indptr[v] as usize,
+            self.out_et_indptr[v + 1] as usize,
+        );
+        // Binary search over pre-accumulated run ends.
+        let runs = &self.out_et_end[r0..r1];
+        let idx = match runs.binary_search(&(off + 1)) {
+            Ok(i) => i,
+            Err(i) => i,
+        };
+        self.out_et_ids[r0 + idx]
+    }
+
+    pub fn edge_weight(&self, local_edge: u32) -> f32 {
+        if self.out_weight.is_empty() {
+            1.0
+        } else {
+            self.out_weight[local_edge as usize]
+        }
+    }
+
+    /// An interior vertex resides in exactly one partition (paper §III-D);
+    /// its one-hop neighborhood is fully local.
+    #[inline]
+    pub fn is_interior(&self, local: u32) -> bool {
+        self.partition_set.row_count(local as usize) == 1
+    }
+
+    pub fn interior_count(&self) -> usize {
+        (0..self.nv() as u32).filter(|&v| self.is_interior(v)).count()
+    }
+
+    /// Total bytes of the contiguous layout — Table III accounting.
+    pub fn nbytes(&self) -> usize {
+        self.global_id.len() * 4
+            + self.out_indptr.len() * 8
+            + self.out_dst.len() * 4
+            + self.out_weight.len() * 4
+            + self.out_et_indptr.len() * 4
+            + self.out_et_ids.len()
+            + self.out_et_end.len() * 4
+            + self.in_indptr.len() * 8
+            + self.in_src.len() * 4
+            + self.in_eid.len() * 4
+            + self.out_deg_global.len() * 4
+            + self.in_deg_global.len() * 4
+            + self.partition_set.nbytes()
+    }
+}
+
+/// Build all partitions' compact structures from the full graph and a
+/// per-edge partition assignment (vertex-cut). One pass computes partition
+/// membership; each partition is then assembled independently.
+pub fn build_partitions(g: &Graph, assign: &[u16], num_parts: usize) -> Vec<PartitionGraph> {
+    assert_eq!(assign.len(), g.m());
+    let out_deg = g.out_degrees();
+    let in_deg = g.in_degrees();
+
+    // Which partitions does each global vertex touch?
+    let mut membership = BitMatrix::new(g.n, num_parts);
+    for u in 0..g.n {
+        let (a, b) = g.edge_range(u as VId);
+        for e in a..b {
+            let p = assign[e] as usize;
+            membership.set(u, p);
+            membership.set(g.dst[e] as usize, p);
+        }
+    }
+
+    (0..num_parts)
+        .map(|p| build_one(g, assign, p, num_parts, &membership, &out_deg, &in_deg))
+        .collect()
+}
+
+fn build_one(
+    g: &Graph,
+    assign: &[u16],
+    part: usize,
+    num_parts: usize,
+    membership: &BitMatrix,
+    out_deg: &[u32],
+    in_deg: &[u32],
+) -> PartitionGraph {
+    // Vertices present in this partition, sorted (global_id order).
+    let mut global_id: Vec<VId> = (0..g.n as VId)
+        .filter(|&v| membership.get(v as usize, part))
+        .collect();
+    global_id.sort_unstable();
+    let nv = global_id.len();
+    let lid = |gid: VId| global_id.binary_search(&gid).unwrap() as u32;
+
+    // Gather this partition's edges as (src_local, etype, dst, weight, ...).
+    let mut edges: Vec<(u32, u8, VId, f32)> = Vec::new();
+    for u in 0..g.n {
+        let (a, b) = g.edge_range(u as VId);
+        for e in a..b {
+            if assign[e] as usize == part {
+                edges.push((
+                    lid(u as VId),
+                    g.edge_type(e),
+                    g.dst[e],
+                    g.edge_weight(e),
+                ));
+            }
+        }
+    }
+    // Paper Fig. 6: sort by (src, edge_type, dst).
+    edges.sort_unstable_by(|x, y| (x.0, x.1, x.2).cmp(&(y.0, y.1, y.2)));
+
+    let ne = edges.len();
+    let mut out_indptr = vec![0u64; nv + 1];
+    let mut out_dst = Vec::with_capacity(ne);
+    let weighted = !g.weight.is_empty();
+    let mut out_weight = if weighted { Vec::with_capacity(ne) } else { Vec::new() };
+    let mut out_et_indptr = vec![0u32; nv + 1];
+    let mut out_et_ids: Vec<u8> = Vec::new();
+    let mut out_et_end: Vec<u32> = Vec::new();
+
+    let typed = !g.etype.is_empty();
+    let mut i = 0usize;
+    for v in 0..nv as u32 {
+        let start = i;
+        while i < ne && edges[i].0 == v {
+            out_dst.push(edges[i].2);
+            if weighted {
+                out_weight.push(edges[i].3);
+            }
+            i += 1;
+        }
+        out_indptr[v as usize + 1] = out_dst.len() as u64;
+        if typed {
+            // Run-length encode edge types of [start, i).
+            let mut r = start;
+            while r < i {
+                let t = edges[r].1;
+                let mut r2 = r;
+                while r2 < i && edges[r2].1 == t {
+                    r2 += 1;
+                }
+                out_et_ids.push(t);
+                out_et_end.push((r2 - start) as u32);
+                r = r2;
+            }
+        }
+        out_et_indptr[v as usize + 1] = out_et_ids.len() as u32;
+    }
+
+    // In-edges of this partition's edge set, keyed by dst; store
+    // (src_global, local edge id). Sorted by (dst_local, src) for locality.
+    // The sorted `edges` array is exactly out_dst's order, so the local
+    // edge id of edges[i] is i.
+    let mut ins: Vec<(u32, VId, u32)> = Vec::with_capacity(ne);
+    for (eid, &(src_l, _, dst_g, _)) in edges.iter().enumerate() {
+        ins.push((lid(dst_g), global_id[src_l as usize], eid as u32));
+    }
+    ins.sort_unstable();
+    let mut in_indptr = vec![0u64; nv + 1];
+    let mut in_src = Vec::with_capacity(ne);
+    let mut in_eid = Vec::with_capacity(ne);
+    {
+        let mut i = 0usize;
+        for v in 0..nv as u32 {
+            while i < ins.len() && ins[i].0 == v {
+                in_src.push(ins[i].1);
+                in_eid.push(ins[i].2);
+                i += 1;
+            }
+            in_indptr[v as usize + 1] = in_src.len() as u64;
+        }
+    }
+
+    // Per-local-vertex global degrees + membership rows.
+    let mut pset = BitMatrix::new(nv, num_parts);
+    let mut odg = vec![0u32; nv];
+    let mut idg = vec![0u32; nv];
+    for (l, &gid) in global_id.iter().enumerate() {
+        odg[l] = out_deg[gid as usize];
+        idg[l] = in_deg[gid as usize];
+        for p in membership.row_ones(gid as usize) {
+            pset.set(l, p);
+        }
+    }
+
+    PartitionGraph {
+        part_id: part,
+        num_parts,
+        global_id,
+        out_indptr,
+        out_dst,
+        out_weight,
+        out_et_indptr,
+        out_et_ids,
+        out_et_end,
+        in_indptr,
+        in_src,
+        in_eid,
+        out_deg_global: odg,
+        in_deg_global: idg,
+        partition_set: pset,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator;
+    use crate::util::rng::Rng;
+
+    fn tiny() -> (Graph, Vec<u16>) {
+        // 0->1(t0), 0->2(t1), 1->2(t0), 2->0(t2), 3->0(t0), 1->3(t1)
+        let g = Graph::from_typed_edges(
+            4,
+            &[
+                (0, 1, 0, 1.0),
+                (0, 2, 1, 2.0),
+                (1, 2, 0, 1.0),
+                (2, 0, 2, 0.5),
+                (3, 0, 0, 1.0),
+                (1, 3, 1, 3.0),
+            ],
+        );
+        // Edge ids after CSR: sorted by src: e0=0->1, e1=0->2, e2=1->2,
+        // e3=1->3, e4=2->0, e5=3->0
+        let assign = vec![0, 0, 1, 1, 0, 1];
+        (g, assign)
+    }
+
+    #[test]
+    fn partition_edge_conservation() {
+        let (g, assign) = tiny();
+        let parts = build_partitions(&g, &assign, 2);
+        let total: usize = parts.iter().map(|p| p.ne()).sum();
+        assert_eq!(total, g.m());
+        assert_eq!(parts[0].ne(), 3);
+        assert_eq!(parts[1].ne(), 3);
+    }
+
+    #[test]
+    fn local_global_bijection() {
+        let (g, assign) = tiny();
+        for p in build_partitions(&g, &assign, 2) {
+            for l in 0..p.nv() as u32 {
+                assert_eq!(p.local_id(p.global(l)), Some(l));
+            }
+            assert!(p.global_id.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn edge_type_recovered_by_query() {
+        let (g, assign) = tiny();
+        let parts = build_partitions(&g, &assign, 2);
+        // Partition 0 holds 0->1(t0), 0->2(t1), 2->0(t2).
+        let p0 = &parts[0];
+        let l0 = p0.local_id(0).unwrap();
+        assert_eq!(p0.out_neighbors_of_type(l0, 0), &[1]);
+        assert_eq!(p0.out_neighbors_of_type(l0, 1), &[2]);
+        assert_eq!(p0.out_neighbors_of_type(l0, 3), &[] as &[VId]);
+        for e in 0..p0.ne() as u32 {
+            // Type from query must equal the type the edge had originally.
+            let t = p0.edge_type_of(e);
+            assert!(t <= 2);
+        }
+        let l2 = p0.local_id(2).unwrap();
+        let (a, _) = p0.out_range(l2);
+        assert_eq!(p0.edge_type_of(a as u32), 2); // 2->0 is t2
+    }
+
+    #[test]
+    fn in_edges_reference_local_out_edges() {
+        let (g, assign) = tiny();
+        for p in build_partitions(&g, &assign, 2) {
+            for v in 0..p.nv() as u32 {
+                let (a, b) = p.in_range(v);
+                for i in a..b {
+                    let e = p.in_eid[i] as usize;
+                    // The referenced out-edge must point back at v.
+                    assert_eq!(p.out_dst[e], p.global(v));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn membership_bits_cover_both_endpoints() {
+        let (g, assign) = tiny();
+        let parts = build_partitions(&g, &assign, 2);
+        // Vertex 0 has edges in both partitions => boundary in both.
+        for p in &parts {
+            let l = p.local_id(0).unwrap();
+            assert_eq!(p.partition_set.row_count(l as usize), 2);
+            assert!(!p.is_interior(l));
+        }
+    }
+
+    #[test]
+    fn global_degrees_carried() {
+        let (g, assign) = tiny();
+        let parts = build_partitions(&g, &assign, 2);
+        let p0 = &parts[0];
+        let l0 = p0.local_id(0).unwrap();
+        assert_eq!(p0.out_deg_global[l0 as usize], 2);
+        assert_eq!(p0.in_deg_global[l0 as usize], 2); // 2->0, 3->0
+    }
+
+    #[test]
+    fn neighbors_sorted_by_type_then_dst() {
+        let mut rng = Rng::new(9);
+        let g = generator::heterogeneous_graph(500, 4000, 2, 4, 2.2, &mut rng);
+        let assign: Vec<u16> = (0..g.m()).map(|e| (e % 3) as u16).collect();
+        for p in build_partitions(&g, &assign, 3) {
+            for v in 0..p.nv() as u32 {
+                let (a, b) = p.out_range(v);
+                let types: Vec<u8> =
+                    (a..b).map(|e| p.edge_type_of(e as u32)).collect();
+                let mut sorted = types.clone();
+                sorted.sort_unstable();
+                assert_eq!(types, sorted, "types not grouped for v={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn interior_plus_boundary_equals_nv() {
+        let mut rng = Rng::new(10);
+        let g = generator::chung_lu(2000, 16_000, 2.1, &mut rng);
+        let assign: Vec<u16> = (0..g.m()).map(|e| (e % 4) as u16).collect();
+        for p in build_partitions(&g, &assign, 4) {
+            let interior = p.interior_count();
+            assert!(interior <= p.nv());
+            assert!(p.nbytes() > 0);
+        }
+    }
+}

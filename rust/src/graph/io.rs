@@ -1,0 +1,223 @@
+//! Binary (de)serialization of the compact partition structure — "a simple
+//! contiguous binary layout, with the data size and type of each field being
+//! maintained in a separate meta file" (paper §III-C).
+//!
+//! `<name>.bin` holds the raw little-endian field arrays back-to-back;
+//! `<name>.meta.json` lists each field's name/dtype/element count plus the
+//! partition header, so loading is a sequence of exact-size reads into
+//! pre-allocated vectors — no parsing on the data path.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::graph::hetero::PartitionGraph;
+use crate::util::bitset::BitMatrix;
+use crate::util::json::{emit, Json};
+
+struct FieldMeta {
+    name: &'static str,
+    dtype: &'static str,
+    count: usize,
+}
+
+fn fields_of(p: &PartitionGraph) -> Vec<(FieldMeta, Vec<u8>)> {
+    fn f32s(v: &[f32]) -> Vec<u8> {
+        v.iter().flat_map(|x| x.to_le_bytes()).collect()
+    }
+    fn u32s(v: &[u32]) -> Vec<u8> {
+        v.iter().flat_map(|x| x.to_le_bytes()).collect()
+    }
+    fn u64s(v: &[u64]) -> Vec<u8> {
+        v.iter().flat_map(|x| x.to_le_bytes()).collect()
+    }
+    vec![
+        (
+            FieldMeta { name: "global_id", dtype: "u32", count: p.global_id.len() },
+            u32s(&p.global_id),
+        ),
+        (
+            FieldMeta { name: "out_indptr", dtype: "u64", count: p.out_indptr.len() },
+            u64s(&p.out_indptr),
+        ),
+        (
+            FieldMeta { name: "out_dst", dtype: "u32", count: p.out_dst.len() },
+            u32s(&p.out_dst),
+        ),
+        (
+            FieldMeta { name: "out_weight", dtype: "f32", count: p.out_weight.len() },
+            f32s(&p.out_weight),
+        ),
+        (
+            FieldMeta { name: "out_et_indptr", dtype: "u32", count: p.out_et_indptr.len() },
+            u32s(&p.out_et_indptr),
+        ),
+        (
+            FieldMeta { name: "out_et_ids", dtype: "u8", count: p.out_et_ids.len() },
+            p.out_et_ids.clone(),
+        ),
+        (
+            FieldMeta { name: "out_et_end", dtype: "u32", count: p.out_et_end.len() },
+            u32s(&p.out_et_end),
+        ),
+        (
+            FieldMeta { name: "in_indptr", dtype: "u64", count: p.in_indptr.len() },
+            u64s(&p.in_indptr),
+        ),
+        (
+            FieldMeta { name: "in_src", dtype: "u32", count: p.in_src.len() },
+            u32s(&p.in_src),
+        ),
+        (
+            FieldMeta { name: "in_eid", dtype: "u32", count: p.in_eid.len() },
+            u32s(&p.in_eid),
+        ),
+        (
+            FieldMeta { name: "out_deg_global", dtype: "u32", count: p.out_deg_global.len() },
+            u32s(&p.out_deg_global),
+        ),
+        (
+            FieldMeta { name: "in_deg_global", dtype: "u32", count: p.in_deg_global.len() },
+            u32s(&p.in_deg_global),
+        ),
+        (
+            FieldMeta { name: "partition_set", dtype: "u64", count: p.partition_set.raw().len() },
+            u64s(p.partition_set.raw()),
+        ),
+    ]
+}
+
+pub fn save_partition(p: &PartitionGraph, dir: &Path, name: &str) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let fields = fields_of(p);
+    let mut meta_fields = Vec::new();
+    let bin_path = dir.join(format!("{name}.bin"));
+    let mut w = BufWriter::new(File::create(&bin_path)?);
+    for (m, bytes) in &fields {
+        w.write_all(bytes)?;
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("name".into(), Json::Str(m.name.into()));
+        obj.insert("dtype".into(), Json::Str(m.dtype.into()));
+        obj.insert("count".into(), Json::Num(m.count as f64));
+        meta_fields.push(Json::Obj(obj));
+    }
+    w.flush()?;
+    let mut meta = std::collections::BTreeMap::new();
+    meta.insert("part_id".into(), Json::Num(p.part_id as f64));
+    meta.insert("num_parts".into(), Json::Num(p.num_parts as f64));
+    meta.insert("fields".into(), Json::Arr(meta_fields));
+    std::fs::write(
+        dir.join(format!("{name}.meta.json")),
+        emit(&Json::Obj(meta)),
+    )?;
+    Ok(())
+}
+
+pub fn load_partition(dir: &Path, name: &str) -> Result<PartitionGraph> {
+    let meta_raw = std::fs::read_to_string(dir.join(format!("{name}.meta.json")))
+        .with_context(|| format!("missing meta for {name}"))?;
+    let meta = Json::parse(&meta_raw).context("bad meta json")?;
+    let part_id = meta.get("part_id").and_then(Json::as_usize).context("part_id")?;
+    let num_parts = meta.get("num_parts").and_then(Json::as_usize).context("num_parts")?;
+    let mut r = BufReader::new(File::open(dir.join(format!("{name}.bin")))?);
+
+    fn read_u32s(r: &mut impl Read, n: usize) -> Result<Vec<u32>> {
+        let mut buf = vec![0u8; n * 4];
+        r.read_exact(&mut buf)?;
+        Ok(buf.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+    fn read_u64s(r: &mut impl Read, n: usize) -> Result<Vec<u64>> {
+        let mut buf = vec![0u8; n * 8];
+        r.read_exact(&mut buf)?;
+        Ok(buf.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+    fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+        let mut buf = vec![0u8; n * 4];
+        r.read_exact(&mut buf)?;
+        Ok(buf.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    let mut g = PartitionGraph {
+        part_id,
+        num_parts,
+        global_id: Vec::new(),
+        out_indptr: Vec::new(),
+        out_dst: Vec::new(),
+        out_weight: Vec::new(),
+        out_et_indptr: Vec::new(),
+        out_et_ids: Vec::new(),
+        out_et_end: Vec::new(),
+        in_indptr: Vec::new(),
+        in_src: Vec::new(),
+        in_eid: Vec::new(),
+        out_deg_global: Vec::new(),
+        in_deg_global: Vec::new(),
+        partition_set: BitMatrix::new(0, num_parts),
+    };
+    for f in meta.get("fields").and_then(Json::as_arr).context("fields")? {
+        let name = f.get("name").and_then(Json::as_str).context("field name")?;
+        let count = f.get("count").and_then(Json::as_usize).context("field count")?;
+        match name {
+            "global_id" => g.global_id = read_u32s(&mut r, count)?,
+            "out_indptr" => g.out_indptr = read_u64s(&mut r, count)?,
+            "out_dst" => g.out_dst = read_u32s(&mut r, count)?,
+            "out_weight" => g.out_weight = read_f32s(&mut r, count)?,
+            "out_et_indptr" => g.out_et_indptr = read_u32s(&mut r, count)?,
+            "out_et_ids" => {
+                let mut buf = vec![0u8; count];
+                r.read_exact(&mut buf)?;
+                g.out_et_ids = buf;
+            }
+            "out_et_end" => g.out_et_end = read_u32s(&mut r, count)?,
+            "in_indptr" => g.in_indptr = read_u64s(&mut r, count)?,
+            "in_src" => g.in_src = read_u32s(&mut r, count)?,
+            "in_eid" => g.in_eid = read_u32s(&mut r, count)?,
+            "out_deg_global" => g.out_deg_global = read_u32s(&mut r, count)?,
+            "in_deg_global" => g.in_deg_global = read_u32s(&mut r, count)?,
+            "partition_set" => {
+                g.partition_set =
+                    BitMatrix::from_raw(read_u64s(&mut r, count)?, num_parts)
+            }
+            other => bail!("unknown field {other}"),
+        }
+    }
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator;
+    use crate::graph::hetero::build_partitions;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn round_trip_preserves_everything() {
+        let mut rng = Rng::new(40);
+        let g = generator::heterogeneous_graph(800, 6000, 2, 3, 2.2, &mut rng);
+        let assign: Vec<u16> = (0..g.m()).map(|e| (e % 2) as u16).collect();
+        let parts = build_partitions(&g, &assign, 2);
+        let dir = std::env::temp_dir().join("glisp_io_test");
+        save_partition(&parts[0], &dir, "p0").unwrap();
+        let loaded = load_partition(&dir, "p0").unwrap();
+        assert_eq!(loaded.global_id, parts[0].global_id);
+        assert_eq!(loaded.out_indptr, parts[0].out_indptr);
+        assert_eq!(loaded.out_dst, parts[0].out_dst);
+        assert_eq!(loaded.out_weight, parts[0].out_weight);
+        assert_eq!(loaded.out_et_ids, parts[0].out_et_ids);
+        assert_eq!(loaded.out_et_end, parts[0].out_et_end);
+        assert_eq!(loaded.in_src, parts[0].in_src);
+        assert_eq!(loaded.in_eid, parts[0].in_eid);
+        assert_eq!(loaded.partition_set.raw(), parts[0].partition_set.raw());
+        assert_eq!(loaded.nbytes(), parts[0].nbytes());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_meta_errors() {
+        let dir = std::env::temp_dir().join("glisp_io_missing");
+        assert!(load_partition(&dir, "nope").is_err());
+    }
+}

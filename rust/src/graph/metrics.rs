@@ -1,0 +1,83 @@
+//! Graph-level metrics: degree distributions (Fig. 8) and dataset summary
+//! rows (Table I analogue for the synthetic suite).
+
+use crate::graph::csr::Graph;
+use crate::util::stats::{log_histogram, powerlaw_slope};
+
+#[derive(Clone, Debug)]
+pub struct DegreeDistribution {
+    /// (degree-bin lower bound, vertex count), log-binned.
+    pub hist: Vec<(u64, u64)>,
+    pub max_degree: u32,
+    pub avg_degree: f64,
+    /// log-log slope; ≤ -1 indicates a heavy tail.
+    pub slope: f64,
+}
+
+pub fn degree_distribution(g: &Graph) -> DegreeDistribution {
+    let degs = g.out_degrees();
+    let hist = log_histogram(degs.iter().map(|&d| d as u64));
+    let nonzero: Vec<(u64, u64)> = hist.iter().copied().filter(|&(d, _)| d > 0).collect();
+    DegreeDistribution {
+        slope: powerlaw_slope(&nonzero),
+        max_degree: degs.iter().copied().max().unwrap_or(0),
+        avg_degree: g.avg_degree(),
+        hist,
+    }
+}
+
+/// True iff the degree distribution is power-law-like: heavy negative
+/// log-log slope and a hotspot far above the mean (paper Fig. 8 criterion).
+pub fn is_power_law(g: &Graph) -> bool {
+    let d = degree_distribution(g);
+    d.slope < -0.8 && d.max_degree as f64 > 10.0 * d.avg_degree.max(1.0)
+}
+
+/// Table I-style summary row.
+#[derive(Clone, Debug)]
+pub struct DatasetSummary {
+    pub name: String,
+    pub n: usize,
+    pub m: usize,
+    pub avg_degree: f64,
+    pub max_degree: u32,
+    pub power_law: bool,
+}
+
+pub fn summarize(name: &str, g: &Graph) -> DatasetSummary {
+    let d = degree_distribution(g);
+    DatasetSummary {
+        name: name.to_string(),
+        n: g.n,
+        m: g.m(),
+        avg_degree: d.avg_degree,
+        max_degree: d.max_degree,
+        power_law: is_power_law(g),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn power_law_detection_separates_regimes() {
+        let mut rng = Rng::new(30);
+        let pl = generator::chung_lu(20_000, 140_000, 2.0, &mut rng);
+        let er = generator::erdos_renyi(20_000, 140_000, &mut rng);
+        assert!(is_power_law(&pl));
+        assert!(!is_power_law(&er));
+    }
+
+    #[test]
+    fn summary_fields() {
+        let mut rng = Rng::new(31);
+        let g = generator::erdos_renyi(1000, 5000, &mut rng);
+        let s = summarize("er", &g);
+        assert_eq!(s.n, 1000);
+        assert_eq!(s.m, 5000);
+        assert!((s.avg_degree - 5.0).abs() < 1e-9);
+    }
+}

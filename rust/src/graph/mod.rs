@@ -1,0 +1,14 @@
+//! Graph substrate: CSR storage, synthetic generators, the compact
+//! vertex-cut partition structure (paper Fig. 6), reorder algorithms,
+//! degree metrics, binary IO, and Table III memory models.
+
+pub mod csr;
+pub mod generator;
+pub mod hetero;
+pub mod io;
+pub mod memfoot;
+pub mod metrics;
+pub mod reorder;
+
+pub use csr::{EId, Graph, VId};
+pub use hetero::{build_partitions, PartitionGraph};

@@ -1,0 +1,247 @@
+//! Graph reorder algorithms (paper §II-C, §III-D). A reordering is a
+//! permutation `order` where `order[rank] = vertex`: the vertex that gets
+//! new consecutive ID `rank`. The inference engine assigns cache-local IDs
+//! with these; Fig. 14 compares them.
+//!
+//! Keys (paper §IV-E): NS = global_id, DS = degree (desc), PS =
+//! (partition_id, global_id), PDS = (partition_id, degree desc) — the
+//! paper's contribution, reusing locality already mined by the partitioner.
+//! BFS and Hub-Clustering are the classic lightweight comparators.
+
+use crate::graph::csr::{Graph, VId};
+use crate::util::bitset::BitSet;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ReorderAlgo {
+    /// Natural Sort — identity (ids as they arrive).
+    NS,
+    /// Degree Sort, descending.
+    DS,
+    /// Partition Sort: (partition, global id).
+    PS,
+    /// Partition based Degree Sort: (partition, degree desc) — GLISP's PDS.
+    PDS,
+    /// Breadth-first order from the highest-degree vertex.
+    BFS,
+    /// Hub clustering: hubs (deg > avg) first in degree order, then each
+    /// hub's non-hub neighbors grouped behind it.
+    HubCluster,
+}
+
+impl ReorderAlgo {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReorderAlgo::NS => "NS",
+            ReorderAlgo::DS => "DS",
+            ReorderAlgo::PS => "PS",
+            ReorderAlgo::PDS => "PDS",
+            ReorderAlgo::BFS => "BFS",
+            ReorderAlgo::HubCluster => "Hub",
+        }
+    }
+}
+
+/// Compute `order[rank] = vertex`. `part_of` gives each vertex's (primary)
+/// partition for PS/PDS; pass `&[]` for partition-free algorithms.
+pub fn reorder(g: &Graph, algo: ReorderAlgo, part_of: &[u16]) -> Vec<VId> {
+    match algo {
+        ReorderAlgo::NS => (0..g.n as VId).collect(),
+        ReorderAlgo::DS => {
+            let deg = total_degrees(g);
+            let mut order: Vec<VId> = (0..g.n as VId).collect();
+            order.sort_by_key(|&v| (std::cmp::Reverse(deg[v as usize]), v));
+            order
+        }
+        ReorderAlgo::PS => {
+            assert_eq!(part_of.len(), g.n, "PS needs a partition map");
+            let mut order: Vec<VId> = (0..g.n as VId).collect();
+            order.sort_by_key(|&v| (part_of[v as usize], v));
+            order
+        }
+        ReorderAlgo::PDS => {
+            assert_eq!(part_of.len(), g.n, "PDS needs a partition map");
+            let deg = total_degrees(g);
+            let mut order: Vec<VId> = (0..g.n as VId).collect();
+            order.sort_by_key(|&v| {
+                (
+                    part_of[v as usize],
+                    std::cmp::Reverse(deg[v as usize]),
+                    v,
+                )
+            });
+            order
+        }
+        ReorderAlgo::BFS => bfs_order(g),
+        ReorderAlgo::HubCluster => hub_cluster(g),
+    }
+}
+
+/// Inverse permutation: `rank_of[vertex] = rank` (the vertex's new ID).
+pub fn rank_of(order: &[VId]) -> Vec<u32> {
+    let mut rank = vec![0u32; order.len()];
+    for (r, &v) in order.iter().enumerate() {
+        rank[v as usize] = r as u32;
+    }
+    rank
+}
+
+fn total_degrees(g: &Graph) -> Vec<u32> {
+    let ins = g.in_degrees();
+    g.out_degrees()
+        .iter()
+        .zip(&ins)
+        .map(|(&o, &i)| o + i)
+        .collect()
+}
+
+fn bfs_order(g: &Graph) -> Vec<VId> {
+    let deg = total_degrees(g);
+    let mut order = Vec::with_capacity(g.n);
+    let mut visited = BitSet::new(g.n);
+    // Seed from the highest-degree vertex of each component, in degree order.
+    let mut by_deg: Vec<VId> = (0..g.n as VId).collect();
+    by_deg.sort_by_key(|&v| (std::cmp::Reverse(deg[v as usize]), v));
+    let mut queue = std::collections::VecDeque::new();
+    for &seed in &by_deg {
+        if visited.get(seed as usize) {
+            continue;
+        }
+        visited.set(seed as usize);
+        queue.push_back(seed);
+        while let Some(v) = queue.pop_front() {
+            order.push(v);
+            for &w in g.out_neighbors(v) {
+                if !visited.get(w as usize) {
+                    visited.set(w as usize);
+                    queue.push_back(w);
+                }
+            }
+        }
+    }
+    order
+}
+
+fn hub_cluster(g: &Graph) -> Vec<VId> {
+    let deg = total_degrees(g);
+    let avg = deg.iter().map(|&d| d as f64).sum::<f64>() / g.n.max(1) as f64;
+    let mut order = Vec::with_capacity(g.n);
+    let mut placed = BitSet::new(g.n);
+    let mut hubs: Vec<VId> = (0..g.n as VId)
+        .filter(|&v| deg[v as usize] as f64 > avg)
+        .collect();
+    hubs.sort_by_key(|&v| (std::cmp::Reverse(deg[v as usize]), v));
+    for &h in &hubs {
+        if !placed.get(h as usize) {
+            placed.set(h as usize);
+            order.push(h);
+        }
+        for &w in g.out_neighbors(h) {
+            if !placed.get(w as usize) {
+                placed.set(w as usize);
+                order.push(w);
+            }
+        }
+    }
+    for v in 0..g.n as VId {
+        if !placed.get(v as usize) {
+            order.push(v);
+        }
+    }
+    order
+}
+
+/// Locality figure of merit: average |rank(u) - rank(v)| over edges,
+/// normalized by n. Lower = spatially closer neighbors = fewer chunks
+/// touched by the inference engine.
+pub fn avg_edge_span(g: &Graph, order: &[VId]) -> f64 {
+    let rank = rank_of(order);
+    let mut total = 0f64;
+    for u in 0..g.n {
+        for &v in g.out_neighbors(u as VId) {
+            total += (rank[u] as f64 - rank[v as usize] as f64).abs();
+        }
+    }
+    total / (g.m().max(1) as f64) / g.n.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator;
+    use crate::util::rng::Rng;
+
+    fn powerlaw() -> Graph {
+        let mut rng = Rng::new(21);
+        generator::chung_lu(3000, 24_000, 2.1, &mut rng)
+    }
+
+    fn assert_permutation(order: &[VId], n: usize) {
+        assert_eq!(order.len(), n);
+        let mut seen = vec![false; n];
+        for &v in order {
+            assert!(!seen[v as usize], "dup {v}");
+            seen[v as usize] = true;
+        }
+    }
+
+    #[test]
+    fn all_algorithms_produce_permutations() {
+        let g = powerlaw();
+        let part: Vec<u16> = (0..g.n).map(|v| (v % 4) as u16).collect();
+        for algo in [
+            ReorderAlgo::NS,
+            ReorderAlgo::DS,
+            ReorderAlgo::PS,
+            ReorderAlgo::PDS,
+            ReorderAlgo::BFS,
+            ReorderAlgo::HubCluster,
+        ] {
+            let order = reorder(&g, algo, &part);
+            assert_permutation(&order, g.n);
+        }
+    }
+
+    #[test]
+    fn ds_is_degree_descending() {
+        let g = powerlaw();
+        let order = reorder(&g, ReorderAlgo::DS, &[]);
+        let deg = total_degrees(&g);
+        for w in order.windows(2) {
+            assert!(deg[w[0] as usize] >= deg[w[1] as usize]);
+        }
+    }
+
+    #[test]
+    fn pds_groups_by_partition_then_degree() {
+        let g = powerlaw();
+        let part: Vec<u16> = (0..g.n).map(|v| (v % 3) as u16).collect();
+        let order = reorder(&g, ReorderAlgo::PDS, &part);
+        let deg = total_degrees(&g);
+        for w in order.windows(2) {
+            let (p0, p1) = (part[w[0] as usize], part[w[1] as usize]);
+            assert!(p0 <= p1);
+            if p0 == p1 {
+                assert!(deg[w[0] as usize] >= deg[w[1] as usize]);
+            }
+        }
+    }
+
+    #[test]
+    fn rank_inverts_order() {
+        let g = powerlaw();
+        let order = reorder(&g, ReorderAlgo::DS, &[]);
+        let rank = rank_of(&order);
+        for (r, &v) in order.iter().enumerate() {
+            assert_eq!(rank[v as usize] as usize, r);
+        }
+    }
+
+    #[test]
+    fn bfs_improves_span_over_random_scramble() {
+        let g = powerlaw();
+        let bfs = reorder(&g, ReorderAlgo::BFS, &[]);
+        let mut scrambled: Vec<VId> = (0..g.n as VId).collect();
+        Rng::new(5).shuffle(&mut scrambled);
+        assert!(avg_edge_span(&g, &bfs) < avg_edge_span(&g, &scrambled));
+    }
+}

@@ -1,0 +1,7 @@
+//! Bench harness: table/figure rendering and the shared synthetic workload
+//! suite (criterion substitute; see DESIGN.md §4).
+
+pub mod report;
+pub mod workloads;
+
+pub use report::{bar_chart, f2, f3, ix, speedup, Table};

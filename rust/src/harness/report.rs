@@ -1,0 +1,112 @@
+//! ASCII/markdown table rendering for the bench harness — every bench
+//! prints the same rows the paper's table/figure reports (criterion is not
+//! in the offline vendor set; see util::timer::measure for the timing
+//! core).
+
+/// A simple right-aligned table with a header row.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n### {}\n\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                s.push_str(&format!(" {c:>w$} |", w = w));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        let sep: Vec<String> = widths.iter().map(|&w| "-".repeat(w)).collect();
+        out.push_str(&fmt_row(&sep, &widths));
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format helpers used across benches.
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+pub fn ix(x: usize) -> String {
+    format!("{x}")
+}
+
+pub fn speedup(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+/// Simple ASCII bar series for figure-shaped outputs.
+pub fn bar_chart(title: &str, labels: &[String], values: &[f64]) -> String {
+    let max = values.iter().cloned().fold(f64::MIN, f64::max).max(1e-12);
+    let lw = labels.iter().map(|l| l.len()).max().unwrap_or(0);
+    let mut out = format!("\n### {title}\n\n");
+    for (l, &v) in labels.iter().zip(values) {
+        let n = ((v / max) * 50.0).round() as usize;
+        out.push_str(&format!("{l:>lw$} | {}{} {v:.3}\n", "#".repeat(n), "", lw = lw));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["name", "value"]);
+        t.row(&["a".into(), "1.00".into()]);
+        t.row(&["longer".into(), "2".into()]);
+        let r = t.render();
+        assert!(r.contains("### Demo"));
+        assert!(r.contains("| longer |"));
+        // All data lines have the same width.
+        let lens: Vec<usize> = r.lines().filter(|l| l.starts_with('|')).map(|l| l.len()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn bars_scale() {
+        let c = bar_chart("B", &["x".into(), "y".into()], &[1.0, 2.0]);
+        let lines: Vec<&str> = c.lines().filter(|l| l.contains('|')).collect();
+        let count = |s: &str| s.matches('#').count();
+        assert_eq!(count(lines[1]), 2 * count(lines[0]));
+    }
+}

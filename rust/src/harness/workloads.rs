@@ -1,0 +1,57 @@
+//! Shared bench workloads: the scaled-down dataset suite and common
+//! experiment wiring, so every bench regenerates its table/figure from the
+//! same graphs. Sizes are tuned so the full `cargo bench` suite finishes
+//! in minutes on a laptop-class CPU; set GLISP_BENCH_SCALE to scale the
+//! vertex/edge counts (1.0 = default).
+
+use crate::graph::csr::Graph;
+use crate::graph::generator::{self, DatasetSpec, GenKind};
+
+pub fn bench_scale() -> f64 {
+    std::env::var("GLISP_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.0)
+}
+
+/// The Table I-analogue suite used by the partitioning/sampling benches.
+pub fn bench_datasets() -> Vec<DatasetSpec> {
+    let s = bench_scale();
+    let scale = |x: usize| ((x as f64 * s) as usize).max(1000);
+    vec![
+        DatasetSpec { name: "products-s", n: scale(12_000), m: scale(300_000), alpha: 0.0, kind: GenKind::ErdosRenyi },
+        DatasetSpec { name: "wiki-s", n: scale(45_000), m: scale(300_000), alpha: 2.1, kind: GenKind::ChungLu },
+        DatasetSpec { name: "twitter-s", n: scale(21_000), m: scale(740_000), alpha: 1.9, kind: GenKind::ChungLu },
+        DatasetSpec { name: "paper-s", n: scale(55_000), m: scale(800_000), alpha: 2.2, kind: GenKind::RMat },
+    ]
+}
+
+/// The large sparse "RelNet"-regime graph for scale-flavoured benches.
+pub fn relnet_like() -> DatasetSpec {
+    let s = bench_scale();
+    let scale = |x: usize| ((x as f64 * s) as usize).max(1000);
+    DatasetSpec {
+        name: "relnet-s",
+        n: scale(400_000),
+        m: scale(1_900_000),
+        alpha: 2.3,
+        kind: GenKind::ChungLu,
+    }
+}
+
+pub fn load(spec: &DatasetSpec, seed: u64) -> Graph {
+    generator::generate(spec, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_has_expected_regimes() {
+        let ds = bench_datasets();
+        assert_eq!(ds.len(), 4);
+        assert_eq!(ds[0].kind, GenKind::ErdosRenyi); // the non-power-law control
+        assert!(ds[1..].iter().all(|d| d.kind != GenKind::ErdosRenyi));
+    }
+}

@@ -1,0 +1,144 @@
+//! Second-level dynamic in-memory chunk cache (paper §III-D): absorbs the
+//! repeated reads layerwise inference converts recomputation into. FIFO or
+//! LRU eviction; the paper measures both (Fig. 15b) and ships FIFO.
+
+use std::collections::{HashMap, VecDeque};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvictPolicy {
+    Fifo,
+    Lru,
+}
+
+pub struct DynamicCache {
+    capacity: usize,
+    policy: EvictPolicy,
+    map: HashMap<usize, Vec<f32>>,
+    /// FIFO: insertion order. LRU: recency order (front = oldest).
+    queue: VecDeque<usize>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl DynamicCache {
+    pub fn new(capacity: usize, policy: EvictPolicy) -> Self {
+        Self {
+            capacity: capacity.max(1),
+            policy,
+            map: HashMap::new(),
+            queue: VecDeque::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn get(&mut self, chunk: usize) -> Option<&Vec<f32>> {
+        if self.map.contains_key(&chunk) {
+            self.hits += 1;
+            if self.policy == EvictPolicy::Lru {
+                // Move to the back (most recent). O(n) scan is fine at the
+                // few-thousand-chunk scale of the simulation.
+                if let Some(pos) = self.queue.iter().position(|&c| c == chunk) {
+                    self.queue.remove(pos);
+                    self.queue.push_back(chunk);
+                }
+            }
+            self.map.get(&chunk)
+        } else {
+            self.misses += 1;
+            None
+        }
+    }
+
+    pub fn insert(&mut self, chunk: usize, data: Vec<f32>) {
+        if self.map.contains_key(&chunk) {
+            return;
+        }
+        if self.map.len() == self.capacity {
+            if let Some(victim) = self.queue.pop_front() {
+                self.map.remove(&victim);
+            }
+        }
+        self.map.insert(chunk, data);
+        self.queue.push_back(chunk);
+    }
+
+    pub fn hit_ratio(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.hits = 0;
+        self.misses = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_evicts_insertion_order() {
+        let mut c = DynamicCache::new(2, EvictPolicy::Fifo);
+        c.insert(1, vec![1.0]);
+        c.insert(2, vec![2.0]);
+        assert!(c.get(1).is_some()); // access does not protect under FIFO
+        c.insert(3, vec![3.0]); // evicts 1
+        assert!(c.get(1).is_none());
+        assert!(c.get(2).is_some());
+        assert!(c.get(3).is_some());
+    }
+
+    #[test]
+    fn lru_protects_recently_used() {
+        let mut c = DynamicCache::new(2, EvictPolicy::Lru);
+        c.insert(1, vec![1.0]);
+        c.insert(2, vec![2.0]);
+        assert!(c.get(1).is_some()); // 1 becomes most recent
+        c.insert(3, vec![3.0]); // evicts 2
+        assert!(c.get(1).is_some());
+        assert!(c.get(2).is_none());
+    }
+
+    #[test]
+    fn hit_ratio_counts() {
+        let mut c = DynamicCache::new(4, EvictPolicy::Fifo);
+        c.insert(0, vec![]);
+        c.get(0);
+        c.get(9);
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.misses, 1);
+        assert!((c.hit_ratio() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn capacity_bound_holds() {
+        let mut c = DynamicCache::new(3, EvictPolicy::Fifo);
+        for i in 0..100 {
+            c.insert(i, vec![i as f32]);
+            assert!(c.len() <= 3);
+        }
+    }
+
+    #[test]
+    fn duplicate_insert_is_noop() {
+        let mut c = DynamicCache::new(2, EvictPolicy::Fifo);
+        c.insert(1, vec![1.0]);
+        c.insert(1, vec![9.0]);
+        assert_eq!(c.get(1).unwrap()[0], 1.0);
+        assert_eq!(c.len(), 1);
+    }
+}

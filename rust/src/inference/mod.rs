@@ -1,0 +1,16 @@
+//! Graph inference engine (paper §III-D): layerwise K-slice inference with
+//! the two-level (static + dynamic) embedding cache over a chunked
+//! simulated-DFS store, PDS reordering, and the samplewise baseline it is
+//! measured against (Fig. 13–15, Table V).
+
+pub mod chunk_store;
+pub mod dynamic_cache;
+pub mod engine;
+pub mod samplewise;
+pub mod static_cache;
+
+pub use chunk_store::{ChunkStore, Tier};
+pub use dynamic_cache::{DynamicCache, EvictPolicy};
+pub use engine::{init_decode_params, init_encoder_params, EngineConfig, EngineReport, LayerwiseEngine};
+pub use samplewise::{SamplewiseReport, SamplewiseRunner};
+pub use static_cache::CacheSystem;

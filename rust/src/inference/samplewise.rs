@@ -1,0 +1,224 @@
+//! Naive samplewise inference — the Fig. 13 baseline. Each target vertex
+//! (or edge endpoint) independently samples its K-hop tree and runs the
+//! full K-layer forward, recomputing every overlapping neighbor embedding
+//! from scratch. "Naive" = training mode without the engine's GNN slicing,
+//! embedding cache or reorder (paper's wording).
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::features::FeatureStore;
+use crate::graph::csr::{Graph, VId};
+use crate::runtime::tensor::HostTensor;
+use crate::runtime::Runtime;
+use crate::sampling::algo_d;
+use crate::sampling::request::PAD;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, Default)]
+pub struct SamplewiseReport {
+    pub model_secs: f64,
+    pub sample_secs: f64,
+    /// Vertex-layer computations — the redundancy the layerwise engine
+    /// eliminates (each tree slot at each layer costs one).
+    pub vertices_computed: u64,
+}
+
+pub struct SamplewiseRunner<'g> {
+    pub runtime: Runtime,
+    pub features: FeatureStore,
+    pub enc_params: Vec<HostTensor>,
+    g: &'g Graph,
+    rng: Rng,
+    batch: usize,
+    fanouts: Vec<usize>,
+    hidden: usize,
+}
+
+impl<'g> SamplewiseRunner<'g> {
+    pub fn new(
+        g: &'g Graph,
+        runtime: Runtime,
+        features: FeatureStore,
+        enc_params: Vec<HostTensor>,
+        seed: u64,
+    ) -> Result<Self> {
+        let spec = runtime.spec("sage_embed")?;
+        let batch = spec.meta_usize("batch").context("meta.batch")?;
+        let fanouts = spec.meta_usizes("fanouts").context("meta.fanouts")?;
+        let hidden = spec.meta_usize("hidden").context("meta.hidden")?;
+        Ok(Self {
+            runtime,
+            features,
+            enc_params,
+            g,
+            rng: Rng::new(seed),
+            batch,
+            fanouts,
+            hidden,
+        })
+    }
+
+    pub fn hidden(&self) -> usize {
+        self.hidden
+    }
+
+    /// Sample a fanout-padded tree directly over the local graph (same
+    /// Algorithm D sampler as the service; see engine.rs for why inference
+    /// samples locally).
+    fn sample_levels(&mut self, seeds: &[VId]) -> (Vec<Vec<VId>>, Vec<Vec<f32>>) {
+        let mut levels = vec![seeds.to_vec()];
+        let mut masks = Vec::new();
+        for &f in &self.fanouts {
+            let parents = levels.last().unwrap();
+            let mut level = vec![PAD; parents.len() * f];
+            let mut mask = vec![0f32; parents.len() * f];
+            for (i, &p) in parents.iter().enumerate() {
+                if p == PAD {
+                    continue;
+                }
+                let cand = self.g.out_neighbors(p);
+                if cand.is_empty() {
+                    continue;
+                }
+                if cand.len() <= f {
+                    for (s, &c) in cand.iter().enumerate() {
+                        level[i * f + s] = c;
+                        mask[i * f + s] = 1.0;
+                    }
+                } else {
+                    for (s, idx) in algo_d::sample(&mut self.rng, cand.len(), f)
+                        .into_iter()
+                        .enumerate()
+                    {
+                        level[i * f + s] = cand[idx];
+                        mask[i * f + s] = 1.0;
+                    }
+                }
+            }
+            levels.push(level);
+            masks.push(mask);
+        }
+        (levels, masks)
+    }
+
+    /// Embed one full batch of seeds (padded with PAD if short); returns
+    /// [batch, hidden] embeddings.
+    pub fn embed_batch(&mut self, seeds: &[VId], report: &mut SamplewiseReport) -> Result<Vec<f32>> {
+        assert!(seeds.len() <= self.batch);
+        let mut padded = seeds.to_vec();
+        padded.resize(self.batch, PAD);
+        let t_s = crate::util::timer::Timer::start();
+        let (levels, masks) = self.sample_levels(&padded);
+        report.sample_secs += t_s.secs();
+
+        let t_m = crate::util::timer::Timer::start();
+        let din = self.features.din;
+        let mut inputs: Vec<HostTensor> = self.enc_params.clone();
+        for level in &levels {
+            inputs.push(HostTensor::f32(vec![level.len(), din], self.features.batch(level)));
+            // K-layer forward touches every tree slot at every layer it
+            // participates in; count real slots once per layer that
+            // computes them (level l is recomputed (K - l) times).
+            let real = level.iter().filter(|&&v| v != PAD).count() as u64;
+            report.vertices_computed += real;
+        }
+        for m in &masks {
+            inputs.push(HostTensor::f32(vec![m.len()], m.clone()));
+        }
+        let out = self.runtime.execute("sage_embed", &inputs)?;
+        report.model_secs += t_m.secs();
+        Ok(out[0].as_f32().to_vec())
+    }
+
+    /// Full-graph vertex embedding, samplewise: loops every vertex.
+    pub fn run_vertex_embedding(&mut self) -> Result<(Vec<f32>, SamplewiseReport)> {
+        let mut report = SamplewiseReport::default();
+        let mut out = vec![0f32; self.g.n * self.hidden];
+        let ids: Vec<VId> = (0..self.g.n as VId).collect();
+        for chunk in ids.chunks(self.batch) {
+            let emb = self.embed_batch(chunk, &mut report)?;
+            let base = chunk[0] as usize * self.hidden;
+            out[base..base + chunk.len() * self.hidden]
+                .copy_from_slice(&emb[..chunk.len() * self.hidden]);
+        }
+        Ok((out, report))
+    }
+
+    /// Link prediction, samplewise: embeds BOTH endpoints' trees per edge —
+    /// the recomputation blow-up Fig. 13 shows (70.77× there).
+    pub fn run_link_prediction(
+        &mut self,
+        edges: &[(VId, VId)],
+        decode_params: &[HostTensor],
+    ) -> Result<(Vec<f32>, SamplewiseReport)> {
+        let mut report = SamplewiseReport::default();
+        let spec = self.runtime.spec("link_decode")?;
+        let db = spec.meta_usize("batch").context("meta.batch")?;
+        let mut scores = Vec::with_capacity(edges.len());
+        for chunk in edges.chunks(db.min(self.batch)) {
+            let us: Vec<VId> = chunk.iter().map(|e| e.0).collect();
+            let vs: Vec<VId> = chunk.iter().map(|e| e.1).collect();
+            let eu = self.embed_batch(&us, &mut report)?;
+            let ev = self.embed_batch(&vs, &mut report)?;
+            // Pad the decode batch.
+            let h = self.hidden;
+            let mut u = vec![0f32; db * h];
+            let mut v = vec![0f32; db * h];
+            u[..chunk.len() * h].copy_from_slice(&eu[..chunk.len() * h]);
+            v[..chunk.len() * h].copy_from_slice(&ev[..chunk.len() * h]);
+            let t_m = crate::util::timer::Timer::start();
+            let mut inputs = vec![
+                HostTensor::f32(vec![db, h], u),
+                HostTensor::f32(vec![db, h], v),
+            ];
+            inputs.extend(decode_params.iter().cloned());
+            let out = self.runtime.execute("link_decode", &inputs)?;
+            report.model_secs += t_m.secs();
+            scores.extend_from_slice(&out[0].as_f32()[..chunk.len()]);
+        }
+        Ok((scores, report))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator;
+    use crate::inference::engine::{init_decode_params, init_encoder_params};
+
+    fn runner(g: &Graph) -> Option<SamplewiseRunner<'_>> {
+        let art = crate::test_artifacts_dir()?;
+        let runtime = Runtime::load(&art).ok()?;
+        let enc = init_encoder_params(&runtime, 3).unwrap();
+        Some(SamplewiseRunner::new(g, runtime, FeatureStore::unlabeled(64), enc, 5).unwrap())
+    }
+
+    #[test]
+    fn embeds_all_vertices() {
+        let mut rng = Rng::new(310);
+        let g = generator::chung_lu(300, 2400, 2.1, &mut rng);
+        let Some(mut r) = runner(&g) else { return };
+        let (h, report) = r.run_vertex_embedding().unwrap();
+        assert_eq!(h.len(), 300 * r.hidden());
+        assert!(h.iter().all(|x| x.is_finite()));
+        // Redundancy: every seed costs ~1 + f1 + f1·f2 slots, far above the
+        // 2/vertex of the layerwise engine.
+        assert!(report.vertices_computed > 10 * g.n as u64);
+    }
+
+    #[test]
+    fn link_prediction_doubles_tree_work() {
+        let mut rng = Rng::new(311);
+        let g = generator::chung_lu(300, 2400, 2.1, &mut rng);
+        let Some(mut r) = runner(&g) else { return };
+        let dec = init_decode_params(&r.runtime, 9).unwrap();
+        let edges: Vec<(VId, VId)> = (0..64u32)
+            .filter(|&u| !g.out_neighbors(u).is_empty())
+            .map(|u| (u, g.out_neighbors(u)[0]))
+            .collect();
+        let (scores, report) = r.run_link_prediction(&edges, &dec).unwrap();
+        assert_eq!(scores.len(), edges.len());
+        assert!(scores.iter().all(|&s| (0.0..=1.0).contains(&s)));
+        assert!(report.vertices_computed > 2 * edges.len() as u64 * 10);
+    }
+}

@@ -1,0 +1,156 @@
+//! Per-worker two-level cache view over a chunk store (paper §III-D).
+//!
+//! Level 1 (**static**): the chunks covering this worker's partition
+//! vertices plus the pre-sampled neighbors of its boundary vertices —
+//! filled before each layer's inference, guaranteeing a 100% local hit
+//! ratio for the layer's reads. Level 2 (**dynamic**): an in-memory
+//! FIFO/LRU chunk cache absorbing repeated reads.
+
+use anyhow::Result;
+
+use crate::inference::chunk_store::{ChunkStore, Tier};
+use crate::inference::dynamic_cache::{DynamicCache, EvictPolicy};
+use crate::util::bitset::BitSet;
+
+pub struct CacheSystem {
+    /// Chunks resident in this worker's static (local disk) cache.
+    static_chunks: BitSet,
+    dynamic: DynamicCache,
+    pub fill_cost: u64,
+    pub fill_chunks: u64,
+}
+
+impl CacheSystem {
+    pub fn new(num_chunks: usize, dyn_capacity: usize, policy: EvictPolicy) -> Self {
+        Self {
+            static_chunks: BitSet::new(num_chunks),
+            dynamic: DynamicCache::new(dyn_capacity, policy),
+            fill_cost: 0,
+            fill_chunks: 0,
+        }
+    }
+
+    /// Mark + account the static fill for `chunks` (each fetched once from
+    /// the DFS at remote cost — the Table V "fill cache" phase).
+    pub fn fill_static(&mut self, chunks: impl Iterator<Item = usize>) {
+        for c in chunks {
+            if !self.static_chunks.get(c) {
+                self.static_chunks.set(c);
+                self.fill_cost += crate::inference::chunk_store::COST_REMOTE;
+                self.fill_chunks += 1;
+            }
+        }
+    }
+
+    /// Read one embedding row through the cache hierarchy.
+    pub fn read_row(&mut self, store: &ChunkStore, row: usize) -> Result<Vec<f32>> {
+        let chunk = store.chunk_of_row(row);
+        let offset = (row - chunk * store.chunk_size) * store.dim;
+        if let Some(data) = self.dynamic.get(chunk) {
+            store.note_dynamic_hit();
+            return Ok(data[offset..offset + store.dim].to_vec());
+        }
+        let tier = if self.static_chunks.get(chunk) {
+            Tier::Static
+        } else {
+            Tier::Remote
+        };
+        let data = store.read_chunk(chunk, tier)?;
+        let out = data[offset..offset + store.dim].to_vec();
+        self.dynamic.insert(chunk, data);
+        Ok(out)
+    }
+
+    /// Fetch a whole chunk through the hierarchy — the engine's batched
+    /// read path (§Perf): embedding IO is chunk-granular (Zarr semantics),
+    /// so a block of rows fetches each distinct chunk once instead of
+    /// taking one cache round-trip per row.
+    pub fn get_chunk(&mut self, store: &ChunkStore, chunk: usize) -> Result<Vec<f32>> {
+        if let Some(data) = self.dynamic.get(chunk) {
+            store.note_dynamic_hit();
+            return Ok(data.clone());
+        }
+        let tier = if self.static_chunks.get(chunk) {
+            Tier::Static
+        } else {
+            Tier::Remote
+        };
+        let data = store.read_chunk(chunk, tier)?;
+        self.dynamic.insert(chunk, data.clone());
+        Ok(data)
+    }
+
+    pub fn dynamic_hit_ratio(&self) -> f64 {
+        self.dynamic.hit_ratio()
+    }
+
+    pub fn reset_dynamic(&mut self) {
+        self.dynamic.reset_stats();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inference::chunk_store::{COST_DYNAMIC, COST_REMOTE, COST_STATIC};
+
+    fn store(name: &str) -> ChunkStore {
+        let dir = std::env::temp_dir().join(format!("glisp_sc_{name}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cs = ChunkStore::create(dir, 64, 8, 2).unwrap();
+        for c in 0..8 {
+            let data: Vec<f32> = (0..16).map(|i| (c * 100 + i) as f32).collect();
+            cs.write_chunk(c, &data).unwrap();
+        }
+        cs
+    }
+
+    #[test]
+    fn read_row_values_correct() {
+        let cs = store("vals");
+        let mut sys = CacheSystem::new(8, 2, EvictPolicy::Fifo);
+        let row = sys.read_row(&cs, 9).unwrap(); // chunk 1, row 1
+        assert_eq!(row, vec![102.0, 103.0]);
+    }
+
+    #[test]
+    fn tier_selection_and_costs() {
+        let cs = store("tiers");
+        let mut sys = CacheSystem::new(8, 1, EvictPolicy::Fifo);
+        sys.fill_static(std::iter::once(0));
+        assert_eq!(sys.fill_cost, COST_REMOTE);
+        sys.read_row(&cs, 0).unwrap(); // static read
+        sys.read_row(&cs, 1).unwrap(); // dynamic hit (same chunk)
+        sys.read_row(&cs, 63).unwrap(); // chunk 7: not static => remote
+        assert_eq!(
+            cs.stats.total_cost(),
+            COST_STATIC + COST_DYNAMIC + COST_REMOTE
+        );
+    }
+
+    #[test]
+    fn full_static_fill_means_no_remote_reads() {
+        let cs = store("full");
+        let mut sys = CacheSystem::new(8, 2, EvictPolicy::Fifo);
+        sys.fill_static(0..8);
+        for row in 0..64 {
+            sys.read_row(&cs, row).unwrap();
+        }
+        assert_eq!(cs.stats.remote_reads.load(std::sync::atomic::Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn locality_raises_dynamic_hit_ratio() {
+        let cs = store("local");
+        // Sequential rows (high locality) vs striding across chunks.
+        let mut seq = CacheSystem::new(8, 2, EvictPolicy::Fifo);
+        for row in 0..64 {
+            seq.read_row(&cs, row).unwrap();
+        }
+        let mut stride = CacheSystem::new(8, 2, EvictPolicy::Fifo);
+        for i in 0..64 {
+            stride.read_row(&cs, (i * 8 + i / 8) % 64).unwrap();
+        }
+        assert!(seq.dynamic_hit_ratio() > stride.dynamic_hit_ratio());
+    }
+}

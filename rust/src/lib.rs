@@ -1,0 +1,41 @@
+//! # GLISP — Graph Learning driven by Inherent Structural Properties
+//!
+//! A from-scratch reproduction of *"GLISP: A Scalable GNN Learning System by
+//! Exploiting Inherent Structural Properties of Graphs"* (Zhu et al., Ant
+//! Group, 2024) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the distributed systems contribution:
+//!   [`partition`] (AdaDNE vertex-cut partitioner + baselines), [`sampling`]
+//!   (Gather-Apply K-hop neighbor sampling service), [`inference`]
+//!   (layerwise inference engine with the two-level embedding cache), and
+//!   the [`coordinator`] training loop.
+//! * **Layer 2/1 (python/, build-time only)** — GNN models and Pallas
+//!   kernels, AOT-lowered to HLO text; [`runtime`] loads and executes the
+//!   artifacts on the PJRT CPU client. Python never runs on the request
+//!   path.
+//!
+//! See DESIGN.md for the experiment index and EXPERIMENTS.md for measured
+//! results.
+
+pub mod cli;
+pub mod coordinator;
+pub mod graph;
+pub mod harness;
+pub mod inference;
+pub mod partition;
+pub mod runtime;
+pub mod sampling;
+pub mod util;
+
+/// Artifacts directory for tests: Some(dir) iff `make artifacts` has run.
+/// Tests that need AOT artifacts self-skip otherwise.
+pub fn test_artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = runtime::Runtime::default_dir();
+    let dir = if dir.is_relative() {
+        // Tests run from the workspace root; examples may chdir.
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(dir)
+    } else {
+        dir
+    };
+    dir.join("manifest.json").exists().then_some(dir)
+}

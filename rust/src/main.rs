@@ -1,0 +1,288 @@
+//! GLISP leader binary: partition / sample / train / infer a synthetic
+//! workload end-to-end from the command line.
+//!
+//! ```text
+//! glisp partition --dataset twitter-s --parts 8 --algo adadne
+//! glisp sample    --dataset wiki-s --parts 4 --fanouts 15,10,5 --batches 50
+//! glisp train     --model sage --steps 200 --parts 2 [--eval]
+//! glisp infer     --n 20000 --parts 4 --task both
+//! glisp datasets
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+
+use glisp::cli::Args;
+use glisp::coordinator::{Batcher, FeatureStore, Trainer, TrainerConfig};
+use glisp::graph::{generator, metrics};
+use glisp::harness::{f2, f3, ix, Table};
+use glisp::inference::{
+    init_decode_params, init_encoder_params, EngineConfig, LayerwiseEngine, SamplewiseRunner,
+};
+use glisp::partition::{
+    quality, AdaDNE, DistributedNE, EdgeCutLDG, Hash1D, Hash2D, Partitioner,
+};
+use glisp::runtime::Runtime;
+use glisp::sampling::{balanced_seeds, sample_tree, SampleConfig, SamplingService};
+use glisp::util::rng::Rng;
+use glisp::util::timer::Timer;
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.subcommand.as_deref() {
+        Some("partition") => cmd_partition(&args),
+        Some("sample") => cmd_sample(&args),
+        Some("train") => cmd_train(&args),
+        Some("infer") => cmd_infer(&args),
+        Some("datasets") => cmd_datasets(&args),
+        _ => {
+            eprintln!(
+                "usage: glisp <partition|sample|train|infer|datasets> [--flags]\n\
+                 see rust/src/main.rs for per-command flags"
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dataset_by_name(name: &str, seed: u64) -> Result<glisp::graph::Graph> {
+    let spec = generator::paper_datasets()
+        .into_iter()
+        .find(|d| d.name == name)
+        .with_context(|| format!("unknown dataset {name}; try `glisp datasets`"))?;
+    Ok(generator::generate(&spec, seed))
+}
+
+fn partitioner_by_name(name: &str) -> Result<Box<dyn Partitioner>> {
+    Ok(match name {
+        "adadne" => Box::new(AdaDNE::default()),
+        "dne" => Box::new(DistributedNE::default()),
+        "edgecut" => Box::new(EdgeCutLDG::default()),
+        "hash1d" => Box::new(Hash1D),
+        "hash2d" => Box::new(Hash2D),
+        other => bail!("unknown partitioner {other}"),
+    })
+}
+
+fn cmd_datasets(_args: &Args) -> Result<()> {
+    let mut t = Table::new(
+        "Synthetic dataset suite (Table I analogue)",
+        &["name", "vertices", "edges", "avg deg", "max deg", "power law"],
+    );
+    for spec in generator::paper_datasets() {
+        if spec.n > 200_000 {
+            // Skip generating the big one for the listing.
+            t.row(&[
+                spec.name.into(),
+                ix(spec.n),
+                ix(spec.m),
+                f2(spec.m as f64 / spec.n as f64),
+                "-".into(),
+                "yes (by construction)".into(),
+            ]);
+            continue;
+        }
+        let g = generator::generate(&spec, 1);
+        let s = metrics::summarize(spec.name, &g);
+        t.row(&[
+            s.name,
+            ix(s.n),
+            ix(s.m),
+            f2(s.avg_degree),
+            ix(s.max_degree as usize),
+            if s.power_law { "yes" } else { "no" }.into(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_partition(args: &Args) -> Result<()> {
+    let g = dataset_by_name(args.get_str("dataset", "wiki-s"), args.get_u64("seed", 1))?;
+    let parts = args.get_usize("parts", 8);
+    let mut t = Table::new(
+        &format!("Partition quality, {} parts", parts),
+        &["algorithm", "RF", "VB", "EB", "time(s)"],
+    );
+    let algos = args.get_str("algo", "edgecut,dne,adadne").to_string();
+    for name in algos.split(',') {
+        let p = partitioner_by_name(name)?;
+        let timer = Timer::start();
+        let ea = p.partition(&g, parts, args.get_u64("seed", 1));
+        let secs = timer.secs();
+        let q = quality(&g, &ea);
+        t.row(&[name.into(), f3(q.rf), f3(q.vb), f3(q.eb), f2(secs)]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_sample(args: &Args) -> Result<()> {
+    let g = dataset_by_name(args.get_str("dataset", "wiki-s"), args.get_u64("seed", 1))?;
+    let parts = args.get_usize("parts", 4);
+    let fanouts: Vec<usize> = args
+        .get_str("fanouts", "15,10,5")
+        .split(',')
+        .filter_map(|x| x.parse().ok())
+        .collect();
+    let batches = args.get_usize("batches", 20);
+    let batch = args.get_usize("batch", 64);
+    let weighted = args.has("weighted");
+
+    let ea = AdaDNE::default().partition(&g, parts, 1);
+    let svc = SamplingService::launch(&g, &ea, 1);
+    let mut client = svc.client(2);
+    let mut rng = Rng::new(3);
+    let cfg = SampleConfig {
+        weighted,
+        ..Default::default()
+    };
+    let timer = Timer::start();
+    let mut slots = 0usize;
+    for _ in 0..batches {
+        let seeds = balanced_seeds(&svc, batch / parts.max(1), &mut rng);
+        let tree = sample_tree(&mut client, &seeds, &fanouts, &cfg);
+        slots += tree.total_slots();
+    }
+    let secs = timer.secs();
+    println!(
+        "sampled {batches} batches (fanouts {fanouts:?}, weighted={weighted}) \
+         in {secs:.2}s — {:.0} slots/s",
+        slots as f64 / secs
+    );
+    let wl = svc.workload();
+    let norm = glisp::coordinator::metrics::normalized_workload(&wl);
+    println!("per-server workload (edges scanned): {wl:?}");
+    println!(
+        "normalized: {:?}",
+        norm.iter().map(|x| (x * 100.0).round() / 100.0).collect::<Vec<_>>()
+    );
+    svc.shutdown();
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let model = args.get_str("model", "sage").to_string();
+    let steps = args.get_usize("steps", 100);
+    let parts = args.get_usize("parts", 2);
+    let mut rng = Rng::new(args.get_u64("seed", 1));
+    let n = args.get_usize("n", 20_000);
+    let classes = 8;
+    let g = generator::labeled_community_graph(n, n * 12, classes, 0.9, &mut rng);
+    let labels = Arc::new(g.label.clone());
+    let ea = AdaDNE::default().partition(&g, parts, 1);
+    let svc = SamplingService::launch(&g, &ea, 1);
+    let features = FeatureStore::labeled(64, labels.clone(), classes, 0.6);
+    let mut trainer = Trainer::new(
+        Runtime::default_dir(),
+        svc.client(3),
+        features,
+        TrainerConfig {
+            model: model.clone(),
+            lr: args.get_f64("lr", 0.1) as f32,
+        },
+        7,
+    )?;
+    println!(
+        "model={model} params={} batch={} fanouts={:?}",
+        trainer.params.num_parameters(),
+        trainer.batch,
+        trainer.fanouts
+    );
+    // 80/20 train/test split.
+    let split = (n * 8) / 10;
+    let train_seeds: Vec<u32> = (0..split as u32).collect();
+    let train_labels: Vec<u16> = train_seeds.iter().map(|&v| labels[v as usize]).collect();
+    let mut batcher = Batcher::new(train_seeds, train_labels, trainer.batch, 5);
+    let timer = Timer::start();
+    let losses = trainer.train(&mut batcher, steps)?;
+    let secs = timer.secs();
+    for (i, chunk) in losses.chunks(10).enumerate() {
+        let mean: f32 = chunk.iter().sum::<f32>() / chunk.len() as f32;
+        println!("step {:>5}  loss {:.4}", i * 10 + chunk.len(), mean);
+    }
+    println!(
+        "trained {steps} steps in {secs:.1}s ({:.2} steps/s, {:.0} samples/s)",
+        steps as f64 / secs,
+        steps as f64 * trainer.batch as f64 / secs
+    );
+    if args.has("eval") {
+        let test_seeds: Vec<u32> = (split as u32..n as u32).collect();
+        let test_labels: Vec<u16> = test_seeds.iter().map(|&v| labels[v as usize]).collect();
+        let acc = trainer.evaluate(&test_seeds, &test_labels)?;
+        println!("test accuracy: {acc:.3}");
+    }
+    svc.shutdown();
+    Ok(())
+}
+
+fn cmd_infer(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 10_000);
+    let parts = args.get_usize("parts", 4);
+    let task = args.get_str("task", "vertex").to_string();
+    let mut rng = Rng::new(args.get_u64("seed", 1));
+    let g = generator::chung_lu(n, n * 7, 2.1, &mut rng);
+    let ea = AdaDNE::default().partition(&g, parts, 1);
+    let dir = std::env::temp_dir().join("glisp_infer_cli");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let runtime = Runtime::load(Runtime::default_dir())?;
+    let enc = init_encoder_params(&runtime, 3)?;
+    let mut engine = LayerwiseEngine::new(
+        &g,
+        &ea,
+        runtime,
+        FeatureStore::unlabeled(64),
+        enc.clone(),
+        EngineConfig::default(),
+        dir,
+    )?;
+    let timer = Timer::start();
+    let (h, report) = engine.run_vertex_embedding()?;
+    let lw_secs = timer.secs();
+    println!(
+        "layerwise vertex embedding: {lw_secs:.2}s, {} vertex-computations, \
+         {} chunk reads, {} dynamic hits (ratio {:.3}), virtual cost {}",
+        report.vertices_computed,
+        report.chunk_reads,
+        report.dynamic_hits,
+        report.dynamic_hit_ratio,
+        report.virtual_cost
+    );
+
+    if task == "vertex" || task == "both" {
+        let runtime2 = Runtime::load(Runtime::default_dir())?;
+        let mut sw = SamplewiseRunner::new(&g, runtime2, FeatureStore::unlabeled(64), enc, 5)?;
+        let timer = Timer::start();
+        let (_, rep) = sw.run_vertex_embedding()?;
+        let sw_secs = timer.secs();
+        println!(
+            "samplewise vertex embedding: {sw_secs:.2}s, {} vertex-computations — \
+             layerwise speedup {:.2}x (compute ratio {:.2}x)",
+            rep.vertices_computed,
+            sw_secs / lw_secs,
+            rep.vertices_computed as f64 / report.vertices_computed as f64
+        );
+    }
+    if task == "link" || task == "both" {
+        let dec = init_decode_params(&engine.runtime, 9)?;
+        let edges: Vec<(u32, u32)> = (0..(n as u32 / 4))
+            .filter(|&u| !g.out_neighbors(u).is_empty())
+            .map(|u| (u, g.out_neighbors(u)[0]))
+            .collect();
+        let timer = Timer::start();
+        let (_, rep) = engine.run_link_prediction(&h, &edges, &dec)?;
+        println!(
+            "layerwise link prediction over {} edges: {:.2}s, {} chunk reads, hit ratio {:.3}",
+            edges.len(),
+            timer.secs(),
+            rep.chunk_reads,
+            rep.dynamic_hit_ratio
+        );
+    }
+    Ok(())
+}

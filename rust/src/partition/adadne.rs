@@ -1,0 +1,54 @@
+//! AdaDNE — the paper's partitioning contribution (§III-B). Neighbor
+//! expansion with an *adaptive* per-partition expansion factor that soft-
+//! constrains both vertex and edge balance:
+//!
+//! ```text
+//! VS_p = |P|·|V_p| / Σ_q |V_q|          (eq. 5)
+//! ES_p = |P|·|E_p| / Σ_q |E_q|          (eq. 6)
+//! λ_p ← λ_p · exp(α(1−VS_p) + β(1−ES_p))  (eq. 7)
+//! ```
+//!
+//! Partitions ahead of the average (scores > 1) slow down, laggards speed
+//! up; the DNE hard threshold is removed (equivalent to τ = |P|). Paper
+//! defaults: λ⁰ = 0.1, α = β = 1.
+
+use crate::graph::csr::Graph;
+use crate::partition::expansion::{expand, ExpansionConfig, Policy};
+use crate::partition::types::{EdgeAssignment, Partitioner};
+
+pub struct AdaDNE {
+    pub lambda0: f64,
+    pub alpha: f64,
+    pub beta: f64,
+}
+
+impl Default for AdaDNE {
+    fn default() -> Self {
+        Self {
+            lambda0: 0.1,
+            alpha: 1.0,
+            beta: 1.0,
+        }
+    }
+}
+
+impl Partitioner for AdaDNE {
+    fn name(&self) -> &'static str {
+        "AdaDNE"
+    }
+
+    fn partition(&self, g: &Graph, num_parts: usize, seed: u64) -> EdgeAssignment {
+        expand(
+            g,
+            num_parts,
+            seed,
+            &ExpansionConfig {
+                lambda0: self.lambda0,
+                policy: Policy::Ada {
+                    alpha: self.alpha,
+                    beta: self.beta,
+                },
+            },
+        )
+    }
+}

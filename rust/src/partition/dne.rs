@@ -1,0 +1,39 @@
+//! DistributedNE (Hanai et al., VLDB'19) — the SOTA vertex-cut baseline
+//! AdaDNE builds on. Fixed expansion factor λ = 0.1, hard edge threshold
+//! with imbalance factor τ (paper default 1.1).
+
+use crate::graph::csr::Graph;
+use crate::partition::expansion::{expand, ExpansionConfig, Policy};
+use crate::partition::types::{EdgeAssignment, Partitioner};
+
+pub struct DistributedNE {
+    pub lambda: f64,
+    pub tau: f64,
+}
+
+impl Default for DistributedNE {
+    fn default() -> Self {
+        Self {
+            lambda: 0.1,
+            tau: 1.1,
+        }
+    }
+}
+
+impl Partitioner for DistributedNE {
+    fn name(&self) -> &'static str {
+        "DistributedNE"
+    }
+
+    fn partition(&self, g: &Graph, num_parts: usize, seed: u64) -> EdgeAssignment {
+        expand(
+            g,
+            num_parts,
+            seed,
+            &ExpansionConfig {
+                lambda0: self.lambda,
+                policy: Policy::Dne { tau: self.tau },
+            },
+        )
+    }
+}

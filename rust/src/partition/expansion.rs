@@ -1,0 +1,431 @@
+//! Shared neighbor-expansion engine behind DistributedNE and AdaDNE
+//! (paper §III-B). The engine simulates the distributed algorithm's
+//! per-partition parallel expansion as round-robin iterations; the two
+//! algorithms differ only in the expansion-speed policy:
+//!
+//! * **DNE**: constant expansion factor λ, hard edge threshold
+//!   `E_t = τ·|E|/|P|` that terminates a partition's expansion.
+//! * **AdaDNE**: adaptive per-partition λ_p updated every iteration from
+//!   the vertex/edge scores (eqs. 5–7), no hard threshold (τ = |P|):
+//!   `λ_p ← λ_p · exp(α(1 − VS_p) + β(1 − ES_p))`.
+
+use crate::graph::csr::{Graph, Incidence, VId};
+use crate::partition::types::EdgeAssignment;
+use crate::util::bitset::{BitMatrix, BitSet};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub enum Policy {
+    /// DistributedNE: fixed λ and an edge-count termination threshold.
+    Dne { tau: f64 },
+    /// AdaDNE: adaptive λ_p, soft vertex+edge balance constraints.
+    Ada { alpha: f64, beta: f64 },
+}
+
+#[derive(Clone, Debug)]
+pub struct ExpansionConfig {
+    pub lambda0: f64,
+    pub policy: Policy,
+}
+
+pub fn expand(g: &Graph, num_parts: usize, seed: u64, cfg: &ExpansionConfig) -> EdgeAssignment {
+    Engine::new(g, num_parts, seed, cfg).run()
+}
+
+const UNASSIGNED: u16 = u16::MAX;
+
+struct Engine<'a> {
+    g: &'a Graph,
+    inc: Incidence,
+    p: usize,
+    cfg: ExpansionConfig,
+    rng: Rng,
+    part_of_edge: Vec<u16>,
+    /// Unassigned incident-edge count per vertex ("local degree" for the
+    /// min-degree expansion heuristic).
+    unassigned_deg: Vec<u32>,
+    /// Vertex membership per partition (endpoints of assigned edges).
+    membership: BitMatrix,
+    vcount: Vec<usize>,
+    ecount: Vec<usize>,
+    /// Boundary vertex sets + dedup bits, one per partition.
+    boundary: Vec<Vec<VId>>,
+    in_boundary: Vec<BitSet>,
+    lambda: Vec<f64>,
+    stopped: Vec<bool>,
+    remaining_edges: usize,
+}
+
+impl<'a> Engine<'a> {
+    fn new(g: &'a Graph, num_parts: usize, seed: u64, cfg: &ExpansionConfig) -> Self {
+        let inc = g.incidence();
+        let unassigned_deg = (0..g.n).map(|v| inc.degree(v as VId) as u32).collect();
+        Engine {
+            g,
+            inc,
+            p: num_parts,
+            cfg: cfg.clone(),
+            rng: Rng::new(seed),
+            part_of_edge: vec![UNASSIGNED; g.m()],
+            unassigned_deg,
+            membership: BitMatrix::new(g.n, num_parts),
+            vcount: vec![0; num_parts],
+            ecount: vec![0; num_parts],
+            boundary: vec![Vec::new(); num_parts],
+            in_boundary: (0..num_parts).map(|_| BitSet::new(g.n)).collect(),
+            lambda: vec![cfg.lambda0; num_parts],
+            stopped: vec![false; num_parts],
+            remaining_edges: g.m(),
+        }
+    }
+
+    fn run(mut self) -> EdgeAssignment {
+        self.seed_partitions();
+        let fixed_threshold = match self.cfg.policy {
+            Policy::Dne { tau } => (tau * self.g.m() as f64 / self.p as f64) as usize,
+            Policy::Ada { .. } => usize::MAX,
+        };
+        let mut idle_rounds = 0usize;
+        let mut force = false;
+        while self.remaining_edges > 0 {
+            if let Policy::Ada { alpha, beta } = self.cfg.policy {
+                self.update_lambdas(alpha, beta);
+            }
+            // The partition a "force round" unblocks: least-loaded by edges.
+            let min_edge_part = (0..self.p)
+                .filter(|&p| !self.stopped[p])
+                .min_by_key(|&p| self.ecount[p]);
+            let mut assigned_this_round = 0usize;
+            for p in 0..self.p {
+                if self.stopped[p] {
+                    continue;
+                }
+                let forced = force && Some(p) == min_edge_part;
+                // Ada's soft constraint realized in discrete time: the edge
+                // budget tracks 1.15× the *current* average, so no partition
+                // can run ahead of the group even within a single cascade
+                // (the neighbor-expansion two-hop rule can otherwise claim
+                // thousands of edges in one call). DNE keeps the paper's
+                // fixed E_t = τ|E|/|P|.
+                let edge_threshold = match self.cfg.policy {
+                    Policy::Dne { .. } => fixed_threshold,
+                    Policy::Ada { .. } if forced => usize::MAX,
+                    Policy::Ada { .. } => {
+                        let etot: usize = self.ecount.iter().sum();
+                        ((1.15 * (etot + self.p) as f64 / self.p as f64) as usize).max(64)
+                    }
+                };
+                if self.ecount[p] > edge_threshold {
+                    if matches!(self.cfg.policy, Policy::Dne { .. }) {
+                        self.stopped[p] = true;
+                    }
+                    continue; // Ada: paused this round
+                }
+                // Ada: a partition whose vertex score runs ahead of the
+                // group pauses this round — the discrete-time analogue of
+                // eq. 7 driving λ_p → 0 at the unbalanced fixed point.
+                if !forced
+                    && matches!(self.cfg.policy, Policy::Ada { .. })
+                    && self.ahead(p)
+                {
+                    continue;
+                }
+                if self.boundary[p].is_empty() && !self.reseed(p) {
+                    continue;
+                }
+                assigned_this_round += self.expand_one(p, edge_threshold);
+            }
+            if assigned_this_round == 0 {
+                idle_rounds += 1;
+                // Every eligible partition paused each other out (edge-heavy
+                // ones edge-paused, vertex-heavy ones vertex-paused): force
+                // the least-loaded partition next round to break the tie.
+                force = true;
+                if idle_rounds > 3 {
+                    break; // genuinely stuck — finish via assign_leftovers
+                }
+            } else {
+                idle_rounds = 0;
+                force = false;
+            }
+        }
+        self.assign_leftovers();
+        EdgeAssignment {
+            num_parts: self.p,
+            part_of_edge: self.part_of_edge,
+        }
+    }
+
+    /// Random distinct seed vertex per partition (the paper initializes
+    /// from 2D-hash + random seeds; random seeds preserve the behaviour at
+    /// our scale).
+    fn seed_partitions(&mut self) {
+        let mut tries = 0;
+        for p in 0..self.p {
+            loop {
+                let v = self.rng.usize(self.g.n) as VId;
+                tries += 1;
+                if self.unassigned_deg[v as usize] > 0 || tries > 50 * self.p {
+                    self.push_boundary(p, v);
+                    break;
+                }
+            }
+        }
+    }
+
+    fn push_boundary(&mut self, p: usize, v: VId) {
+        if !self.in_boundary[p].get(v as usize) {
+            self.in_boundary[p].set(v as usize);
+            self.boundary[p].push(v);
+        }
+    }
+
+    /// True if partition p's vertex or edge count is visibly above the
+    /// current average (scores > 1.1) — used by the Ada pause rule.
+    fn ahead(&self, p: usize) -> bool {
+        let vtot: usize = self.vcount.iter().sum();
+        let etot: usize = self.ecount.iter().sum();
+        if vtot == 0 || etot == 0 {
+            return false;
+        }
+        let vs = self.p as f64 * self.vcount[p] as f64 / vtot as f64;
+        let es = self.p as f64 * self.ecount[p] as f64 / etot as f64;
+        vs > 1.1 || es > 1.1
+    }
+
+    /// One expansion iteration for partition p; returns edges assigned.
+    /// Stops mid-iteration once the edge threshold is crossed (limits DNE's
+    /// overshoot past E_t to a single vertex's edges).
+    fn expand_one(&mut self, p: usize, edge_threshold: usize) -> usize {
+        // Drop boundary vertices with no unassigned edges left.
+        let bnd = std::mem::take(&mut self.boundary[p]);
+        let mut live: Vec<VId> = Vec::with_capacity(bnd.len());
+        for v in bnd {
+            if self.unassigned_deg[v as usize] > 0 {
+                live.push(v);
+            } else {
+                self.in_boundary[p].clear(v as usize);
+            }
+        }
+        if live.is_empty() {
+            self.boundary[p] = live;
+            return 0;
+        }
+        // Select the ⌈λ_p·|B_p|⌉ lowest-unassigned-degree vertices.
+        let take = ((self.lambda[p] * live.len() as f64).ceil() as usize)
+            .clamp(1, live.len());
+        live.sort_unstable_by_key(|&v| self.unassigned_deg[v as usize]);
+        let selected: Vec<VId> = live[..take].to_vec();
+        self.boundary[p] = live[take..].to_vec();
+        for &v in &selected {
+            self.in_boundary[p].clear(v as usize);
+        }
+
+        let mut assigned = 0usize;
+        for &v in &selected {
+            if self.ecount[p] > edge_threshold {
+                // Over budget mid-iteration: return the rest to the boundary.
+                self.push_boundary(p, v);
+                continue;
+            }
+            // One-hop edge allocation: every unassigned edge incident to v.
+            let a = self.inc.indptr[v as usize] as usize;
+            let b = self.inc.indptr[v as usize + 1] as usize;
+            for i in a..b {
+                if self.ecount[p] > edge_threshold {
+                    self.push_boundary(p, v); // finish v later
+                    break;
+                }
+                let e = self.inc.eid[i] as usize;
+                if self.part_of_edge[e] != UNASSIGNED {
+                    continue;
+                }
+                let w = self.inc.other[i];
+                self.assign_edge(e, p, v, w);
+                assigned += 1;
+                // w joins the boundary.
+                self.push_boundary(p, w);
+                // Two-hop allocation (local form): unassigned edges from w
+                // to vertices already in p are claimed now, keeping
+                // intra-partition two-hop edges from leaking to others.
+                let wa = self.inc.indptr[w as usize] as usize;
+                let wb = self.inc.indptr[w as usize + 1] as usize;
+                for j in wa..wb {
+                    if self.ecount[p] > edge_threshold {
+                        break;
+                    }
+                    let e2 = self.inc.eid[j] as usize;
+                    if self.part_of_edge[e2] != UNASSIGNED {
+                        continue;
+                    }
+                    let x = self.inc.other[j];
+                    if self.membership.get(x as usize, p) {
+                        self.assign_edge(e2, p, w, x);
+                        assigned += 1;
+                    }
+                }
+            }
+        }
+        assigned
+    }
+
+    fn assign_edge(&mut self, e: usize, p: usize, u: VId, w: VId) {
+        debug_assert_eq!(self.part_of_edge[e], UNASSIGNED);
+        self.part_of_edge[e] = p as u16;
+        self.ecount[p] += 1;
+        self.remaining_edges -= 1;
+        self.unassigned_deg[u as usize] -= 1;
+        self.unassigned_deg[w as usize] -= 1;
+        for v in [u, w] {
+            if !self.membership.get(v as usize, p) {
+                self.membership.set(v as usize, p);
+                self.vcount[p] += 1;
+            }
+        }
+    }
+
+    /// Partition starved (empty boundary): reseed from a random vertex that
+    /// still has unassigned edges. Returns false if none exists.
+    fn reseed(&mut self, p: usize) -> bool {
+        for _ in 0..64 {
+            let v = self.rng.usize(self.g.n) as VId;
+            if self.unassigned_deg[v as usize] > 0 {
+                self.push_boundary(p, v);
+                return true;
+            }
+        }
+        // Fall back to a scan (rare; only near the very end).
+        for v in 0..self.g.n {
+            if self.unassigned_deg[v] > 0 {
+                self.push_boundary(p, v as VId);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// DNE can terminate all partitions with a few edges left; give each to
+    /// the least-loaded partition among those containing an endpoint.
+    fn assign_leftovers(&mut self) {
+        for u in 0..self.g.n {
+            let (a, b) = self.g.edge_range(u as VId);
+            for e in a..b {
+                if self.part_of_edge[e] != UNASSIGNED {
+                    continue;
+                }
+                let w = self.g.dst[e];
+                let mut best: Option<usize> = None;
+                for p in 0..self.p {
+                    if self.membership.get(u, p) || self.membership.get(w as usize, p) {
+                        if best.map(|bp| self.ecount[p] < self.ecount[bp]).unwrap_or(true) {
+                            best = Some(p);
+                        }
+                    }
+                }
+                let p = best.unwrap_or_else(|| {
+                    (0..self.p).min_by_key(|&p| self.ecount[p]).unwrap()
+                });
+                self.assign_edge(e, p, u as VId, w);
+            }
+        }
+    }
+
+    /// AdaDNE eqs. 5–7. Counts are synchronized at iteration start (the
+    /// paper notes this sync is negligible: two integers per partition).
+    fn update_lambdas(&mut self, alpha: f64, beta: f64) {
+        let vtot: usize = self.vcount.iter().sum();
+        let etot: usize = self.ecount.iter().sum();
+        if vtot == 0 || etot == 0 {
+            return;
+        }
+        for p in 0..self.p {
+            let vs = self.p as f64 * self.vcount[p] as f64 / vtot as f64;
+            let es = self.p as f64 * self.ecount[p] as f64 / etot as f64;
+            let f = (alpha * (1.0 - vs) + beta * (1.0 - es)).exp();
+            self.lambda[p] = (self.lambda[p] * f).clamp(1e-3, 1.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator;
+    use crate::partition::types::quality;
+
+    fn powerlaw(seed: u64) -> Graph {
+        let mut rng = Rng::new(seed);
+        generator::chung_lu(5000, 50_000, 2.0, &mut rng)
+    }
+
+    fn run(g: &Graph, parts: usize, policy: Policy) -> EdgeAssignment {
+        expand(
+            g,
+            parts,
+            42,
+            &ExpansionConfig {
+                lambda0: 0.1,
+                policy,
+            },
+        )
+    }
+
+    #[test]
+    fn every_edge_assigned_exactly_once() {
+        let g = powerlaw(90);
+        for policy in [Policy::Dne { tau: 1.1 }, Policy::Ada { alpha: 1.0, beta: 1.0 }] {
+            let ea = run(&g, 4, policy);
+            assert_eq!(ea.part_of_edge.len(), g.m());
+            assert!(ea.part_of_edge.iter().all(|&p| (p as usize) < 4));
+        }
+    }
+
+    #[test]
+    fn dne_respects_edge_balance() {
+        let g = powerlaw(91);
+        let q = quality(&g, &run(&g, 8, Policy::Dne { tau: 1.1 }));
+        // Sequential simulation overshoots the paper's parallel runs a bit;
+        // Table II reports DNE EB up to 1.43 — we accept < 2.2 here and
+        // assert the *relative* claim (AdaDNE beats DNE) separately.
+        assert!(q.eb < 2.2, "DNE EB {}", q.eb);
+    }
+
+    #[test]
+    fn adadne_improves_vertex_balance_over_dne() {
+        // The paper's core claim (Table II): AdaDNE's VB < DNE's VB while
+        // EB stays comparable.
+        let g = powerlaw(92);
+        let qd = quality(&g, &run(&g, 8, Policy::Dne { tau: 1.1 }));
+        let qa = quality(&g, &run(&g, 8, Policy::Ada { alpha: 1.0, beta: 1.0 }));
+        assert!(
+            qa.vb < qd.vb * 1.05,
+            "AdaDNE VB {} should beat DNE VB {}",
+            qa.vb,
+            qd.vb
+        );
+        assert!(qa.eb < 1.8, "AdaDNE EB {}", qa.eb);
+    }
+
+    #[test]
+    fn expansion_rf_beats_random() {
+        // Neighbor expansion mines locality: RF far below random edge
+        // assignment's.
+        let g = powerlaw(93);
+        let qa = quality(&g, &run(&g, 8, Policy::Ada { alpha: 1.0, beta: 1.0 }));
+        let mut rng = Rng::new(1);
+        let random = EdgeAssignment {
+            num_parts: 8,
+            part_of_edge: (0..g.m()).map(|_| rng.usize(8) as u16).collect(),
+        };
+        let qr = quality(&g, &random);
+        assert!(qa.rf < qr.rf * 0.8, "ada rf {} vs random rf {}", qa.rf, qr.rf);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = powerlaw(94);
+        let a = run(&g, 4, Policy::Ada { alpha: 1.0, beta: 1.0 });
+        let b = run(&g, 4, Policy::Ada { alpha: 1.0, beta: 1.0 });
+        assert_eq!(a.part_of_edge, b.part_of_edge);
+    }
+}

@@ -1,0 +1,19 @@
+//! Graph partitioners (paper §III-B): the AdaDNE contribution, the
+//! DistributedNE and edge-cut/hash baselines, and the RF/VB/EB quality
+//! metrics of Table II.
+
+pub mod adadne;
+pub mod dne;
+pub mod edgecut;
+pub mod expansion;
+pub mod hash;
+pub mod types;
+
+pub use adadne::AdaDNE;
+pub use dne::DistributedNE;
+pub use edgecut::EdgeCutLDG;
+pub use hash::{Hash1D, Hash2D};
+pub use types::{
+    edge_cut_to_assignment, primary_partition, quality, EdgeAssignment,
+    PartitionQuality, Partitioner, VertexAssignment,
+};

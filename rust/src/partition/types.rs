@@ -1,0 +1,184 @@
+//! Partitioning interfaces and quality metrics (paper §II-B, eqs. 2–4).
+
+use crate::graph::csr::Graph;
+use crate::util::bitset::BitMatrix;
+
+/// A vertex-cut partitioning: each edge owned by exactly one partition.
+#[derive(Clone, Debug)]
+pub struct EdgeAssignment {
+    pub num_parts: usize,
+    /// Partition of each edge, indexed by CSR edge id.
+    pub part_of_edge: Vec<u16>,
+}
+
+/// An edge-cut partitioning: each vertex owned by exactly one partition.
+/// (Converted to an EdgeAssignment by `edge_cut_to_assignment` — edges
+/// follow their source vertex, the convention the edge-cut frameworks use
+/// so a vertex's out-neighborhood is co-located with it.)
+#[derive(Clone, Debug)]
+pub struct VertexAssignment {
+    pub num_parts: usize,
+    pub part_of_vertex: Vec<u16>,
+}
+
+pub fn edge_cut_to_assignment(g: &Graph, va: &VertexAssignment) -> EdgeAssignment {
+    let mut part_of_edge = vec![0u16; g.m()];
+    for u in 0..g.n {
+        let (a, b) = g.edge_range(u as u32);
+        for e in a..b {
+            part_of_edge[e] = va.part_of_vertex[u];
+        }
+    }
+    EdgeAssignment {
+        num_parts: va.num_parts,
+        part_of_edge,
+    }
+}
+
+/// Partition quality (paper eqs. 2–4): Replication Factor, Vertex Balance,
+/// Edge Balance — plus raw per-partition sizes for the reports.
+#[derive(Clone, Debug)]
+pub struct PartitionQuality {
+    pub rf: f64,
+    pub vb: f64,
+    pub eb: f64,
+    pub vertices_per_part: Vec<usize>,
+    pub edges_per_part: Vec<usize>,
+}
+
+/// Compute RF/VB/EB for a vertex-cut assignment. |V_p| counts the distinct
+/// endpoints of p's edges (replicated vertices count once per partition).
+pub fn quality(g: &Graph, ea: &EdgeAssignment) -> PartitionQuality {
+    let p = ea.num_parts;
+    let mut edges = vec![0usize; p];
+    let mut membership = BitMatrix::new(g.n, p);
+    for u in 0..g.n {
+        let (a, b) = g.edge_range(u as u32);
+        for e in a..b {
+            let part = ea.part_of_edge[e] as usize;
+            edges[part] += 1;
+            membership.set(u, part);
+            membership.set(g.dst[e] as usize, part);
+        }
+    }
+    let mut verts = vec![0usize; p];
+    let mut total_replicas = 0usize;
+    for v in 0..g.n {
+        for part in membership.row_ones(v) {
+            verts[part] += 1;
+            total_replicas += 1;
+        }
+    }
+    PartitionQuality {
+        rf: total_replicas as f64 / g.n.max(1) as f64,
+        vb: balance(&verts),
+        eb: balance(&edges),
+        vertices_per_part: verts,
+        edges_per_part: edges,
+    }
+}
+
+fn balance(xs: &[usize]) -> f64 {
+    let lo = xs.iter().copied().min().unwrap_or(0);
+    let hi = xs.iter().copied().max().unwrap_or(0);
+    if lo == 0 {
+        f64::INFINITY
+    } else {
+        hi as f64 / lo as f64
+    }
+}
+
+/// Primary partition of each vertex under a vertex-cut assignment: the
+/// partition owning most of its incident edges (ties → lowest id). Used by
+/// the PS/PDS reorder keys and the inference workload allocation.
+pub fn primary_partition(g: &Graph, ea: &EdgeAssignment) -> Vec<u16> {
+    let p = ea.num_parts;
+    let mut counts = vec![0u32; g.n * p];
+    for u in 0..g.n {
+        let (a, b) = g.edge_range(u as u32);
+        for e in a..b {
+            let part = ea.part_of_edge[e] as usize;
+            counts[u * p + part] += 1;
+            counts[g.dst[e] as usize * p + part] += 1;
+        }
+    }
+    (0..g.n)
+        .map(|v| {
+            let row = &counts[v * p..(v + 1) * p];
+            let mut best = 0usize;
+            for (i, &c) in row.iter().enumerate() {
+                if c > row[best] {
+                    best = i;
+                }
+            }
+            best as u16
+        })
+        .collect()
+}
+
+/// Every partitioner in the suite (Table II rows).
+pub trait Partitioner {
+    fn name(&self) -> &'static str;
+    fn partition(&self, g: &Graph, num_parts: usize, seed: u64) -> EdgeAssignment;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn quality_of_perfect_split() {
+        // Two disjoint triangles, each to its own partition.
+        let g = Graph::from_edges(
+            6,
+            &[(0, 1), (1, 2), (2, 0), (3, 4), (4, 5), (5, 3)],
+        );
+        let ea = EdgeAssignment {
+            num_parts: 2,
+            part_of_edge: vec![0, 0, 0, 1, 1, 1],
+        };
+        let q = quality(&g, &ea);
+        assert!((q.rf - 1.0).abs() < 1e-12);
+        assert!((q.vb - 1.0).abs() < 1e-12);
+        assert!((q.eb - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn replication_counted_once_per_partition() {
+        // Star: 0->1, 0->2 split across 2 partitions; vertex 0 in both.
+        let g = Graph::from_edges(3, &[(0, 1), (0, 2)]);
+        let ea = EdgeAssignment {
+            num_parts: 2,
+            part_of_edge: vec![0, 1],
+        };
+        let q = quality(&g, &ea);
+        // V0 = {0,1}, V1 = {0,2} => RF = 4/3
+        assert!((q.rf - 4.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn edge_cut_conversion_follows_src() {
+        let g = Graph::from_edges(3, &[(0, 1), (1, 2), (2, 0)]);
+        let va = VertexAssignment {
+            num_parts: 2,
+            part_of_vertex: vec![0, 1, 0],
+        };
+        let ea = edge_cut_to_assignment(&g, &va);
+        assert_eq!(ea.part_of_edge, vec![0, 1, 0]);
+    }
+
+    #[test]
+    fn primary_partition_majority() {
+        let mut rng = Rng::new(60);
+        let g = generator::chung_lu(500, 4000, 2.1, &mut rng);
+        let ea = EdgeAssignment {
+            num_parts: 4,
+            part_of_edge: (0..g.m()).map(|e| (e % 4) as u16).collect(),
+        };
+        let pp = primary_partition(&g, &ea);
+        assert_eq!(pp.len(), g.n);
+        assert!(pp.iter().all(|&p| p < 4));
+    }
+}

@@ -1,0 +1,159 @@
+//! PJRT executor: loads `artifacts/*.hlo.txt` (AOT-lowered by
+//! python/compile/aot.py), compiles each once on the CPU PJRT client, and
+//! executes them from the L3 hot paths. Adapted from
+//! /opt/xla-example/load_hlo — HLO *text* is the interchange format (see
+//! aot.py's docstring for why).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::manifest::{ArtifactSpec, Manifest};
+use crate::runtime::tensor::HostTensor;
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Total artifact executions (perf accounting).
+    pub executions: AtomicU64,
+}
+
+impl Runtime {
+    /// Load the manifest and create the PJRT CPU client. Artifacts compile
+    /// lazily on first use and are cached for the process lifetime.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("PJRT cpu client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            dir,
+            executables: HashMap::new(),
+            executions: AtomicU64::new(0),
+        })
+    }
+
+    /// Default artifacts directory: $GLISP_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("GLISP_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Compile (or fetch cached) an artifact's executable.
+    pub fn prepare(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.manifest.get(name)?.clone();
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.manifest.get(name)
+    }
+
+    /// Execute an artifact with shape/dtype validation against the
+    /// manifest. Outputs arrive in manifest order.
+    pub fn execute(&mut self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.prepare(name)?;
+        let spec = self.manifest.get(name)?;
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "{name}: {} inputs given, manifest wants {}",
+                inputs.len(),
+                spec.inputs.len()
+            );
+        }
+        for (i, (t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if t.shape() != s.shape.as_slice() {
+                bail!(
+                    "{name} input {i} ({}): shape {:?} != manifest {:?}",
+                    s.name,
+                    t.shape(),
+                    s.shape
+                );
+            }
+            if t.dtype() != s.dtype {
+                bail!("{name} input {i} ({}): dtype mismatch", s.name);
+            }
+        }
+        let n_out = spec.outputs.len();
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let exe = self.executables.get(name).unwrap();
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        self.executions.fetch_add(1, Ordering::Relaxed);
+        // aot.py lowers with return_tuple=True: the result is an n-tuple.
+        let parts = result.to_tuple()?;
+        if parts.len() != n_out {
+            bail!("{name}: got {} outputs, manifest wants {n_out}", parts.len());
+        }
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Executor tests need built artifacts; they self-skip when
+    //! artifacts/manifest.json is absent so `cargo test` stays green before
+    //! `make artifacts`. Full coverage lives in rust/tests/runtime_e2e.rs.
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = crate::test_artifacts_dir()?;
+        Runtime::load(dir).ok()
+    }
+
+    #[test]
+    fn link_decode_executes_and_bounds() {
+        let Some(mut rt) = runtime() else { return };
+        let spec = rt.spec("link_decode").unwrap().clone();
+        let inputs: Vec<HostTensor> = spec
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let n: usize = s.shape.iter().product();
+                HostTensor::f32(
+                    s.shape.clone(),
+                    (0..n).map(|j| ((i + j) % 7) as f32 * 0.1 - 0.3).collect(),
+                )
+            })
+            .collect();
+        let out = rt.execute("link_decode", &inputs).unwrap();
+        assert_eq!(out.len(), 1);
+        assert!(out[0].as_f32().iter().all(|&s| (0.0..=1.0).contains(&s)));
+    }
+
+    #[test]
+    fn input_validation_rejects_bad_shape() {
+        let Some(mut rt) = runtime() else { return };
+        let spec = rt.spec("link_decode").unwrap().clone();
+        let mut inputs: Vec<HostTensor> = spec
+            .inputs
+            .iter()
+            .map(|s| HostTensor::zeros(&s.shape))
+            .collect();
+        inputs[0] = HostTensor::zeros(&[1, 1]);
+        assert!(rt.execute("link_decode", &inputs).is_err());
+    }
+}

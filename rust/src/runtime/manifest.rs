@@ -1,0 +1,166 @@
+//! The artifact manifest — the AOT contract between python/compile/aot.py
+//! and the Rust runtime. Input order/shape/dtype and output arity per
+//! artifact; the runtime validates every execute() call against it.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::tensor::DType;
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: Json,
+}
+
+impl ArtifactSpec {
+    /// Meta field as usize (fanouts, batch, dims...).
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(Json::as_usize)
+    }
+
+    pub fn meta_usizes(&self, key: &str) -> Option<Vec<usize>> {
+        Some(
+            self.meta
+                .get(key)?
+                .as_arr()?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect(),
+        )
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn tensor_spec(j: &Json, idx: usize) -> Result<TensorSpec> {
+    let shape = j
+        .get("shape")
+        .and_then(Json::as_arr)
+        .context("spec.shape")?
+        .iter()
+        .filter_map(Json::as_usize)
+        .collect();
+    let dtype = DType::parse(
+        j.get("dtype").and_then(Json::as_str).unwrap_or("f32"),
+    )?;
+    Ok(TensorSpec {
+        name: j
+            .get("name")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("out{idx}")),
+        shape,
+        dtype,
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let raw = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("manifest.json not found in {dir:?} — run `make artifacts`"))?;
+        Self::parse(&raw)
+    }
+
+    pub fn parse(raw: &str) -> Result<Manifest> {
+        let j = Json::parse(raw).context("manifest parse")?;
+        let mut artifacts = BTreeMap::new();
+        for a in j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("manifest.artifacts")?
+        {
+            let name = a
+                .get("name")
+                .and_then(Json::as_str)
+                .context("artifact.name")?
+                .to_string();
+            let file = a
+                .get("file")
+                .and_then(Json::as_str)
+                .context("artifact.file")?
+                .to_string();
+            let inputs = a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .context("artifact.inputs")?
+                .iter()
+                .enumerate()
+                .map(|(i, s)| tensor_spec(s, i))
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .context("artifact.outputs")?
+                .iter()
+                .enumerate()
+                .map(|(i, s)| tensor_spec(s, i))
+                .collect::<Result<Vec<_>>>()?;
+            let meta = a.get("meta").cloned().unwrap_or(Json::Null);
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name,
+                    file,
+                    inputs,
+                    outputs,
+                    meta,
+                },
+            );
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{"artifacts": [{
+        "name": "m", "file": "m.hlo.txt",
+        "inputs": [{"name": "x", "shape": [32, 64], "dtype": "f32"},
+                   {"name": "labels", "shape": [32], "dtype": "i32"}],
+        "outputs": [{"shape": [1], "dtype": "f32"}],
+        "meta": {"batch": 32, "fanouts": [10, 5]}
+    }]}"#;
+
+    #[test]
+    fn parse_fields() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = m.get("m").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].shape, vec![32, 64]);
+        assert_eq!(a.inputs[1].dtype, DType::I32);
+        assert_eq!(a.outputs[0].shape, vec![1]);
+        assert_eq!(a.meta_usize("batch"), Some(32));
+        assert_eq!(a.meta_usizes("fanouts"), Some(vec![10, 5]));
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+}

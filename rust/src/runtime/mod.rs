@@ -1,0 +1,10 @@
+//! Runtime layer: the PJRT bridge between the Rust coordinator and the AOT
+//! artifacts (HLO text lowered once from JAX + Pallas by `make artifacts`).
+
+pub mod executor;
+pub mod manifest;
+pub mod tensor;
+
+pub use executor::Runtime;
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
+pub use tensor::{DType, HostTensor};

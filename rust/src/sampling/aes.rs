@@ -1,0 +1,136 @@
+//! Efraimidis–Spirakis Algorithm A-ES (IPL'06): weighted sampling without
+//! replacement reduced to Top-K over scores `s_i = u_i^(1/w_i)` (paper
+//! §III-C). The reduction is what makes the *distributed* weighted sampler
+//! trivial: each server scores its local neighbors (WeightedGatherOp), the
+//! client keeps the global top-f (WeightedApplyOp) — no alias tables, no
+//! cross-server normalization.
+
+use crate::util::rng::Rng;
+use crate::util::topk::TopK;
+
+/// Score one item. Weights ≤ 0 are treated as impossible (score 0).
+#[inline]
+pub fn score(rng: &mut Rng, weight: f32) -> f64 {
+    if weight <= 0.0 {
+        return 0.0;
+    }
+    rng.f64_open().powf(1.0 / weight as f64)
+}
+
+/// Sample up to k items without replacement with probability proportional
+/// to weight. Returns (index, score) sorted by score descending — scores
+/// travel with the items so a downstream Top-K can merge across servers.
+pub fn sample_weighted(rng: &mut Rng, weights: &[f32], k: usize) -> Vec<(usize, f64)> {
+    let mut tk = TopK::new(k.min(weights.len()));
+    for (i, &w) in weights.iter().enumerate() {
+        let s = score(rng, w);
+        if s > 0.0 {
+            tk.push(s, rng.next_u64(), i);
+        }
+    }
+    tk.into_sorted().into_iter().map(|(s, i)| (i, s)).collect()
+}
+
+/// Merge per-server (item, score) lists into the global top-k — the
+/// WeightedApplyOp core (paper Algorithm 4, line 3).
+pub fn merge_top_k<T: Copy>(lists: &[Vec<(T, f64)>], k: usize) -> Vec<(T, f64)> {
+    let mut tk = TopK::new(k);
+    let mut tiebreak = 0u64;
+    for list in lists {
+        for &(item, s) in list {
+            tk.push(s, tiebreak, item);
+            tiebreak += 1;
+        }
+    }
+    tk.into_sorted().into_iter().map(|(s, t)| (t, s)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn respects_k_and_distinct() {
+        let mut rng = Rng::new(110);
+        let w = vec![1.0f32; 20];
+        let s = sample_weighted(&mut rng, &w, 5);
+        assert_eq!(s.len(), 5);
+        let mut idx: Vec<usize> = s.iter().map(|x| x.0).collect();
+        idx.sort_unstable();
+        idx.dedup();
+        assert_eq!(idx.len(), 5);
+    }
+
+    #[test]
+    fn weight_proportionality() {
+        // Item with weight 9 among weights 1 should be picked (k=1) ~ 9/(9+9)
+        // of the time vs the aggregate of nine weight-1 items.
+        let mut rng = Rng::new(111);
+        let mut w = vec![1.0f32; 9];
+        w.push(9.0);
+        let mut heavy = 0usize;
+        let trials = 20_000;
+        for _ in 0..trials {
+            let s = sample_weighted(&mut rng, &w, 1);
+            if s[0].0 == 9 {
+                heavy += 1;
+            }
+        }
+        let frac = heavy as f64 / trials as f64;
+        assert!((frac - 0.5).abs() < 0.02, "heavy frac {frac}");
+    }
+
+    #[test]
+    fn zero_weight_never_sampled() {
+        let mut rng = Rng::new(112);
+        let w = [0.0f32, 1.0, 1.0];
+        for _ in 0..200 {
+            let s = sample_weighted(&mut rng, &w, 2);
+            assert!(s.iter().all(|&(i, _)| i != 0));
+        }
+    }
+
+    #[test]
+    fn distributed_equals_centralized_in_distribution() {
+        // Splitting candidates across "servers" and merging top-k must give
+        // the same first-item marginals as scoring centrally: both are
+        // A-ES over the same weight multiset.
+        let trials = 30_000;
+        let k = 2;
+        let w_all = [4.0f32, 3.0, 2.0, 1.0];
+        let mut rng = Rng::new(113);
+        let mut count_central = [0usize; 4];
+        let mut count_dist = [0usize; 4];
+        for _ in 0..trials {
+            for &(i, _) in &sample_weighted(&mut rng, &w_all, k) {
+                count_central[i] += 1;
+            }
+            // two servers: {0,1} and {2,3}
+            let a: Vec<(usize, f64)> = sample_weighted(&mut rng, &w_all[..2], k);
+            let b: Vec<(usize, f64)> =
+                sample_weighted(&mut rng, &w_all[2..], k)
+                    .into_iter()
+                    .map(|(i, s)| (i + 2, s))
+                    .collect();
+            for &(i, _) in &merge_top_k(&[a, b], k) {
+                count_dist[i] += 1;
+            }
+        }
+        for i in 0..4 {
+            let pc = count_central[i] as f64 / trials as f64;
+            let pd = count_dist[i] as f64 / trials as f64;
+            assert!((pc - pd).abs() < 0.02, "item {i}: central {pc} dist {pd}");
+        }
+    }
+
+    #[test]
+    fn merge_keeps_global_best() {
+        let lists = vec![
+            vec![(1u32, 0.9), (2, 0.5)],
+            vec![(3u32, 0.95), (4, 0.1)],
+        ];
+        let top = merge_top_k(&lists, 2);
+        let ids: Vec<u32> = top.iter().map(|x| x.0).collect();
+        assert_eq!(ids, vec![3, 1]);
+    }
+}

@@ -1,0 +1,185 @@
+//! Vitter's Algorithm D (TOMS'87) — sequential uniform sampling of k
+//! records from n without replacement in O(k) expected time, used by the
+//! UniformGatherOp (paper Algorithm 2, line 5).
+//!
+//! The implementation follows Vitter's Method D: draw the skip distance S
+//! (number of records to jump over before the next selected one) from its
+//! exact distribution by rejection, with the cheap Method A fallback when
+//! k is a large fraction of n (Vitter's own crossover rule).
+
+use crate::util::rng::Rng;
+
+/// Sample k distinct indices from [0, n), returned in increasing order.
+pub fn sample(rng: &mut Rng, n: usize, k: usize) -> Vec<usize> {
+    assert!(k <= n, "k={k} > n={n}");
+    if k == 0 {
+        return Vec::new();
+    }
+    if k == n {
+        return (0..n).collect();
+    }
+    // Vitter's crossover: Method D pays off when n/k is large.
+    const ALPHA_INV: usize = 13;
+    if n >= ALPHA_INV * k {
+        method_d(rng, n, k)
+    } else {
+        method_a(rng, n, k)
+    }
+}
+
+/// Method A: scan records, selecting each with the exact conditional
+/// probability k_remaining / n_remaining. O(n), tiny constant.
+fn method_a(rng: &mut Rng, n: usize, k: usize) -> Vec<usize> {
+    let mut out = Vec::with_capacity(k);
+    let mut need = k;
+    let mut remaining = n;
+    let mut idx = 0usize;
+    while need > 0 {
+        if rng.f64() * (remaining as f64) < need as f64 {
+            out.push(idx);
+            need -= 1;
+        }
+        idx += 1;
+        remaining -= 1;
+    }
+    out
+}
+
+/// Method D: generate skips S via rejection from the exact skip
+/// distribution. Expected O(k) time independent of n. Direct transcription
+/// of Vitter's Program D (TOMS'87, §6).
+fn method_d(rng: &mut Rng, n: usize, k: usize) -> Vec<usize> {
+    let mut out = Vec::with_capacity(k);
+    let mut cur = 0usize; // absolute index of the next candidate record
+    let mut nn = n as f64; // N: records remaining
+    let mut kk = k as f64; // n: samples remaining
+    let mut vprime = rng.f64_open().powf(1.0 / kk);
+    let mut qu1 = nn - kk + 1.0;
+
+    while kk > 1.0 {
+        let kmin1inv = 1.0 / (kk - 1.0);
+        let s: f64;
+        loop {
+            // Step D2: X from the majorizing density g via vprime.
+            let mut x;
+            loop {
+                x = nn * (1.0 - vprime);
+                if x < qu1 {
+                    break;
+                }
+                vprime = rng.f64_open().powf(1.0 / kk);
+            }
+            let s_cand = x.floor();
+            // Step D3: squeeze acceptance test.
+            let u = rng.f64_open();
+            let y1 = (u * nn / qu1).powf(kmin1inv);
+            vprime = y1 * (1.0 - x / nn) * (qu1 / (qu1 - s_cand));
+            if vprime <= 1.0 {
+                s = s_cand;
+                break;
+            }
+            // Step D4: exact f/cg test.
+            let mut y2 = 1.0;
+            let mut top = nn - 1.0;
+            let (mut bottom, limit) = if kk - 1.0 > s_cand {
+                (nn - kk, nn - s_cand)
+            } else {
+                (nn - s_cand - 1.0, qu1)
+            };
+            let mut t = nn - 1.0;
+            while t >= limit {
+                y2 *= top / bottom;
+                top -= 1.0;
+                bottom -= 1.0;
+                t -= 1.0;
+            }
+            if nn / (nn - x) >= y1 * y2.powf(kmin1inv) {
+                vprime = rng.f64_open().powf(kmin1inv);
+                s = s_cand;
+                break;
+            }
+            vprime = rng.f64_open().powf(1.0 / kk);
+        }
+        // Skip S records, select the next one.
+        out.push(cur + s as usize);
+        cur += s as usize + 1;
+        nn -= s + 1.0;
+        kk -= 1.0;
+        qu1 -= s;
+    }
+    // kk == 1: the last record is uniform over the remainder.
+    let s = (nn * vprime).floor().min(nn - 1.0).max(0.0) as usize;
+    out.push(cur + s);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_valid(s: &[usize], n: usize, k: usize) {
+        assert_eq!(s.len(), k);
+        for w in s.windows(2) {
+            assert!(w[0] < w[1], "not strictly increasing: {s:?}");
+        }
+        assert!(s.iter().all(|&i| i < n));
+    }
+
+    #[test]
+    fn basic_validity_both_methods() {
+        let mut rng = Rng::new(100);
+        for &(n, k) in &[(10, 3), (100, 99), (1000, 5), (100_000, 7), (50, 50), (7, 0)] {
+            for _ in 0..20 {
+                let s = sample(&mut rng, n, k);
+                check_valid(&s, n, k);
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_marginals() {
+        // Each index should appear with probability k/n.
+        let (n, k, trials) = (40usize, 8usize, 30_000usize);
+        let mut rng = Rng::new(101);
+        let mut counts = vec![0usize; n];
+        for _ in 0..trials {
+            for i in sample(&mut rng, n, k) {
+                counts[i] += 1;
+            }
+        }
+        let expected = trials as f64 * k as f64 / n as f64;
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64 - expected).abs() < expected * 0.08,
+                "index {i}: {c} vs {expected}"
+            );
+        }
+    }
+
+    #[test]
+    fn method_d_uniform_marginals_large_n() {
+        // Force the Method D path (n >= 13k) and verify marginals.
+        let (n, k, trials) = (2600usize, 4usize, 40_000usize);
+        let mut rng = Rng::new(102);
+        let mut counts = vec![0usize; n];
+        for _ in 0..trials {
+            for i in sample(&mut rng, n, k) {
+                counts[i] += 1;
+            }
+        }
+        let expected = trials as f64 * k as f64 / n as f64;
+        // Aggregate into 13 buckets of 200 to reduce variance.
+        for chunk in counts.chunks(200) {
+            let s: usize = chunk.iter().sum();
+            let e = expected * 200.0;
+            assert!((s as f64 - e).abs() < e * 0.07, "bucket {s} vs {e}");
+        }
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = sample(&mut Rng::new(7), 10_000, 12);
+        let b = sample(&mut Rng::new(7), 10_000, 12);
+        assert_eq!(a, b);
+    }
+}

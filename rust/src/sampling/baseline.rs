@@ -1,0 +1,106 @@
+//! The DistDGL-like comparator stack (DESIGN.md §3): edge-cut partitioning
+//! (edges co-located with their source vertex) + single-owner routing, so a
+//! hotspot's entire one-hop sampling lands on one server — the architecture
+//! whose load imbalance Figs. 9–10 measure.
+
+use std::sync::Arc;
+
+use crate::graph::csr::Graph;
+use crate::partition::{edge_cut_to_assignment, EdgeCutLDG};
+use crate::sampling::client::SamplingClient;
+use crate::sampling::service::SamplingService;
+
+pub struct BaselineStack {
+    pub service: SamplingService,
+    pub owner: Arc<Vec<u16>>,
+}
+
+impl BaselineStack {
+    /// Partition with the edge-cut comparator and launch owner-routed
+    /// servers. `client()` then reproduces the DistDGL data path.
+    pub fn launch(g: &Graph, num_parts: usize, seed: u64) -> Self {
+        let va = EdgeCutLDG::default().partition_vertices(g, num_parts, seed);
+        let ea = edge_cut_to_assignment(g, &va);
+        let service = SamplingService::launch(g, &ea, seed);
+        Self {
+            service,
+            owner: Arc::new(va.part_of_vertex),
+        }
+    }
+
+    pub fn client(&self, seed: u64) -> SamplingClient {
+        self.service.owner_client(self.owner.clone(), seed)
+    }
+
+    pub fn shutdown(self) {
+        self.service.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator;
+    use crate::sampling::request::SampleConfig;
+    use crate::sampling::subgraph::sample_tree;
+    use crate::util::rng::Rng;
+    use crate::util::stats::balance_ratio;
+
+    #[test]
+    fn baseline_samples_correct_neighbors() {
+        let mut rng = Rng::new(160);
+        let g = generator::chung_lu(800, 8000, 2.1, &mut rng);
+        let stack = BaselineStack::launch(&g, 4, 1);
+        let mut client = stack.client(2);
+        let seeds: Vec<u32> = (0..32).collect();
+        let t = sample_tree(&mut client, &seeds, &[5], &SampleConfig::default());
+        for (i, &p) in t.levels[0].iter().enumerate() {
+            for s in 0..5 {
+                let c = t.levels[1][i * 5 + s];
+                if c != u32::MAX {
+                    assert!(g.out_neighbors(p).contains(&c));
+                }
+            }
+        }
+        stack.shutdown();
+    }
+
+    #[test]
+    fn owner_routing_concentrates_hotspot_load() {
+        // The core Fig. 10 phenomenon, as a unit test: on a power-law graph
+        // with balanced seeds, owner routing must show visibly worse
+        // workload balance than replica routing.
+        let mut rng = Rng::new(161);
+        let g = generator::chung_lu(3000, 60_000, 1.8, &mut rng);
+        let parts = 4;
+
+        // Baseline: edge-cut + owner routing.
+        let stack = BaselineStack::launch(&g, parts, 1);
+        let mut bclient = stack.client(3);
+        let seeds: Vec<u32> = (0..512).collect();
+        sample_tree(&mut bclient, &seeds, &[15, 10], &SampleConfig::default());
+        let base_wl: Vec<f64> = stack
+            .service
+            .workload()
+            .iter()
+            .map(|&w| w.max(1) as f64)
+            .collect();
+        let base_balance = balance_ratio(&base_wl);
+        stack.shutdown();
+
+        // GLISP: AdaDNE + replica routing.
+        use crate::partition::{AdaDNE, Partitioner};
+        let ea = AdaDNE::default().partition(&g, parts, 1);
+        let svc = SamplingService::launch(&g, &ea, 1);
+        let mut gclient = svc.client(3);
+        sample_tree(&mut gclient, &seeds, &[15, 10], &SampleConfig::default());
+        let glisp_wl: Vec<f64> = svc.workload().iter().map(|&w| w.max(1) as f64).collect();
+        let glisp_balance = balance_ratio(&glisp_wl);
+        svc.shutdown();
+
+        assert!(
+            glisp_balance < base_balance,
+            "GLISP balance {glisp_balance:.2} should beat baseline {base_balance:.2}"
+        );
+    }
+}

@@ -1,0 +1,225 @@
+//! Gather-Apply sampling client (paper Fig. 5, Algorithms 1 & 4). The
+//! client fans a one-hop request out to servers, then post-processes the
+//! partial results:
+//!
+//! * **GLISP routing** (`RouteMode::AllReplicas`): a seed's request goes to
+//!   *every* partition holding a replica — a hotspot's one-hop sampling is
+//!   served cooperatively, which is the load-balancing contribution.
+//! * **Baseline routing** (`RouteMode::Owner`): a seed's request goes to a
+//!   single owner server (the edge-cut / DistDGL architecture Fig. 10
+//!   measures against).
+
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+
+use crate::graph::csr::VId;
+use crate::sampling::aes::merge_top_k;
+use crate::sampling::request::{GatherRequest, GatherResponse, SampleConfig, ServerMsg};
+use crate::util::bitset::BitMatrix;
+use crate::util::rng::Rng;
+
+#[derive(Clone)]
+pub enum RouteMode {
+    /// Route each seed to all partitions containing it (vertex-cut, GLISP).
+    AllReplicas,
+    /// Route each seed to its unique owner (edge-cut baseline).
+    Owner(Arc<Vec<u16>>),
+}
+
+/// Result of one Apply phase: per-seed neighbor lists, flattened.
+#[derive(Clone, Debug, Default)]
+pub struct OneHopSample {
+    pub offsets: Vec<u32>,
+    pub neighbors: Vec<VId>,
+}
+
+impl OneHopSample {
+    pub fn neighbors_of(&self, i: usize) -> &[VId] {
+        &self.neighbors[self.offsets[i] as usize..self.offsets[i + 1] as usize]
+    }
+}
+
+#[derive(Clone)]
+pub struct SamplingClient {
+    pub servers: Vec<Sender<ServerMsg>>,
+    /// Global vertex → partition membership bits (from the partitioner).
+    pub membership: Arc<BitMatrix>,
+    pub mode: RouteMode,
+    pub rng: Rng,
+}
+
+impl SamplingClient {
+    /// Partitions a seed is routed to under the current mode.
+    fn route(&self, v: VId) -> Vec<usize> {
+        match &self.mode {
+            RouteMode::AllReplicas => self.membership.row_ones(v as usize).collect(),
+            RouteMode::Owner(owner) => vec![owner[v as usize] as usize],
+        }
+    }
+
+    /// One Gather + Apply round (Algorithm 1, lines 9–10): sample up to
+    /// `fanout` neighbors for every seed. Duplicate seeds are sampled
+    /// independently (each occurrence is its own tree slot).
+    pub fn sample_one_hop(
+        &mut self,
+        seeds: &[VId],
+        fanout: usize,
+        cfg: &SampleConfig,
+    ) -> OneHopSample {
+        // --- Gather: bucket seed occurrences by server ---
+        let p = self.servers.len();
+        let mut per_server_seeds: Vec<Vec<VId>> = vec![Vec::new(); p];
+        // seat[i] = list of (server, index within that server's request)
+        let mut seat: Vec<Vec<(usize, u32)>> = vec![Vec::new(); seeds.len()];
+        for (i, &s) in seeds.iter().enumerate() {
+            for srv in self.route(s) {
+                seat[i].push((srv, per_server_seeds[srv].len() as u32));
+                per_server_seeds[srv].push(s);
+            }
+        }
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut expected = 0usize;
+        for (srv, sv_seeds) in per_server_seeds.into_iter().enumerate() {
+            if sv_seeds.is_empty() {
+                continue;
+            }
+            expected += 1;
+            self.servers[srv]
+                .send(ServerMsg::Gather(
+                    GatherRequest {
+                        seeds: sv_seeds,
+                        fanout,
+                        cfg: cfg.clone(),
+                    },
+                    tx.clone(),
+                ))
+                .expect("server hung up");
+        }
+        drop(tx);
+        let mut responses: Vec<Option<GatherResponse>> = (0..p).map(|_| None).collect();
+        for _ in 0..expected {
+            let r = rx.recv().expect("server died");
+            let part = r.part_id;
+            responses[part] = Some(r);
+        }
+
+        // --- Apply: join (uniform) or global top-k (weighted) per seed ---
+        let mut out = OneHopSample {
+            offsets: Vec::with_capacity(seeds.len() + 1),
+            neighbors: Vec::new(),
+        };
+        out.offsets.push(0);
+        for (i, _) in seeds.iter().enumerate() {
+            if cfg.weighted {
+                let lists: Vec<Vec<(VId, f64)>> = seat[i]
+                    .iter()
+                    .filter_map(|&(srv, pos)| {
+                        responses[srv].as_ref().map(|r| {
+                            r.neighbors_of(pos as usize)
+                                .iter()
+                                .zip(r.scores_of(pos as usize))
+                                .map(|(&n, &s)| (n, s))
+                                .collect()
+                        })
+                    })
+                    .collect();
+                for (n, _) in merge_top_k(&lists, fanout) {
+                    out.neighbors.push(n);
+                }
+            } else {
+                let start = out.neighbors.len();
+                for &(srv, pos) in &seat[i] {
+                    if let Some(r) = &responses[srv] {
+                        out.neighbors.extend_from_slice(r.neighbors_of(pos as usize));
+                    }
+                }
+                // Stochastic rounding can overshoot fanout by a little:
+                // keep a uniform subset to stay exact.
+                let got = out.neighbors.len() - start;
+                if got > fanout {
+                    let keep = self.rng.sample_indices(got, fanout);
+                    let selected: Vec<VId> =
+                        keep.iter().map(|&j| out.neighbors[start + j]).collect();
+                    out.neighbors.truncate(start);
+                    out.neighbors.extend(selected);
+                }
+            }
+            out.offsets.push(out.neighbors.len() as u32);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator;
+    use crate::graph::hetero::build_partitions;
+    use crate::partition::{AdaDNE, Partitioner};
+    use crate::sampling::server::{spawn, ServerStats};
+
+    fn launch_small() -> (SamplingClient, Vec<Sender<ServerMsg>>) {
+        let mut rng = Rng::new(130);
+        let g = generator::chung_lu(600, 6000, 2.1, &mut rng);
+        let ea = AdaDNE::default().partition(&g, 3, 0);
+        let parts = build_partitions(&g, &ea.part_of_edge, 3);
+        let mut membership = BitMatrix::new(g.n, 3);
+        for p in &parts {
+            for (l, &gid) in p.global_id.iter().enumerate() {
+                let _ = l;
+                membership.set(gid as usize, p.part_id);
+            }
+        }
+        let mut servers = Vec::new();
+        for p in parts {
+            let (tx, _h) = spawn(Arc::new(p), Arc::new(ServerStats::default()), 9);
+            servers.push(tx);
+        }
+        let client = SamplingClient {
+            servers: servers.clone(),
+            membership: Arc::new(membership),
+            mode: RouteMode::AllReplicas,
+            rng: Rng::new(77),
+        };
+        (client, servers)
+    }
+
+    #[test]
+    fn one_hop_respects_fanout() {
+        let (mut client, _s) = launch_small();
+        let seeds: Vec<VId> = (0..64).collect();
+        let got = client.sample_one_hop(&seeds, 5, &SampleConfig::default());
+        assert_eq!(got.offsets.len(), 65);
+        for i in 0..64 {
+            assert!(got.neighbors_of(i).len() <= 5);
+        }
+    }
+
+    #[test]
+    fn duplicate_seeds_sampled_independently() {
+        let (mut client, _s) = launch_small();
+        let seeds: Vec<VId> = vec![3, 3, 3, 3];
+        let got = client.sample_one_hop(&seeds, 4, &SampleConfig::default());
+        assert_eq!(got.offsets.len(), 5);
+        // Each occurrence gets its own (possibly different) sample.
+        let lens: Vec<usize> = (0..4).map(|i| got.neighbors_of(i).len()).collect();
+        assert!(lens.iter().all(|&l| l <= 4));
+    }
+
+    #[test]
+    fn weighted_one_hop_returns_at_most_fanout() {
+        let (mut client, _s) = launch_small();
+        let seeds: Vec<VId> = (0..32).collect();
+        let got = client.sample_one_hop(
+            &seeds,
+            3,
+            &SampleConfig {
+                weighted: true,
+                ..Default::default()
+            },
+        );
+        for i in 0..32 {
+            assert!(got.neighbors_of(i).len() <= 3);
+        }
+    }
+}

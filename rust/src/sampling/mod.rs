@@ -1,0 +1,18 @@
+//! Graph sampling service (paper §III-C): Gather-Apply K-hop neighbor
+//! sampling over per-partition servers, with Vitter Algorithm D uniform
+//! sampling, Efraimidis–Spirakis A-ES weighted sampling, and the
+//! DistDGL-like single-owner baseline.
+
+pub mod aes;
+pub mod algo_d;
+pub mod baseline;
+pub mod client;
+pub mod request;
+pub mod server;
+pub mod service;
+pub mod subgraph;
+
+pub use client::{OneHopSample, RouteMode, SamplingClient};
+pub use request::{Direction, GatherRequest, GatherResponse, SampleConfig, PAD};
+pub use service::{balanced_seeds, SamplingService};
+pub use subgraph::{sample_tree, TreeSample};

@@ -1,0 +1,96 @@
+//! Wire types of the sampling service — the client↔server protocol of the
+//! Gather-Apply architecture (paper Fig. 5 / Algorithms 1–4). Transport is
+//! `std::sync::mpsc` channels between threads (DESIGN.md §3: the paper's
+//! load-balance phenomena are transport-independent).
+
+use crate::graph::csr::VId;
+
+/// Padding marker in tree-format neighbor arrays.
+pub const PAD: VId = VId::MAX;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    Out,
+    In,
+}
+
+#[derive(Clone, Debug)]
+pub struct SampleConfig {
+    pub direction: Direction,
+    pub weighted: bool,
+    /// Restrict to one edge type (heterogeneous metapath-style sampling).
+    pub etype: Option<u8>,
+}
+
+impl Default for SampleConfig {
+    fn default() -> Self {
+        Self {
+            direction: Direction::Out,
+            weighted: false,
+            etype: None,
+        }
+    }
+}
+
+/// One-hop gather request: sample up to `fanout` neighbors for each seed.
+/// Seeds are global vertex IDs already filtered to this server's replicas.
+#[derive(Clone, Debug)]
+pub struct GatherRequest {
+    pub seeds: Vec<VId>,
+    pub fanout: usize,
+    pub cfg: SampleConfig,
+}
+
+/// Per-seed sampled neighbors in a flattened (offsets, neighbors) layout.
+/// `scores` is parallel to `neighbors` and only filled for weighted
+/// sampling (the A-ES scores the Apply phase merges on).
+#[derive(Clone, Debug, Default)]
+pub struct GatherResponse {
+    pub part_id: usize,
+    pub offsets: Vec<u32>,
+    pub neighbors: Vec<VId>,
+    pub scores: Vec<f64>,
+    /// Edges scanned serving this request — the workload unit of Fig. 10.
+    pub work_edges: u64,
+}
+
+impl GatherResponse {
+    pub fn neighbors_of(&self, i: usize) -> &[VId] {
+        &self.neighbors[self.offsets[i] as usize..self.offsets[i + 1] as usize]
+    }
+
+    pub fn scores_of(&self, i: usize) -> &[f64] {
+        if self.scores.is_empty() {
+            &[]
+        } else {
+            &self.scores[self.offsets[i] as usize..self.offsets[i + 1] as usize]
+        }
+    }
+}
+
+/// Messages a partition server accepts.
+pub enum ServerMsg {
+    Gather(GatherRequest, std::sync::mpsc::Sender<GatherResponse>),
+    /// Fetch the precomputed one-hop neighbor cache plan for boundary
+    /// vertices (used by the inference engine's static cache fill).
+    Shutdown,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn response_slicing() {
+        let r = GatherResponse {
+            part_id: 0,
+            offsets: vec![0, 2, 2, 5],
+            neighbors: vec![7, 8, 1, 2, 3],
+            scores: vec![],
+            work_edges: 0,
+        };
+        assert_eq!(r.neighbors_of(0), &[7, 8]);
+        assert_eq!(r.neighbors_of(1), &[] as &[VId]);
+        assert_eq!(r.neighbors_of(2), &[1, 2, 3]);
+    }
+}

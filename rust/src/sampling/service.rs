@@ -1,0 +1,194 @@
+//! Sampling service lifecycle: launch P partition servers (one thread
+//! each), hand out clients, expose per-server workload counters, shut down
+//! cleanly. This is the in-process analogue of the paper's "P servers will
+//! be launched, each for one partition".
+
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+
+use crate::graph::csr::{Graph, VId};
+use crate::graph::hetero::{build_partitions, PartitionGraph};
+use crate::partition::EdgeAssignment;
+use crate::sampling::client::{RouteMode, SamplingClient};
+use crate::sampling::request::ServerMsg;
+use crate::sampling::server::{spawn, ServerStats};
+use crate::util::bitset::BitMatrix;
+use crate::util::rng::Rng;
+
+pub struct SamplingService {
+    pub servers: Vec<Sender<ServerMsg>>,
+    pub stats: Vec<Arc<ServerStats>>,
+    pub membership: Arc<BitMatrix>,
+    pub partitions: Vec<Arc<PartitionGraph>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl SamplingService {
+    /// Partition `g` with `assign` and launch one server per partition.
+    pub fn launch(g: &Graph, assign: &EdgeAssignment, seed: u64) -> Self {
+        let parts = build_partitions(g, &assign.part_of_edge, assign.num_parts);
+        Self::launch_with_partitions(g.n, parts, seed)
+    }
+
+    pub fn launch_with_partitions(
+        n: usize,
+        parts: Vec<PartitionGraph>,
+        seed: u64,
+    ) -> Self {
+        let num_parts = parts.len();
+        let mut membership = BitMatrix::new(n, num_parts);
+        for p in &parts {
+            for &gid in &p.global_id {
+                membership.set(gid as usize, p.part_id);
+            }
+        }
+        let membership = Arc::new(membership);
+        let mut servers = Vec::new();
+        let mut stats = Vec::new();
+        let mut handles = Vec::new();
+        let mut partitions = Vec::new();
+        for p in parts {
+            let st = Arc::new(ServerStats::default());
+            let pa = Arc::new(p);
+            let (tx, h) = spawn(pa.clone(), st.clone(), seed);
+            servers.push(tx);
+            stats.push(st);
+            handles.push(h);
+            partitions.push(pa);
+        }
+        Self {
+            servers,
+            stats,
+            membership,
+            partitions,
+            handles,
+        }
+    }
+
+    /// A client with GLISP's cooperative replica routing.
+    pub fn client(&self, seed: u64) -> SamplingClient {
+        SamplingClient {
+            servers: self.servers.clone(),
+            membership: self.membership.clone(),
+            mode: RouteMode::AllReplicas,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// A client with single-owner routing (the DistDGL-like baseline).
+    pub fn owner_client(&self, owner: Arc<Vec<u16>>, seed: u64) -> SamplingClient {
+        SamplingClient {
+            servers: self.servers.clone(),
+            membership: self.membership.clone(),
+            mode: RouteMode::Owner(owner),
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Per-server edges-scanned counters — the Fig. 10 workload metric.
+    pub fn workload(&self) -> Vec<u64> {
+        self.stats
+            .iter()
+            .map(|s| s.edges_scanned.load(std::sync::atomic::Ordering::Relaxed))
+            .collect()
+    }
+
+    pub fn reset_stats(&self) {
+        use std::sync::atomic::Ordering;
+        for s in &self.stats {
+            s.requests.store(0, Ordering::Relaxed);
+            s.seeds.store(0, Ordering::Relaxed);
+            s.edges_scanned.store(0, Ordering::Relaxed);
+            s.neighbors_returned.store(0, Ordering::Relaxed);
+            s.busy_ns.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Per-server busy time in seconds. `max` of this vector is the
+    /// simulated distributed makespan of the traffic since the last reset
+    /// (the servers run in parallel in the paper's deployment).
+    pub fn busy_secs(&self) -> Vec<f64> {
+        self.stats
+            .iter()
+            .map(|s| s.busy_ns.load(std::sync::atomic::Ordering::Relaxed) as f64 / 1e9)
+            .collect()
+    }
+
+    /// Total memory of the partitioned graph structures (Table III).
+    pub fn graph_bytes(&self) -> usize {
+        self.partitions.iter().map(|p| p.nbytes()).sum()
+    }
+
+    pub fn shutdown(self) {
+        for tx in &self.servers {
+            let _ = tx.send(ServerMsg::Shutdown);
+        }
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Seeds spread evenly across partitions — the paper's "balanced seed"
+/// experimental setup (§IV-C): uniformly sample an equal number of seed
+/// vertices from each partition.
+pub fn balanced_seeds(
+    service: &SamplingService,
+    per_part: usize,
+    rng: &mut Rng,
+) -> Vec<VId> {
+    let mut seeds = Vec::with_capacity(per_part * service.partitions.len());
+    for p in &service.partitions {
+        for _ in 0..per_part {
+            let l = rng.usize(p.nv());
+            seeds.push(p.global(l as u32));
+        }
+    }
+    seeds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator;
+    use crate::partition::{AdaDNE, Partitioner};
+    use crate::sampling::request::SampleConfig;
+
+    #[test]
+    fn launch_sample_shutdown() {
+        let mut rng = Rng::new(140);
+        let g = generator::chung_lu(800, 8000, 2.1, &mut rng);
+        let ea = AdaDNE::default().partition(&g, 4, 0);
+        let svc = SamplingService::launch(&g, &ea, 1);
+        let mut client = svc.client(2);
+        let seeds = balanced_seeds(&svc, 8, &mut rng);
+        assert_eq!(seeds.len(), 32);
+        let got = client.sample_one_hop(&seeds, 5, &SampleConfig::default());
+        assert_eq!(got.offsets.len(), 33);
+        // Work must be spread across all servers for AllReplicas routing.
+        let wl = svc.workload();
+        assert_eq!(wl.len(), 4);
+        assert!(wl.iter().sum::<u64>() > 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn multiple_clients_share_servers() {
+        let mut rng = Rng::new(141);
+        let g = generator::chung_lu(500, 5000, 2.1, &mut rng);
+        let ea = AdaDNE::default().partition(&g, 2, 0);
+        let svc = SamplingService::launch(&g, &ea, 1);
+        let mut c1 = svc.client(10);
+        let mut c2 = svc.client(11);
+        let t1 = std::thread::spawn(move || {
+            let seeds: Vec<VId> = (0..100).collect();
+            c1.sample_one_hop(&seeds, 4, &SampleConfig::default())
+        });
+        let seeds: Vec<VId> = (100..200).collect();
+        let r2 = c2.sample_one_hop(&seeds, 4, &SampleConfig::default());
+        let r1 = t1.join().unwrap();
+        assert_eq!(r1.offsets.len(), 101);
+        assert_eq!(r2.offsets.len(), 101);
+        svc.shutdown();
+    }
+}

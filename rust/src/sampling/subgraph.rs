@@ -1,0 +1,171 @@
+//! K-hop tree-format subgraph assembly (paper Algorithm 1 + DESIGN.md §6).
+//!
+//! A K-hop sample with seed batch B and fanouts [f1..fK] is materialized as
+//! K+1 per-level vertex arrays with n_0 = B, n_k = n_{k-1}·f_k: the
+//! neighbors of level-k slot i occupy slots [i·f_{k+1}, (i+1)·f_{k+1}) of
+//! level k+1, padded with `PAD` + mask 0. Static shapes are what the AOT
+//! artifacts require; duplicates across branches are accepted (tree
+//! expansion).
+
+use crate::graph::csr::VId;
+use crate::sampling::client::SamplingClient;
+use crate::sampling::request::{SampleConfig, PAD};
+
+#[derive(Clone, Debug)]
+pub struct TreeSample {
+    /// levels[0] = seeds; levels[k] has len B·∏_{j≤k} f_j, PAD = padding.
+    pub levels: Vec<Vec<VId>>,
+    /// masks[k-1] aligns with levels[k]: 1.0 = real vertex.
+    pub masks: Vec<Vec<f32>>,
+    pub fanouts: Vec<usize>,
+}
+
+impl TreeSample {
+    pub fn batch(&self) -> usize {
+        self.levels[0].len()
+    }
+
+    pub fn hops(&self) -> usize {
+        self.fanouts.len()
+    }
+
+    /// Distinct real vertices across all levels (the subgraph size metric
+    /// Fig. 9 throughput is reported over).
+    pub fn distinct_vertices(&self) -> usize {
+        let mut set = std::collections::HashSet::new();
+        for lvl in &self.levels {
+            for &v in lvl {
+                if v != PAD {
+                    set.insert(v);
+                }
+            }
+        }
+        set.len()
+    }
+
+    pub fn total_slots(&self) -> usize {
+        self.levels.iter().map(|l| l.len()).sum()
+    }
+}
+
+/// Sample a K-hop tree (Algorithm 1): K Gather-Apply rounds, one per hop.
+pub fn sample_tree(
+    client: &mut SamplingClient,
+    seeds: &[VId],
+    fanouts: &[usize],
+    cfg: &SampleConfig,
+) -> TreeSample {
+    let mut levels = vec![seeds.to_vec()];
+    let mut masks: Vec<Vec<f32>> = Vec::new();
+    for &f in fanouts {
+        let parents = levels.last().unwrap();
+        // Gather for real parents only; padding parents produce padding.
+        let real_idx: Vec<usize> =
+            (0..parents.len()).filter(|&i| parents[i] != PAD).collect();
+        let real_seeds: Vec<VId> = real_idx.iter().map(|&i| parents[i]).collect();
+        let got = client.sample_one_hop(&real_seeds, f, cfg);
+        let mut level = vec![PAD; parents.len() * f];
+        let mut mask = vec![0f32; parents.len() * f];
+        for (j, &i) in real_idx.iter().enumerate() {
+            let ns = got.neighbors_of(j);
+            for (s, &n) in ns.iter().take(f).enumerate() {
+                level[i * f + s] = n;
+                mask[i * f + s] = 1.0;
+            }
+        }
+        levels.push(level);
+        masks.push(mask);
+    }
+    TreeSample {
+        levels,
+        masks,
+        fanouts: fanouts.to_vec(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator;
+    use crate::partition::{AdaDNE, Partitioner};
+    use crate::sampling::service::SamplingService;
+    use crate::util::rng::Rng;
+
+    fn service() -> SamplingService {
+        let mut rng = Rng::new(150);
+        let g = generator::chung_lu(1000, 10_000, 2.1, &mut rng);
+        let ea = AdaDNE::default().partition(&g, 3, 0);
+        SamplingService::launch(&g, &ea, 1)
+    }
+
+    #[test]
+    fn tree_shapes_are_static() {
+        let svc = service();
+        let mut client = svc.client(5);
+        let seeds: Vec<VId> = (0..16).collect();
+        let t = sample_tree(&mut client, &seeds, &[4, 3], &SampleConfig::default());
+        assert_eq!(t.levels[0].len(), 16);
+        assert_eq!(t.levels[1].len(), 64);
+        assert_eq!(t.levels[2].len(), 192);
+        assert_eq!(t.masks[0].len(), 64);
+        assert_eq!(t.masks[1].len(), 192);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn mask_matches_pad() {
+        let svc = service();
+        let mut client = svc.client(6);
+        let seeds: Vec<VId> = (0..8).collect();
+        let t = sample_tree(&mut client, &seeds, &[5, 4], &SampleConfig::default());
+        for k in 1..t.levels.len() {
+            for (v, m) in t.levels[k].iter().zip(&t.masks[k - 1]) {
+                assert_eq!(*v == PAD, *m == 0.0, "mask/PAD mismatch");
+            }
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn padding_parents_have_padding_children() {
+        let svc = service();
+        let mut client = svc.client(7);
+        let seeds: Vec<VId> = (0..8).collect();
+        let t = sample_tree(&mut client, &seeds, &[3, 2], &SampleConfig::default());
+        let f2 = 2;
+        for (i, &p) in t.levels[1].iter().enumerate() {
+            if p == PAD {
+                for s in 0..f2 {
+                    assert_eq!(t.levels[2][i * f2 + s], PAD);
+                    assert_eq!(t.masks[1][i * f2 + s], 0.0);
+                }
+            }
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn neighbors_are_real_edges() {
+        // Every sampled child must be an actual out-neighbor of its parent
+        // in the original graph.
+        let mut rng = Rng::new(151);
+        let g = generator::chung_lu(700, 7000, 2.1, &mut rng);
+        let ea = AdaDNE::default().partition(&g, 3, 0);
+        let svc = SamplingService::launch(&g, &ea, 1);
+        let mut client = svc.client(8);
+        let seeds: Vec<VId> = (0..16).collect();
+        let t = sample_tree(&mut client, &seeds, &[4], &SampleConfig::default());
+        for (i, &p) in t.levels[0].iter().enumerate() {
+            for s in 0..4 {
+                let c = t.levels[1][i * 4 + s];
+                if c != PAD {
+                    assert!(
+                        g.out_neighbors(p).contains(&c),
+                        "{c} is not a neighbor of {p}"
+                    );
+                }
+            }
+        }
+        svc.shutdown();
+    }
+}

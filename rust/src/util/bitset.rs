@@ -1,0 +1,218 @@
+//! Fixed-size bit array. Used for the `partition_set` field of the compact
+//! graph structure (paper Fig. 6): partition membership of each vertex as a
+//! bit per partition, and for visited sets in BFS/reorder passes.
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct BitSet {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl BitSet {
+    pub fn new(len: usize) -> Self {
+        Self {
+            words: vec![0; len.div_ceil(64)],
+            len,
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i / 64] |= 1 << (i % 64);
+    }
+
+    #[inline]
+    pub fn clear(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i / 64] &= !(1 << (i % 64));
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        self.words[i / 64] >> (i % 64) & 1 == 1
+    }
+
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut w = w;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    None
+                } else {
+                    let b = w.trailing_zeros() as usize;
+                    w &= w - 1;
+                    Some(wi * 64 + b)
+                }
+            })
+        })
+    }
+
+    pub fn clear_all(&mut self) {
+        self.words.fill(0);
+    }
+
+    /// Raw words — the serialized form in the graph binary layout.
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    pub fn from_words(words: Vec<u64>, len: usize) -> Self {
+        assert!(words.len() == len.div_ceil(64));
+        Self { words, len }
+    }
+}
+
+/// A matrix of bit sets: one row of `bits` bits per item, packed into whole
+/// words per row. This is the paper's `partition_set` field: row = vertex,
+/// bit = partition ID.
+#[derive(Clone, Debug)]
+pub struct BitMatrix {
+    words_per_row: usize,
+    bits: usize,
+    data: Vec<u64>,
+}
+
+impl BitMatrix {
+    pub fn new(rows: usize, bits: usize) -> Self {
+        let wpr = bits.div_ceil(64).max(1);
+        Self {
+            words_per_row: wpr,
+            bits,
+            data: vec![0; rows * wpr],
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        if self.words_per_row == 0 {
+            0
+        } else {
+            self.data.len() / self.words_per_row
+        }
+    }
+
+    pub fn bits(&self) -> usize {
+        self.bits
+    }
+
+    #[inline]
+    pub fn set(&mut self, row: usize, bit: usize) {
+        debug_assert!(bit < self.bits);
+        self.data[row * self.words_per_row + bit / 64] |= 1 << (bit % 64);
+    }
+
+    #[inline]
+    pub fn get(&self, row: usize, bit: usize) -> bool {
+        debug_assert!(bit < self.bits);
+        self.data[row * self.words_per_row + bit / 64] >> (bit % 64) & 1 == 1
+    }
+
+    pub fn row_ones(&self, row: usize) -> impl Iterator<Item = usize> + '_ {
+        let start = row * self.words_per_row;
+        self.data[start..start + self.words_per_row]
+            .iter()
+            .enumerate()
+            .flat_map(|(wi, &w)| {
+                let mut w = w;
+                std::iter::from_fn(move || {
+                    if w == 0 {
+                        None
+                    } else {
+                        let b = w.trailing_zeros() as usize;
+                        w &= w - 1;
+                        Some(wi * 64 + b)
+                    }
+                })
+            })
+    }
+
+    pub fn row_count(&self, row: usize) -> usize {
+        let start = row * self.words_per_row;
+        self.data[start..start + self.words_per_row]
+            .iter()
+            .map(|w| w.count_ones() as usize)
+            .sum()
+    }
+
+    /// Memory footprint in bytes (Table III accounting).
+    pub fn nbytes(&self) -> usize {
+        self.data.len() * 8
+    }
+
+    pub fn raw(&self) -> &[u64] {
+        &self.data
+    }
+
+    pub fn from_raw(data: Vec<u64>, bits: usize) -> Self {
+        let wpr = bits.div_ceil(64).max(1);
+        assert_eq!(data.len() % wpr, 0);
+        Self {
+            words_per_row: wpr,
+            bits,
+            data,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_clear() {
+        let mut b = BitSet::new(130);
+        b.set(0);
+        b.set(64);
+        b.set(129);
+        assert!(b.get(0) && b.get(64) && b.get(129));
+        assert!(!b.get(1) && !b.get(128));
+        b.clear(64);
+        assert!(!b.get(64));
+        assert_eq!(b.count_ones(), 2);
+    }
+
+    #[test]
+    fn iter_ones_order() {
+        let mut b = BitSet::new(200);
+        for i in [3usize, 64, 65, 199] {
+            b.set(i);
+        }
+        assert_eq!(b.iter_ones().collect::<Vec<_>>(), vec![3, 64, 65, 199]);
+    }
+
+    #[test]
+    fn matrix_rows_independent() {
+        let mut m = BitMatrix::new(3, 100);
+        m.set(0, 0);
+        m.set(1, 99);
+        m.set(2, 50);
+        assert!(m.get(0, 0) && !m.get(0, 99));
+        assert!(m.get(1, 99) && !m.get(1, 0));
+        assert_eq!(m.row_ones(2).collect::<Vec<_>>(), vec![50]);
+        assert_eq!(m.row_count(1), 1);
+    }
+
+    #[test]
+    fn matrix_roundtrip_raw() {
+        let mut m = BitMatrix::new(4, 65);
+        m.set(3, 64);
+        let m2 = BitMatrix::from_raw(m.raw().to_vec(), 65);
+        assert!(m2.get(3, 64));
+        assert_eq!(m2.rows(), 4);
+    }
+}

@@ -1,0 +1,11 @@
+//! Shared substrate: PRNG, JSON codec, statistics, bit sets, top-k
+//! selection, timing, and the property-testing mini-framework. Everything
+//! here exists because the build is offline-vendored (DESIGN.md §4).
+
+pub mod bitset;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+pub mod topk;

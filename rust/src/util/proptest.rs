@@ -1,0 +1,102 @@
+//! In-repo property-testing mini-framework (proptest is not in the offline
+//! vendor set). Generates seeded random cases, runs the property, and on
+//! failure reports the failing seed so the case is replayable with
+//! `GLISP_PROP_SEED=<seed>`.
+//!
+//! Usage:
+//! ```ignore
+//! prop_check("routing is total", 200, |rng| {
+//!     let g = arbitrary_graph(rng, 100, 400);
+//!     // ... assert invariant, or return Err(msg)
+//!     Ok(())
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Number of cases can be overridden with GLISP_PROP_CASES.
+pub fn prop_check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let cases = std::env::var("GLISP_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(cases);
+    if let Ok(seed) = std::env::var("GLISP_PROP_SEED") {
+        let seed: u64 = seed.parse().expect("GLISP_PROP_SEED must be u64");
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("[prop:{name}] replay seed {seed} failed: {msg}");
+        }
+        return;
+    }
+    let base = 0xC0FFEE_u64;
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "[prop:{name}] case {case}/{cases} failed (replay with \
+                 GLISP_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assertion helpers that return Err instead of panicking, so prop_check can
+/// attach the replay seed.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?})",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        prop_check("sum commutes", 50, |rng| {
+            let a = rng.usize(1000);
+            let b = rng.usize(1000);
+            prop_assert_eq!(a + b, b + a);
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay with GLISP_PROP_SEED=")]
+    fn reports_seed_on_failure() {
+        prop_check("always fails eventually", 10, |rng| {
+            let x = rng.usize(2);
+            prop_assert!(x == 0, "x was {x}");
+            Ok(())
+        });
+    }
+}

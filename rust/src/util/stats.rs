@@ -1,0 +1,175 @@
+//! Small statistics helpers shared by metrics, benches and reports.
+
+/// Running mean/min/max/variance accumulator (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub n: u64,
+    pub mean: f64,
+    m2: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn from_iter<I: IntoIterator<Item = f64>>(it: I) -> Self {
+        let mut s = Self::new();
+        for x in it {
+            s.add(x);
+        }
+        s
+    }
+}
+
+/// Percentile over a copy of the data (nearest-rank on a sorted copy).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+/// max/min ratio — the paper's balance metrics (EB, VB, normalized workload).
+pub fn balance_ratio(xs: &[f64]) -> f64 {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for &x in xs {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    if lo <= 0.0 {
+        f64::INFINITY
+    } else {
+        hi / lo
+    }
+}
+
+/// Log-binned histogram for degree distributions (Fig. 8): bin k holds
+/// counts with value in [2^k, 2^{k+1}).
+pub fn log_histogram(values: impl Iterator<Item = u64>) -> Vec<(u64, u64)> {
+    let mut bins: Vec<u64> = Vec::new();
+    let mut zero = 0u64;
+    for v in values {
+        if v == 0 {
+            zero += 1;
+            continue;
+        }
+        let k = 63 - v.leading_zeros() as usize;
+        if bins.len() <= k {
+            bins.resize(k + 1, 0);
+        }
+        bins[k] += 1;
+    }
+    let mut out = Vec::new();
+    if zero > 0 {
+        out.push((0, zero));
+    }
+    for (k, &c) in bins.iter().enumerate() {
+        if c > 0 {
+            out.push((1u64 << k, c));
+        }
+    }
+    out
+}
+
+/// Least-squares slope of log(count) vs log(degree) — a quick power-law
+/// exponent estimate for generated graphs (Fig. 8 uses the visual shape;
+/// tests use this to pin generator behaviour).
+pub fn powerlaw_slope(hist: &[(u64, u64)]) -> f64 {
+    let pts: Vec<(f64, f64)> = hist
+        .iter()
+        .filter(|&&(d, c)| d > 0 && c > 0)
+        .map(|&(d, c)| ((d as f64).ln(), (c as f64).ln()))
+        .collect();
+    if pts.len() < 2 {
+        return 0.0;
+    }
+    let n = pts.len() as f64;
+    let sx: f64 = pts.iter().map(|p| p.0).sum();
+    let sy: f64 = pts.iter().map(|p| p.1).sum();
+    let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+    (n * sxy - sx * sy) / (n * sxx - sx * sx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_matches_closed_form() {
+        let s = Summary::from_iter([1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.var() - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert!((percentile(&xs, 50.0) - 50.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn balance() {
+        assert!((balance_ratio(&[2.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!(balance_ratio(&[0.0, 1.0]).is_infinite());
+    }
+
+    #[test]
+    fn log_hist_bins() {
+        let h = log_histogram([1u64, 1, 2, 3, 4, 8, 9, 0].into_iter());
+        // zero bin, then 2^0:{1,1}, 2^1:{2,3}, 2^2:{4}, 2^3:{8,9}
+        assert_eq!(h, vec![(0, 1), (1, 2), (2, 2), (4, 1), (8, 2)]);
+    }
+
+    #[test]
+    fn slope_of_exact_powerlaw() {
+        // count = degree^-2 scaled
+        let hist: Vec<(u64, u64)> = (0..10)
+            .map(|k| {
+                let d = 1u64 << k;
+                (d, (1e12 / (d as f64).powi(2)) as u64)
+            })
+            .collect();
+        let s = powerlaw_slope(&hist);
+        assert!((s + 2.0).abs() < 0.05, "slope {s}");
+    }
+}

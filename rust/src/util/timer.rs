@@ -1,0 +1,77 @@
+//! Wall-clock timing helpers used by the bench harness and metrics.
+
+use std::time::{Duration, Instant};
+
+/// Scoped stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn ms(&self) -> f64 {
+        self.secs() * 1e3
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn time<R>(f: impl FnOnce() -> R) -> (R, f64) {
+    let t = Timer::start();
+    let r = f();
+    (r, t.secs())
+}
+
+/// Repeat a closure until `min_secs` of total runtime or `max_iters`,
+/// returning per-iteration seconds (after `warmup` discarded runs). This is
+/// the measurement core of the in-repo bench harness (criterion is not in
+/// the offline vendor set).
+pub fn measure(warmup: usize, max_iters: usize, min_secs: f64, mut f: impl FnMut()) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let total = Timer::start();
+    while samples.len() < max_iters && (samples.len() < 3 || total.secs() < min_secs) {
+        let t = Timer::start();
+        f();
+        samples.push(t.secs());
+    }
+    samples
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(t.ms() >= 4.0);
+    }
+
+    #[test]
+    fn measure_counts() {
+        // min_secs=0 stops at the 3-sample floor; a large min_secs runs to
+        // the max_iters cap.
+        let mut n = 0;
+        let s = measure(2, 5, 0.0, || n += 1);
+        assert_eq!(s.len(), 3);
+        assert_eq!(n, 5); // 2 warmup + 3 measured
+        let s = measure(0, 4, 60.0, || {});
+        assert_eq!(s.len(), 4);
+    }
+}

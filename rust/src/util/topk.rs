@@ -1,0 +1,168 @@
+//! Bounded top-k selection by score — the Apply-phase primitive of the
+//! distributed weighted sampler (paper Algorithm 4: `GetScoreTopK`).
+//!
+//! A fixed-capacity min-heap keyed on score: pushing beyond capacity evicts
+//! the current minimum iff the new score beats it, so the heap always holds
+//! the k best items seen. O(n log k), no allocation after construction.
+
+#[derive(Clone, Debug)]
+pub struct TopK<T> {
+    k: usize,
+    // Min-heap as (score, tiebreak, item); tiebreak keeps ordering total so
+    // results are deterministic for equal scores.
+    heap: Vec<(f64, u64, T)>,
+}
+
+impl<T> TopK<T> {
+    pub fn new(k: usize) -> Self {
+        Self {
+            k,
+            heap: Vec::with_capacity(k + 1),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Current k-th best score (the eviction threshold), if full.
+    pub fn threshold(&self) -> Option<f64> {
+        if self.heap.len() == self.k {
+            self.heap.first().map(|e| e.0)
+        } else {
+            None
+        }
+    }
+
+    pub fn push(&mut self, score: f64, tiebreak: u64, item: T) {
+        if self.k == 0 {
+            return;
+        }
+        if self.heap.len() < self.k {
+            self.heap.push((score, tiebreak, item));
+            self.sift_up(self.heap.len() - 1);
+        } else if Self::gt(score, tiebreak, self.heap[0].0, self.heap[0].1) {
+            self.heap[0] = (score, tiebreak, item);
+            self.sift_down(0);
+        }
+    }
+
+    #[inline]
+    fn gt(s1: f64, t1: u64, s2: f64, t2: u64) -> bool {
+        s1 > s2 || (s1 == s2 && t1 > t2)
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let p = (i - 1) / 2;
+            if Self::gt(self.heap[p].0, self.heap[p].1, self.heap[i].0, self.heap[i].1) {
+                self.heap.swap(i, p);
+                i = p;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut min = i;
+            for c in [l, r] {
+                if c < self.heap.len()
+                    && Self::gt(
+                        self.heap[min].0,
+                        self.heap[min].1,
+                        self.heap[c].0,
+                        self.heap[c].1,
+                    )
+                {
+                    min = c;
+                }
+            }
+            if min == i {
+                break;
+            }
+            self.heap.swap(i, min);
+            i = min;
+        }
+    }
+
+    /// Drain in descending score order.
+    pub fn into_sorted(mut self) -> Vec<(f64, T)> {
+        self.heap
+            .sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(b.1.cmp(&a.1)));
+        self.heap.into_iter().map(|(s, _, t)| (s, t)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn keeps_k_best() {
+        let mut tk = TopK::new(3);
+        for (i, s) in [5.0, 1.0, 9.0, 3.0, 7.0, 2.0].iter().enumerate() {
+            tk.push(*s, i as u64, i);
+        }
+        let out = tk.into_sorted();
+        let scores: Vec<f64> = out.iter().map(|x| x.0).collect();
+        assert_eq!(scores, vec![9.0, 7.0, 5.0]);
+    }
+
+    #[test]
+    fn fewer_than_k() {
+        let mut tk = TopK::new(10);
+        tk.push(1.0, 0, "a");
+        tk.push(2.0, 1, "b");
+        let out = tk.into_sorted();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].1, "b");
+    }
+
+    #[test]
+    fn zero_k() {
+        let mut tk = TopK::new(0);
+        tk.push(1.0, 0, ());
+        assert!(tk.is_empty());
+    }
+
+    #[test]
+    fn matches_full_sort_randomized() {
+        let mut rng = Rng::new(11);
+        for _ in 0..50 {
+            let n = rng.range(1, 200);
+            let k = rng.range(1, 32);
+            let xs: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+            let mut tk = TopK::new(k);
+            for (i, &s) in xs.iter().enumerate() {
+                tk.push(s, i as u64, i);
+            }
+            let got: Vec<f64> = tk.into_sorted().iter().map(|x| x.0).collect();
+            let mut want = xs.clone();
+            want.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            want.truncate(k);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn deterministic_on_ties() {
+        let mut a = TopK::new(2);
+        let mut b = TopK::new(2);
+        for i in 0..10u64 {
+            a.push(1.0, i, i);
+            b.push(1.0, i, i);
+        }
+        assert_eq!(
+            a.into_sorted().iter().map(|x| x.1).collect::<Vec<_>>(),
+            b.into_sorted().iter().map(|x| x.1).collect::<Vec<_>>()
+        );
+    }
+}

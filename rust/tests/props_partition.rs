@@ -1,0 +1,261 @@
+//! Property tests over the partitioning + compact-structure invariants
+//! (util::proptest mini-framework; replay failures with GLISP_PROP_SEED).
+
+use glisp::graph::csr::{Graph, VId};
+use glisp::graph::hetero::build_partitions;
+use glisp::graph::reorder::{rank_of, reorder, ReorderAlgo};
+use glisp::graph::{generator, metrics};
+use glisp::partition::{
+    primary_partition, quality, AdaDNE, DistributedNE, EdgeCutLDG, Hash1D, Hash2D, Partitioner,
+};
+use glisp::util::proptest::prop_check;
+use glisp::util::rng::Rng;
+use glisp::{prop_assert, prop_assert_eq};
+
+fn arbitrary_graph(rng: &mut Rng) -> Graph {
+    let n = rng.range(50, 1500);
+    let m = rng.range(n, n * 12);
+    match rng.usize(3) {
+        0 => generator::chung_lu(n, m, 1.8 + rng.f64(), rng),
+        1 => generator::erdos_renyi(n, m, rng),
+        _ => generator::rmat(n.next_power_of_two(), m, rng),
+    }
+}
+
+fn partitioners() -> Vec<Box<dyn Partitioner>> {
+    vec![
+        Box::new(Hash1D),
+        Box::new(Hash2D),
+        Box::new(EdgeCutLDG::default()),
+        Box::new(DistributedNE::default()),
+        Box::new(AdaDNE::default()),
+    ]
+}
+
+#[test]
+fn every_partitioner_assigns_every_edge_exactly_once() {
+    prop_check("edge totality", 25, |rng| {
+        let g = arbitrary_graph(rng);
+        let parts = rng.range(2, 9);
+        for p in partitioners() {
+            let ea = p.partition(&g, parts, rng.next_u64());
+            prop_assert_eq!(ea.part_of_edge.len(), g.m());
+            prop_assert!(
+                ea.part_of_edge.iter().all(|&x| (x as usize) < parts),
+                "{} emitted an out-of-range partition id",
+                p.name()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn quality_metrics_are_well_formed() {
+    prop_check("quality bounds", 20, |rng| {
+        let g = arbitrary_graph(rng);
+        let parts = rng.range(2, 7);
+        // RF is normalized by |V| including isolated vertices (which RMAT
+        // produces); every *connected* vertex must appear at least once, so
+        // RF >= connected/|V|.
+        let mut connected = vec![false; g.n];
+        for u in 0..g.n {
+            for &v in g.out_neighbors(u as VId) {
+                connected[u] = true;
+                connected[v as usize] = true;
+            }
+        }
+        let min_rf = connected.iter().filter(|&&c| c).count() as f64 / g.n as f64;
+        for p in partitioners() {
+            let ea = p.partition(&g, parts, rng.next_u64());
+            let q = quality(&g, &ea);
+            prop_assert!(q.rf >= min_rf - 1e-9, "{}: RF {} < {min_rf}", p.name(), q.rf);
+            prop_assert!(q.vb >= 1.0, "{}: VB {} < 1", p.name(), q.vb);
+            prop_assert!(q.eb >= 1.0, "{}: EB {} < 1", p.name(), q.eb);
+            let edge_sum: usize = q.edges_per_part.iter().sum();
+            prop_assert_eq!(edge_sum, g.m());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn partition_structures_preserve_the_graph() {
+    prop_check("structure fidelity", 15, |rng| {
+        let g = arbitrary_graph(rng);
+        let parts = rng.range(2, 5);
+        let ea = AdaDNE::default().partition(&g, parts, rng.next_u64());
+        let pgs = build_partitions(&g, &ea.part_of_edge, parts);
+        // Edge conservation.
+        let total: usize = pgs.iter().map(|p| p.ne()).sum();
+        prop_assert_eq!(total, g.m());
+        // Every partition edge exists in the original graph.
+        for p in &pgs {
+            for v in 0..p.nv() as u32 {
+                let src = p.global(v);
+                for &dst in p.out_neighbors(v) {
+                    prop_assert!(
+                        g.out_neighbors(src).contains(&dst),
+                        "phantom edge {src}->{dst} in partition {}",
+                        p.part_id
+                    );
+                }
+            }
+        }
+        // Local/global bijection + sortedness.
+        for p in &pgs {
+            prop_assert!(p.global_id.windows(2).all(|w| w[0] < w[1]));
+            for l in 0..p.nv() as u32 {
+                prop_assert_eq!(p.local_id(p.global(l)), Some(l));
+            }
+        }
+        // Membership rows match the quality computation's vertex counts.
+        let q = quality(&g, &ea);
+        for p in &pgs {
+            prop_assert_eq!(p.nv(), q.vertices_per_part[p.part_id]);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn adadne_balances_beat_dne_on_power_law() {
+    prop_check("adadne balance", 8, |rng| {
+        let n = rng.range(2000, 5000);
+        let g = generator::chung_lu(n, n * 10, 2.0, rng);
+        let parts = 8;
+        let qd = quality(&g, &DistributedNE::default().partition(&g, parts, 1));
+        let qa = quality(&g, &AdaDNE::default().partition(&g, parts, 1));
+        prop_assert!(
+            qa.vb <= qd.vb * 1.10,
+            "AdaDNE VB {} vs DNE VB {}",
+            qa.vb,
+            qd.vb
+        );
+        prop_assert!(qa.eb < 1.6, "AdaDNE EB {}", qa.eb);
+        Ok(())
+    });
+}
+
+#[test]
+fn reorders_are_permutations_and_invertible() {
+    prop_check("reorder permutation", 15, |rng| {
+        let g = arbitrary_graph(rng);
+        let parts = rng.range(2, 5);
+        let ea = Hash2D.partition(&g, parts, rng.next_u64());
+        let part_of = primary_partition(&g, &ea);
+        for algo in [
+            ReorderAlgo::NS,
+            ReorderAlgo::DS,
+            ReorderAlgo::PS,
+            ReorderAlgo::PDS,
+            ReorderAlgo::BFS,
+            ReorderAlgo::HubCluster,
+        ] {
+            let order = reorder(&g, algo, &part_of);
+            prop_assert_eq!(order.len(), g.n);
+            let mut seen = vec![false; g.n];
+            for &v in &order {
+                prop_assert!(!seen[v as usize], "{:?} duplicated {v}", algo);
+                seen[v as usize] = true;
+            }
+            let rank = rank_of(&order);
+            for (r, &v) in order.iter().enumerate() {
+                prop_assert_eq!(rank[v as usize] as usize, r);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn io_round_trip_arbitrary_partitions() {
+    prop_check("io round trip", 8, |rng| {
+        let n = rng.range(100, 800);
+        let g = generator::heterogeneous_graph(n, n * 8, 3, 4, 2.2, rng);
+        let parts = rng.range(1, 4);
+        let ea = Hash2D.partition(&g, parts, rng.next_u64());
+        let pgs = build_partitions(&g, &ea.part_of_edge, parts);
+        let dir = std::env::temp_dir().join(format!("glisp_prop_io_{}", rng.next_u64()));
+        for p in &pgs {
+            glisp::graph::io::save_partition(p, &dir, &format!("p{}", p.part_id)).unwrap();
+            let loaded =
+                glisp::graph::io::load_partition(&dir, &format!("p{}", p.part_id)).unwrap();
+            prop_assert_eq!(loaded.global_id, p.global_id.clone());
+            prop_assert_eq!(loaded.out_dst, p.out_dst.clone());
+            prop_assert_eq!(loaded.in_eid, p.in_eid.clone());
+            prop_assert_eq!(loaded.nbytes(), p.nbytes());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+        Ok(())
+    });
+}
+
+#[test]
+fn generators_hit_their_degree_regimes() {
+    prop_check("generator regimes", 6, |rng| {
+        let n = rng.range(5000, 15_000);
+        let pl = generator::chung_lu(n, n * 8, 2.0, rng);
+        prop_assert!(metrics::is_power_law(&pl), "chung_lu not power law");
+        let er = generator::erdos_renyi(n, n * 8, rng);
+        prop_assert!(!metrics::is_power_law(&er), "ER flagged power law");
+        Ok(())
+    });
+}
+
+#[test]
+fn edge_type_queries_match_ground_truth() {
+    prop_check("etype queries", 8, |rng| {
+        let n = rng.range(100, 600);
+        let g = generator::heterogeneous_graph(n, n * 6, 2, 5, 2.2, rng);
+        let ea = Hash1D.partition(&g, 2, rng.next_u64());
+        for p in build_partitions(&g, &ea.part_of_edge, 2) {
+            for v in 0..p.nv() as u32 {
+                let (a, b) = p.out_range(v);
+                // Reconstruct per-edge types via the query and check the
+                // multiset matches the original graph's.
+                let src = p.global(v);
+                let mut got: Vec<u8> =
+                    (a..b).map(|e| p.edge_type_of(e as u32)).collect();
+                let (ga, gb) = g.edge_range(src);
+                let mut want: Vec<u8> = (ga..gb)
+                    .filter(|&e| ea.part_of_edge[e] == p.part_id as u16)
+                    .map(|e| g.edge_type(e))
+                    .collect();
+                got.sort_unstable();
+                want.sort_unstable();
+                prop_assert_eq!(got, want);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn primary_partition_is_always_a_member() {
+    prop_check("primary membership", 10, |rng| {
+        let g = arbitrary_graph(rng);
+        let parts = rng.range(2, 6);
+        let ea = AdaDNE::default().partition(&g, parts, rng.next_u64());
+        let pp = primary_partition(&g, &ea);
+        let pgs = build_partitions(&g, &ea.part_of_edge, parts);
+        for v in 0..g.n {
+            // A vertex with any incident edge must be present in its
+            // primary partition's structure.
+            let has_edges = g.out_degree(v as VId) > 0
+                || pgs.iter().any(|p| {
+                    p.local_id(v as VId)
+                        .map(|l| p.local_in_degree(l) > 0)
+                        .unwrap_or(false)
+                });
+            if has_edges {
+                prop_assert!(
+                    pgs[pp[v] as usize].local_id(v as VId).is_some(),
+                    "vertex {v} missing from its primary partition {}",
+                    pp[v]
+                );
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,219 @@
+//! Property tests over the Gather-Apply sampling service: routing
+//! totality, fanout bounds, edge fidelity, tree-shape invariants, and the
+//! uniform/weighted statistics contracts.
+
+use glisp::graph::csr::{Graph, VId};
+use glisp::graph::generator;
+use glisp::partition::{AdaDNE, Partitioner};
+use glisp::sampling::{
+    balanced_seeds, sample_tree, SampleConfig, SamplingService, PAD,
+};
+use glisp::util::proptest::prop_check;
+use glisp::util::rng::Rng;
+use glisp::{prop_assert, prop_assert_eq};
+
+fn arbitrary_powerlaw(rng: &mut Rng) -> Graph {
+    let n = rng.range(200, 1200);
+    let m = rng.range(n * 2, n * 10);
+    generator::chung_lu(n, m, 1.9 + rng.f64() * 0.6, rng)
+}
+
+#[test]
+fn tree_shapes_and_masks_are_consistent() {
+    prop_check("tree shape", 10, |rng| {
+        let g = arbitrary_powerlaw(rng);
+        let parts = rng.range(2, 5);
+        let ea = AdaDNE::default().partition(&g, parts, rng.next_u64());
+        let svc = SamplingService::launch(&g, &ea, rng.next_u64());
+        let mut client = svc.client(rng.next_u64());
+        let hops = rng.range(1, 4);
+        let fanouts: Vec<usize> = (0..hops).map(|_| rng.range(2, 8)).collect();
+        let seeds = balanced_seeds(&svc, 4, rng);
+        let t = sample_tree(&mut client, &seeds, &fanouts, &SampleConfig::default());
+        // Level sizes multiply by fanouts.
+        let mut expect = seeds.len();
+        prop_assert_eq!(t.levels[0].len(), expect);
+        for (k, &f) in fanouts.iter().enumerate() {
+            expect *= f;
+            prop_assert_eq!(t.levels[k + 1].len(), expect);
+            prop_assert_eq!(t.masks[k].len(), expect);
+            for (v, m) in t.levels[k + 1].iter().zip(&t.masks[k]) {
+                prop_assert!((*v == PAD) == (*m == 0.0), "mask/PAD inconsistent");
+            }
+        }
+        // Padding parents never have real children.
+        for k in 1..t.levels.len() - 1 {
+            let f = fanouts[k];
+            for (i, &p) in t.levels[k].iter().enumerate() {
+                if p == PAD {
+                    for s in 0..f {
+                        prop_assert_eq!(t.levels[k + 1][i * f + s], PAD);
+                    }
+                }
+            }
+        }
+        svc.shutdown();
+        Ok(())
+    });
+}
+
+#[test]
+fn sampled_children_are_true_neighbors() {
+    prop_check("edge fidelity", 10, |rng| {
+        let g = arbitrary_powerlaw(rng);
+        let parts = rng.range(2, 5);
+        let ea = AdaDNE::default().partition(&g, parts, rng.next_u64());
+        let svc = SamplingService::launch(&g, &ea, rng.next_u64());
+        for weighted in [false, true] {
+            let mut client = svc.client(rng.next_u64());
+            let seeds = balanced_seeds(&svc, 8, rng);
+            let cfg = SampleConfig {
+                weighted,
+                ..Default::default()
+            };
+            let f = rng.range(2, 7);
+            let t = sample_tree(&mut client, &seeds, &[f], &cfg);
+            for (i, &p) in t.levels[0].iter().enumerate() {
+                for s in 0..f {
+                    let c = t.levels[1][i * f + s];
+                    if c != PAD {
+                        prop_assert!(
+                            g.out_neighbors(p).contains(&c),
+                            "sampled {c} not a neighbor of {p} (weighted={weighted})"
+                        );
+                    }
+                }
+            }
+        }
+        svc.shutdown();
+        Ok(())
+    });
+}
+
+#[test]
+fn full_neighborhood_when_fanout_exceeds_degree() {
+    prop_check("exhaustive small-degree", 8, |rng| {
+        // Fanout far above max degree: every real neighbor must appear.
+        let n = rng.range(100, 400);
+        let g = generator::erdos_renyi(n, n * 2, rng);
+        let ea = AdaDNE::default().partition(&g, 2, rng.next_u64());
+        let svc = SamplingService::launch(&g, &ea, rng.next_u64());
+        let mut client = svc.client(rng.next_u64());
+        let seeds: Vec<VId> = (0..16.min(n as u32)).collect();
+        let f = 64;
+        let t = sample_tree(&mut client, &seeds, &[f], &SampleConfig::default());
+        for (i, &p) in t.levels[0].iter().enumerate() {
+            let mut got: Vec<VId> = (0..f)
+                .map(|s| t.levels[1][i * f + s])
+                .filter(|&v| v != PAD)
+                .collect();
+            let mut want: Vec<VId> = g.out_neighbors(p).to_vec();
+            got.sort_unstable();
+            want.sort_unstable();
+            prop_assert_eq!(got, want);
+        }
+        svc.shutdown();
+        Ok(())
+    });
+}
+
+#[test]
+fn uniform_sampling_is_unbiased_across_partitions() {
+    // A hub whose neighbors straddle partitions must still sample each
+    // neighbor with equal probability (the r = f·local/global contract).
+    prop_check("uniform marginals", 3, |rng| {
+        let deg = 40usize;
+        let mut edges = Vec::new();
+        for i in 0..deg {
+            edges.push((0 as VId, (i + 1) as VId));
+        }
+        // Filler edges so partitions are non-trivial.
+        for i in 1..=deg {
+            edges.push((i as VId, ((i % deg) + 1) as VId));
+        }
+        let g = Graph::from_edges(deg + 1, &edges);
+        let ea = AdaDNE::default().partition(&g, 3, rng.next_u64());
+        let svc = SamplingService::launch(&g, &ea, rng.next_u64());
+        let mut client = svc.client(rng.next_u64());
+        let f = 8;
+        let trials = 3000;
+        let mut counts = vec![0usize; deg + 1];
+        for _ in 0..trials {
+            let t = sample_tree(&mut client, &[0], &[f], &SampleConfig::default());
+            for s in 0..f {
+                let c = t.levels[1][s];
+                if c != PAD {
+                    counts[c as usize] += 1;
+                }
+            }
+        }
+        let total: usize = counts.iter().sum();
+        let expected = total as f64 / deg as f64;
+        for (v, &c) in counts.iter().enumerate().skip(1) {
+            prop_assert!(
+                (c as f64 - expected).abs() < expected * 0.35,
+                "neighbor {v} sampled {c} times vs expected {expected:.0}"
+            );
+        }
+        svc.shutdown();
+        Ok(())
+    });
+}
+
+#[test]
+fn weighted_sampling_prefers_heavy_edges() {
+    prop_check("weight preference", 3, |rng| {
+        // Star with one heavy edge (weight 50) and 19 light ones (1).
+        let deg = 20;
+        let mut edges: Vec<(VId, VId, u8, f32)> = (0..deg)
+            .map(|i| (0, (i + 1) as VId, 0, 1.0f32))
+            .collect();
+        edges[0].3 = 50.0;
+        for i in 1..=deg {
+            edges.push((i as VId, ((i % deg) + 1) as VId, 0, 1.0));
+        }
+        let g = Graph::from_typed_edges(deg + 1, &edges);
+        let ea = AdaDNE::default().partition(&g, 2, rng.next_u64());
+        let svc = SamplingService::launch(&g, &ea, rng.next_u64());
+        let mut client = svc.client(rng.next_u64());
+        let cfg = SampleConfig {
+            weighted: true,
+            ..Default::default()
+        };
+        let trials = 800;
+        let mut heavy = 0usize;
+        for _ in 0..trials {
+            let t = sample_tree(&mut client, &[0], &[1], &cfg);
+            if t.levels[1][0] == 1 {
+                heavy += 1;
+            }
+        }
+        // P(heavy picked as the single sample) = 50/69 ≈ 0.725.
+        let frac = heavy as f64 / trials as f64;
+        prop_assert!(
+            (frac - 50.0 / 69.0).abs() < 0.08,
+            "heavy edge sampled at rate {frac:.3}, expected ~0.725"
+        );
+        svc.shutdown();
+        Ok(())
+    });
+}
+
+#[test]
+fn workload_spreads_under_replica_routing() {
+    prop_check("workload spread", 5, |rng| {
+        let g = arbitrary_powerlaw(rng);
+        let parts = 4;
+        let ea = AdaDNE::default().partition(&g, parts, rng.next_u64());
+        let svc = SamplingService::launch(&g, &ea, rng.next_u64());
+        let mut client = svc.client(rng.next_u64());
+        for _ in 0..10 {
+            let seeds = balanced_seeds(&svc, 16, rng);
+            sample_tree(&mut client, &seeds, &[10, 5], &SampleConfig::default());
+        }
+        let wl = svc.workload();
+        prop_assert!(wl.iter().all(|&w| w > 0), "an idle server: {wl:?}");
+        svc.shutdown();
+        Ok(())
+    });
+}

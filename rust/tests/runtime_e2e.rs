@@ -1,0 +1,223 @@
+//! Full-stack integration tests over the AOT artifacts: training
+//! convergence, eval parity, and the layerwise-vs-samplewise numerical
+//! equivalence that anchors the inference engine's correctness.
+//!
+//! All tests self-skip when `make artifacts` has not run.
+
+use std::sync::Arc;
+
+use glisp::coordinator::{Batcher, FeatureStore, Trainer, TrainerConfig};
+use glisp::graph::generator;
+use glisp::inference::{
+    init_decode_params, init_encoder_params, EngineConfig, LayerwiseEngine, SamplewiseRunner,
+};
+use glisp::partition::{AdaDNE, Partitioner};
+use glisp::runtime::Runtime;
+use glisp::sampling::SamplingService;
+use glisp::util::rng::Rng;
+
+#[test]
+fn training_converges_for_all_three_models() {
+    let Some(art) = glisp::test_artifacts_dir() else { return };
+    let mut rng = Rng::new(400);
+    let n = 3000;
+    let g = generator::labeled_community_graph(n, n * 12, 8, 0.9, &mut rng);
+    let labels = Arc::new(g.label.clone());
+    let ea = AdaDNE::default().partition(&g, 2, 1);
+    let svc = SamplingService::launch(&g, &ea, 1);
+    for model in ["gcn", "sage", "gat"] {
+        let features = FeatureStore::labeled(64, labels.clone(), 8, 0.6);
+        let lr = if model == "sage" { 0.1 } else { 0.4 };
+        let mut trainer = Trainer::new(
+            &art,
+            svc.client(2),
+            features,
+            TrainerConfig { model: model.into(), lr },
+            7,
+        )
+        .unwrap();
+        let seeds: Vec<u32> = (0..2000).collect();
+        let lab: Vec<u16> = seeds.iter().map(|&v| labels[v as usize]).collect();
+        let mut batcher = Batcher::new(seeds, lab, trainer.batch, 5);
+        let losses = trainer.train(&mut batcher, 25).unwrap();
+        let head: f32 = losses[..5].iter().sum::<f32>() / 5.0;
+        let tail: f32 = losses[20..].iter().sum::<f32>() / 5.0;
+        assert!(
+            tail < head,
+            "{model}: loss did not fall (head {head:.3}, tail {tail:.3})"
+        );
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn trained_model_beats_chance_on_held_out_vertices() {
+    let Some(art) = glisp::test_artifacts_dir() else { return };
+    let mut rng = Rng::new(401);
+    let n = 4000;
+    let classes = 8;
+    let g = generator::labeled_community_graph(n, n * 12, classes, 0.9, &mut rng);
+    let labels = Arc::new(g.label.clone());
+    let ea = AdaDNE::default().partition(&g, 2, 1);
+    let svc = SamplingService::launch(&g, &ea, 1);
+    let features = FeatureStore::labeled(64, labels.clone(), classes, 0.6);
+    let mut trainer = Trainer::new(
+        &art,
+        svc.client(2),
+        features,
+        TrainerConfig { model: "sage".into(), lr: 0.1 },
+        7,
+    )
+    .unwrap();
+    let split = 3200;
+    let seeds: Vec<u32> = (0..split).collect();
+    let lab: Vec<u16> = seeds.iter().map(|&v| labels[v as usize]).collect();
+    let mut batcher = Batcher::new(seeds, lab, trainer.batch, 5);
+    trainer.train(&mut batcher, 60).unwrap();
+    let test: Vec<u32> = (split..n as u32).collect();
+    let test_lab: Vec<u16> = test.iter().map(|&v| labels[v as usize]).collect();
+    let acc = trainer.evaluate(&test, &test_lab).unwrap();
+    assert!(
+        acc > 2.0 / classes as f64,
+        "accuracy {acc:.3} not above 2x chance"
+    );
+    svc.shutdown();
+}
+
+#[test]
+fn layerwise_equals_samplewise_on_full_neighborhoods() {
+    // When every vertex's degree <= fanout, sampling is exhaustive and the
+    // layerwise engine must reproduce samplewise embeddings EXACTLY (up to
+    // f32 tolerance): the two paths compute the same GNN.
+    let Some(art) = glisp::test_artifacts_dir() else { return };
+    let mut rng = Rng::new(402);
+    // Sparse ER graph: max out-degree stays < 10 (the artifact fanout).
+    let n = 1024;
+    let g = generator::erdos_renyi(n, 2 * n, &mut rng);
+    let max_deg = (0..n).map(|v| g.out_degree(v as u32)).max().unwrap();
+    assert!(max_deg <= 10, "test graph degree {max_deg} exceeds fanout");
+    let ea = AdaDNE::default().partition(&g, 2, 1);
+
+    let runtime = Runtime::load(&art).unwrap();
+    let enc = init_encoder_params(&runtime, 3).unwrap();
+    let dir = std::env::temp_dir().join("glisp_e2e_equiv");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut engine = LayerwiseEngine::new(
+        &g,
+        &ea,
+        runtime,
+        FeatureStore::unlabeled(64),
+        enc.clone(),
+        EngineConfig::default(),
+        dir,
+    )
+    .unwrap();
+    let (h_lw, _) = engine.run_vertex_embedding().unwrap();
+
+    let mut sw = SamplewiseRunner::new(
+        &g,
+        Runtime::load(&art).unwrap(),
+        FeatureStore::unlabeled(64),
+        enc,
+        5,
+    )
+    .unwrap();
+    let (h_sw, _) = sw.run_vertex_embedding().unwrap();
+
+    // h_lw is rank-indexed; h_sw is vertex-indexed.
+    let hid = sw.hidden();
+    let mut max_err = 0f32;
+    for v in 0..n {
+        let r = engine.rank[v] as usize;
+        for d in 0..hid {
+            let a = h_lw[r * hid + d];
+            let b = h_sw[v * hid + d];
+            max_err = max_err.max((a - b).abs());
+        }
+    }
+    assert!(
+        max_err < 1e-3,
+        "layerwise and samplewise embeddings diverge: max err {max_err}"
+    );
+}
+
+#[test]
+fn link_scores_agree_between_paths_on_full_neighborhoods() {
+    let Some(art) = glisp::test_artifacts_dir() else { return };
+    let mut rng = Rng::new(403);
+    let n = 512;
+    let g = generator::erdos_renyi(n, n, &mut rng);
+    if (0..n).map(|v| g.out_degree(v as u32)).max().unwrap() > 10 {
+        return; // exhaustiveness precondition not met for this seed
+    }
+    let ea = AdaDNE::default().partition(&g, 2, 1);
+    let runtime = Runtime::load(&art).unwrap();
+    let enc = init_encoder_params(&runtime, 3).unwrap();
+    let dir = std::env::temp_dir().join("glisp_e2e_link");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut engine = LayerwiseEngine::new(
+        &g, &ea, runtime,
+        FeatureStore::unlabeled(64),
+        enc.clone(),
+        EngineConfig::default(),
+        dir,
+    )
+    .unwrap();
+    let (h, _) = engine.run_vertex_embedding().unwrap();
+    let dec = init_decode_params(&engine.runtime, 9).unwrap();
+    let edges: Vec<(u32, u32)> = (0..n as u32)
+        .filter(|&u| !g.out_neighbors(u).is_empty())
+        .take(100)
+        .map(|u| (u, g.out_neighbors(u)[0]))
+        .collect();
+    let (s_lw, _) = engine.run_link_prediction(&h, &edges, &dec).unwrap();
+
+    let mut sw = SamplewiseRunner::new(
+        &g,
+        Runtime::load(&art).unwrap(),
+        FeatureStore::unlabeled(64),
+        enc,
+        5,
+    )
+    .unwrap();
+    let (s_sw, _) = sw.run_link_prediction(&edges, &dec).unwrap();
+    for (i, (a, b)) in s_lw.iter().zip(&s_sw).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-3,
+            "edge {i}: layerwise {a} vs samplewise {b}"
+        );
+    }
+}
+
+#[test]
+fn manifest_geometry_matches_trainer_expectations() {
+    let Some(art) = glisp::test_artifacts_dir() else { return };
+    let runtime = Runtime::load(&art).unwrap();
+    for model in ["gcn", "sage", "gat"] {
+        let spec = runtime.spec(&format!("{model}_train")).unwrap();
+        let b = spec.meta_usize("batch").unwrap();
+        let fanouts = spec.meta_usizes("fanouts").unwrap();
+        let n_params = spec.meta_usize("n_params").unwrap();
+        // level sizes
+        let mut sizes = vec![b];
+        for f in &fanouts {
+            sizes.push(sizes.last().unwrap() * f);
+        }
+        // inputs: params + levels + masks + labels + lr
+        assert_eq!(
+            spec.inputs.len(),
+            n_params + sizes.len() + fanouts.len() + 2,
+            "{model} manifest arity"
+        );
+        // level feature shapes
+        let din = spec.meta_usize("din").unwrap();
+        for (k, &sz) in sizes.iter().enumerate() {
+            assert_eq!(spec.inputs[n_params + k].shape, vec![sz, din]);
+        }
+        // outputs: loss + params, shapes mirrored
+        assert_eq!(spec.outputs.len(), 1 + n_params);
+        for i in 0..n_params {
+            assert_eq!(spec.outputs[1 + i].shape, spec.inputs[i].shape);
+        }
+    }
+}
