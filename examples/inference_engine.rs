@@ -2,6 +2,9 @@
 //! prediction, layerwise vs naive samplewise (paper Fig. 13), with the
 //! two-level cache and PDS reordering active.
 //!
+//! Runs hermetically on the pure-Rust reference backend when `artifacts/`
+//! is absent; build artifacts + enable `--features pjrt` for PJRT/XLA.
+//!
 //! Run: `cargo run --release --example inference_engine [-- --n 8000]`
 
 use glisp::cli::Args;
@@ -28,6 +31,7 @@ fn main() -> anyhow::Result<()> {
     let work = std::env::temp_dir().join("glisp_infer_example");
     let _ = std::fs::remove_dir_all(&work);
     let runtime = Runtime::load(Runtime::default_dir())?;
+    println!("executor backend: {}", runtime.backend_name());
     let enc = init_encoder_params(&runtime, 3)?;
 
     // --- layerwise (the paper's engine) ---

@@ -2,9 +2,11 @@
 //!
 //! Generates a small power-law graph, partitions it with AdaDNE, launches
 //! the Gather-Apply sampling service, trains a 3-layer GraphSAGE for 20
-//! steps through the AOT PJRT artifacts, and prints the loss.
+//! steps, and prints the loss. Runs out of the box on the pure-Rust
+//! reference backend; after `make artifacts`, build with `--features
+//! pjrt` to execute the AOT HLO artifacts on PJRT instead.
 //!
-//! Run: `make artifacts && cargo run --release --example quickstart`
+//! Run: `cargo run --release --example quickstart`
 
 use std::sync::Arc;
 

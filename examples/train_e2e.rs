@@ -6,6 +6,9 @@
 //! sampling servers → tree-format batches → AOT HLO train step on PJRT —
 //! logging the loss curve and final test accuracy.
 //!
+//! Runs hermetically on the pure-Rust reference backend when `artifacts/`
+//! is absent; build artifacts + enable `--features pjrt` for PJRT/XLA.
+//!
 //! Run: `cargo run --release --example train_e2e [-- --steps 300 --parts 4]`
 
 use std::sync::Arc;
@@ -55,8 +58,11 @@ fn main() -> anyhow::Result<()> {
         7,
     )?;
     println!(
-        "[model] GraphSAGE-3L hidden=128: {} parameters, batch={}, fanouts={:?}",
-        trainer.params.num_parameters(), trainer.batch, trainer.fanouts
+        "[model] GraphSAGE-3L hidden=128: {} parameters, batch={}, fanouts={:?} ({} backend)",
+        trainer.params.num_parameters(),
+        trainer.batch,
+        trainer.fanouts,
+        trainer.runtime.backend_name()
     );
 
     // 80/20 split.

@@ -9,6 +9,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import ref

@@ -15,10 +15,7 @@ use glisp::util::rng::Rng;
 use glisp::util::timer::Timer;
 
 fn main() -> anyhow::Result<()> {
-    let Some(art) = glisp::test_artifacts_dir() else {
-        println!("fig11_train_speed: artifacts not built; skipping");
-        return Ok(());
-    };
+    let art = glisp::test_artifacts_dir();
     println!("== Fig. 11 — end-to-end training speed (steps/s) ==");
     let steps = std::env::var("GLISP_BENCH_STEPS")
         .ok()

@@ -20,10 +20,7 @@ use glisp::util::rng::Rng;
 use glisp::util::timer::Timer;
 
 fn main() -> anyhow::Result<()> {
-    let Some(art) = glisp::test_artifacts_dir() else {
-        println!("fig12_scalability: artifacts not built; skipping");
-        return Ok(());
-    };
+    let art = glisp::test_artifacts_dir();
     println!("== Fig. 12 — convergence + scaling with trainer count ==");
     let rounds = std::env::var("GLISP_BENCH_STEPS")
         .ok()

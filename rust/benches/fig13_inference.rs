@@ -15,10 +15,7 @@ use glisp::util::rng::Rng;
 use glisp::util::timer::Timer;
 
 fn main() -> anyhow::Result<()> {
-    let Some(art) = glisp::test_artifacts_dir() else {
-        println!("fig13_inference: artifacts not built; skipping");
-        return Ok(());
-    };
+    let art = glisp::test_artifacts_dir();
     println!("== Fig. 13 — layerwise vs samplewise full-graph inference ==");
     let n = std::env::var("GLISP_BENCH_N")
         .ok()

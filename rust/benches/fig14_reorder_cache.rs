@@ -15,10 +15,7 @@ use glisp::runtime::Runtime;
 use glisp::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
-    let Some(art) = glisp::test_artifacts_dir() else {
-        println!("fig14_reorder_cache: artifacts not built; skipping");
-        return Ok(());
-    };
+    let art = glisp::test_artifacts_dir();
     println!("== Fig. 14 — caching-system speedup & chunk reads per reorder ==");
     let n = std::env::var("GLISP_BENCH_N")
         .ok()

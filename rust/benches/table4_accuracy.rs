@@ -15,10 +15,7 @@ use glisp::sampling::SamplingService;
 use glisp::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
-    let Some(art) = glisp::test_artifacts_dir() else {
-        println!("table4_accuracy: artifacts not built (run `make artifacts`); skipping");
-        return Ok(());
-    };
+    let art = glisp::test_artifacts_dir();
     println!("== Table IV — test accuracy via the full stack ==");
     let steps = std::env::var("GLISP_BENCH_STEPS")
         .ok()

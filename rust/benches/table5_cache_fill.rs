@@ -14,10 +14,7 @@ use glisp::runtime::Runtime;
 use glisp::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
-    let Some(art) = glisp::test_artifacts_dir() else {
-        println!("table5_cache_fill: artifacts not built; skipping");
-        return Ok(());
-    };
+    let art = glisp::test_artifacts_dir();
     println!("== Table V — static cache fill vs model inference ==");
     let n = std::env::var("GLISP_BENCH_N")
         .ok()

@@ -1,8 +1,9 @@
 //! Model parameter store: the host-side copy of the artifact's parameter
-//! tensors. The AOT train step returns updated parameters as outputs
-//! (buffer donation is not exposed by the crate API), so the store simply
-//! swaps in the returned tensors each step; for the data-parallel path it
-//! averages gradients and applies SGD host-side.
+//! tensors. Train-step artifacts return updated parameters as outputs on
+//! every backend (buffer donation is not part of the `ExecutorBackend`
+//! contract), so the store simply swaps in the returned tensors each
+//! step; for the data-parallel path it averages gradients and applies
+//! SGD host-side.
 
 use anyhow::Result;
 

@@ -1,8 +1,9 @@
 //! The training coordinator: glue between the sampling service (L3), the
-//! feature store, and the AOT train-step artifacts (L2/L1). One
-//! `Trainer` = one logical GPU worker of the paper's Fig. 1; the
-//! data-parallel scalability experiment (Fig. 12) runs several in
-//! synchronous gradient-averaging mode.
+//! feature store, and the train-step artifacts (L2/L1) executed through
+//! the backend-agnostic [`Runtime`] (reference backend by default, PJRT
+//! behind the `pjrt` feature). One `Trainer` = one logical GPU worker of
+//! the paper's Fig. 1; the data-parallel scalability experiment (Fig. 12)
+//! runs several in synchronous gradient-averaging mode.
 
 use anyhow::{Context, Result};
 
@@ -233,8 +234,8 @@ mod tests {
     use crate::sampling::service::SamplingService;
     use std::sync::Arc;
 
-    fn stack() -> Option<(SamplingService, Trainer, Batcher)> {
-        let dir = crate::test_artifacts_dir()?;
+    fn stack() -> (SamplingService, Trainer, Batcher) {
+        let dir = crate::test_artifacts_dir();
         let mut rng = Rng::new(210);
         let g = generator::labeled_community_graph(2000, 24_000, 8, 0.9, &mut rng);
         let labels = Arc::new(g.label.clone());
@@ -255,12 +256,12 @@ mod tests {
         let seeds: Vec<VId> = (0..1000).collect();
         let lab: Vec<u16> = seeds.iter().map(|&v| labels[v as usize]).collect();
         let batcher = Batcher::new(seeds, lab, trainer.batch, 5);
-        Some((svc, trainer, batcher))
+        (svc, trainer, batcher)
     }
 
     #[test]
     fn train_step_runs_and_updates_params() {
-        let Some((svc, mut t, mut b)) = stack() else { return };
+        let (svc, mut t, mut b) = stack();
         let before = t.params.tensors[0].as_f32().to_vec();
         let (seeds, labels) = b.next_batch();
         let loss = t.train_step(&seeds, &labels).unwrap();
@@ -271,7 +272,7 @@ mod tests {
 
     #[test]
     fn loss_decreases_over_training() {
-        let Some((svc, mut t, mut b)) = stack() else { return };
+        let (svc, mut t, mut b) = stack();
         let losses = t.train(&mut b, 30).unwrap();
         let head: f32 = losses[..5].iter().sum::<f32>() / 5.0;
         let tail: f32 = losses[losses.len() - 5..].iter().sum::<f32>() / 5.0;
@@ -284,7 +285,7 @@ mod tests {
 
     #[test]
     fn grad_step_matches_train_step_arity() {
-        let Some((svc, mut t, mut b)) = stack() else { return };
+        let (svc, mut t, mut b) = stack();
         let (seeds, labels) = b.next_batch();
         let (loss, grads) = t.grad_step(&seeds, &labels).unwrap();
         assert!(loss.is_finite());

@@ -427,18 +427,17 @@ mod tests {
     use crate::graph::generator;
     use crate::partition::{AdaDNE, Partitioner};
 
-    fn setup(name: &str) -> Option<(Graph, EdgeAssignment, PathBuf)> {
-        let _ = crate::test_artifacts_dir()?;
+    fn setup(name: &str) -> (Graph, EdgeAssignment, PathBuf) {
         let mut rng = Rng::new(300);
         let g = generator::chung_lu(2000, 14_000, 2.1, &mut rng);
         let ea = AdaDNE::default().partition(&g, 2, 0);
         let dir = std::env::temp_dir().join(format!("glisp_eng_{name}"));
         let _ = std::fs::remove_dir_all(&dir);
-        Some((g, ea, dir))
+        (g, ea, dir)
     }
 
     fn engine(g: &Graph, ea: &EdgeAssignment, dir: PathBuf) -> LayerwiseEngine {
-        let art = crate::test_artifacts_dir().unwrap();
+        let art = crate::test_artifacts_dir();
         let runtime = Runtime::load(&art).unwrap();
         let enc = init_encoder_params(&runtime, 3).unwrap();
         LayerwiseEngine::new(
@@ -455,7 +454,7 @@ mod tests {
 
     #[test]
     fn vertex_embedding_covers_graph_once_per_layer() {
-        let Some((g, ea, dir)) = setup("cover") else { return };
+        let (g, ea, dir) = setup("cover");
         let mut eng = engine(&g, &ea, dir);
         let (h, report) = eng.run_vertex_embedding().unwrap();
         assert_eq!(h.len(), g.n * 128);
@@ -467,7 +466,7 @@ mod tests {
 
     #[test]
     fn static_fill_guarantees_no_remote_reads() {
-        let Some((g, ea, dir)) = setup("noremote") else { return };
+        let (g, ea, dir) = setup("noremote");
         let mut eng = engine(&g, &ea, dir.clone());
         let (_, report) = eng.run_vertex_embedding().unwrap();
         // All reads served from static or dynamic tiers: virtual cost must
@@ -479,7 +478,7 @@ mod tests {
 
     #[test]
     fn link_prediction_scores_in_range() {
-        let Some((g, ea, dir)) = setup("link") else { return };
+        let (g, ea, dir) = setup("link");
         let mut eng = engine(&g, &ea, dir);
         let (h, _) = eng.run_vertex_embedding().unwrap();
         let dec = init_decode_params(&eng.runtime, 9).unwrap();
@@ -495,11 +494,11 @@ mod tests {
 
     #[test]
     fn pds_reads_fewer_chunks_than_scrambled_order() {
-        let Some((g, ea, dir)) = setup("pds") else { return };
+        let (g, ea, dir) = setup("pds");
         let mut pds = engine(&g, &ea, dir.clone());
         let (_, rep_pds) = pds.run_vertex_embedding().unwrap();
 
-        let art = crate::test_artifacts_dir().unwrap();
+        let art = crate::test_artifacts_dir();
         let runtime = Runtime::load(&art).unwrap();
         let enc = init_encoder_params(&runtime, 3).unwrap();
         let mut ns = LayerwiseEngine::new(

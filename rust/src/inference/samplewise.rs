@@ -186,18 +186,18 @@ mod tests {
     use crate::graph::generator;
     use crate::inference::engine::{init_decode_params, init_encoder_params};
 
-    fn runner(g: &Graph) -> Option<SamplewiseRunner<'_>> {
-        let art = crate::test_artifacts_dir()?;
-        let runtime = Runtime::load(&art).ok()?;
+    fn runner(g: &Graph) -> SamplewiseRunner<'_> {
+        let art = crate::test_artifacts_dir();
+        let runtime = Runtime::load(&art).unwrap();
         let enc = init_encoder_params(&runtime, 3).unwrap();
-        Some(SamplewiseRunner::new(g, runtime, FeatureStore::unlabeled(64), enc, 5).unwrap())
+        SamplewiseRunner::new(g, runtime, FeatureStore::unlabeled(64), enc, 5).unwrap()
     }
 
     #[test]
     fn embeds_all_vertices() {
         let mut rng = Rng::new(310);
         let g = generator::chung_lu(300, 2400, 2.1, &mut rng);
-        let Some(mut r) = runner(&g) else { return };
+        let mut r = runner(&g);
         let (h, report) = r.run_vertex_embedding().unwrap();
         assert_eq!(h.len(), 300 * r.hidden());
         assert!(h.iter().all(|x| x.is_finite()));
@@ -210,7 +210,7 @@ mod tests {
     fn link_prediction_doubles_tree_work() {
         let mut rng = Rng::new(311);
         let g = generator::chung_lu(300, 2400, 2.1, &mut rng);
-        let Some(mut r) = runner(&g) else { return };
+        let mut r = runner(&g);
         let dec = init_decode_params(&r.runtime, 9).unwrap();
         let edges: Vec<(VId, VId)> = (0..64u32)
             .filter(|&u| !g.out_neighbors(u).is_empty())

@@ -1,0 +1,34 @@
+//! The executor-backend seam. `Runtime` — and through it the coordinator,
+//! the inference engine and every bench — talks to tensor execution only
+//! via [`ExecutorBackend`], so the graph-systems layer is decoupled from
+//! any single tensor runtime (the seam industrial stacks like AGL and GiGL
+//! cut for the same reason).
+//!
+//! Two backends ship today: the hermetic pure-Rust
+//! [`reference`](crate::runtime::reference) interpreter (always available,
+//! zero native dependencies) and the PJRT/XLA artifact executor behind the
+//! non-default `pjrt` cargo feature. Future GPU/remote executors plug in
+//! here without touching the callers.
+
+use anyhow::Result;
+
+use crate::runtime::manifest::ArtifactSpec;
+use crate::runtime::tensor::HostTensor;
+
+pub trait ExecutorBackend {
+    /// Short backend id for logs and reports ("reference" | "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// Compile or otherwise warm an artifact ahead of its first execution.
+    /// Optional; the default is a no-op (the reference backend has nothing
+    /// to compile).
+    fn prepare(&mut self, _spec: &ArtifactSpec) -> Result<()> {
+        Ok(())
+    }
+
+    /// Execute one artifact. Inputs arrive pre-validated against the
+    /// manifest by [`Runtime::execute`](crate::runtime::Runtime::execute);
+    /// implementations must return outputs matching the spec's arity, in
+    /// manifest order.
+    fn execute(&mut self, spec: &ArtifactSpec, inputs: &[HostTensor]) -> Result<Vec<HostTensor>>;
+}

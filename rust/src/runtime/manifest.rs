@@ -132,6 +132,219 @@ impl Manifest {
             .get(name)
             .with_context(|| format!("artifact '{name}' not in manifest"))
     }
+
+    /// The built-in manifest of the pure-Rust reference backend: the same
+    /// artifact set, input order, shapes and metadata that
+    /// python/compile/aot.py emits at its default configuration
+    /// (din=64, hidden=128, classes=8, batch=32, fanouts=[10,5,5];
+    /// 2-layer inference encoder with fanout 10, chunk 256). Used when
+    /// `artifacts/manifest.json` has not been built, so the whole stack
+    /// stays runnable with zero native dependencies.
+    pub fn reference_default() -> Manifest {
+        let mut artifacts = BTreeMap::new();
+        let mut add = |spec: ArtifactSpec| {
+            artifacts.insert(spec.name.clone(), spec);
+        };
+
+        let fanouts_json = format!(
+            "[{}]",
+            REF_FANOUTS.map(|f| f.to_string()).join(",")
+        );
+        for kind in ["sage", "gcn", "gat"] {
+            let params = ref_param_specs(kind);
+            let n_params = params.len();
+            let (xs, masks) = ref_level_specs(REF_BATCH, &REF_FANOUTS, REF_DIN);
+            let meta = Json::parse(&format!(
+                r#"{{"kind":"{kind}","din":{REF_DIN},"hidden":{REF_HIDDEN},"classes":{REF_CLASSES},"batch":{REF_BATCH},"fanouts":{fanouts_json},"n_params":{n_params}}}"#
+            ))
+            .expect("builtin meta");
+
+            let mut train_in = params.clone();
+            train_in.extend(xs.iter().cloned());
+            train_in.extend(masks.iter().cloned());
+            train_in.push(ispec("labels", &[REF_BATCH]));
+            train_in.push(fspec("lr", &[1]));
+            let mut train_out = vec![fspec("loss", &[1])];
+            train_out.extend(params.iter().cloned());
+            add(artifact(format!("{kind}_train"), train_in, train_out, meta.clone()));
+
+            let mut eval_in = params.clone();
+            eval_in.extend(xs.iter().cloned());
+            eval_in.extend(masks.iter().cloned());
+            let eval_out = vec![fspec("logits", &[REF_BATCH, REF_CLASSES])];
+            add(artifact(format!("{kind}_eval"), eval_in, eval_out, meta.clone()));
+
+            if kind == "sage" {
+                let mut grad_in = params.clone();
+                grad_in.extend(xs.iter().cloned());
+                grad_in.extend(masks.iter().cloned());
+                grad_in.push(ispec("labels", &[REF_BATCH]));
+                let mut grad_out = vec![fspec("loss", &[1])];
+                grad_out.extend(params.iter().cloned());
+                add(artifact("sage_grad".to_string(), grad_in, grad_out, meta));
+            }
+        }
+
+        // Layer slices of the 2-layer SAGE inference encoder.
+        for (layer, (din, dout, relu)) in [
+            (REF_DIN, REF_HIDDEN, true),
+            (REF_HIDDEN, REF_HIDDEN, false),
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let inputs = vec![
+                fspec("h_self", &[REF_CHUNK, din]),
+                fspec("h_neigh", &[REF_CHUNK, REF_ENC_FANOUT, din]),
+                fspec("mask", &[REF_CHUNK, REF_ENC_FANOUT]),
+                fspec("w_self", &[din, dout]),
+                fspec("w_neigh", &[din, dout]),
+                fspec("b", &[dout]),
+            ];
+            let outputs = vec![fspec("h_out", &[REF_CHUNK, dout])];
+            let meta = Json::parse(&format!(
+                r#"{{"layer":{layer},"relu":{relu},"chunk":{REF_CHUNK},"fanout":{REF_ENC_FANOUT},"din":{din},"dout":{dout}}}"#
+            ))
+            .expect("builtin meta");
+            add(artifact(format!("sage_infer_layer{layer}"), inputs, outputs, meta));
+        }
+
+        // Samplewise baseline: full 2-hop SAGE tree forward to embeddings.
+        {
+            let mut inputs = Vec::new();
+            for (j, din) in [(0usize, REF_DIN), (1, REF_HIDDEN)] {
+                inputs.push(fspec(&format!("l{j}_w_self"), &[din, REF_HIDDEN]));
+                inputs.push(fspec(&format!("l{j}_w_neigh"), &[din, REF_HIDDEN]));
+                inputs.push(fspec(&format!("l{j}_b"), &[REF_HIDDEN]));
+            }
+            let fanouts = [REF_ENC_FANOUT, REF_ENC_FANOUT];
+            let (xs, masks) = ref_level_specs(REF_EMBED_BATCH, &fanouts, REF_DIN);
+            inputs.extend(xs);
+            inputs.extend(masks);
+            let outputs = vec![fspec("emb", &[REF_EMBED_BATCH, REF_HIDDEN])];
+            let meta = Json::parse(&format!(
+                r#"{{"batch":{REF_EMBED_BATCH},"fanouts":[{REF_ENC_FANOUT},{REF_ENC_FANOUT}],"din":{REF_DIN},"hidden":{REF_HIDDEN}}}"#
+            ))
+            .expect("builtin meta");
+            add(artifact("sage_embed".to_string(), inputs, outputs, meta));
+        }
+
+        // Link-prediction decoder over cached endpoint embeddings.
+        {
+            let h = REF_HIDDEN;
+            let inputs = vec![
+                fspec("emb_u", &[REF_DECODE_BATCH, h]),
+                fspec("emb_v", &[REF_DECODE_BATCH, h]),
+                fspec("w1", &[2 * h, h]),
+                fspec("b1", &[h]),
+                fspec("w2", &[h, 1]),
+                fspec("b2", &[1]),
+            ];
+            let outputs = vec![fspec("scores", &[REF_DECODE_BATCH])];
+            let meta = Json::parse(&format!(
+                r#"{{"batch":{REF_DECODE_BATCH},"hidden":{h}}}"#
+            ))
+            .expect("builtin meta");
+            add(artifact("link_decode".to_string(), inputs, outputs, meta));
+        }
+
+        Manifest { artifacts }
+    }
+}
+
+// Geometry constants of the built-in reference manifest (mirror the
+// TRAIN_CFG / ENC dicts in python/compile/aot.py).
+const REF_DIN: usize = 64;
+const REF_HIDDEN: usize = 128;
+const REF_CLASSES: usize = 8;
+const REF_BATCH: usize = 32;
+const REF_FANOUTS: [usize; 3] = [10, 5, 5];
+const REF_HEADS: usize = 4;
+const REF_ENC_FANOUT: usize = 10;
+const REF_CHUNK: usize = 256;
+const REF_EMBED_BATCH: usize = 64;
+const REF_DECODE_BATCH: usize = 256;
+
+fn fspec(name: &str, shape: &[usize]) -> TensorSpec {
+    TensorSpec {
+        name: name.to_string(),
+        shape: shape.to_vec(),
+        dtype: DType::F32,
+    }
+}
+
+fn ispec(name: &str, shape: &[usize]) -> TensorSpec {
+    TensorSpec {
+        name: name.to_string(),
+        shape: shape.to_vec(),
+        dtype: DType::I32,
+    }
+}
+
+fn artifact(
+    name: String,
+    inputs: Vec<TensorSpec>,
+    outputs: Vec<TensorSpec>,
+    meta: Json,
+) -> ArtifactSpec {
+    let file = format!("{name}.hlo.txt");
+    ArtifactSpec {
+        name,
+        file,
+        inputs,
+        outputs,
+        meta,
+    }
+}
+
+/// Flat parameter spec list for one model kind at the reference training
+/// geometry, in artifact input order (mirrors model.param_specs).
+fn ref_param_specs(kind: &str) -> Vec<TensorSpec> {
+    let mut specs = Vec::new();
+    let mut d_in = REF_DIN;
+    for j in 0..REF_FANOUTS.len() {
+        let d_out = REF_HIDDEN;
+        match kind {
+            "sage" => {
+                specs.push(fspec(&format!("l{j}_w_self"), &[d_in, d_out]));
+                specs.push(fspec(&format!("l{j}_w_neigh"), &[d_in, d_out]));
+                specs.push(fspec(&format!("l{j}_b"), &[d_out]));
+            }
+            "gcn" => {
+                specs.push(fspec(&format!("l{j}_w"), &[d_in, d_out]));
+                specs.push(fspec(&format!("l{j}_b"), &[d_out]));
+            }
+            "gat" => {
+                let hd = d_out / REF_HEADS;
+                specs.push(fspec(&format!("l{j}_w"), &[d_in, d_out]));
+                specs.push(fspec(&format!("l{j}_a_self"), &[REF_HEADS, hd]));
+                specs.push(fspec(&format!("l{j}_a_neigh"), &[REF_HEADS, hd]));
+                specs.push(fspec(&format!("l{j}_b"), &[d_out]));
+            }
+            other => unreachable!("unknown builtin model kind {other}"),
+        }
+        d_in = d_out;
+    }
+    specs.push(fspec("head_w", &[REF_HIDDEN, REF_CLASSES]));
+    specs.push(fspec("head_b", &[REF_CLASSES]));
+    specs
+}
+
+/// Level-feature + mask specs for a tree sample of the given geometry.
+fn ref_level_specs(batch: usize, fanouts: &[usize], din: usize) -> (Vec<TensorSpec>, Vec<TensorSpec>) {
+    let mut sizes = vec![batch];
+    for &f in fanouts {
+        sizes.push(sizes.last().unwrap() * f);
+    }
+    let xs = sizes
+        .iter()
+        .enumerate()
+        .map(|(k, &n)| fspec(&format!("x{k}"), &[n, din]))
+        .collect();
+    let masks = (0..fanouts.len())
+        .map(|k| fspec(&format!("mask{}", k + 1), &[sizes[k + 1]]))
+        .collect();
+    (xs, masks)
 }
 
 #[cfg(test)]
@@ -162,5 +375,41 @@ mod tests {
     fn missing_artifact_errors() {
         let m = Manifest::parse(SAMPLE).unwrap();
         assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn reference_default_mirrors_aot_geometry() {
+        let m = Manifest::reference_default();
+        for kind in ["gcn", "sage", "gat"] {
+            let t = m.get(&format!("{kind}_train")).unwrap();
+            let n_params = t.meta_usize("n_params").unwrap();
+            // params + 4 level features + 3 masks + labels + lr
+            assert_eq!(t.inputs.len(), n_params + 4 + 3 + 2, "{kind} arity");
+            assert_eq!(t.outputs.len(), 1 + n_params, "{kind} outputs");
+            for i in 0..n_params {
+                assert_eq!(t.outputs[1 + i].shape, t.inputs[i].shape);
+            }
+            assert_eq!(t.inputs[n_params].shape, vec![32, 64]);
+            assert_eq!(t.inputs[n_params + 3].shape, vec![8000, 64]);
+            assert_eq!(t.meta_usizes("fanouts"), Some(vec![10, 5, 5]));
+            let e = m.get(&format!("{kind}_eval")).unwrap();
+            assert_eq!(e.inputs.len(), n_params + 4 + 3);
+            assert_eq!(e.outputs[0].shape, vec![32, 8]);
+        }
+        assert_eq!(
+            m.get("sage_train").unwrap().meta_usize("n_params"),
+            Some(11)
+        );
+        assert_eq!(m.get("gcn_train").unwrap().meta_usize("n_params"), Some(8));
+        assert_eq!(m.get("gat_train").unwrap().meta_usize("n_params"), Some(14));
+        let grad = m.get("sage_grad").unwrap();
+        assert_eq!(grad.inputs.len(), 11 + 4 + 3 + 1);
+        let l0 = m.get("sage_infer_layer0").unwrap();
+        assert_eq!(l0.meta_usize("chunk"), Some(256));
+        assert_eq!(l0.inputs[1].shape, vec![256, 10, 64]);
+        let emb = m.get("sage_embed").unwrap();
+        assert_eq!(emb.inputs.len(), 6 + 3 + 2);
+        assert_eq!(emb.outputs[0].shape, vec![64, 128]);
+        assert_eq!(m.get("link_decode").unwrap().outputs[0].shape, vec![256]);
     }
 }

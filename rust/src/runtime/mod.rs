@@ -1,10 +1,19 @@
-//! Runtime layer: the PJRT bridge between the Rust coordinator and the AOT
-//! artifacts (HLO text lowered once from JAX + Pallas by `make artifacts`).
+//! Runtime layer: manifest-validated artifact execution behind the
+//! [`ExecutorBackend`] seam. The pure-Rust [`reference`] backend is the
+//! hermetic default; the PJRT/XLA executor of the AOT artifacts (HLO text
+//! lowered once from JAX + Pallas by `make artifacts`) lives behind the
+//! non-default `pjrt` cargo feature.
 
+pub mod backend;
 pub mod executor;
 pub mod manifest;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+pub mod reference;
 pub mod tensor;
 
+pub use backend::ExecutorBackend;
 pub use executor::Runtime;
 pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
+pub use reference::ReferenceBackend;
 pub use tensor::{DType, HostTensor};

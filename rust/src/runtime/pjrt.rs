@@ -1,0 +1,70 @@
+//! PJRT/XLA backend (`pjrt` cargo feature): loads `artifacts/*.hlo.txt`
+//! (AOT-lowered by python/compile/aot.py), compiles each once on the CPU
+//! PJRT client, and executes them from the L3 hot paths. Adapted from
+//! /opt/xla-example/load_hlo — HLO *text* is the interchange format (see
+//! aot.py's docstring for why).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::runtime::backend::ExecutorBackend;
+use crate::runtime::manifest::ArtifactSpec;
+use crate::runtime::tensor::HostTensor;
+
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtBackend {
+    /// Create the PJRT CPU client. Artifacts compile lazily on first use
+    /// and are cached for the process lifetime.
+    pub fn new(dir: impl AsRef<Path>) -> Result<PjrtBackend> {
+        let client = xla::PjRtClient::cpu().context("PJRT cpu client")?;
+        Ok(PjrtBackend {
+            client,
+            dir: dir.as_ref().to_path_buf(),
+            executables: HashMap::new(),
+        })
+    }
+}
+
+impl ExecutorBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn prepare(&mut self, spec: &ArtifactSpec) -> Result<()> {
+        if self.executables.contains_key(&spec.name) {
+            return Ok(());
+        }
+        let path = self.dir.join(&spec.file);
+        let proto =
+            xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+                .with_context(|| format!("parsing {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", spec.name))?;
+        self.executables.insert(spec.name.clone(), exe);
+        Ok(())
+    }
+
+    fn execute(&mut self, spec: &ArtifactSpec, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.prepare(spec)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let exe = self.executables.get(&spec.name).unwrap();
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: the result is an n-tuple;
+        // Runtime::execute validates the arity against the manifest.
+        let parts = result.to_tuple()?;
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+}

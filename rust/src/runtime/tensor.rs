@@ -1,5 +1,6 @@
-//! Host-side tensors and their conversion to/from `xla::Literal` — the only
-//! data interchange between the Rust coordinator and the AOT artifacts.
+//! Host-side tensors — the only data interchange between the Rust
+//! coordinator and the executor backends. With the `pjrt` feature they
+//! additionally convert to/from `xla::Literal`.
 
 use anyhow::{bail, Result};
 
@@ -94,6 +95,7 @@ impl HostTensor {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
         let lit = match self {
@@ -103,6 +105,7 @@ impl HostTensor {
         Ok(lit.reshape(&dims)?)
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
         let shape = lit.array_shape()?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
@@ -124,6 +127,7 @@ impl HostTensor {
 mod tests {
     use super::*;
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_round_trip_f32() {
         let t = HostTensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
@@ -133,12 +137,26 @@ mod tests {
         assert_eq!(back.as_f32(), t.as_f32());
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_round_trip_i32() {
         let t = HostTensor::i32(vec![4], vec![7, -1, 0, 3]);
         let l = t.to_literal().unwrap();
         let back = HostTensor::from_literal(&l).unwrap();
         assert_eq!(back.as_i32(), t.as_i32());
+    }
+
+    #[test]
+    fn accessors_and_shapes() {
+        let t = HostTensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.dtype(), DType::F32);
+        assert_eq!(t.len(), 6);
+        assert!(!t.is_empty());
+        assert_eq!(t.clone().into_f32(), vec![1., 2., 3., 4., 5., 6.]);
+        let z = HostTensor::zeros(&[4]);
+        assert!(z.as_f32().iter().all(|&x| x == 0.0));
+        assert_eq!(HostTensor::scalar1(0.5).as_f32(), &[0.5]);
     }
 
     #[test]

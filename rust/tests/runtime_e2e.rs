@@ -1,8 +1,10 @@
-//! Full-stack integration tests over the AOT artifacts: training
-//! convergence, eval parity, and the layerwise-vs-samplewise numerical
-//! equivalence that anchors the inference engine's correctness.
+//! Full-stack integration tests: training convergence, eval parity, and
+//! the layerwise-vs-samplewise numerical equivalence that anchors the
+//! inference engine's correctness.
 //!
-//! All tests self-skip when `make artifacts` has not run.
+//! The tests run against whatever backend `Runtime::load` selects — the
+//! hermetic reference backend when `make artifacts` has not run, PJRT/XLA
+//! over the AOT artifacts when it has (with the `pjrt` feature).
 
 use std::sync::Arc;
 
@@ -18,7 +20,7 @@ use glisp::util::rng::Rng;
 
 #[test]
 fn training_converges_for_all_three_models() {
-    let Some(art) = glisp::test_artifacts_dir() else { return };
+    let art = glisp::test_artifacts_dir();
     let mut rng = Rng::new(400);
     let n = 3000;
     let g = generator::labeled_community_graph(n, n * 12, 8, 0.9, &mut rng);
@@ -52,7 +54,7 @@ fn training_converges_for_all_three_models() {
 
 #[test]
 fn trained_model_beats_chance_on_held_out_vertices() {
-    let Some(art) = glisp::test_artifacts_dir() else { return };
+    let art = glisp::test_artifacts_dir();
     let mut rng = Rng::new(401);
     let n = 4000;
     let classes = 8;
@@ -89,7 +91,7 @@ fn layerwise_equals_samplewise_on_full_neighborhoods() {
     // When every vertex's degree <= fanout, sampling is exhaustive and the
     // layerwise engine must reproduce samplewise embeddings EXACTLY (up to
     // f32 tolerance): the two paths compute the same GNN.
-    let Some(art) = glisp::test_artifacts_dir() else { return };
+    let art = glisp::test_artifacts_dir();
     let mut rng = Rng::new(402);
     // Sparse ER graph: max out-degree stays < 10 (the artifact fanout).
     let n = 1024;
@@ -143,7 +145,7 @@ fn layerwise_equals_samplewise_on_full_neighborhoods() {
 
 #[test]
 fn link_scores_agree_between_paths_on_full_neighborhoods() {
-    let Some(art) = glisp::test_artifacts_dir() else { return };
+    let art = glisp::test_artifacts_dir();
     let mut rng = Rng::new(403);
     let n = 512;
     let g = generator::erdos_renyi(n, n, &mut rng);
@@ -191,7 +193,7 @@ fn link_scores_agree_between_paths_on_full_neighborhoods() {
 
 #[test]
 fn manifest_geometry_matches_trainer_expectations() {
-    let Some(art) = glisp::test_artifacts_dir() else { return };
+    let art = glisp::test_artifacts_dir();
     let runtime = Runtime::load(&art).unwrap();
     for model in ["gcn", "sage", "gat"] {
         let spec = runtime.spec(&format!("{model}_train")).unwrap();
