@@ -8,7 +8,7 @@
 //! Run: `cargo run --release --example inference_engine [-- --n 8000]`
 
 use glisp::cli::Args;
-use glisp::coordinator::FeatureStore;
+use glisp::coordinator::{FeatureStore, PipelineConfig};
 use glisp::graph::generator;
 use glisp::inference::{
     init_decode_params, init_encoder_params, EngineConfig, LayerwiseEngine, SamplewiseRunner,
@@ -53,13 +53,28 @@ fn main() -> anyhow::Result<()> {
 
     // --- samplewise baseline ---
     let runtime2 = Runtime::load(Runtime::default_dir())?;
-    let mut sw = SamplewiseRunner::new(&g, runtime2, FeatureStore::unlabeled(64), enc, 5)?;
+    let mut sw = SamplewiseRunner::new(&g, runtime2, FeatureStore::unlabeled(64), enc.clone(), 5)?;
     let t = Timer::start();
     let (_, swrep) = sw.run_vertex_embedding()?;
     let sws = t.secs();
     println!(
         "[samplewise] vertex embedding {sws:>7.2}s  computations={:<8}",
         swrep.vertices_computed
+    );
+
+    // --- samplewise again, batch assembly pipelined (DESIGN.md §7) ---
+    let pcfg = PipelineConfig::default();
+    let runtime3 = Runtime::load(Runtime::default_dir())?;
+    let mut swp = SamplewiseRunner::new(&g, runtime3, FeatureStore::unlabeled(64), enc, 5)?;
+    let t = Timer::start();
+    let (_, prep) = swp.run_vertex_embedding_pipelined(&pcfg)?;
+    let swp_s = t.secs();
+    println!(
+        "[samplewise] pipelined ({} producers) {swp_s:>7.2}s  computations={:<8} \
+         ({:.2}x vs sync samplewise)",
+        pcfg.producers,
+        prep.vertices_computed,
+        sws / swp_s
     );
     println!(
         "=> vertex-embedding speedup {:.2}x wall, {:.2}x compute\n",

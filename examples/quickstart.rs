@@ -10,7 +10,7 @@
 
 use std::sync::Arc;
 
-use glisp::coordinator::{Batcher, FeatureStore, Trainer, TrainerConfig};
+use glisp::coordinator::{Batcher, FeatureStore, PipelineConfig, Trainer, TrainerConfig};
 use glisp::graph::generator;
 use glisp::partition::{quality, AdaDNE, Partitioner};
 use glisp::runtime::Runtime;
@@ -48,11 +48,12 @@ fn main() -> anyhow::Result<()> {
         trainer.fanouts
     );
 
-    // 5. Train 20 mini-batches.
+    // 5. Train 20 mini-batches through the pipelined producer: sampling +
+    //    feature assembly overlap the model step on background threads.
     let seeds: Vec<u32> = (0..4000).collect();
     let lab: Vec<u16> = seeds.iter().map(|&v| labels[v as usize]).collect();
-    let mut batcher = Batcher::new(seeds, lab, trainer.batch, 5);
-    let losses = trainer.train(&mut batcher, 20)?;
+    let mut batcher = Batcher::new(seeds, lab, trainer.batch, 5)?;
+    let losses = trainer.train_pipelined(&mut batcher, 20, &PipelineConfig::default())?;
     println!("loss: first {:.4} -> last {:.4}", losses[0], losses.last().unwrap());
 
     // 6. Per-server workload: balanced thanks to vertex-cut + Gather-Apply.

@@ -6,6 +6,11 @@
 //! sampling servers → tree-format batches → AOT HLO train step on PJRT —
 //! logging the loss curve and final test accuracy.
 //!
+//! Batches are produced by the pipelined producer by default (sampling +
+//! feature assembly overlap the model step, DESIGN.md §7); pass `--sync`
+//! for the strictly sequential path, `--producers N` / `--queue D` /
+//! `--unordered` to tune the pipeline.
+//!
 //! Runs hermetically on the pure-Rust reference backend when `artifacts/`
 //! is absent; build artifacts + enable `--features pjrt` for PJRT/XLA.
 //!
@@ -14,7 +19,7 @@
 use std::sync::Arc;
 
 use glisp::cli::Args;
-use glisp::coordinator::{Batcher, FeatureStore, Trainer, TrainerConfig};
+use glisp::coordinator::{Batcher, FeatureStore, PipelineConfig, Trainer, TrainerConfig};
 use glisp::graph::generator;
 use glisp::partition::{quality, AdaDNE, Partitioner};
 use glisp::runtime::Runtime;
@@ -28,6 +33,12 @@ fn main() -> anyhow::Result<()> {
     let parts = args.get_usize("parts", 4);
     let n = args.get_usize("n", 20_000);
     let classes = 8;
+    let sync = args.has("sync");
+    let pcfg = PipelineConfig {
+        producers: args.get_usize("producers", 2),
+        queue_depth: args.get_usize("queue", 2),
+        ordered: !args.has("unordered"),
+    };
 
     println!("== GLISP end-to-end training driver ==");
     let t_total = Timer::start();
@@ -64,19 +75,33 @@ fn main() -> anyhow::Result<()> {
         trainer.fanouts,
         trainer.runtime.backend_name()
     );
+    if sync {
+        println!("[mode] sync (sequential sample -> assemble -> execute)");
+    } else {
+        println!(
+            "[mode] pipelined: {} producers, queue depth {}, {}",
+            pcfg.producers,
+            pcfg.queue_depth,
+            if pcfg.ordered { "ordered (bit-exact vs sync)" } else { "unordered" }
+        );
+    }
 
     // 80/20 split.
     let split = (n * 8) / 10;
     let train_seeds: Vec<u32> = (0..split as u32).collect();
     let train_labels: Vec<u16> = train_seeds.iter().map(|&v| labels[v as usize]).collect();
-    let mut batcher = Batcher::new(train_seeds, train_labels, trainer.batch, 5);
+    let mut batcher = Batcher::new(train_seeds, train_labels, trainer.batch, 5)?;
 
     // Train, logging every 20 steps.
     let t_train = Timer::start();
     let mut curve = Vec::new();
     for block in 0..steps.div_ceil(20) {
         let k = 20.min(steps - block * 20);
-        let losses = trainer.train(&mut batcher, k)?;
+        let losses = if sync {
+            trainer.train(&mut batcher, k)?
+        } else {
+            trainer.train_pipelined(&mut batcher, k, &pcfg)?
+        };
         let mean: f32 = losses.iter().sum::<f32>() / losses.len() as f32;
         curve.push(mean);
         println!("[train] step {:>4}  loss {:.4}", (block + 1) * 20, mean);

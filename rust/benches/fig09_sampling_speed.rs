@@ -33,14 +33,14 @@ fn run_stack(
     };
     // warmup
     let seeds = balanced_seeds(svc, 8, &mut rng);
-    sample_tree(&mut client, &seeds, &FANOUTS, &cfg);
+    sample_tree(&mut client, &seeds, &FANOUTS, &cfg).unwrap();
     svc.reset_stats();
     let timer = Timer::start();
     let mut seeds_done = 0usize;
     for _ in 0..batches {
         let seeds = balanced_seeds(svc, 64 / svc.partitions.len().max(1), &mut rng);
         seeds_done += seeds.len();
-        sample_tree(&mut client, &seeds, &FANOUTS, &cfg);
+        sample_tree(&mut client, &seeds, &FANOUTS, &cfg).unwrap();
     }
     let wall = timer.secs();
     let client_secs = wall - svc.busy_secs().iter().sum::<f64>();

@@ -33,7 +33,7 @@ fn main() {
         let mut rng = Rng::new(5);
         for _ in 0..rounds {
             let seeds = balanced_seeds(&svc, 16, &mut rng);
-            sample_tree(&mut client, &seeds, &FANOUTS, &SampleConfig::default());
+            sample_tree(&mut client, &seeds, &FANOUTS, &SampleConfig::default()).unwrap();
         }
         let w = normalized_workload(&svc.workload());
         t.row(&[
@@ -50,7 +50,7 @@ fn main() {
         let mut rng = Rng::new(5);
         for _ in 0..rounds {
             let seeds = balanced_seeds(&svc, 16, &mut rng);
-            sample_tree(&mut client, &seeds, &FANOUTS, &SampleConfig::default());
+            sample_tree(&mut client, &seeds, &FANOUTS, &SampleConfig::default()).unwrap();
         }
         let w = normalized_workload(&svc.workload());
         t.row(&[
@@ -68,7 +68,7 @@ fn main() {
             let seeds: Vec<u32> = (0..64)
                 .map(|_| p0.global(rng.usize(p0.nv()) as u32))
                 .collect();
-            sample_tree(&mut client, &seeds, &FANOUTS, &SampleConfig::default());
+            sample_tree(&mut client, &seeds, &FANOUTS, &SampleConfig::default()).unwrap();
         }
         let w = normalized_workload(&svc.workload());
         t.row(&[

@@ -67,7 +67,7 @@ fn main() -> anyhow::Result<()> {
             let train_seeds: Vec<u32> = (0..split as u32).collect();
             let train_labels: Vec<u16> =
                 train_seeds.iter().map(|&v| labels[v as usize]).collect();
-            let mut batcher = Batcher::new(train_seeds, train_labels, trainer.batch, 5);
+            let mut batcher = Batcher::new(train_seeds, train_labels, trainer.batch, 5)?;
             trainer.train(&mut batcher, 3)?; // warmup + compile
             service.reset_stats();
             let timer = Timer::start();

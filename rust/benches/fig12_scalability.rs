@@ -55,7 +55,7 @@ fn main() -> anyhow::Result<()> {
             let lab: Vec<u16> = seeds.iter().map(|&v| labels[v as usize]).collect();
             let batch = tr.batch;
             trainers.push(tr);
-            batchers.push(Batcher::new(seeds, lab, batch, 100 + w as u64));
+            batchers.push(Batcher::new(seeds, lab, batch, 100 + w as u64)?);
         }
         // Warmup (compile).
         sync_round(&mut trainers, &mut batchers, 0.1)?;

@@ -1,0 +1,92 @@
+//! Pipelined vs synchronous training throughput: the same GraphSAGE train
+//! step fed by (a) the strictly sequential sample → assemble → execute
+//! loop and (b) the producer pipeline (coordinator::pipeline, DESIGN.md
+//! §7) at several producer counts. Overlap hides the sampling round behind
+//! the model step, so pipelined steps/s ≥ sync steps/s whenever a spare
+//! core exists; ordered mode additionally reproduces the sync loss curve
+//! bit-for-bit (asserted here on the first pipelined run).
+
+use glisp::coordinator::PipelineConfig;
+use glisp::harness::workloads::train_stack;
+use glisp::harness::{f2, Table};
+use glisp::util::timer::Timer;
+
+fn main() -> anyhow::Result<()> {
+    let art = glisp::test_artifacts_dir();
+    println!("== pipeline_throughput — sync vs pipelined train steps/s ==");
+    let steps = std::env::var("GLISP_BENCH_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(30usize);
+    let n = 8_000;
+    let parts = 4;
+
+    let modes: [(&str, Option<PipelineConfig>); 4] = [
+        ("sync", None),
+        (
+            "pipelined x1 ordered",
+            Some(PipelineConfig {
+                producers: 1,
+                queue_depth: 2,
+                ordered: true,
+            }),
+        ),
+        (
+            "pipelined x2 ordered",
+            Some(PipelineConfig {
+                producers: 2,
+                queue_depth: 2,
+                ordered: true,
+            }),
+        ),
+        (
+            "pipelined x4 unordered",
+            Some(PipelineConfig {
+                producers: 4,
+                queue_depth: 2,
+                ordered: false,
+            }),
+        ),
+    ];
+
+    let mut t = Table::new(
+        &format!("n={n}, {parts} servers, sage, {steps} timed steps"),
+        &["mode", "steps/s", "seeds/s", "vs sync"],
+    );
+    let mut base_rate = 0.0f64;
+    let mut sync_losses: Vec<f32> = Vec::new();
+    for (name, pcfg) in modes {
+        let mut s = train_stack(n, parts, "sage", &art)?;
+        s.trainer.train(&mut s.batcher, 3)?; // warmup + compile
+        let timer = Timer::start();
+        let losses = match &pcfg {
+            None => s.trainer.train(&mut s.batcher, steps)?,
+            Some(p) => s.trainer.train_pipelined(&mut s.batcher, steps, p)?,
+        };
+        let secs = timer.secs();
+        let rate = steps as f64 / secs;
+        if base_rate == 0.0 {
+            base_rate = rate;
+            sync_losses = losses;
+        } else if pcfg.as_ref().is_some_and(|p| p.ordered) {
+            assert_eq!(
+                sync_losses, losses,
+                "{name}: ordered pipelined losses must equal sync"
+            );
+        }
+        t.row(&[
+            name.into(),
+            f2(rate),
+            f2(rate * s.trainer.batch as f64),
+            format!("{:.2}x", rate / base_rate),
+        ]);
+        s.service.shutdown();
+    }
+    t.print();
+    println!("\nThe producer pipeline overlaps K-hop sampling + feature assembly with");
+    println!("the model step (paper §III-C keeps sampling off the trainer's critical");
+    println!("path). Ordered mode is bit-exact vs sync (verified above); unordered");
+    println!("trades the exact update order for immunity to producer skew. On a");
+    println!("single-core runner the pipeline degrades gracefully to ~sync speed.");
+    Ok(())
+}

@@ -48,7 +48,7 @@ fn main() -> anyhow::Result<()> {
         let train_seeds: Vec<u32> = (0..split as u32).collect();
         let train_labels: Vec<u16> =
             train_seeds.iter().map(|&v| labels[v as usize]).collect();
-        let mut batcher = Batcher::new(train_seeds, train_labels, trainer.batch, 5);
+        let mut batcher = Batcher::new(train_seeds, train_labels, trainer.batch, 5)?;
         let losses = trainer.train(&mut batcher, steps)?;
         let test_seeds: Vec<u32> = (split as u32..(split + 1600) as u32).collect();
         let test_labels: Vec<u16> =

@@ -1,7 +1,10 @@
 //! Seed batcher: epoch-shuffled fixed-size mini-batches over the labeled
 //! training set. AOT artifacts have a static batch dimension, so short
 //! final batches wrap around into the next epoch instead of emitting a
-//! ragged batch.
+//! ragged batch; training sets smaller than one batch wrap (and reshuffle)
+//! as many times as needed *within* a batch rather than being rejected.
+
+use anyhow::Result;
 
 use crate::graph::csr::VId;
 use crate::util::rng::Rng;
@@ -16,9 +19,15 @@ pub struct Batcher {
 }
 
 impl Batcher {
-    pub fn new(seeds: Vec<VId>, labels: Vec<u16>, batch: usize, seed: u64) -> Self {
-        assert_eq!(seeds.len(), labels.len());
-        assert!(seeds.len() >= batch, "training set smaller than a batch");
+    pub fn new(seeds: Vec<VId>, labels: Vec<u16>, batch: usize, seed: u64) -> Result<Self> {
+        anyhow::ensure!(
+            seeds.len() == labels.len(),
+            "seeds/labels length mismatch: {} vs {}",
+            seeds.len(),
+            labels.len()
+        );
+        anyhow::ensure!(!seeds.is_empty(), "empty training set");
+        anyhow::ensure!(batch > 0, "batch size must be positive");
         let mut b = Self {
             seeds,
             labels,
@@ -28,7 +37,16 @@ impl Batcher {
             epoch: 0,
         };
         b.shuffle();
-        b
+        Ok(b)
+    }
+
+    /// Number of training examples (one epoch).
+    pub fn len(&self) -> usize {
+        self.seeds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.seeds.is_empty()
     }
 
     fn shuffle(&mut self) {
@@ -67,7 +85,7 @@ mod tests {
     fn batches_are_exact_size_and_cover_epoch() {
         let seeds: Vec<VId> = (0..10).collect();
         let labels: Vec<u16> = (0..10).map(|i| i as u16 % 3).collect();
-        let mut b = Batcher::new(seeds, labels, 4, 1);
+        let mut b = Batcher::new(seeds, labels, 4, 1).unwrap();
         let mut seen = std::collections::HashMap::new();
         for _ in 0..5 {
             let (s, l) = b.next_batch();
@@ -85,7 +103,7 @@ mod tests {
     fn labels_stay_aligned_through_shuffles() {
         let seeds: Vec<VId> = (0..50).collect();
         let labels: Vec<u16> = seeds.iter().map(|&v| (v % 7) as u16).collect();
-        let mut b = Batcher::new(seeds, labels, 8, 2);
+        let mut b = Batcher::new(seeds, labels, 8, 2).unwrap();
         for _ in 0..30 {
             let (s, l) = b.next_batch();
             for (v, lab) in s.iter().zip(&l) {
@@ -93,5 +111,36 @@ mod tests {
             }
         }
         assert!(b.epoch >= 3);
+    }
+
+    #[test]
+    fn small_training_set_wraps_instead_of_panicking() {
+        // Regression: sets smaller than one static batch used to assert.
+        let seeds: Vec<VId> = vec![1, 2, 3];
+        let labels: Vec<u16> = vec![1, 2, 0];
+        let mut b = Batcher::new(seeds, labels, 8, 3).unwrap();
+        for _ in 0..4 {
+            let (s, l) = b.next_batch();
+            assert_eq!(s.len(), 8);
+            assert_eq!(l.len(), 8);
+            for (v, lab) in s.iter().zip(&l) {
+                let want = match *v {
+                    1 => 1i32,
+                    2 => 2,
+                    3 => 0,
+                    other => panic!("unexpected seed {other}"),
+                };
+                assert_eq!(*lab, want, "label alignment survives mid-batch wraps");
+            }
+        }
+        // 32 draws over 3 seeds wrap the epoch ~10 times.
+        assert!(b.epoch >= 8);
+    }
+
+    #[test]
+    fn invalid_constructions_are_errors_not_panics() {
+        assert!(Batcher::new(vec![], vec![], 4, 0).is_err());
+        assert!(Batcher::new(vec![1, 2], vec![0], 4, 0).is_err());
+        assert!(Batcher::new(vec![1], vec![0], 0, 0).is_err());
     }
 }

@@ -70,10 +70,18 @@ impl FeatureStore {
     /// Flattened [n, din] feature matrix for a vertex list (PAD → zeros).
     pub fn batch(&self, vids: &[VId]) -> Vec<f32> {
         let mut out = vec![0f32; vids.len() * self.din];
+        self.batch_into(vids, &mut out);
+        out
+    }
+
+    /// Fill a caller-owned [n, din] buffer (PAD → zeros) — lets the
+    /// pipelined batch producers assemble feature tensors without an extra
+    /// allocation per level.
+    pub fn batch_into(&self, vids: &[VId], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), vids.len() * self.din);
         for (i, &v) in vids.iter().enumerate() {
             self.fill(v, &mut out[i * self.din..(i + 1) * self.din]);
         }
-        out
     }
 }
 

@@ -1,15 +1,18 @@
 //! Training coordinator (L3): feature store, parameter store, seed batcher,
-//! and the trainer loop that feeds Gather-Apply samples into the AOT
-//! train-step artifacts. `sync_round` implements the synchronous
-//! data-parallel mode of the Fig. 12 scalability experiment.
+//! the pipelined batch producer, and the trainer loop that feeds
+//! Gather-Apply samples into the AOT train-step artifacts. `sync_round`
+//! implements the synchronous data-parallel mode of the Fig. 12
+//! scalability experiment.
 
 pub mod batcher;
 pub mod features;
 pub mod metrics;
 pub mod params;
+pub mod pipeline;
 pub mod trainer;
 
 pub use batcher::Batcher;
 pub use features::FeatureStore;
 pub use params::ParamStore;
+pub use pipeline::{PipelineConfig, ReadyBatch};
 pub use trainer::{sync_round, Trainer, TrainerConfig};

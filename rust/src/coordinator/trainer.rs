@@ -4,12 +4,24 @@
 //! behind the `pjrt` feature). One `Trainer` = one logical GPU worker of
 //! the paper's Fig. 1; the data-parallel scalability experiment (Fig. 12)
 //! runs several in synchronous gradient-averaging mode.
+//!
+//! Two data paths feed the model step:
+//!
+//! * **sync** ([`Trainer::train`]): sample → assemble → execute strictly in
+//!   sequence on the calling thread;
+//! * **pipelined** ([`Trainer::train_pipelined`]): N producer threads
+//!   overlap sampling + tensor assembly with model execution
+//!   (`coordinator::pipeline`, DESIGN.md §7). In ordered mode the loss
+//!   curve is bit-identical to the sync path for the same seeds.
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::batcher::Batcher;
 use crate::coordinator::features::FeatureStore;
 use crate::coordinator::params::{average_grads, ParamStore};
+use crate::coordinator::pipeline::{
+    assemble_tensors, batch_rng, produce_batch, BatchFeed, PipelineConfig, ReadyBatch, Reorder,
+};
 use crate::graph::csr::VId;
 use crate::runtime::tensor::HostTensor;
 use crate::runtime::Runtime;
@@ -37,6 +49,11 @@ pub struct Trainer {
     pub fanouts: Vec<usize>,
     pub n_params: usize,
     sample_cfg: SampleConfig,
+    /// Base seed of the per-batch sampling streams (`pipeline::batch_rng`).
+    sample_seed: u64,
+    /// Global train-step counter — the batch index both the sync path and
+    /// the pipelined feed derive their sampling streams from.
+    steps_taken: usize,
 }
 
 impl Trainer {
@@ -56,6 +73,12 @@ impl Trainer {
         anyhow::ensure!(features.din == din, "feature store din {} != artifact {din}", features.din);
         let mut rng = Rng::new(seed);
         let params = ParamStore::init_glorot(&spec.inputs[..n_params], &mut rng);
+        let mut client = client;
+        // Fold the client's stream into the sampling seed: data-parallel
+        // trainers sharing a constructor seed but holding distinct clients
+        // still sample decorrelated batches, while identical (seed, client)
+        // pairs reproduce exactly.
+        let sample_seed = rng.next_u64() ^ client.rng.next_u64();
         Ok(Self {
             runtime,
             params,
@@ -66,7 +89,20 @@ impl Trainer {
             fanouts,
             n_params,
             sample_cfg: SampleConfig::default(),
+            sample_seed,
+            steps_taken: 0,
         })
+    }
+
+    /// Train-step batches consumed so far (sync + pipelined).
+    pub fn steps_taken(&self) -> usize {
+        self.steps_taken
+    }
+
+    fn next_step_index(&mut self) -> u64 {
+        let i = self.steps_taken;
+        self.steps_taken += 1;
+        i as u64
     }
 
     /// Assemble the artifact input list for a sampled tree: params ++ level
@@ -77,17 +113,10 @@ impl Trainer {
         labels: Option<&[i32]>,
         lr: Option<f32>,
     ) -> Vec<HostTensor> {
-        let din = self.features.din;
+        let (feats, masks) = assemble_tensors(&tree.levels, &tree.masks, &self.features);
         let mut inputs: Vec<HostTensor> = self.params.tensors.clone();
-        for level in &tree.levels {
-            inputs.push(HostTensor::f32(
-                vec![level.len(), din],
-                self.features.batch(level),
-            ));
-        }
-        for mask in &tree.masks {
-            inputs.push(HostTensor::f32(vec![mask.len()], mask.clone()));
-        }
+        inputs.extend(feats);
+        inputs.extend(masks);
         if let Some(l) = labels {
             inputs.push(HostTensor::i32(vec![l.len()], l.to_vec()));
         }
@@ -97,14 +126,15 @@ impl Trainer {
         inputs
     }
 
-    pub fn sample_batch(&mut self, seeds: &[VId]) -> TreeSample {
+    pub fn sample_batch(&mut self, seeds: &[VId]) -> Result<TreeSample> {
         sample_tree(&mut self.client, seeds, &self.fanouts, &self.sample_cfg)
     }
 
     /// One SGD step over a seed batch; returns the loss.
     pub fn train_step(&mut self, seeds: &[VId], labels: &[i32]) -> Result<f32> {
         assert_eq!(seeds.len(), self.batch);
-        let tree = self.sample_batch(seeds);
+        self.client.rng = batch_rng(self.sample_seed, self.next_step_index());
+        let tree = self.sample_batch(seeds)?;
         let inputs = self.model_inputs(&tree, Some(labels), Some(self.cfg.lr));
         let mut out = self
             .runtime
@@ -116,7 +146,8 @@ impl Trainer {
 
     /// Loss + raw gradients (synchronous data-parallel mode; sage only).
     pub fn grad_step(&mut self, seeds: &[VId], labels: &[i32]) -> Result<(f32, Vec<HostTensor>)> {
-        let tree = self.sample_batch(seeds);
+        self.client.rng = batch_rng(self.sample_seed, self.next_step_index());
+        let tree = self.sample_batch(seeds)?;
         let inputs = self.model_inputs(&tree, Some(labels), None);
         let mut out = self
             .runtime
@@ -135,10 +166,124 @@ impl Trainer {
         Ok(losses)
     }
 
+    /// Execute the model step on a producer-assembled batch: append the
+    /// ready tensors after the current parameters (moved, not copied — the
+    /// batch is on the hot path), run, apply.
+    pub fn execute_ready(&mut self, rb: ReadyBatch) -> Result<f32> {
+        let mut inputs: Vec<HostTensor> = self.params.tensors.clone();
+        inputs.extend(rb.features);
+        inputs.extend(rb.masks);
+        let n_labels = rb.labels.len();
+        inputs.push(HostTensor::i32(vec![n_labels], rb.labels));
+        inputs.push(HostTensor::scalar1(self.cfg.lr));
+        let mut out = self
+            .runtime
+            .execute(&format!("{}_train", self.cfg.model), &inputs)?;
+        let loss = out.remove(0).as_f32()[0];
+        self.params.replace(out)?;
+        Ok(loss)
+    }
+
+    /// Train for `steps` mini-batches with sampling + tensor assembly
+    /// pipelined onto `pcfg.producers` background threads (DESIGN.md §7).
+    /// Ordered mode applies updates in epoch order and is bit-identical to
+    /// [`Trainer::train`] for the same batcher seed; unordered mode applies
+    /// them in arrival order (same batches, better overlap under skew).
+    pub fn train_pipelined(
+        &mut self,
+        batcher: &mut Batcher,
+        steps: usize,
+        pcfg: &PipelineConfig,
+    ) -> Result<Vec<f32>> {
+        if steps == 0 {
+            return Ok(Vec::new());
+        }
+        let producers = pcfg.producers.max(1);
+        let depth = pcfg.queue_depth.max(1);
+        let base = self.steps_taken;
+        self.steps_taken += steps;
+        let sample_seed = self.sample_seed;
+        let fanouts = self.fanouts.clone();
+        let sample_cfg = self.sample_cfg.clone();
+        let features = self.features.clone();
+        let clients: Vec<SamplingClient> =
+            (0..producers).map(|p| self.client.split(p as u64)).collect();
+        // In-flight bound: everything the channel can hold plus one batch
+        // under construction per producer. Caps the ordered-mode reorder
+        // buffer as well — a straggler cannot let its peers materialize
+        // the rest of the epoch.
+        let window = producers * (depth + 1);
+        let feed = BatchFeed::new(batcher, base, steps, window);
+
+        std::thread::scope(|scope| -> Result<Vec<f32>> {
+            // The channel lives inside the scope so that on an early error
+            // return the receiver is dropped *before* the implicit join,
+            // unblocking producers stuck in `send`.
+            let (tx, rx) =
+                std::sync::mpsc::sync_channel::<(usize, Result<ReadyBatch>)>(depth * producers);
+            for mut client in clients {
+                let tx = tx.clone();
+                let feed = &feed;
+                let fanouts = &fanouts;
+                let sample_cfg = &sample_cfg;
+                let features = features.clone();
+                scope.spawn(move || {
+                    while let Some(item) = feed.next() {
+                        let index = item.index;
+                        let out = produce_batch(
+                            &mut client,
+                            &features,
+                            fanouts,
+                            sample_cfg,
+                            sample_seed,
+                            item,
+                        );
+                        let failed = out.is_err();
+                        if tx.send((index, out)).is_err() || failed {
+                            break;
+                        }
+                    }
+                });
+            }
+            drop(tx);
+
+            let feed = &feed;
+            let consume = |trainer: &mut Self| -> Result<Vec<f32>> {
+                let mut losses = Vec::with_capacity(steps);
+                let mut reorder: Reorder<ReadyBatch> = Reorder::new(base);
+                while losses.len() < steps {
+                    if pcfg.ordered {
+                        if let Some(rb) = reorder.pop_ready() {
+                            losses.push(trainer.execute_ready(rb)?);
+                            feed.mark_consumed();
+                            continue;
+                        }
+                    }
+                    let (index, rb) = rx.recv().map_err(|_| {
+                        anyhow::anyhow!("batch producers exited before delivering all batches")
+                    })?;
+                    let rb = rb.with_context(|| format!("producing batch {index}"))?;
+                    if pcfg.ordered {
+                        reorder.push(index, rb);
+                    } else {
+                        losses.push(trainer.execute_ready(rb)?);
+                        feed.mark_consumed();
+                    }
+                }
+                Ok(losses)
+            };
+            let result = consume(self);
+            // Wake any producer parked on the in-flight window before the
+            // scope joins (the dropped receiver handles those in `send`).
+            feed.close();
+            result
+        })
+    }
+
     /// Predicted class per seed via the eval artifact.
     pub fn predict(&mut self, seeds: &[VId]) -> Result<Vec<usize>> {
         assert_eq!(seeds.len(), self.batch);
-        let tree = self.sample_batch(seeds);
+        let tree = self.sample_batch(seeds)?;
         let inputs = self.model_inputs(&tree, None, None);
         let out = self
             .runtime
@@ -234,13 +379,18 @@ mod tests {
     use crate::sampling::service::SamplingService;
     use std::sync::Arc;
 
-    fn stack() -> (SamplingService, Trainer, Batcher) {
-        let dir = crate::test_artifacts_dir();
+    fn test_graph() -> crate::graph::csr::Graph {
         let mut rng = Rng::new(210);
-        let g = generator::labeled_community_graph(2000, 24_000, 8, 0.9, &mut rng);
-        let labels = Arc::new(g.label.clone());
-        let ea = AdaDNE::default().partition(&g, 2, 0);
-        let svc = SamplingService::launch(&g, &ea, 1);
+        generator::labeled_community_graph(2000, 24_000, 8, 0.9, &mut rng)
+    }
+
+    /// A trainer + batcher wired to `svc` with fixed seeds — calling it
+    /// twice against one service yields identically-initialized trainers
+    /// (responses are salt-derived, so sharing the service is
+    /// interference-free), which is what the bit-exactness tests compare.
+    fn twin(svc: &SamplingService) -> (Trainer, Batcher) {
+        let dir = crate::test_artifacts_dir();
+        let labels = Arc::new(test_graph().label);
         let features = FeatureStore::labeled(64, labels.clone(), 8, 0.6);
         let trainer = Trainer::new(
             &dir,
@@ -255,7 +405,15 @@ mod tests {
         .unwrap();
         let seeds: Vec<VId> = (0..1000).collect();
         let lab: Vec<u16> = seeds.iter().map(|&v| labels[v as usize]).collect();
-        let batcher = Batcher::new(seeds, lab, trainer.batch, 5);
+        let batcher = Batcher::new(seeds, lab, trainer.batch, 5).unwrap();
+        (trainer, batcher)
+    }
+
+    fn stack() -> (SamplingService, Trainer, Batcher) {
+        let g = test_graph();
+        let ea = AdaDNE::default().partition(&g, 2, 0);
+        let svc = SamplingService::launch(&g, &ea, 1);
+        let (trainer, batcher) = twin(&svc);
         (svc, trainer, batcher)
     }
 
@@ -293,6 +451,68 @@ mod tests {
         for (g, p) in grads.iter().zip(&t.params.tensors) {
             assert_eq!(g.shape(), p.shape());
         }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn ordered_pipelined_matches_sync_losses_bit_exactly() {
+        let (svc, mut t_sync, mut b_sync) = stack();
+        let sync_losses = t_sync.train(&mut b_sync, 8).unwrap();
+
+        let (mut t_pipe, mut b_pipe) = twin(&svc);
+        let pcfg = PipelineConfig {
+            producers: 3,
+            queue_depth: 2,
+            ordered: true,
+        };
+        let pipe_losses = t_pipe.train_pipelined(&mut b_pipe, 8, &pcfg).unwrap();
+
+        assert_eq!(
+            sync_losses, pipe_losses,
+            "ordered pipelined training must reproduce the sync loss curve"
+        );
+        assert_eq!(
+            t_sync.params.tensors[0].as_f32(),
+            t_pipe.params.tensors[0].as_f32(),
+            "parameters must match bit-for-bit too"
+        );
+        assert_eq!(t_pipe.steps_taken(), 8);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn pipelined_runs_resume_after_sync_steps() {
+        // Mixing modes keeps one global step sequence: sync, then
+        // pipelined, then sync again equals an all-sync run.
+        let (svc, mut a, mut ba) = stack();
+        let la = a.train(&mut ba, 6).unwrap();
+
+        let (mut b, mut bb) = twin(&svc);
+        let pcfg = PipelineConfig::default();
+        let mut lb = b.train(&mut bb, 2).unwrap();
+        lb.extend(b.train_pipelined(&mut bb, 3, &pcfg).unwrap());
+        lb.extend(b.train(&mut bb, 1).unwrap());
+        assert_eq!(la, lb);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn unordered_pipelined_still_converges() {
+        let (svc, mut t, mut b) = stack();
+        let pcfg = PipelineConfig {
+            producers: 2,
+            queue_depth: 2,
+            ordered: false,
+        };
+        let losses = t.train_pipelined(&mut b, 30, &pcfg).unwrap();
+        assert_eq!(losses.len(), 30);
+        assert!(losses.iter().all(|l| l.is_finite()));
+        let head: f32 = losses[..5].iter().sum::<f32>() / 5.0;
+        let tail: f32 = losses[losses.len() - 5..].iter().sum::<f32>() / 5.0;
+        assert!(
+            tail < head,
+            "unordered pipelined loss should fall: head {head:.3} tail {tail:.3}"
+        );
         svc.shutdown();
     }
 }

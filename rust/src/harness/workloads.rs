@@ -4,8 +4,14 @@
 //! in minutes on a laptop-class CPU; set GLISP_BENCH_SCALE to scale the
 //! vertex/edge counts (1.0 = default).
 
+use std::sync::Arc;
+
+use crate::coordinator::{Batcher, FeatureStore, Trainer, TrainerConfig};
 use crate::graph::csr::Graph;
 use crate::graph::generator::{self, DatasetSpec, GenKind};
+use crate::partition::{AdaDNE, Partitioner};
+use crate::sampling::SamplingService;
+use crate::util::rng::Rng;
 
 pub fn bench_scale() -> f64 {
     std::env::var("GLISP_BENCH_SCALE")
@@ -41,6 +47,50 @@ pub fn relnet_like() -> DatasetSpec {
 
 pub fn load(spec: &DatasetSpec, seed: u64) -> Graph {
     generator::generate(spec, seed)
+}
+
+/// A full training stack over a labeled community graph: AdaDNE partition
+/// → sampling service → trainer → 80/20 split batcher. Used by the
+/// pipeline_throughput bench; adopt it in new training-path benches
+/// instead of hand-wiring the same stack.
+pub struct TrainStack {
+    pub service: SamplingService,
+    pub trainer: Trainer,
+    pub batcher: Batcher,
+}
+
+pub fn train_stack(
+    n: usize,
+    parts: usize,
+    model: &str,
+    artifacts: &std::path::Path,
+) -> anyhow::Result<TrainStack> {
+    let classes = 8;
+    let mut rng = Rng::new(1);
+    let g = generator::labeled_community_graph(n, n * 12, classes, 0.9, &mut rng);
+    let labels = Arc::new(g.label.clone());
+    let ea = AdaDNE::default().partition(&g, parts, 1);
+    let service = SamplingService::launch(&g, &ea, 1);
+    let features = FeatureStore::labeled(64, labels.clone(), classes, 0.6);
+    let trainer = Trainer::new(
+        artifacts,
+        service.client(2),
+        features,
+        TrainerConfig {
+            model: model.into(),
+            lr: 0.1,
+        },
+        7,
+    )?;
+    let split = (n * 8) / 10;
+    let train_seeds: Vec<u32> = (0..split as u32).collect();
+    let train_labels: Vec<u16> = train_seeds.iter().map(|&v| labels[v as usize]).collect();
+    let batcher = Batcher::new(train_seeds, train_labels, trainer.batch, 5)?;
+    Ok(TrainStack {
+        service,
+        trainer,
+        batcher,
+    })
 }
 
 #[cfg(test)]

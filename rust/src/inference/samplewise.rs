@@ -3,10 +3,19 @@
 //! full K-layer forward, recomputing every overlapping neighbor embedding
 //! from scratch. "Naive" = training mode without the engine's GNN slicing,
 //! embedding cache or reorder (paper's wording).
+//!
+//! The batch path has two modes, mirroring the trainer's (DESIGN.md §7):
+//! sync ([`SamplewiseRunner::run_vertex_embedding`]) and pipelined
+//! ([`SamplewiseRunner::run_vertex_embedding_pipelined`]), which reuses the
+//! coordinator's producer machinery (`pipeline::assemble_tensors`,
+//! `pipeline::batch_rng`) to overlap local sampling + feature assembly with
+//! the embed-artifact execution. Chunk RNG streams are derived per chunk
+//! index, so both modes produce identical embeddings.
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::features::FeatureStore;
+use crate::coordinator::pipeline::{assemble_tensors, batch_rng, PipelineConfig};
 use crate::graph::csr::{Graph, VId};
 use crate::runtime::tensor::HostTensor;
 use crate::runtime::Runtime;
@@ -17,6 +26,8 @@ use crate::util::rng::Rng;
 #[derive(Clone, Debug, Default)]
 pub struct SamplewiseReport {
     pub model_secs: f64,
+    /// Producer-side sampling + assembly seconds (summed across producers;
+    /// overlapped with `model_secs` in pipelined mode).
     pub sample_secs: f64,
     /// Vertex-layer computations — the redundancy the layerwise engine
     /// eliminates (each tree slot at each layer costs one).
@@ -28,10 +39,74 @@ pub struct SamplewiseRunner<'g> {
     pub features: FeatureStore,
     pub enc_params: Vec<HostTensor>,
     g: &'g Graph,
-    rng: Rng,
+    /// Base seed of the per-chunk sampling streams (`pipeline::batch_rng`).
+    sample_seed: u64,
+    /// Chunks embedded so far — the chunk index both modes derive their
+    /// sampling streams from.
+    embed_counter: usize,
     batch: usize,
     fanouts: Vec<usize>,
     hidden: usize,
+}
+
+/// Sample a fanout-padded tree directly over the local graph (same
+/// Algorithm D sampler as the service; see engine.rs for why inference
+/// samples locally). Free function so pipelined producer threads can call
+/// it with only `&Graph` + their own RNG.
+fn sample_levels(
+    g: &Graph,
+    fanouts: &[usize],
+    rng: &mut Rng,
+    seeds: &[VId],
+) -> (Vec<Vec<VId>>, Vec<Vec<f32>>) {
+    let mut levels = vec![seeds.to_vec()];
+    let mut masks = Vec::new();
+    for &f in fanouts {
+        let parents = levels.last().unwrap();
+        let mut level = vec![PAD; parents.len() * f];
+        let mut mask = vec![0f32; parents.len() * f];
+        for (i, &p) in parents.iter().enumerate() {
+            if p == PAD {
+                continue;
+            }
+            let cand = g.out_neighbors(p);
+            if cand.is_empty() {
+                continue;
+            }
+            if cand.len() <= f {
+                for (s, &c) in cand.iter().enumerate() {
+                    level[i * f + s] = c;
+                    mask[i * f + s] = 1.0;
+                }
+            } else {
+                for (s, idx) in algo_d::sample(rng, cand.len(), f).into_iter().enumerate() {
+                    level[i * f + s] = cand[idx];
+                    mask[i * f + s] = 1.0;
+                }
+            }
+        }
+        levels.push(level);
+        masks.push(mask);
+    }
+    (levels, masks)
+}
+
+fn real_slots(levels: &[Vec<VId>]) -> u64 {
+    levels
+        .iter()
+        .map(|l| l.iter().filter(|&&v| v != PAD).count() as u64)
+        .sum()
+}
+
+/// One producer-assembled embed chunk.
+struct AssembledChunk {
+    index: usize,
+    /// Real (unpadded) seeds in the chunk.
+    len: usize,
+    features: Vec<HostTensor>,
+    masks: Vec<HostTensor>,
+    real_slots: u64,
+    sample_secs: f64,
 }
 
 impl<'g> SamplewiseRunner<'g> {
@@ -51,7 +126,8 @@ impl<'g> SamplewiseRunner<'g> {
             features,
             enc_params,
             g,
-            rng: Rng::new(seed),
+            sample_seed: seed,
+            embed_counter: 0,
             batch,
             fanouts,
             hidden,
@@ -62,69 +138,31 @@ impl<'g> SamplewiseRunner<'g> {
         self.hidden
     }
 
-    /// Sample a fanout-padded tree directly over the local graph (same
-    /// Algorithm D sampler as the service; see engine.rs for why inference
-    /// samples locally).
-    fn sample_levels(&mut self, seeds: &[VId]) -> (Vec<Vec<VId>>, Vec<Vec<f32>>) {
-        let mut levels = vec![seeds.to_vec()];
-        let mut masks = Vec::new();
-        for &f in &self.fanouts {
-            let parents = levels.last().unwrap();
-            let mut level = vec![PAD; parents.len() * f];
-            let mut mask = vec![0f32; parents.len() * f];
-            for (i, &p) in parents.iter().enumerate() {
-                if p == PAD {
-                    continue;
-                }
-                let cand = self.g.out_neighbors(p);
-                if cand.is_empty() {
-                    continue;
-                }
-                if cand.len() <= f {
-                    for (s, &c) in cand.iter().enumerate() {
-                        level[i * f + s] = c;
-                        mask[i * f + s] = 1.0;
-                    }
-                } else {
-                    for (s, idx) in algo_d::sample(&mut self.rng, cand.len(), f)
-                        .into_iter()
-                        .enumerate()
-                    {
-                        level[i * f + s] = cand[idx];
-                        mask[i * f + s] = 1.0;
-                    }
-                }
-            }
-            levels.push(level);
-            masks.push(mask);
-        }
-        (levels, masks)
-    }
-
     /// Embed one full batch of seeds (padded with PAD if short); returns
     /// [batch, hidden] embeddings.
     pub fn embed_batch(&mut self, seeds: &[VId], report: &mut SamplewiseReport) -> Result<Vec<f32>> {
         assert!(seeds.len() <= self.batch);
         let mut padded = seeds.to_vec();
         padded.resize(self.batch, PAD);
+        let idx = self.embed_counter as u64;
+        self.embed_counter += 1;
+        let mut rng = batch_rng(self.sample_seed, idx);
+        // sample_secs covers sampling + tensor assembly (the producer-side
+        // work in pipelined mode — same split there, so the two modes'
+        // reports are comparable); model_secs covers only the execute.
         let t_s = crate::util::timer::Timer::start();
-        let (levels, masks) = self.sample_levels(&padded);
+        let (levels, masks) = sample_levels(self.g, &self.fanouts, &mut rng, &padded);
+        let (feats, mask_t) = assemble_tensors(&levels, &masks, &self.features);
         report.sample_secs += t_s.secs();
 
         let t_m = crate::util::timer::Timer::start();
-        let din = self.features.din;
+        // K-layer forward touches every tree slot at every layer it
+        // participates in; count real slots once per layer that
+        // computes them (level l is recomputed (K - l) times).
+        report.vertices_computed += real_slots(&levels);
         let mut inputs: Vec<HostTensor> = self.enc_params.clone();
-        for level in &levels {
-            inputs.push(HostTensor::f32(vec![level.len(), din], self.features.batch(level)));
-            // K-layer forward touches every tree slot at every layer it
-            // participates in; count real slots once per layer that
-            // computes them (level l is recomputed (K - l) times).
-            let real = level.iter().filter(|&&v| v != PAD).count() as u64;
-            report.vertices_computed += real;
-        }
-        for m in &masks {
-            inputs.push(HostTensor::f32(vec![m.len()], m.clone()));
-        }
+        inputs.extend(feats);
+        inputs.extend(mask_t);
         let out = self.runtime.execute("sage_embed", &inputs)?;
         report.model_secs += t_m.secs();
         Ok(out[0].as_f32().to_vec())
@@ -141,6 +179,93 @@ impl<'g> SamplewiseRunner<'g> {
             out[base..base + chunk.len() * self.hidden]
                 .copy_from_slice(&emb[..chunk.len() * self.hidden]);
         }
+        Ok((out, report))
+    }
+
+    /// Full-graph vertex embedding with sampling + feature assembly
+    /// pipelined onto producer threads; the embed artifact runs on the
+    /// calling thread as chunks become ready. Chunk RNG streams are index-
+    /// derived, so the output equals [`Self::run_vertex_embedding`] exactly
+    /// — chunks write disjoint output ranges, so no ordered reassembly is
+    /// needed here.
+    pub fn run_vertex_embedding_pipelined(
+        &mut self,
+        pcfg: &PipelineConfig,
+    ) -> Result<(Vec<f32>, SamplewiseReport)> {
+        let mut report = SamplewiseReport::default();
+        let hidden = self.hidden;
+        let batch = self.batch;
+        let n = self.g.n;
+        let mut out = vec![0f32; n * hidden];
+        let ids: Vec<VId> = (0..n as VId).collect();
+        let chunks: Vec<Vec<VId>> = ids.chunks(batch).map(|c| c.to_vec()).collect();
+        let total = chunks.len();
+        let base = self.embed_counter;
+        self.embed_counter += total;
+
+        let producers = pcfg.producers.max(1);
+        let depth = pcfg.queue_depth.max(1);
+        let g = self.g;
+        let fanouts = self.fanouts.clone();
+        let features = self.features.clone();
+        let sample_seed = self.sample_seed;
+        let next = std::sync::atomic::AtomicUsize::new(0);
+
+        std::thread::scope(|scope| -> Result<()> {
+            // Channel inside the scope: an early error return drops the
+            // receiver before the implicit join, unblocking producers
+            // stuck in `send`.
+            let (tx, rx) = std::sync::mpsc::sync_channel::<AssembledChunk>(depth * producers);
+            for _ in 0..producers {
+                let tx = tx.clone();
+                let next = &next;
+                let chunks = &chunks;
+                let fanouts = &fanouts;
+                let features = features.clone();
+                scope.spawn(move || loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if i >= total {
+                        break;
+                    }
+                    let mut padded = chunks[i].clone();
+                    padded.resize(batch, PAD);
+                    let mut rng = batch_rng(sample_seed, (base + i) as u64);
+                    let t_s = crate::util::timer::Timer::start();
+                    let (levels, masks) = sample_levels(g, fanouts, &mut rng, &padded);
+                    let (feats, mask_t) = assemble_tensors(&levels, &masks, &features);
+                    let chunk = AssembledChunk {
+                        index: i,
+                        len: chunks[i].len(),
+                        features: feats,
+                        masks: mask_t,
+                        real_slots: real_slots(&levels),
+                        sample_secs: t_s.secs(),
+                    };
+                    if tx.send(chunk).is_err() {
+                        break;
+                    }
+                });
+            }
+            drop(tx);
+
+            for _ in 0..total {
+                let c = rx
+                    .recv()
+                    .map_err(|_| anyhow::anyhow!("samplewise producers exited early"))?;
+                report.sample_secs += c.sample_secs;
+                report.vertices_computed += c.real_slots;
+                let t_m = crate::util::timer::Timer::start();
+                let mut inputs: Vec<HostTensor> = self.enc_params.clone();
+                inputs.extend(c.features);
+                inputs.extend(c.masks);
+                let r = self.runtime.execute("sage_embed", &inputs)?;
+                report.model_secs += t_m.secs();
+                let emb = r[0].as_f32();
+                let off = c.index * batch * hidden;
+                out[off..off + c.len * hidden].copy_from_slice(&emb[..c.len * hidden]);
+            }
+            Ok(())
+        })?;
         Ok((out, report))
     }
 
@@ -204,6 +329,23 @@ mod tests {
         // Redundancy: every seed costs ~1 + f1 + f1·f2 slots, far above the
         // 2/vertex of the layerwise engine.
         assert!(report.vertices_computed > 10 * g.n as u64);
+    }
+
+    #[test]
+    fn pipelined_embedding_is_bit_identical_to_sync() {
+        let mut rng = Rng::new(312);
+        let g = generator::chung_lu(300, 2400, 2.1, &mut rng);
+        let mut sync = runner(&g);
+        let (hs, rs) = sync.run_vertex_embedding().unwrap();
+        let mut pipe = runner(&g);
+        let pcfg = PipelineConfig {
+            producers: 3,
+            queue_depth: 2,
+            ordered: true,
+        };
+        let (hp, rp) = pipe.run_vertex_embedding_pipelined(&pcfg).unwrap();
+        assert_eq!(hs, hp, "pipelined embeddings must equal sync bit-for-bit");
+        assert_eq!(rs.vertices_computed, rp.vertices_computed);
     }
 
     #[test]

@@ -13,7 +13,7 @@ use anyhow::{bail, Context, Result};
 use std::sync::Arc;
 
 use glisp::cli::Args;
-use glisp::coordinator::{Batcher, FeatureStore, Trainer, TrainerConfig};
+use glisp::coordinator::{Batcher, FeatureStore, PipelineConfig, Trainer, TrainerConfig};
 use glisp::graph::{generator, metrics};
 use glisp::harness::{f2, f3, ix, Table};
 use glisp::inference::{
@@ -145,7 +145,7 @@ fn cmd_sample(args: &Args) -> Result<()> {
     let mut slots = 0usize;
     for _ in 0..batches {
         let seeds = balanced_seeds(&svc, batch / parts.max(1), &mut rng);
-        let tree = sample_tree(&mut client, &seeds, &fanouts, &cfg);
+        let tree = sample_tree(&mut client, &seeds, &fanouts, &cfg)?;
         slots += tree.total_slots();
     }
     let secs = timer.secs();
@@ -197,9 +197,19 @@ fn cmd_train(args: &Args) -> Result<()> {
     let split = (n * 8) / 10;
     let train_seeds: Vec<u32> = (0..split as u32).collect();
     let train_labels: Vec<u16> = train_seeds.iter().map(|&v| labels[v as usize]).collect();
-    let mut batcher = Batcher::new(train_seeds, train_labels, trainer.batch, 5);
+    let mut batcher = Batcher::new(train_seeds, train_labels, trainer.batch, 5)?;
     let timer = Timer::start();
-    let losses = trainer.train(&mut batcher, steps)?;
+    // Pipelined producer by default; `--sync` selects the sequential path.
+    let losses = if args.has("sync") {
+        trainer.train(&mut batcher, steps)?
+    } else {
+        let pcfg = PipelineConfig {
+            producers: args.get_usize("producers", 2),
+            queue_depth: args.get_usize("queue", 2),
+            ordered: !args.has("unordered"),
+        };
+        trainer.train_pipelined(&mut batcher, steps, &pcfg)?
+    };
     let secs = timer.secs();
     for (i, chunk) in losses.chunks(10).enumerate() {
         let mean: f32 = chunk.iter().sum::<f32>() / chunk.len() as f32;

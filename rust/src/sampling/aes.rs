@@ -32,7 +32,11 @@ pub fn sample_weighted(rng: &mut Rng, weights: &[f32], k: usize) -> Vec<(usize, 
 }
 
 /// Merge per-server (item, score) lists into the global top-k — the
-/// WeightedApplyOp core (paper Algorithm 4, line 3).
+/// WeightedApplyOp core (paper Algorithm 4, line 3). This is the *tested
+/// reference* for the merge semantics: the hot path in
+/// `SamplingClient::sample_one_hop` inlines the same push order and
+/// tiebreak rule over a reused [`TopK`] to avoid per-seed allocations;
+/// keep the two in lockstep.
 pub fn merge_top_k<T: Copy>(lists: &[Vec<(T, f64)>], k: usize) -> Vec<(T, f64)> {
     let mut tk = TopK::new(k);
     let mut tiebreak = 0u64;

@@ -53,7 +53,7 @@ mod tests {
         let stack = BaselineStack::launch(&g, 4, 1);
         let mut client = stack.client(2);
         let seeds: Vec<u32> = (0..32).collect();
-        let t = sample_tree(&mut client, &seeds, &[5], &SampleConfig::default());
+        let t = sample_tree(&mut client, &seeds, &[5], &SampleConfig::default()).unwrap();
         for (i, &p) in t.levels[0].iter().enumerate() {
             for s in 0..5 {
                 let c = t.levels[1][i * 5 + s];
@@ -78,7 +78,7 @@ mod tests {
         let stack = BaselineStack::launch(&g, parts, 1);
         let mut bclient = stack.client(3);
         let seeds: Vec<u32> = (0..512).collect();
-        sample_tree(&mut bclient, &seeds, &[15, 10], &SampleConfig::default());
+        sample_tree(&mut bclient, &seeds, &[15, 10], &SampleConfig::default()).unwrap();
         let base_wl: Vec<f64> = stack
             .service
             .workload()
@@ -93,7 +93,7 @@ mod tests {
         let ea = AdaDNE::default().partition(&g, parts, 1);
         let svc = SamplingService::launch(&g, &ea, 1);
         let mut gclient = svc.client(3);
-        sample_tree(&mut gclient, &seeds, &[15, 10], &SampleConfig::default());
+        sample_tree(&mut gclient, &seeds, &[15, 10], &SampleConfig::default()).unwrap();
         let glisp_wl: Vec<f64> = svc.workload().iter().map(|&w| w.max(1) as f64).collect();
         let glisp_balance = balance_ratio(&glisp_wl);
         svc.shutdown();

@@ -8,15 +8,19 @@
 //! * **Baseline routing** (`RouteMode::Owner`): a seed's request goes to a
 //!   single owner server (the edge-cut / DistDGL architecture Fig. 10
 //!   measures against).
+//!
+//! A dead partition server is an error, not a panic: `sample_one_hop`
+//! reports *which* partitions failed so the coordinator can surface it.
 
+use anyhow::{bail, Result};
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
 
 use crate::graph::csr::VId;
-use crate::sampling::aes::merge_top_k;
 use crate::sampling::request::{GatherRequest, GatherResponse, SampleConfig, ServerMsg};
 use crate::util::bitset::BitMatrix;
 use crate::util::rng::Rng;
+use crate::util::topk::TopK;
 
 #[derive(Clone)]
 pub enum RouteMode {
@@ -49,6 +53,17 @@ pub struct SamplingClient {
 }
 
 impl SamplingClient {
+    /// Derive an independent clone for another thread (e.g. one pipelined
+    /// batch producer): same servers and routing, decorrelated RNG stream.
+    /// Distinct `stream` values from the same client yield distinct,
+    /// deterministic streams; `self` is not mutated.
+    pub fn split(&self, stream: u64) -> Self {
+        let mut c = self.clone();
+        let forked = c.rng.fork(stream);
+        c.rng = forked;
+        c
+    }
+
     /// Partitions a seed is routed to under the current mode.
     fn route(&self, v: VId) -> Vec<usize> {
         match &self.mode {
@@ -65,7 +80,7 @@ impl SamplingClient {
         seeds: &[VId],
         fanout: usize,
         cfg: &SampleConfig,
-    ) -> OneHopSample {
+    ) -> Result<OneHopSample> {
         // --- Gather: bucket seed occurrences by server ---
         let p = self.servers.len();
         let mut per_server_seeds: Vec<Vec<VId>> = vec![Vec::new(); p];
@@ -78,29 +93,42 @@ impl SamplingClient {
             }
         }
         let (tx, rx) = std::sync::mpsc::channel();
-        let mut expected = 0usize;
+        let mut sent: Vec<usize> = Vec::new();
         for (srv, sv_seeds) in per_server_seeds.into_iter().enumerate() {
             if sv_seeds.is_empty() {
                 continue;
             }
-            expected += 1;
-            self.servers[srv]
-                .send(ServerMsg::Gather(
-                    GatherRequest {
-                        seeds: sv_seeds,
-                        fanout,
-                        cfg: cfg.clone(),
-                    },
-                    tx.clone(),
-                ))
-                .expect("server hung up");
+            // Per-request salt: the server derives its sampling stream from
+            // it, keeping responses independent of request arrival order.
+            let salt = self.rng.next_u64();
+            let req = GatherRequest {
+                seeds: sv_seeds,
+                fanout,
+                cfg: cfg.clone(),
+                salt,
+            };
+            if self.servers[srv].send(ServerMsg::Gather(req, tx.clone())).is_err() {
+                bail!("sampling server for partition {srv} hung up before the gather");
+            }
+            sent.push(srv);
         }
         drop(tx);
         let mut responses: Vec<Option<GatherResponse>> = (0..p).map(|_| None).collect();
-        for _ in 0..expected {
-            let r = rx.recv().expect("server died");
-            let part = r.part_id;
-            responses[part] = Some(r);
+        for _ in 0..sent.len() {
+            match rx.recv() {
+                Ok(r) => {
+                    let part = r.part_id;
+                    responses[part] = Some(r);
+                }
+                Err(_) => {
+                    let missing: Vec<usize> = sent
+                        .iter()
+                        .copied()
+                        .filter(|&s| responses[s].is_none())
+                        .collect();
+                    bail!("sampling server(s) for partition(s) {missing:?} died mid-gather");
+                }
+            }
         }
 
         // --- Apply: join (uniform) or global top-k (weighted) per seed ---
@@ -109,26 +137,30 @@ impl SamplingClient {
             neighbors: Vec::new(),
         };
         out.offsets.push(0);
-        for (i, _) in seeds.iter().enumerate() {
+        // One reusable top-k scratch for the whole batch: the weighted merge
+        // reads (neighbor, score) straight off the response slices instead
+        // of materializing per-seed Vec<Vec<_>> lists.
+        let mut tk: TopK<VId> = TopK::new(fanout);
+        for seats in &seat {
             if cfg.weighted {
-                let lists: Vec<Vec<(VId, f64)>> = seat[i]
-                    .iter()
-                    .filter_map(|&(srv, pos)| {
-                        responses[srv].as_ref().map(|r| {
-                            r.neighbors_of(pos as usize)
-                                .iter()
-                                .zip(r.scores_of(pos as usize))
-                                .map(|(&n, &s)| (n, s))
-                                .collect()
-                        })
-                    })
-                    .collect();
-                for (n, _) in merge_top_k(&lists, fanout) {
+                tk.reset(fanout);
+                let mut tiebreak = 0u64;
+                for &(srv, pos) in seats {
+                    if let Some(r) = &responses[srv] {
+                        let nbrs = r.neighbors_of(pos as usize);
+                        let scores = r.scores_of(pos as usize);
+                        for (&n, &s) in nbrs.iter().zip(scores) {
+                            tk.push(s, tiebreak, n);
+                            tiebreak += 1;
+                        }
+                    }
+                }
+                for (_, n) in tk.drain_sorted() {
                     out.neighbors.push(n);
                 }
             } else {
                 let start = out.neighbors.len();
-                for &(srv, pos) in &seat[i] {
+                for &(srv, pos) in seats {
                     if let Some(r) = &responses[srv] {
                         out.neighbors.extend_from_slice(r.neighbors_of(pos as usize));
                     }
@@ -146,7 +178,7 @@ impl SamplingClient {
             }
             out.offsets.push(out.neighbors.len() as u32);
         }
-        out
+        Ok(out)
     }
 }
 
@@ -188,7 +220,9 @@ mod tests {
     fn one_hop_respects_fanout() {
         let (mut client, _s) = launch_small();
         let seeds: Vec<VId> = (0..64).collect();
-        let got = client.sample_one_hop(&seeds, 5, &SampleConfig::default());
+        let got = client
+            .sample_one_hop(&seeds, 5, &SampleConfig::default())
+            .unwrap();
         assert_eq!(got.offsets.len(), 65);
         for i in 0..64 {
             assert!(got.neighbors_of(i).len() <= 5);
@@ -199,7 +233,9 @@ mod tests {
     fn duplicate_seeds_sampled_independently() {
         let (mut client, _s) = launch_small();
         let seeds: Vec<VId> = vec![3, 3, 3, 3];
-        let got = client.sample_one_hop(&seeds, 4, &SampleConfig::default());
+        let got = client
+            .sample_one_hop(&seeds, 4, &SampleConfig::default())
+            .unwrap();
         assert_eq!(got.offsets.len(), 5);
         // Each occurrence gets its own (possibly different) sample.
         let lens: Vec<usize> = (0..4).map(|i| got.neighbors_of(i).len()).collect();
@@ -210,16 +246,71 @@ mod tests {
     fn weighted_one_hop_returns_at_most_fanout() {
         let (mut client, _s) = launch_small();
         let seeds: Vec<VId> = (0..32).collect();
-        let got = client.sample_one_hop(
-            &seeds,
-            3,
-            &SampleConfig {
-                weighted: true,
-                ..Default::default()
-            },
-        );
+        let got = client
+            .sample_one_hop(
+                &seeds,
+                3,
+                &SampleConfig {
+                    weighted: true,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
         for i in 0..32 {
             assert!(got.neighbors_of(i).len() <= 3);
         }
+    }
+
+    #[test]
+    fn dead_server_is_an_error_naming_the_partition() {
+        let (mut client, servers) = launch_small();
+        // Kill partition 1's server; sampling must fail with a message that
+        // names it instead of panicking.
+        servers[1].send(ServerMsg::Shutdown).unwrap();
+        // Give the server thread a moment to drain its inbox and exit.
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let seeds: Vec<VId> = (0..64).collect();
+        let err = client
+            .sample_one_hop(&seeds, 5, &SampleConfig::default())
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains('1'), "error should name the partition: {msg}");
+    }
+
+    #[test]
+    fn split_clients_are_deterministic_and_decorrelated() {
+        let (client, _s) = launch_small();
+        let mut a1 = client.split(0);
+        let mut a2 = client.split(0);
+        let mut b = client.split(1);
+        let sa1: Vec<u64> = (0..8).map(|_| a1.rng.next_u64()).collect();
+        let sa2: Vec<u64> = (0..8).map(|_| a2.rng.next_u64()).collect();
+        let sb: Vec<u64> = (0..8).map(|_| b.rng.next_u64()).collect();
+        assert_eq!(sa1, sa2, "same stream id must reproduce");
+        assert_ne!(sa1, sb, "distinct stream ids must decorrelate");
+    }
+
+    #[test]
+    fn identical_salted_requests_commute() {
+        // Two clients with the same seed issue the same batch in opposite
+        // order; the per-request salt makes the responses identical — the
+        // arrival-order independence the pipelined trainer relies on.
+        let (client, _s) = launch_small();
+        let mut c1 = client.split(7);
+        let mut c2 = client.split(7);
+        let batch_a: Vec<VId> = (0..32).collect();
+        let batch_b: Vec<VId> = (32..64).collect();
+        let a1 = c1.sample_one_hop(&batch_a, 5, &SampleConfig::default()).unwrap();
+        let b1 = c1.sample_one_hop(&batch_b, 5, &SampleConfig::default()).unwrap();
+        // c2 replays the same stream, but a third client hammers the servers
+        // between its draws — which must not perturb c2's results.
+        let mut noise = client.split(99);
+        let a2 = c2.sample_one_hop(&batch_a, 5, &SampleConfig::default()).unwrap();
+        noise
+            .sample_one_hop(&batch_b, 7, &SampleConfig::default())
+            .unwrap();
+        let b2 = c2.sample_one_hop(&batch_b, 5, &SampleConfig::default()).unwrap();
+        assert_eq!(a1.neighbors, a2.neighbors);
+        assert_eq!(b1.neighbors, b2.neighbors);
     }
 }

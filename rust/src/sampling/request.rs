@@ -39,6 +39,12 @@ pub struct GatherRequest {
     pub seeds: Vec<VId>,
     pub fanout: usize,
     pub cfg: SampleConfig,
+    /// Client-drawn RNG salt: the server derives this request's sampling
+    /// stream from (server seed, salt) instead of a persistent per-server
+    /// stream, so responses do not depend on the order in which concurrent
+    /// clients' requests arrive — the property the pipelined producer's
+    /// ordered (bit-exact) mode rests on (DESIGN.md §7).
+    pub salt: u64,
 }
 
 /// Per-seed sampled neighbors in a flattened (offsets, neighbors) layout.

@@ -48,7 +48,11 @@ pub fn thread_cpu_ns() -> u64 {
 pub struct PartitionServer {
     pub graph: Arc<PartitionGraph>,
     pub stats: Arc<ServerStats>,
-    rng: Rng,
+    /// Per-partition seed; each request's sampling stream is derived from
+    /// (seed, request salt) so responses are independent of arrival order
+    /// under concurrent clients (the pipelined producer's determinism
+    /// contract, DESIGN.md §7).
+    seed: u64,
 }
 
 impl PartitionServer {
@@ -57,8 +61,12 @@ impl PartitionServer {
         Self {
             graph,
             stats,
-            rng: Rng::new(seed ^ part.wrapping_mul(0x9E3779B97F4A7C15)),
+            seed: seed ^ part.wrapping_mul(0x9E3779B97F4A7C15),
         }
+    }
+
+    fn request_rng(&self, salt: u64) -> Rng {
+        Rng::new(self.seed ^ salt.wrapping_mul(0xA076_1D64_78BD_642F))
     }
 
     /// Blocking server loop; returns on Shutdown or closed inbox.
@@ -79,6 +87,7 @@ impl PartitionServer {
     /// WeightedGatherOp depending on cfg.weighted.
     pub fn gather(&mut self, req: &GatherRequest) -> GatherResponse {
         let t_busy = thread_cpu_ns();
+        let mut rng = self.request_rng(req.salt);
         let g = self.graph.clone();
         let mut resp = GatherResponse {
             part_id: g.part_id,
@@ -91,9 +100,9 @@ impl PartitionServer {
         for &seed in &req.seeds {
             if let Some(local) = g.local_id(seed) {
                 if req.cfg.weighted {
-                    self.gather_weighted(local, req.fanout, &req.cfg, &mut resp);
+                    self.gather_weighted(&mut rng, local, req.fanout, &req.cfg, &mut resp);
                 } else {
-                    self.gather_uniform(local, req.fanout, &req.cfg, &mut resp);
+                    self.gather_uniform(&mut rng, local, req.fanout, &req.cfg, &mut resp);
                 }
             }
             resp.offsets.push(resp.neighbors.len() as u32);
@@ -147,7 +156,8 @@ impl PartitionServer {
     /// `r = fanout · local_deg / global_deg` of its local neighbors with
     /// Algorithm D. Stochastic rounding keeps E[Σ r over servers] = fanout.
     fn gather_uniform(
-        &mut self,
+        &self,
+        rng: &mut Rng,
         local: u32,
         fanout: usize,
         cfg: &SampleConfig,
@@ -166,7 +176,7 @@ impl PartitionServer {
         .max(local_deg);
         let exact = fanout as f64 * local_deg as f64 / global_deg as f64;
         let mut r = exact.floor() as usize;
-        if self.rng.f64() < exact - r as f64 {
+        if rng.f64() < exact - r as f64 {
             r += 1;
         }
         let r = r.min(local_deg);
@@ -177,7 +187,7 @@ impl PartitionServer {
         if r == local_deg {
             resp.neighbors.extend_from_slice(cands);
         } else {
-            for i in algo_d::sample(&mut self.rng, local_deg, r) {
+            for i in algo_d::sample(rng, local_deg, r) {
                 resp.neighbors.push(cands[i]);
             }
         }
@@ -186,7 +196,8 @@ impl PartitionServer {
     /// WeightedGatherOp (Algorithm 3): A-ES scores for local neighbors,
     /// keep the local top-fanout, ship (neighbor, score) to the client.
     fn gather_weighted(
-        &mut self,
+        &self,
+        rng: &mut Rng,
         local: u32,
         fanout: usize,
         cfg: &SampleConfig,
@@ -209,9 +220,9 @@ impl PartitionServer {
                     g.edge_weight(g.in_eid[a + i])
                 }
             };
-            let s = crate::sampling::aes::score(&mut self.rng, w);
+            let s = crate::sampling::aes::score(rng, w);
             if s > 0.0 {
-                tk.push(s, self.rng.next_u64(), nbr);
+                tk.push(s, rng.next_u64(), nbr);
             }
         }
         for (s, nbr) in tk.into_sorted() {
@@ -258,6 +269,7 @@ mod tests {
         let resp = srv.gather(&GatherRequest {
             seeds: seeds.clone(),
             fanout: 5,
+            salt: 11,
             cfg: SampleConfig::default(),
         });
         for (i, &s) in seeds.iter().enumerate() {
@@ -283,6 +295,7 @@ mod tests {
         let resp = srv.gather(&GatherRequest {
             seeds: vec![pg.global(hub)],
             fanout: 10,
+            salt: 22,
             cfg: SampleConfig::default(),
         });
         // Multigraph can hold genuine duplicate edges; compare against the
@@ -299,6 +312,7 @@ mod tests {
         let resp = srv.gather(&GatherRequest {
             seeds,
             fanout: 4,
+            salt: 33,
             cfg: SampleConfig {
                 weighted: true,
                 ..Default::default()
@@ -322,6 +336,7 @@ mod tests {
         let resp = srv.gather(&GatherRequest {
             seeds: seeds.clone(),
             fanout: 8,
+            salt: 44,
             cfg: SampleConfig {
                 etype: Some(1),
                 ..Default::default()
@@ -345,6 +360,7 @@ mod tests {
         let resp = srv.gather(&GatherRequest {
             seeds: seeds.clone(),
             fanout: 5,
+            salt: 55,
             cfg: SampleConfig {
                 direction: Direction::In,
                 ..Default::default()
@@ -367,6 +383,7 @@ mod tests {
         srv.gather(&GatherRequest {
             seeds,
             fanout: 3,
+            salt: 66,
             cfg: SampleConfig::default(),
         });
         assert_eq!(stats.requests.load(Ordering::Relaxed), 1);
@@ -382,6 +399,7 @@ mod tests {
             GatherRequest {
                 seeds: vec![pg.global(0)],
                 fanout: 3,
+                salt: 77,
                 cfg: SampleConfig::default(),
             },
             rtx,

@@ -163,7 +163,9 @@ mod tests {
         let mut client = svc.client(2);
         let seeds = balanced_seeds(&svc, 8, &mut rng);
         assert_eq!(seeds.len(), 32);
-        let got = client.sample_one_hop(&seeds, 5, &SampleConfig::default());
+        let got = client
+            .sample_one_hop(&seeds, 5, &SampleConfig::default())
+            .unwrap();
         assert_eq!(got.offsets.len(), 33);
         // Work must be spread across all servers for AllReplicas routing.
         let wl = svc.workload();
@@ -182,13 +184,73 @@ mod tests {
         let mut c2 = svc.client(11);
         let t1 = std::thread::spawn(move || {
             let seeds: Vec<VId> = (0..100).collect();
-            c1.sample_one_hop(&seeds, 4, &SampleConfig::default())
+            c1.sample_one_hop(&seeds, 4, &SampleConfig::default()).unwrap()
         });
         let seeds: Vec<VId> = (100..200).collect();
-        let r2 = c2.sample_one_hop(&seeds, 4, &SampleConfig::default());
+        let r2 = c2.sample_one_hop(&seeds, 4, &SampleConfig::default()).unwrap();
         let r1 = t1.join().unwrap();
         assert_eq!(r1.offsets.len(), 101);
         assert_eq!(r2.offsets.len(), 101);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn hotspot_seed_requests_spread_across_replicas() {
+        use std::sync::atomic::Ordering;
+
+        // A hub replicated on every partition must have its one-hop load
+        // served cooperatively under AllReplicas routing (ServerStats::seeds
+        // counts on every replica server), while Owner routing concentrates
+        // the same traffic on a single server — the Fig. 10 contrast at the
+        // granularity of one hotspot seed.
+        let hub_deg = 120usize;
+        let parts = 3usize;
+        let mut edges: Vec<(VId, VId)> = Vec::new();
+        for i in 0..hub_deg {
+            edges.push((0, (i + 1) as VId));
+        }
+        for i in 1..=hub_deg {
+            edges.push((i as VId, ((i % hub_deg) + 1) as VId));
+        }
+        let g = Graph::from_edges(hub_deg + 1, &edges);
+        // Round-robin edge assignment: the hub's edges land on all servers.
+        let ea = EdgeAssignment {
+            num_parts: parts,
+            part_of_edge: (0..g.m()).map(|e| (e % parts) as u16).collect(),
+        };
+        let svc = SamplingService::launch(&g, &ea, 1);
+        let occurrences = 40usize;
+        let seeds: Vec<VId> = vec![0; occurrences];
+
+        let mut client = svc.client(9);
+        client
+            .sample_one_hop(&seeds, 8, &SampleConfig::default())
+            .unwrap();
+        let per_server: Vec<u64> = svc
+            .stats
+            .iter()
+            .map(|s| s.seeds.load(Ordering::Relaxed))
+            .collect();
+        assert!(
+            per_server.iter().all(|&s| s == occurrences as u64),
+            "every replica server must see every hub occurrence: {per_server:?}"
+        );
+
+        svc.reset_stats();
+        let owner = Arc::new(vec![0u16; g.n]);
+        let mut oc = svc.owner_client(owner, 10);
+        oc.sample_one_hop(&seeds, 8, &SampleConfig::default())
+            .unwrap();
+        let per_server: Vec<u64> = svc
+            .stats
+            .iter()
+            .map(|s| s.seeds.load(Ordering::Relaxed))
+            .collect();
+        assert_eq!(per_server[0], occurrences as u64);
+        assert!(
+            per_server[1..].iter().all(|&s| s == 0),
+            "owner routing must concentrate the load: {per_server:?}"
+        );
         svc.shutdown();
     }
 }

@@ -7,6 +7,8 @@
 //! artifacts require; duplicates across branches are accepted (tree
 //! expansion).
 
+use anyhow::{Context, Result};
+
 use crate::graph::csr::VId;
 use crate::sampling::client::SamplingClient;
 use crate::sampling::request::{SampleConfig, PAD};
@@ -49,21 +51,25 @@ impl TreeSample {
 }
 
 /// Sample a K-hop tree (Algorithm 1): K Gather-Apply rounds, one per hop.
+/// Fails (naming the hop and, transitively, the partition) when a
+/// partition server has died.
 pub fn sample_tree(
     client: &mut SamplingClient,
     seeds: &[VId],
     fanouts: &[usize],
     cfg: &SampleConfig,
-) -> TreeSample {
+) -> Result<TreeSample> {
     let mut levels = vec![seeds.to_vec()];
     let mut masks: Vec<Vec<f32>> = Vec::new();
-    for &f in fanouts {
+    for (k, &f) in fanouts.iter().enumerate() {
         let parents = levels.last().unwrap();
         // Gather for real parents only; padding parents produce padding.
         let real_idx: Vec<usize> =
             (0..parents.len()).filter(|&i| parents[i] != PAD).collect();
         let real_seeds: Vec<VId> = real_idx.iter().map(|&i| parents[i]).collect();
-        let got = client.sample_one_hop(&real_seeds, f, cfg);
+        let got = client
+            .sample_one_hop(&real_seeds, f, cfg)
+            .with_context(|| format!("sampling hop {k} (fanout {f})"))?;
         let mut level = vec![PAD; parents.len() * f];
         let mut mask = vec![0f32; parents.len() * f];
         for (j, &i) in real_idx.iter().enumerate() {
@@ -76,11 +82,11 @@ pub fn sample_tree(
         levels.push(level);
         masks.push(mask);
     }
-    TreeSample {
+    Ok(TreeSample {
         levels,
         masks,
         fanouts: fanouts.to_vec(),
-    }
+    })
 }
 
 #[cfg(test)]
@@ -103,7 +109,7 @@ mod tests {
         let svc = service();
         let mut client = svc.client(5);
         let seeds: Vec<VId> = (0..16).collect();
-        let t = sample_tree(&mut client, &seeds, &[4, 3], &SampleConfig::default());
+        let t = sample_tree(&mut client, &seeds, &[4, 3], &SampleConfig::default()).unwrap();
         assert_eq!(t.levels[0].len(), 16);
         assert_eq!(t.levels[1].len(), 64);
         assert_eq!(t.levels[2].len(), 192);
@@ -117,7 +123,7 @@ mod tests {
         let svc = service();
         let mut client = svc.client(6);
         let seeds: Vec<VId> = (0..8).collect();
-        let t = sample_tree(&mut client, &seeds, &[5, 4], &SampleConfig::default());
+        let t = sample_tree(&mut client, &seeds, &[5, 4], &SampleConfig::default()).unwrap();
         for k in 1..t.levels.len() {
             for (v, m) in t.levels[k].iter().zip(&t.masks[k - 1]) {
                 assert_eq!(*v == PAD, *m == 0.0, "mask/PAD mismatch");
@@ -131,7 +137,7 @@ mod tests {
         let svc = service();
         let mut client = svc.client(7);
         let seeds: Vec<VId> = (0..8).collect();
-        let t = sample_tree(&mut client, &seeds, &[3, 2], &SampleConfig::default());
+        let t = sample_tree(&mut client, &seeds, &[3, 2], &SampleConfig::default()).unwrap();
         let f2 = 2;
         for (i, &p) in t.levels[1].iter().enumerate() {
             if p == PAD {
@@ -154,7 +160,7 @@ mod tests {
         let svc = SamplingService::launch(&g, &ea, 1);
         let mut client = svc.client(8);
         let seeds: Vec<VId> = (0..16).collect();
-        let t = sample_tree(&mut client, &seeds, &[4], &SampleConfig::default());
+        let t = sample_tree(&mut client, &seeds, &[4], &SampleConfig::default()).unwrap();
         for (i, &p) in t.levels[0].iter().enumerate() {
             for s in 0..4 {
                 let c = t.levels[1][i * 4 + s];

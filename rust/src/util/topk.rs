@@ -98,6 +98,24 @@ impl<T> TopK<T> {
             .sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(b.1.cmp(&a.1)));
         self.heap.into_iter().map(|(s, _, t)| (s, t)).collect()
     }
+
+    /// Empty the heap and set a new capacity bound, keeping the backing
+    /// allocation — lets one `TopK` serve many selections (the weighted
+    /// Apply path reuses one per batch instead of allocating per seed).
+    pub fn reset(&mut self, k: usize) {
+        self.k = k;
+        self.heap.clear();
+        // No-op when the backing allocation already fits k + 1.
+        self.heap.reserve(k + 1);
+    }
+
+    /// Drain in descending score order, leaving the heap empty but the
+    /// allocation intact (pair with [`TopK::reset`]).
+    pub fn drain_sorted(&mut self) -> impl Iterator<Item = (f64, T)> + '_ {
+        self.heap
+            .sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(b.1.cmp(&a.1)));
+        self.heap.drain(..).map(|(s, _, t)| (s, t))
+    }
 }
 
 #[cfg(test)]
@@ -149,6 +167,24 @@ mod tests {
             want.sort_by(|a, b| b.partial_cmp(a).unwrap());
             want.truncate(k);
             assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn reset_and_drain_reuse_matches_fresh() {
+        let mut reused = TopK::new(4);
+        for round in 0..5u64 {
+            reused.reset(3);
+            let mut fresh = TopK::new(3);
+            for i in 0..20u64 {
+                let s = ((i * 7 + round) % 13) as f64;
+                reused.push(s, i, i);
+                fresh.push(s, i, i);
+            }
+            let a: Vec<(f64, u64)> = reused.drain_sorted().collect();
+            let b = fresh.into_sorted();
+            assert_eq!(a, b);
+            assert!(reused.is_empty());
         }
     }
 

@@ -29,7 +29,8 @@ fn tree_shapes_and_masks_are_consistent() {
         let hops = rng.range(1, 4);
         let fanouts: Vec<usize> = (0..hops).map(|_| rng.range(2, 8)).collect();
         let seeds = balanced_seeds(&svc, 4, rng);
-        let t = sample_tree(&mut client, &seeds, &fanouts, &SampleConfig::default());
+        let t = sample_tree(&mut client, &seeds, &fanouts, &SampleConfig::default())
+            .expect("sampling failed");
         // Level sizes multiply by fanouts.
         let mut expect = seeds.len();
         prop_assert_eq!(t.levels[0].len(), expect);
@@ -72,7 +73,7 @@ fn sampled_children_are_true_neighbors() {
                 ..Default::default()
             };
             let f = rng.range(2, 7);
-            let t = sample_tree(&mut client, &seeds, &[f], &cfg);
+            let t = sample_tree(&mut client, &seeds, &[f], &cfg).expect("sampling failed");
             for (i, &p) in t.levels[0].iter().enumerate() {
                 for s in 0..f {
                     let c = t.levels[1][i * f + s];
@@ -101,7 +102,8 @@ fn full_neighborhood_when_fanout_exceeds_degree() {
         let mut client = svc.client(rng.next_u64());
         let seeds: Vec<VId> = (0..16.min(n as u32)).collect();
         let f = 64;
-        let t = sample_tree(&mut client, &seeds, &[f], &SampleConfig::default());
+        let t = sample_tree(&mut client, &seeds, &[f], &SampleConfig::default())
+            .expect("sampling failed");
         for (i, &p) in t.levels[0].iter().enumerate() {
             let mut got: Vec<VId> = (0..f)
                 .map(|s| t.levels[1][i * f + s])
@@ -139,7 +141,8 @@ fn uniform_sampling_is_unbiased_across_partitions() {
         let trials = 3000;
         let mut counts = vec![0usize; deg + 1];
         for _ in 0..trials {
-            let t = sample_tree(&mut client, &[0], &[f], &SampleConfig::default());
+            let t = sample_tree(&mut client, &[0], &[f], &SampleConfig::default())
+                .expect("sampling failed");
             for s in 0..f {
                 let c = t.levels[1][s];
                 if c != PAD {
@@ -183,7 +186,7 @@ fn weighted_sampling_prefers_heavy_edges() {
         let trials = 800;
         let mut heavy = 0usize;
         for _ in 0..trials {
-            let t = sample_tree(&mut client, &[0], &[1], &cfg);
+            let t = sample_tree(&mut client, &[0], &[1], &cfg).expect("sampling failed");
             if t.levels[1][0] == 1 {
                 heavy += 1;
             }
@@ -209,7 +212,8 @@ fn workload_spreads_under_replica_routing() {
         let mut client = svc.client(rng.next_u64());
         for _ in 0..10 {
             let seeds = balanced_seeds(&svc, 16, rng);
-            sample_tree(&mut client, &seeds, &[10, 5], &SampleConfig::default());
+            sample_tree(&mut client, &seeds, &[10, 5], &SampleConfig::default())
+                .expect("sampling failed");
         }
         let wl = svc.workload();
         prop_assert!(wl.iter().all(|&w| w > 0), "an idle server: {wl:?}");

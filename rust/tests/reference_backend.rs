@@ -166,7 +166,7 @@ fn loss_decreases_in_ten_steps_for_all_models() {
         .unwrap();
         let seeds: Vec<u32> = (0..1200).collect();
         let lab: Vec<u16> = seeds.iter().map(|&v| labels[v as usize]).collect();
-        let mut batcher = Batcher::new(seeds, lab, trainer.batch, 5);
+        let mut batcher = Batcher::new(seeds, lab, trainer.batch, 5).unwrap();
         let losses = trainer.train(&mut batcher, 10).unwrap();
         assert!(losses.iter().all(|l| l.is_finite()));
         let first: f32 = losses[..3].iter().sum::<f32>() / 3.0;

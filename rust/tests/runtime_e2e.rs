@@ -40,7 +40,7 @@ fn training_converges_for_all_three_models() {
         .unwrap();
         let seeds: Vec<u32> = (0..2000).collect();
         let lab: Vec<u16> = seeds.iter().map(|&v| labels[v as usize]).collect();
-        let mut batcher = Batcher::new(seeds, lab, trainer.batch, 5);
+        let mut batcher = Batcher::new(seeds, lab, trainer.batch, 5).unwrap();
         let losses = trainer.train(&mut batcher, 25).unwrap();
         let head: f32 = losses[..5].iter().sum::<f32>() / 5.0;
         let tail: f32 = losses[20..].iter().sum::<f32>() / 5.0;
@@ -74,7 +74,7 @@ fn trained_model_beats_chance_on_held_out_vertices() {
     let split = 3200;
     let seeds: Vec<u32> = (0..split).collect();
     let lab: Vec<u16> = seeds.iter().map(|&v| labels[v as usize]).collect();
-    let mut batcher = Batcher::new(seeds, lab, trainer.batch, 5);
+    let mut batcher = Batcher::new(seeds, lab, trainer.batch, 5).unwrap();
     trainer.train(&mut batcher, 60).unwrap();
     let test: Vec<u32> = (split..n as u32).collect();
     let test_lab: Vec<u16> = test.iter().map(|&v| labels[v as usize]).collect();
