@@ -1,110 +1,145 @@
 //! Graph inference engine demo: full-graph vertex embedding + link
 //! prediction, layerwise vs naive samplewise (paper Fig. 13), with the
-//! two-level cache and PDS reordering active.
+//! two-level cache, PDS reordering and the worker-parallel K-slice sweep
+//! (one thread per partition, DESIGN.md §8) active.
 //!
 //! Runs hermetically on the pure-Rust reference backend when `artifacts/`
 //! is absent; build artifacts + enable `--features pjrt` for PJRT/XLA.
 //!
-//! Run: `cargo run --release --example inference_engine [-- --n 8000]`
+//! Run: `cargo run --release --example inference_engine [-- --n 8000
+//!       --parts 4 --layers 3 --seq --layerwise-only]`
 
 use glisp::cli::Args;
 use glisp::coordinator::{FeatureStore, PipelineConfig};
-use glisp::graph::generator;
-use glisp::inference::{
-    init_decode_params, init_encoder_params, EngineConfig, LayerwiseEngine, SamplewiseRunner,
-};
-use glisp::partition::{AdaDNE, Partitioner};
+use glisp::harness::infer_stack;
+use glisp::inference::{init_decode_params, EngineConfig, SamplewiseRunner};
 use glisp::runtime::Runtime;
-use glisp::util::rng::Rng;
 use glisp::util::timer::Timer;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let n = args.get_usize("n", 8_000);
     let parts = args.get_usize("parts", 4);
-
-    let mut rng = Rng::new(1);
-    let g = generator::chung_lu(n, n * 7, 2.1, &mut rng);
-    let ea = AdaDNE::default().partition(&g, parts, 1);
-    println!("graph: {} vertices, {} edges, {parts} partitions", g.n, g.m());
+    let layers = args.get_usize("layers", 2);
+    // --seq: single-threaded partition sweeps (the pre-parallel engine).
+    let parallel = !args.has("seq");
+    // --layerwise-only: skip the samplewise baselines (at K>=3 their
+    // K-hop recomputation is orders of magnitude slower — that is the
+    // paper's point, but not always worth the wall time here).
+    let layerwise_only = args.has("layerwise-only");
 
     let work = std::env::temp_dir().join("glisp_infer_example");
-    let _ = std::fs::remove_dir_all(&work);
-    let runtime = Runtime::load(Runtime::default_dir())?;
-    println!("executor backend: {}", runtime.backend_name());
-    let enc = init_encoder_params(&runtime, 3)?;
+    let mut stack = infer_stack(
+        n,
+        parts,
+        &Runtime::default_dir(),
+        work,
+        EngineConfig {
+            layers,
+            parallel,
+            ..Default::default()
+        },
+    )?;
+    let g = &stack.g;
+    println!(
+        "graph: {} vertices, {} edges, {parts} partitions, K={layers} \
+         ({} sweep)",
+        g.n,
+        g.m(),
+        if parallel { "parallel" } else { "sequential" }
+    );
+    println!("executor backend: {}", stack.engine.runtime.backend_name());
 
     // --- layerwise (the paper's engine) ---
-    let mut engine = LayerwiseEngine::new(
-        &g, &ea, runtime,
-        FeatureStore::unlabeled(64),
-        enc.clone(),
-        EngineConfig::default(),
-        work,
-    )?;
     let t = Timer::start();
-    let (h, rep) = engine.run_vertex_embedding()?;
+    let (h, rep) = stack.engine.run_vertex_embedding()?;
     let lw = t.secs();
     println!(
         "[layerwise ] vertex embedding {lw:>7.2}s  computations={:<8} chunk reads={} \
          dyn hits={} (ratio {:.3})",
         rep.vertices_computed, rep.chunk_reads, rep.dynamic_hits, rep.dynamic_hit_ratio
     );
+    for w in &rep.workers {
+        if w.vertices_computed == 0 {
+            continue;
+        }
+        println!(
+            "             worker {:>2}: {:>7} vertices  fill {:>5} chunks ({:>6.3}s)  \
+             model {:>6.2}s  dyn hit ratio {:.3}",
+            w.worker,
+            w.vertices_computed,
+            w.fill_chunks,
+            w.fill_secs,
+            w.model_secs,
+            w.dynamic_hit_ratio()
+        );
+    }
 
-    // --- samplewise baseline ---
-    let runtime2 = Runtime::load(Runtime::default_dir())?;
-    let mut sw = SamplewiseRunner::new(&g, runtime2, FeatureStore::unlabeled(64), enc.clone(), 5)?;
-    let t = Timer::start();
-    let (_, swrep) = sw.run_vertex_embedding()?;
-    let sws = t.secs();
-    println!(
-        "[samplewise] vertex embedding {sws:>7.2}s  computations={:<8}",
-        swrep.vertices_computed
-    );
+    // --- samplewise vertex-embedding baselines (skipped by
+    //     --layerwise-only; the runner is reused for link prediction) ---
+    let mut sw = if layerwise_only {
+        None
+    } else {
+        let enc = stack.engine.enc_params.clone();
+        let runtime2 = Runtime::load_with_layers(Runtime::default_dir(), layers)?;
+        let mut sw =
+            SamplewiseRunner::new(g, runtime2, FeatureStore::unlabeled(64), enc.clone(), 5)?;
+        let t = Timer::start();
+        let (_, swrep) = sw.run_vertex_embedding()?;
+        let sws = t.secs();
+        println!(
+            "[samplewise] vertex embedding {sws:>7.2}s  computations={:<8}",
+            swrep.vertices_computed
+        );
 
-    // --- samplewise again, batch assembly pipelined (DESIGN.md §7) ---
-    let pcfg = PipelineConfig::default();
-    let runtime3 = Runtime::load(Runtime::default_dir())?;
-    let mut swp = SamplewiseRunner::new(&g, runtime3, FeatureStore::unlabeled(64), enc, 5)?;
-    let t = Timer::start();
-    let (_, prep) = swp.run_vertex_embedding_pipelined(&pcfg)?;
-    let swp_s = t.secs();
-    println!(
-        "[samplewise] pipelined ({} producers) {swp_s:>7.2}s  computations={:<8} \
-         ({:.2}x vs sync samplewise)",
-        pcfg.producers,
-        prep.vertices_computed,
-        sws / swp_s
-    );
-    println!(
-        "=> vertex-embedding speedup {:.2}x wall, {:.2}x compute\n",
-        sws / lw,
-        swrep.vertices_computed as f64 / rep.vertices_computed as f64
-    );
+        // Same again, batch assembly pipelined (DESIGN.md §7).
+        let pcfg = PipelineConfig::default();
+        let runtime3 = Runtime::load_with_layers(Runtime::default_dir(), layers)?;
+        let mut swp = SamplewiseRunner::new(g, runtime3, FeatureStore::unlabeled(64), enc, 5)?;
+        let t = Timer::start();
+        let (_, prep) = swp.run_vertex_embedding_pipelined(&pcfg)?;
+        let swp_s = t.secs();
+        println!(
+            "[samplewise] pipelined ({} producers) {swp_s:>7.2}s  computations={:<8} \
+             ({:.2}x vs sync samplewise)",
+            pcfg.producers,
+            prep.vertices_computed,
+            sws / swp_s
+        );
+        println!(
+            "=> vertex-embedding speedup {:.2}x wall, {:.2}x compute\n",
+            sws / lw,
+            swrep.vertices_computed as f64 / rep.vertices_computed as f64
+        );
+        Some(sw)
+    };
 
-    // --- link prediction on both paths ---
+    // --- link prediction (layerwise always; samplewise for comparison) ---
     let edges: Vec<(u32, u32)> = (0..g.n as u32)
         .filter(|&u| !g.out_neighbors(u).is_empty())
         .take(n / 4)
         .map(|u| (u, g.out_neighbors(u)[0]))
         .collect();
-    let dec = init_decode_params(&engine.runtime, 9)?;
+    let dec = init_decode_params(&stack.engine.runtime, 9)?;
     let t = Timer::start();
-    let (scores_lw, _) = engine.run_link_prediction(&h, &edges, &dec)?;
+    let (scores_lw, _) = stack.engine.run_link_prediction(&h, &edges, &dec)?;
     let lw_lp = t.secs();
-    let t = Timer::start();
-    let (scores_sw, swrep2) = sw.run_link_prediction(&edges, &dec)?;
-    let sw_lp = t.secs();
     println!(
         "[layerwise ] link prediction {lw_lp:>7.2}s over {} edges",
         edges.len()
     );
-    println!(
-        "[samplewise] link prediction {sw_lp:>7.2}s  computations={}",
-        swrep2.vertices_computed
-    );
-    println!("=> link-prediction speedup {:.2}x wall", sw_lp / lw_lp);
-    // Scores from both paths are probabilities on the same edges.
-    assert_eq!(scores_lw.len(), scores_sw.len());
+    assert!(scores_lw.iter().all(|&s| (0.0..=1.0).contains(&s)));
+    if let Some(sw) = sw.as_mut() {
+        let t = Timer::start();
+        let (scores_sw, swrep2) = sw.run_link_prediction(&edges, &dec)?;
+        let sw_lp = t.secs();
+        println!(
+            "[samplewise] link prediction {sw_lp:>7.2}s  computations={}",
+            swrep2.vertices_computed
+        );
+        println!("=> link-prediction speedup {:.2}x wall", sw_lp / lw_lp);
+        // Scores from both paths are probabilities on the same edges.
+        assert_eq!(scores_lw.len(), scores_sw.len());
+    }
     Ok(())
 }

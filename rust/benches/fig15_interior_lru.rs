@@ -65,14 +65,14 @@ fn main() -> anyhow::Result<()> {
         for &v in &order {
             let c = rank[v as usize] as usize / chunk_size;
             if cache.get(c).is_none() {
-                cache.insert(c, Vec::new());
+                cache.insert(c, std::sync::Arc::new(Vec::new()));
             }
             let nbrs = g.out_neighbors(v);
             for _ in 0..nbrs.len().min(10) {
                 let nb = nbrs[rng.usize(nbrs.len())];
                 let c = rank[nb as usize] as usize / chunk_size;
                 if cache.get(c).is_none() {
-                    cache.insert(c, Vec::new());
+                    cache.insert(c, std::sync::Arc::new(Vec::new()));
                 }
             }
         }

@@ -3,15 +3,12 @@
 //!
 //! The engine accounts both as wall time and as virtual IO cost; both are
 //! reported (wall time on CPU-PJRT under-weights the paper's GPU compute,
-//! so the virtual-cost column is the transferable one).
+//! so the virtual-cost column is the transferable one). Since the
+//! worker-parallel sweep, the report also breaks fill/model down per
+//! worker — the per-partition rows below are the Table V accounting.
 
-use glisp::coordinator::FeatureStore;
-use glisp::graph::generator;
-use glisp::harness::{f2, Table};
-use glisp::inference::{init_decode_params, init_encoder_params, EngineConfig, LayerwiseEngine};
-use glisp::partition::{AdaDNE, Partitioner};
-use glisp::runtime::Runtime;
-use glisp::util::rng::Rng;
+use glisp::harness::{f2, f3, infer_stack, Table};
+use glisp::inference::{init_decode_params, EngineConfig};
 
 fn main() -> anyhow::Result<()> {
     let art = glisp::test_artifacts_dir();
@@ -20,26 +17,15 @@ fn main() -> anyhow::Result<()> {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(6_000usize);
-    let mut rng = Rng::new(1);
-    let g = generator::chung_lu(n, n * 7, 2.1, &mut rng);
-    let ea = AdaDNE::default().partition(&g, 4, 1);
+    let parts = 4usize;
+    let work = std::env::temp_dir().join("glisp_table5");
+    let mut stack = infer_stack(n, parts, &art, work, EngineConfig::default())?;
 
     let mut t = Table::new(
-        &format!("n={n}, 4 workers"),
+        &format!("n={n}, {parts} workers"),
         &["task", "fill chunks", "fill cost", "model secs", "fill secs", "fill/model wall"],
     );
-    let work = std::env::temp_dir().join("glisp_table5");
-    let _ = std::fs::remove_dir_all(&work);
-    let runtime = Runtime::load(&art)?;
-    let enc = init_encoder_params(&runtime, 3)?;
-    let mut engine = LayerwiseEngine::new(
-        &g, &ea, runtime,
-        FeatureStore::unlabeled(64),
-        enc,
-        EngineConfig::default(),
-        work,
-    )?;
-    let (h, rep) = engine.run_vertex_embedding()?;
+    let (h, rep) = stack.engine.run_vertex_embedding()?;
     t.row(&[
         "vertex embedding".into(),
         format!("{}", rep.fill_chunks),
@@ -48,13 +34,13 @@ fn main() -> anyhow::Result<()> {
         f2(rep.fill_secs),
         f2(rep.fill_secs / rep.model_secs.max(1e-9)),
     ]);
-    let dec = init_decode_params(&engine.runtime, 9)?;
-    let edges: Vec<(u32, u32)> = (0..g.n as u32)
-        .filter(|&u| !g.out_neighbors(u).is_empty())
+    let dec = init_decode_params(&stack.engine.runtime, 9)?;
+    let edges: Vec<(u32, u32)> = (0..stack.g.n as u32)
+        .filter(|&u| !stack.g.out_neighbors(u).is_empty())
         .take(n / 2)
-        .map(|u| (u, g.out_neighbors(u)[0]))
+        .map(|u| (u, stack.g.out_neighbors(u)[0]))
         .collect();
-    let (_, rep_l) = engine.run_link_prediction(&h, &edges, &dec)?;
+    let (_, rep_l) = stack.engine.run_link_prediction(&h, &edges, &dec)?;
     t.row(&[
         "link prediction".into(),
         format!("{}", rep_l.fill_chunks),
@@ -64,6 +50,27 @@ fn main() -> anyhow::Result<()> {
         f2(rep_l.fill_secs / rep_l.model_secs.max(1e-9)),
     ]);
     t.print();
+
+    // Per-worker breakdown of the vertex-embedding run (fills sum to the
+    // aggregate row above — asserted so the accounting cannot drift).
+    let mut pw = Table::new(
+        "vertex embedding, per worker (summed over K slices)",
+        &["worker", "vertices", "fill chunks", "fill cost", "model secs", "dyn hit ratio"],
+    );
+    for w in rep.workers.iter().filter(|w| w.vertices_computed > 0) {
+        pw.row(&[
+            format!("{}", w.worker),
+            format!("{}", w.vertices_computed),
+            format!("{}", w.fill_chunks),
+            format!("{}", w.fill_cost),
+            f2(w.model_secs),
+            f3(w.dynamic_hit_ratio()),
+        ]);
+    }
+    pw.print();
+    let fill_sum: u64 = rep.workers.iter().map(|w| w.fill_chunks).sum();
+    assert_eq!(fill_sum, rep.fill_chunks, "per-worker fills must sum to the total");
+
     println!("\npaper Table V: fill 3251s vs model 59987s (vertex embedding) and");
     println!("5635s vs 61760s (link prediction) — fill < 10% of model time.");
     Ok(())

@@ -9,7 +9,9 @@ use std::sync::Arc;
 use crate::coordinator::{Batcher, FeatureStore, Trainer, TrainerConfig};
 use crate::graph::csr::Graph;
 use crate::graph::generator::{self, DatasetSpec, GenKind};
-use crate::partition::{AdaDNE, Partitioner};
+use crate::inference::{init_encoder_params, EngineConfig, LayerwiseEngine};
+use crate::partition::{AdaDNE, EdgeAssignment, Partitioner};
+use crate::runtime::Runtime;
 use crate::sampling::SamplingService;
 use crate::util::rng::Rng;
 
@@ -93,9 +95,64 @@ pub fn train_stack(
     })
 }
 
+/// A full layerwise-inference stack over a chung_lu power-law graph:
+/// AdaDNE partition → K-layer runtime (`cfg.layers`) → engine. Shared by
+/// the fig13/table5 benches and the inference example so every inference
+/// experiment wires the same stack; adopt it in new inference benches.
+pub struct InferStack {
+    pub g: Graph,
+    pub ea: EdgeAssignment,
+    pub engine: LayerwiseEngine,
+}
+
+pub fn infer_stack(
+    n: usize,
+    parts: usize,
+    artifacts: &std::path::Path,
+    work_dir: std::path::PathBuf,
+    cfg: EngineConfig,
+) -> anyhow::Result<InferStack> {
+    let mut rng = Rng::new(1);
+    let g = generator::chung_lu(n, n * 7, 2.1, &mut rng);
+    let ea = AdaDNE::default().partition(&g, parts, 1);
+    let _ = std::fs::remove_dir_all(&work_dir);
+    let runtime = Runtime::load_with_layers(artifacts, cfg.layers)?;
+    let enc = init_encoder_params(&runtime, 3)?;
+    let engine = LayerwiseEngine::new(
+        &g,
+        &ea,
+        runtime,
+        FeatureStore::unlabeled(64),
+        enc,
+        cfg,
+        work_dir,
+    )?;
+    Ok(InferStack { g, ea, engine })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn infer_stack_wires_a_runnable_engine() {
+        let dir = std::env::temp_dir().join("glisp_infer_stack_test");
+        let mut stack = infer_stack(
+            1200,
+            3,
+            &crate::test_artifacts_dir(),
+            dir,
+            EngineConfig {
+                layers: 3,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let (h, rep) = stack.engine.run_vertex_embedding().unwrap();
+        assert_eq!(h.len(), stack.g.n * 128);
+        assert_eq!(rep.vertices_computed, 3 * stack.g.n as u64);
+        assert_eq!(stack.ea.num_parts, 3);
+    }
 
     #[test]
     fn suite_has_expected_regimes() {

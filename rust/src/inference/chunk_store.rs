@@ -4,6 +4,11 @@
 //! *virtual cost* (remote ≫ local-disk ≫ memory) so the Fig. 14 cache
 //! speedups are measured as cost ratios instead of sleeping on fake
 //! network latency (DESIGN.md §3).
+//!
+//! Stats are atomic so one store can be read concurrently by the
+//! engine's per-partition worker threads (each behind its own
+//! `CacheSystem`, which hands chunks out as shared `Arc` allocations);
+//! writes happen only between layer slices, on the engine's barrier.
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};

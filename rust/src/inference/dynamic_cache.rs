@@ -1,8 +1,13 @@
 //! Second-level dynamic in-memory chunk cache (paper §III-D): absorbs the
 //! repeated reads layerwise inference converts recomputation into. FIFO or
 //! LRU eviction; the paper measures both (Fig. 15b) and ships FIFO.
+//!
+//! Chunks are held as `Arc<Vec<f32>>` so a hit hands out a reference to
+//! the cached allocation instead of cloning the whole `[chunk_size, dim]`
+//! buffer — the engine's `BlockReader` pays zero copies per dynamic hit.
 
 use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EvictPolicy {
@@ -13,7 +18,7 @@ pub enum EvictPolicy {
 pub struct DynamicCache {
     capacity: usize,
     policy: EvictPolicy,
-    map: HashMap<usize, Vec<f32>>,
+    map: HashMap<usize, Arc<Vec<f32>>>,
     /// FIFO: insertion order. LRU: recency order (front = oldest).
     queue: VecDeque<usize>,
     pub hits: u64,
@@ -40,7 +45,7 @@ impl DynamicCache {
         self.map.is_empty()
     }
 
-    pub fn get(&mut self, chunk: usize) -> Option<&Vec<f32>> {
+    pub fn get(&mut self, chunk: usize) -> Option<&Arc<Vec<f32>>> {
         if self.map.contains_key(&chunk) {
             self.hits += 1;
             if self.policy == EvictPolicy::Lru {
@@ -58,7 +63,7 @@ impl DynamicCache {
         }
     }
 
-    pub fn insert(&mut self, chunk: usize, data: Vec<f32>) {
+    pub fn insert(&mut self, chunk: usize, data: Arc<Vec<f32>>) {
         if self.map.contains_key(&chunk) {
             return;
         }
@@ -93,10 +98,10 @@ mod tests {
     #[test]
     fn fifo_evicts_insertion_order() {
         let mut c = DynamicCache::new(2, EvictPolicy::Fifo);
-        c.insert(1, vec![1.0]);
-        c.insert(2, vec![2.0]);
+        c.insert(1, Arc::new(vec![1.0]));
+        c.insert(2, Arc::new(vec![2.0]));
         assert!(c.get(1).is_some()); // access does not protect under FIFO
-        c.insert(3, vec![3.0]); // evicts 1
+        c.insert(3, Arc::new(vec![3.0])); // evicts 1
         assert!(c.get(1).is_none());
         assert!(c.get(2).is_some());
         assert!(c.get(3).is_some());
@@ -105,10 +110,10 @@ mod tests {
     #[test]
     fn lru_protects_recently_used() {
         let mut c = DynamicCache::new(2, EvictPolicy::Lru);
-        c.insert(1, vec![1.0]);
-        c.insert(2, vec![2.0]);
+        c.insert(1, Arc::new(vec![1.0]));
+        c.insert(2, Arc::new(vec![2.0]));
         assert!(c.get(1).is_some()); // 1 becomes most recent
-        c.insert(3, vec![3.0]); // evicts 2
+        c.insert(3, Arc::new(vec![3.0])); // evicts 2
         assert!(c.get(1).is_some());
         assert!(c.get(2).is_none());
     }
@@ -116,7 +121,7 @@ mod tests {
     #[test]
     fn hit_ratio_counts() {
         let mut c = DynamicCache::new(4, EvictPolicy::Fifo);
-        c.insert(0, vec![]);
+        c.insert(0, Arc::new(vec![]));
         c.get(0);
         c.get(9);
         assert_eq!(c.hits, 1);
@@ -128,7 +133,7 @@ mod tests {
     fn capacity_bound_holds() {
         let mut c = DynamicCache::new(3, EvictPolicy::Fifo);
         for i in 0..100 {
-            c.insert(i, vec![i as f32]);
+            c.insert(i, Arc::new(vec![i as f32]));
             assert!(c.len() <= 3);
         }
     }
@@ -136,8 +141,8 @@ mod tests {
     #[test]
     fn duplicate_insert_is_noop() {
         let mut c = DynamicCache::new(2, EvictPolicy::Fifo);
-        c.insert(1, vec![1.0]);
-        c.insert(1, vec![9.0]);
+        c.insert(1, Arc::new(vec![1.0]));
+        c.insert(1, Arc::new(vec![9.0]));
         assert_eq!(c.get(1).unwrap()[0], 1.0);
         assert_eq!(c.len(), 1);
     }

@@ -4,14 +4,23 @@
 //! caching system and writing the next layer's chunks — eliminating the
 //! K-hop recomputation of samplewise inference entirely.
 //!
-//! Workload allocation follows the partitioner (one worker per partition);
-//! cache-local vertex ids come from the configured reorder algorithm
+//! Workload allocation follows the partitioner (one worker per partition),
+//! and the partition sweeps of a slice run **concurrently** on scoped
+//! worker threads: each worker owns a split [`Runtime`] handle and its own
+//! [`CacheSystem`] over the shared (read-only, atomically-counted) input
+//! [`ChunkStore`], and computes a disjoint set of output rows. A layer
+//! barrier joins all workers before the next slice's input chunks are
+//! published, so every slice reads a fully-materialized store — the
+//! parallel sweep is bit-identical to the sequential one (DESIGN.md §8).
+//!
+//! Cache-local vertex ids come from the configured reorder algorithm
 //! (PDS by default). Chunk reads/costs per tier are accounted in the
 //! store stats (Fig. 14); the static fill is accounted per worker
-//! (Table V).
+//! (Table V, [`WorkerReport`]).
 
 use anyhow::{Context, Result};
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use crate::coordinator::features::FeatureStore;
 use crate::graph::csr::{Graph, VId};
@@ -23,10 +32,20 @@ use crate::partition::{primary_partition, EdgeAssignment};
 use crate::runtime::tensor::HostTensor;
 use crate::runtime::Runtime;
 use crate::sampling::algo_d;
+use crate::sampling::request::PAD;
 use crate::util::rng::Rng;
+use crate::util::timer::Timer;
 
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
+    /// GNN depth K: the engine runs one slice per layer, resolving
+    /// `sage_infer_layer{0..K}` from the manifest (which must carry the
+    /// same depth — see `Runtime::load_with_layers`).
+    pub layers: usize,
+    /// Run each slice's partition sweeps on scoped worker threads (one
+    /// per partition). Falls back to the sequential sweep when the
+    /// backend cannot split; output is bit-identical either way.
+    pub parallel: bool,
     /// Embedding rows per DFS chunk.
     pub chunk_size: usize,
     /// Fraction of a worker's chunks held by the dynamic cache.
@@ -39,6 +58,8 @@ pub struct EngineConfig {
 impl Default for EngineConfig {
     fn default() -> Self {
         Self {
+            layers: 2,
+            parallel: true,
             // The paper uses 32768-row chunks on 10^9-vertex graphs; 128
             // keeps the chunks-per-graph ratio comparable at bench scale.
             chunk_size: 128,
@@ -54,10 +75,11 @@ impl Default for EngineConfig {
 /// (§Perf). Embedding IO is chunk-granular (Zarr semantics), so each block
 /// takes one cache round-trip per *distinct chunk*, not per row — this
 /// replaced per-row reads in the perf pass (EXPERIMENTS.md §Perf, ~4×).
+/// Memoized chunks share the cache's `Arc` allocation (no copies).
 struct BlockReader<'a> {
     cache: &'a mut CacheSystem,
     store: &'a ChunkStore,
-    memo: std::collections::HashMap<usize, Vec<f32>>,
+    memo: std::collections::HashMap<usize, Arc<Vec<f32>>>,
 }
 
 impl<'a> BlockReader<'a> {
@@ -87,6 +109,45 @@ impl<'a> BlockReader<'a> {
     }
 }
 
+/// Per-worker accounting of one engine run (the Table V breakdown):
+/// static-fill and model-execution costs plus the worker's dynamic-cache
+/// behavior, summed across the K slices its thread executed.
+#[derive(Clone, Debug, Default)]
+pub struct WorkerReport {
+    pub worker: usize,
+    pub vertices_computed: u64,
+    pub fill_chunks: u64,
+    pub fill_cost: u64,
+    pub fill_secs: f64,
+    pub model_secs: f64,
+    /// Chunk-granular dynamic-cache hits/misses of this worker's own
+    /// [`CacheSystem`] (block-memo row reuse is counted in the shared
+    /// store stats, not here).
+    pub dynamic_hits: u64,
+    pub dynamic_misses: u64,
+}
+
+impl WorkerReport {
+    pub fn dynamic_hit_ratio(&self) -> f64 {
+        let total = self.dynamic_hits + self.dynamic_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.dynamic_hits as f64 / total as f64
+        }
+    }
+
+    fn merge(&mut self, other: &WorkerReport) {
+        self.vertices_computed += other.vertices_computed;
+        self.fill_chunks += other.fill_chunks;
+        self.fill_cost += other.fill_cost;
+        self.fill_secs += other.fill_secs;
+        self.model_secs += other.model_secs;
+        self.dynamic_hits += other.dynamic_hits;
+        self.dynamic_misses += other.dynamic_misses;
+    }
+}
+
 #[derive(Clone, Debug, Default)]
 pub struct EngineReport {
     pub chunk_reads: u64,
@@ -94,17 +155,151 @@ pub struct EngineReport {
     pub virtual_cost: u64,
     pub fill_cost: u64,
     pub fill_chunks: u64,
+    /// Summed across workers (worker-seconds, not wall time).
     pub fill_secs: f64,
+    /// Summed across workers (worker-seconds, not wall time).
     pub model_secs: f64,
     pub dynamic_hit_ratio: f64,
     /// Vertex-layer computations performed (the redundancy metric).
     pub vertices_computed: u64,
+    /// Per-worker breakdown (empty for link prediction, which runs a
+    /// single reader over the final store).
+    pub workers: Vec<WorkerReport>,
+}
+
+impl EngineReport {
+    fn absorb(&mut self, rep: &WorkerReport) {
+        self.fill_cost += rep.fill_cost;
+        self.fill_chunks += rep.fill_chunks;
+        self.fill_secs += rep.fill_secs;
+        self.model_secs += rep.model_secs;
+        self.vertices_computed += rep.vertices_computed;
+        self.workers[rep.worker].merge(rep);
+    }
+}
+
+/// One worker's finished slice sweep.
+struct WorkerOutput {
+    worker: usize,
+    /// `[verts.len(), hidden]` output rows in worker-vertex order; the
+    /// caller scatters them into the rank-indexed output buffer (workers
+    /// own disjoint vertex sets, so the scatter targets are disjoint).
+    local: Vec<f32>,
+    rep: WorkerReport,
+}
+
+/// Chunks a worker's slice reads: its vertices plus their pre-sampled
+/// neighbors — the static cache contents (Table V "fill cache" set).
+fn worker_chunk_set(
+    verts: &[VId],
+    store: &ChunkStore,
+    rank: &[u32],
+    nbrs: &[VId],
+    fanout: usize,
+) -> Vec<usize> {
+    let mut set = crate::util::bitset::BitSet::new(store.num_chunks);
+    for &v in verts {
+        set.set(store.chunk_of_row(rank[v as usize] as usize));
+        for s in 0..fanout {
+            let nb = nbrs[v as usize * fanout + s];
+            if nb != PAD {
+                set.set(store.chunk_of_row(rank[nb as usize] as usize));
+            }
+        }
+    }
+    set.iter_ones().collect()
+}
+
+/// One partition sweep of one slice: fill the worker's static cache, then
+/// execute the slice artifact block by block. Pure function of the shared
+/// read-only state — the parallel and sequential paths both call this, so
+/// their outputs agree bit-for-bit by construction.
+#[allow(clippy::too_many_arguments)]
+fn sweep_worker(
+    runtime: &mut Runtime,
+    cfg: &EngineConfig,
+    artifact: &str,
+    worker: usize,
+    verts: &[VId],
+    in_store: &ChunkStore,
+    in_dim: usize,
+    rank: &[u32],
+    nbrs: &[VId],
+    fanout: usize,
+    block_rows: usize,
+    hidden: usize,
+    params: &[HostTensor],
+) -> Result<WorkerOutput> {
+    let mut rep = WorkerReport {
+        worker,
+        ..Default::default()
+    };
+
+    // Static cache fill (Table V): the worker's chunk set. The dynamic
+    // cache holds 10% of the worker's chunks (paper §IV-E), floored so it
+    // is non-degenerate at bench scale.
+    let t_fill = Timer::start();
+    let worker_chunks = worker_chunk_set(verts, in_store, rank, nbrs, fanout);
+    let dyn_cap = ((worker_chunks.len() as f64 * cfg.dyn_cache_frac).ceil() as usize).max(4);
+    let mut cache = CacheSystem::new(in_store.num_chunks, dyn_cap, cfg.policy);
+    cache.fill_static(worker_chunks.into_iter());
+    rep.fill_cost = cache.fill_cost;
+    rep.fill_chunks = cache.fill_chunks;
+    rep.fill_secs = t_fill.secs();
+
+    let t_model = Timer::start();
+    let mut local = vec![0f32; verts.len() * hidden];
+    for (bi, block) in verts.chunks(block_rows).enumerate() {
+        // Tail blocks execute at their true size (`execute_rows`), not
+        // zero-padded to `block_rows`: no garbage rows through the
+        // masked-mean aggregation, no wasted tail compute.
+        let rows = block.len();
+        let mut h_self = vec![0f32; rows * in_dim];
+        let mut h_neigh = vec![0f32; rows * fanout * in_dim];
+        let mut mask = vec![0f32; rows * fanout];
+        let mut reader = BlockReader::new(&mut cache, in_store);
+        for (i, &v) in block.iter().enumerate() {
+            reader.row(
+                rank[v as usize] as usize,
+                &mut h_self[i * in_dim..(i + 1) * in_dim],
+            )?;
+            for s in 0..fanout {
+                let nb = nbrs[v as usize * fanout + s];
+                if nb != PAD {
+                    let off = (i * fanout + s) * in_dim;
+                    reader.row(rank[nb as usize] as usize, &mut h_neigh[off..off + in_dim])?;
+                    mask[i * fanout + s] = 1.0;
+                }
+            }
+        }
+        drop(reader);
+        let mut inputs = vec![
+            HostTensor::f32(vec![rows, in_dim], h_self),
+            HostTensor::f32(vec![rows, fanout, in_dim], h_neigh),
+            HostTensor::f32(vec![rows, fanout], mask),
+        ];
+        inputs.extend(params.iter().cloned());
+        // First 3 inputs (h_self, h_neigh, mask) are row-shaped.
+        let out = runtime.execute_rows(artifact, rows, 3, &inputs)?;
+        local[bi * block_rows * hidden..][..rows * hidden]
+            .copy_from_slice(&out[0].as_f32()[..rows * hidden]);
+        rep.vertices_computed += rows as u64;
+    }
+    rep.model_secs = t_model.secs();
+    let (hits, misses) = cache.dynamic_counts();
+    rep.dynamic_hits = hits;
+    rep.dynamic_misses = misses;
+    Ok(WorkerOutput {
+        worker,
+        local,
+        rep,
+    })
 }
 
 pub struct LayerwiseEngine {
     pub runtime: Runtime,
     pub features: FeatureStore,
-    /// 2-layer SAGE encoder params: [w_self, w_neigh, b] × 2.
+    /// K-layer SAGE encoder params: [w_self, w_neigh, b] × K.
     pub enc_params: Vec<HostTensor>,
     pub cfg: EngineConfig,
     // Geometry from the artifacts.
@@ -132,12 +327,42 @@ impl LayerwiseEngine {
         cfg: EngineConfig,
         work_dir: PathBuf,
     ) -> Result<Self> {
+        anyhow::ensure!(cfg.layers >= 1, "engine needs at least one layer");
+        let manifest_k = runtime.manifest.infer_layers();
+        anyhow::ensure!(
+            manifest_k == cfg.layers,
+            "EngineConfig.layers = {} but the manifest carries a {manifest_k}-layer \
+             inference encoder (load with Runtime::load_with_layers(dir, {}))",
+            cfg.layers,
+            cfg.layers
+        );
         let l0 = runtime.spec("sage_infer_layer0")?;
         let block = l0.meta_usize("chunk").context("meta.chunk")?;
         let fanout = l0.meta_usize("fanout").context("meta.fanout")?;
-        let l1 = runtime.spec("sage_infer_layer1")?;
-        let hidden = l1.meta_usize("dout").context("meta.dout")?;
-        anyhow::ensure!(enc_params.len() == 6, "encoder wants 6 param tensors");
+        let hidden = l0.meta_usize("dout").context("meta.dout")?;
+        for layer in 1..cfg.layers {
+            let spec = runtime.spec(&format!("sage_infer_layer{layer}"))?;
+            anyhow::ensure!(
+                spec.meta_usize("chunk") == Some(block)
+                    && spec.meta_usize("fanout") == Some(fanout),
+                "sage_infer_layer{layer}: block/fanout geometry differs from layer 0"
+            );
+            let din = spec.meta_usize("din").context("meta.din")?;
+            let dout = spec.meta_usize("dout").context("meta.dout")?;
+            // The output buffer, the layer_h{k} stores and the scatter
+            // slices all assume one uniform hidden width across slices.
+            anyhow::ensure!(
+                din == hidden && dout == hidden,
+                "sage_infer_layer{layer}: din {din}/dout {dout} != uniform hidden {hidden}"
+            );
+        }
+        anyhow::ensure!(
+            enc_params.len() == 3 * cfg.layers,
+            "encoder wants {} param tensors for {} layers, got {}",
+            3 * cfg.layers,
+            cfg.layers,
+            enc_params.len()
+        );
 
         let part_of = primary_partition(g, ea);
         let order = reorder(g, cfg.reorder, &part_of);
@@ -146,7 +371,7 @@ impl LayerwiseEngine {
         // Pre-sample one-hop neighbors once (paper: "precompute the one hop
         // sampled neighbors"); uniform Algorithm D, PAD-padded.
         let mut rng = Rng::new(cfg.seed);
-        let mut nbrs = vec![crate::sampling::request::PAD; g.n * fanout];
+        let mut nbrs = vec![PAD; g.n * fanout];
         for v in 0..g.n {
             let cand = g.out_neighbors(v as VId);
             if cand.is_empty() {
@@ -182,10 +407,6 @@ impl LayerwiseEngine {
         })
     }
 
-    fn layer_params(&self, layer: usize) -> &[HostTensor] {
-        &self.enc_params[layer * 3..layer * 3 + 3]
-    }
-
     /// Worker w's vertices in rank order.
     fn worker_vertices(&self, w: usize) -> Vec<VId> {
         self.order
@@ -193,22 +414,6 @@ impl LayerwiseEngine {
             .copied()
             .filter(|&v| self.part_of[v as usize] as usize == w)
             .collect()
-    }
-
-    /// Chunks worker w's layer reads touch: its vertices + their sampled
-    /// neighbors (the static cache contents).
-    fn worker_chunks(&self, verts: &[VId], store: &ChunkStore) -> Vec<usize> {
-        let mut set = crate::util::bitset::BitSet::new(store.num_chunks);
-        for &v in verts {
-            set.set(store.chunk_of_row(self.rank[v as usize] as usize));
-            for s in 0..self.fanout {
-                let nb = self.nbrs[v as usize * self.fanout + s];
-                if nb != crate::sampling::request::PAD {
-                    set.set(store.chunk_of_row(self.rank[nb as usize] as usize));
-                }
-            }
-        }
-        set.iter_ones().collect()
     }
 
     fn write_all_chunks(&self, store: &ChunkStore, data: &[f32]) -> Result<()> {
@@ -221,11 +426,103 @@ impl LayerwiseEngine {
         Ok(())
     }
 
+    /// One slice's partition sweeps: concurrently on scoped worker threads
+    /// when the backend splits (each worker moves its own `Runtime` handle
+    /// and builds its own `CacheSystem`), sequentially otherwise. Workers
+    /// are joined before this returns — the layer barrier.
+    #[allow(clippy::too_many_arguments)]
+    fn sweep_layer(
+        runtime: &mut Runtime,
+        cfg: &EngineConfig,
+        artifact: &str,
+        params: &[HostTensor],
+        worker_verts: &[Vec<VId>],
+        in_store: &ChunkStore,
+        in_dim: usize,
+        rank: &[u32],
+        nbrs: &[VId],
+        fanout: usize,
+        block: usize,
+        hidden: usize,
+    ) -> Result<Vec<WorkerOutput>> {
+        let active: Vec<usize> = (0..worker_verts.len())
+            .filter(|&w| !worker_verts[w].is_empty())
+            .collect();
+
+        // One split runtime per worker, or a sequential fallback when the
+        // backend cannot be shared (or there is nothing to overlap).
+        let split_runtimes: Option<Vec<Runtime>> = if cfg.parallel && active.len() > 1 {
+            let handles: Vec<Runtime> = active.iter().filter_map(|_| runtime.split()).collect();
+            (handles.len() == active.len()).then_some(handles)
+        } else {
+            None
+        };
+
+        let Some(runtimes) = split_runtimes else {
+            let mut outs = Vec::with_capacity(active.len());
+            for &w in &active {
+                outs.push(sweep_worker(
+                    runtime,
+                    cfg,
+                    artifact,
+                    w,
+                    &worker_verts[w],
+                    in_store,
+                    in_dim,
+                    rank,
+                    nbrs,
+                    fanout,
+                    block,
+                    hidden,
+                    params,
+                )?);
+            }
+            return Ok(outs);
+        };
+
+        std::thread::scope(|s| -> Result<Vec<WorkerOutput>> {
+            let mut handles = Vec::with_capacity(active.len());
+            for (mut rt, &w) in runtimes.into_iter().zip(&active) {
+                let verts = worker_verts[w].as_slice();
+                handles.push(s.spawn(move || -> Result<(WorkerOutput, u64)> {
+                    let out = sweep_worker(
+                        &mut rt, cfg, artifact, w, verts, in_store, in_dim, rank, nbrs,
+                        fanout, block, hidden, params,
+                    )?;
+                    let execs = rt.executions.load(std::sync::atomic::Ordering::Relaxed);
+                    Ok((out, execs))
+                }));
+            }
+            let mut outs = Vec::with_capacity(handles.len());
+            for h in handles {
+                let (out, execs) = h
+                    .join()
+                    .map_err(|_| anyhow::anyhow!("inference worker thread panicked"))??;
+                // Fold the split handle's execution count back into the
+                // engine's runtime for accounting.
+                runtime
+                    .executions
+                    .fetch_add(execs, std::sync::atomic::Ordering::Relaxed);
+                outs.push(out);
+            }
+            Ok(outs)
+        })
+    }
+
     /// Full-graph vertex-embedding inference. Returns (final embeddings
     /// indexed by RANK, report).
     pub fn run_vertex_embedding(&mut self) -> Result<(Vec<f32>, EngineReport)> {
-        let mut report = EngineReport::default();
+        let mut report = EngineReport {
+            workers: (0..self.num_parts)
+                .map(|w| WorkerReport {
+                    worker: w,
+                    ..Default::default()
+                })
+                .collect(),
+            ..Default::default()
+        };
         let din = self.features.din;
+        let k_layers = self.cfg.layers;
 
         // Layer-0 input store: features by rank, on "DFS".
         let f_store = ChunkStore::create(
@@ -241,91 +538,65 @@ impl LayerwiseEngine {
         self.write_all_chunks(&f_store, &feats_by_rank)?;
         drop(feats_by_rank);
 
-        let h1_store = ChunkStore::create(
-            self.work_dir.join("layer_h1"),
-            self.n,
-            self.cfg.chunk_size,
-            self.hidden,
-        )?;
+        // One intermediate store per slice boundary: `layer_h{k}` holds
+        // the activations entering slice k.
+        let h_stores: Vec<ChunkStore> = (1..k_layers)
+            .map(|k| {
+                ChunkStore::create(
+                    self.work_dir.join(format!("layer_h{k}")),
+                    self.n,
+                    self.cfg.chunk_size,
+                    self.hidden,
+                )
+            })
+            .collect::<Result<Vec<_>>>()?;
 
-        // ---- slice 0: features -> h1, slice 1: h1 -> h2 ----
+        // Worker partitions are fixed across slices.
+        let worker_verts: Vec<Vec<VId>> =
+            (0..self.num_parts).map(|w| self.worker_vertices(w)).collect();
+
         let mut h_out = vec![0f32; self.n * self.hidden];
-        for layer in 0..2 {
+        for layer in 0..k_layers {
             let (in_store, in_dim): (&ChunkStore, usize) = if layer == 0 {
                 (&f_store, din)
             } else {
-                (&h1_store, self.hidden)
+                (&h_stores[layer - 1], self.hidden)
             };
             let artifact = format!("sage_infer_layer{layer}");
-            for w in 0..self.num_parts {
-                let verts = self.worker_vertices(w);
-                if verts.is_empty() {
-                    continue;
+            let outputs = Self::sweep_layer(
+                &mut self.runtime,
+                &self.cfg,
+                &artifact,
+                &self.enc_params[layer * 3..layer * 3 + 3],
+                &worker_verts,
+                in_store,
+                in_dim,
+                &self.rank,
+                &self.nbrs,
+                self.fanout,
+                self.block,
+                self.hidden,
+            )?;
+            for out in &outputs {
+                // Scatter the worker's rows into the rank-indexed output;
+                // partitions are disjoint, so no row is written twice.
+                for (i, &v) in worker_verts[out.worker].iter().enumerate() {
+                    let r = self.rank[v as usize] as usize;
+                    h_out[r * self.hidden..(r + 1) * self.hidden]
+                        .copy_from_slice(&out.local[i * self.hidden..(i + 1) * self.hidden]);
                 }
-                // Static cache fill (Table V): the worker's chunk set. The
-                // dynamic cache holds 10% of the worker's chunks (paper
-                // §IV-E), floored so it is non-degenerate at bench scale.
-                let t_fill = crate::util::timer::Timer::start();
-                let worker_chunks = self.worker_chunks(&verts, in_store);
-                let dyn_cap = ((worker_chunks.len() as f64 * self.cfg.dyn_cache_frac)
-                    .ceil() as usize)
-                    .max(4);
-                let mut cache =
-                    CacheSystem::new(in_store.num_chunks, dyn_cap, self.cfg.policy);
-                cache.fill_static(worker_chunks.into_iter());
-                report.fill_cost += cache.fill_cost;
-                report.fill_chunks += cache.fill_chunks;
-                report.fill_secs += t_fill.secs();
-
-                let t_model = crate::util::timer::Timer::start();
-                for block in verts.chunks(self.block) {
-                    let mut h_self = vec![0f32; self.block * in_dim];
-                    let mut h_neigh = vec![0f32; self.block * self.fanout * in_dim];
-                    let mut mask = vec![0f32; self.block * self.fanout];
-                    let mut reader = BlockReader::new(&mut cache, in_store);
-                    for (i, &v) in block.iter().enumerate() {
-                        reader.row(
-                            self.rank[v as usize] as usize,
-                            &mut h_self[i * in_dim..(i + 1) * in_dim],
-                        )?;
-                        for s in 0..self.fanout {
-                            let nb = self.nbrs[v as usize * self.fanout + s];
-                            if nb != crate::sampling::request::PAD {
-                                let off = (i * self.fanout + s) * in_dim;
-                                reader.row(
-                                    self.rank[nb as usize] as usize,
-                                    &mut h_neigh[off..off + in_dim],
-                                )?;
-                                mask[i * self.fanout + s] = 1.0;
-                            }
-                        }
-                    }
-                    drop(reader);
-                    let mut inputs = vec![
-                        HostTensor::f32(vec![self.block, in_dim], h_self),
-                        HostTensor::f32(vec![self.block, self.fanout, in_dim], h_neigh),
-                        HostTensor::f32(vec![self.block, self.fanout], mask),
-                    ];
-                    inputs.extend(self.layer_params(layer).iter().cloned());
-                    let out = self.runtime.execute(&artifact, &inputs)?;
-                    let data = out[0].as_f32();
-                    for (i, &v) in block.iter().enumerate() {
-                        let r = self.rank[v as usize] as usize;
-                        h_out[r * self.hidden..(r + 1) * self.hidden]
-                            .copy_from_slice(&data[i * self.hidden..(i + 1) * self.hidden]);
-                    }
-                    report.vertices_computed += block.len() as u64;
-                }
-                report.model_secs += t_model.secs();
-                report.dynamic_hit_ratio = cache.dynamic_hit_ratio();
+                report.absorb(&out.rep);
             }
-            if layer == 0 {
-                self.write_all_chunks(&h1_store, &h_out)?;
+            // Layer barrier: the next slice's input chunks are published
+            // only after every worker finished this slice.
+            if layer + 1 < k_layers {
+                self.write_all_chunks(&h_stores[layer], &h_out)?;
             }
         }
 
-        // Aggregate store stats (feature + h1 reads).
-        for st in [&f_store.stats, &h1_store.stats] {
+        // Aggregate store stats (feature + every intermediate layer).
+        for store in std::iter::once(&f_store).chain(h_stores.iter()) {
+            let st = &store.stats;
             report.chunk_reads += st.chunk_reads();
             report.dynamic_hits += st.dynamic_hits.load(std::sync::atomic::Ordering::Relaxed);
             report.virtual_cost += st.total_cost();
@@ -347,25 +618,26 @@ impl LayerwiseEngine {
         let spec = self.runtime.spec("link_decode")?;
         let b = spec.meta_usize("batch").context("meta.batch")?;
         // Final embeddings as a chunked store read through the cache.
-        let h2_store = ChunkStore::create(
-            self.work_dir.join("layer_h2"),
+        let h_store = ChunkStore::create(
+            self.work_dir.join(format!("layer_h{}", self.cfg.layers)),
             self.n,
             self.cfg.chunk_size,
             self.hidden,
         )?;
-        self.write_all_chunks(&h2_store, h_final)?;
-        let dyn_cap = ((h2_store.num_chunks as f64) * self.cfg.dyn_cache_frac).ceil() as usize;
-        let mut cache = CacheSystem::new(h2_store.num_chunks, dyn_cap.max(1), self.cfg.policy);
-        cache.fill_static(0..h2_store.num_chunks);
+        self.write_all_chunks(&h_store, h_final)?;
+        let dyn_cap = ((h_store.num_chunks as f64) * self.cfg.dyn_cache_frac).ceil() as usize;
+        let mut cache = CacheSystem::new(h_store.num_chunks, dyn_cap.max(1), self.cfg.policy);
+        cache.fill_static(0..h_store.num_chunks);
         report.fill_cost = cache.fill_cost;
         report.fill_chunks = cache.fill_chunks;
 
-        let t_model = crate::util::timer::Timer::start();
+        let t_model = Timer::start();
         let mut scores = Vec::with_capacity(edges.len());
         for chunk in edges.chunks(b) {
-            let mut u = vec![0f32; b * self.hidden];
-            let mut v = vec![0f32; b * self.hidden];
-            let mut reader = BlockReader::new(&mut cache, &h2_store);
+            let rows = chunk.len();
+            let mut u = vec![0f32; rows * self.hidden];
+            let mut v = vec![0f32; rows * self.hidden];
+            let mut reader = BlockReader::new(&mut cache, &h_store);
             for (i, &(a, bb)) in chunk.iter().enumerate() {
                 reader.row(
                     self.rank[a as usize] as usize,
@@ -378,20 +650,22 @@ impl LayerwiseEngine {
             }
             drop(reader);
             let mut inputs = vec![
-                HostTensor::f32(vec![b, self.hidden], u),
-                HostTensor::f32(vec![b, self.hidden], v),
+                HostTensor::f32(vec![rows, self.hidden], u),
+                HostTensor::f32(vec![rows, self.hidden], v),
             ];
             inputs.extend(decode_params.iter().cloned());
-            let out = self.runtime.execute("link_decode", &inputs)?;
-            scores.extend_from_slice(&out[0].as_f32()[..chunk.len()]);
+            // Tail chunks decode at their true size; only emb_u/emb_v are
+            // row-shaped (w1's leading dim collides with the batch size).
+            let out = self.runtime.execute_rows("link_decode", rows, 2, &inputs)?;
+            scores.extend_from_slice(out[0].as_f32());
         }
         report.model_secs = t_model.secs();
-        report.chunk_reads = h2_store.stats.chunk_reads();
-        report.dynamic_hits = h2_store
+        report.chunk_reads = h_store.stats.chunk_reads();
+        report.dynamic_hits = h_store
             .stats
             .dynamic_hits
             .load(std::sync::atomic::Ordering::Relaxed);
-        report.virtual_cost = h2_store.stats.total_cost();
+        report.virtual_cost = h_store.stats.total_cost();
         report.dynamic_hit_ratio =
             report.dynamic_hits as f64 / (report.dynamic_hits + report.chunk_reads).max(1) as f64;
         Ok((scores, report))
@@ -399,11 +673,15 @@ impl LayerwiseEngine {
 }
 
 /// Glorot-style encoder/decoder parameter construction shared by the
-/// engine, the samplewise baseline and the benches.
+/// engine, the samplewise baseline and the benches. Sizes itself from the
+/// manifest's inference-encoder depth (`Manifest::infer_layers`), so a
+/// K-layer runtime yields 3·K tensors.
 pub fn init_encoder_params(runtime: &Runtime, seed: u64) -> Result<Vec<HostTensor>> {
+    let layers = runtime.manifest.infer_layers();
+    anyhow::ensure!(layers >= 1, "manifest carries no sage_infer_layer artifacts");
     let mut rng = Rng::new(seed);
     let mut params = Vec::new();
-    for layer in 0..2 {
+    for layer in 0..layers {
         let spec = runtime.spec(&format!("sage_infer_layer{layer}"))?;
         // inputs: h_self, h_neigh, mask, w_self, w_neigh, b
         let store = crate::coordinator::params::ParamStore::init_glorot(
@@ -452,6 +730,33 @@ mod tests {
         .unwrap()
     }
 
+    /// Engine with an arbitrary depth/threading config over the K-layer
+    /// reference manifest.
+    fn engine_k(
+        g: &Graph,
+        ea: &EdgeAssignment,
+        dir: PathBuf,
+        layers: usize,
+        parallel: bool,
+    ) -> LayerwiseEngine {
+        let runtime = Runtime::load_with_layers(crate::test_artifacts_dir(), layers).unwrap();
+        let enc = init_encoder_params(&runtime, 3).unwrap();
+        LayerwiseEngine::new(
+            g,
+            ea,
+            runtime,
+            FeatureStore::unlabeled(64),
+            enc,
+            EngineConfig {
+                layers,
+                parallel,
+                ..Default::default()
+            },
+            dir,
+        )
+        .unwrap()
+    }
+
     #[test]
     fn vertex_embedding_covers_graph_once_per_layer() {
         let (g, ea, dir) = setup("cover");
@@ -474,6 +779,99 @@ mod tests {
         let all_remote = (report.chunk_reads + report.dynamic_hits)
             * crate::inference::chunk_store::COST_REMOTE;
         assert!(report.virtual_cost < all_remote / 2);
+    }
+
+    #[test]
+    fn parallel_sweep_is_bit_identical_to_sequential_at_k3() {
+        let mut rng = Rng::new(305);
+        let g = generator::chung_lu(2400, 16_000, 2.1, &mut rng);
+        let ea = AdaDNE::default().partition(&g, 3, 0);
+        let base = std::env::temp_dir().join("glisp_eng_k3");
+        let _ = std::fs::remove_dir_all(&base);
+        let mut par = engine_k(&g, &ea, base.join("par"), 3, true);
+        let (hp, rp) = par.run_vertex_embedding().unwrap();
+        let mut seq = engine_k(&g, &ea, base.join("seq"), 3, false);
+        let (hs, rs) = seq.run_vertex_embedding().unwrap();
+
+        assert_eq!(hp, hs, "worker-parallel sweep must be bit-identical");
+        assert!(hp.iter().all(|x| x.is_finite()));
+        assert_eq!(rp.vertices_computed, 3 * g.n as u64);
+        assert_eq!(rs.vertices_computed, rp.vertices_computed);
+
+        // Table V accounting survives the refactor: per-worker fills sum
+        // to the aggregate, identically in both modes.
+        let sum_par: u64 = rp.workers.iter().map(|w| w.fill_chunks).sum();
+        let sum_seq: u64 = rs.workers.iter().map(|w| w.fill_chunks).sum();
+        assert_eq!(sum_par, rp.fill_chunks);
+        assert_eq!(sum_seq, rs.fill_chunks);
+        assert_eq!(sum_par, sum_seq);
+        // All three partitions did real work and report their own ratios.
+        assert!(
+            rp.workers
+                .iter()
+                .filter(|w| w.vertices_computed > 0)
+                .count()
+                >= 3
+        );
+    }
+
+    #[test]
+    fn tail_blocks_match_dense_reference_forward() {
+        // Worker vertex counts are not multiples of the 256-row block:
+        // tail blocks must execute at their true size and still produce
+        // exactly the rows a dense full-graph forward produces.
+        let mut rng = Rng::new(306);
+        let g = generator::chung_lu(600, 4200, 2.1, &mut rng);
+        let ea = AdaDNE::default().partition(&g, 2, 0);
+        let dir = std::env::temp_dir().join("glisp_eng_tail");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut eng = engine(&g, &ea, dir);
+        let (h, _) = eng.run_vertex_embedding().unwrap();
+        assert!(h.iter().all(|x| x.is_finite()));
+
+        // Dense single-shot forward over all n rows per slice: the same
+        // per-row math with no blocking at all.
+        let din = eng.features.din;
+        let (n, f) = (g.n, eng.fanout);
+        let mut prev: Vec<f32> = eng.features.batch(&eng.order);
+        let mut prev_dim = din;
+        for layer in 0..eng.cfg.layers {
+            let mut h_neigh = vec![0f32; n * f * prev_dim];
+            let mut mask = vec![0f32; n * f];
+            for (r, &ov) in eng.order.iter().enumerate() {
+                let v = ov as usize;
+                for s in 0..f {
+                    let nb = eng.nbrs[v * f + s];
+                    if nb != PAD {
+                        let nr = eng.rank[nb as usize] as usize;
+                        h_neigh[(r * f + s) * prev_dim..][..prev_dim]
+                            .copy_from_slice(&prev[nr * prev_dim..(nr + 1) * prev_dim]);
+                        mask[r * f + s] = 1.0;
+                    }
+                }
+            }
+            let p = &eng.enc_params[layer * 3..layer * 3 + 3];
+            let (mut z, _, _) = crate::runtime::reference::sage_layer_forward(
+                &prev,
+                &h_neigh,
+                &mask,
+                p[0].as_f32(),
+                p[1].as_f32(),
+                p[2].as_f32(),
+                n,
+                f,
+                prev_dim,
+                eng.hidden,
+            );
+            if layer + 1 < eng.cfg.layers {
+                for v in z.iter_mut() {
+                    *v = v.max(0.0);
+                }
+            }
+            prev = z;
+            prev_dim = eng.hidden;
+        }
+        assert_eq!(h, prev, "engine output must bit-match the dense forward");
     }
 
     #[test]
@@ -521,5 +919,23 @@ mod tests {
             rep_pds.virtual_cost,
             rep_ns.virtual_cost
         );
+    }
+
+    #[test]
+    fn depth_mismatch_is_a_construction_error() {
+        let (g, ea, dir) = setup("depth");
+        // 3-layer manifest, 2-layer config: refused up front.
+        let runtime = Runtime::load_with_layers(crate::test_artifacts_dir(), 3).unwrap();
+        let enc = init_encoder_params(&runtime, 3).unwrap();
+        let err = LayerwiseEngine::new(
+            &g,
+            &ea,
+            runtime,
+            FeatureStore::unlabeled(64),
+            enc,
+            EngineConfig::default(),
+            dir,
+        );
+        assert!(err.is_err());
     }
 }

@@ -11,6 +11,9 @@ pub mod static_cache;
 
 pub use chunk_store::{ChunkStore, Tier};
 pub use dynamic_cache::{DynamicCache, EvictPolicy};
-pub use engine::{init_decode_params, init_encoder_params, EngineConfig, EngineReport, LayerwiseEngine};
+pub use engine::{
+    init_decode_params, init_encoder_params, EngineConfig, EngineReport, LayerwiseEngine,
+    WorkerReport,
+};
 pub use samplewise::{SamplewiseReport, SamplewiseRunner};
 pub use static_cache::CacheSystem;

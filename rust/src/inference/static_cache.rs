@@ -6,6 +6,8 @@
 //! ratio for the layer's reads. Level 2 (**dynamic**): an in-memory
 //! FIFO/LRU chunk cache absorbing repeated reads.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::inference::chunk_store::{ChunkStore, Tier};
@@ -55,7 +57,7 @@ impl CacheSystem {
         } else {
             Tier::Remote
         };
-        let data = store.read_chunk(chunk, tier)?;
+        let data = Arc::new(store.read_chunk(chunk, tier)?);
         let out = data[offset..offset + store.dim].to_vec();
         self.dynamic.insert(chunk, data);
         Ok(out)
@@ -64,24 +66,32 @@ impl CacheSystem {
     /// Fetch a whole chunk through the hierarchy — the engine's batched
     /// read path (§Perf): embedding IO is chunk-granular (Zarr semantics),
     /// so a block of rows fetches each distinct chunk once instead of
-    /// taking one cache round-trip per row.
-    pub fn get_chunk(&mut self, store: &ChunkStore, chunk: usize) -> Result<Vec<f32>> {
+    /// taking one cache round-trip per row. A dynamic hit shares the
+    /// cached allocation (`Arc`) — no chunk-sized copy on either the hit
+    /// or the insert path.
+    pub fn get_chunk(&mut self, store: &ChunkStore, chunk: usize) -> Result<Arc<Vec<f32>>> {
         if let Some(data) = self.dynamic.get(chunk) {
             store.note_dynamic_hit();
-            return Ok(data.clone());
+            return Ok(Arc::clone(data));
         }
         let tier = if self.static_chunks.get(chunk) {
             Tier::Static
         } else {
             Tier::Remote
         };
-        let data = store.read_chunk(chunk, tier)?;
-        self.dynamic.insert(chunk, data.clone());
+        let data = Arc::new(store.read_chunk(chunk, tier)?);
+        self.dynamic.insert(chunk, Arc::clone(&data));
         Ok(data)
     }
 
     pub fn dynamic_hit_ratio(&self) -> f64 {
         self.dynamic.hit_ratio()
+    }
+
+    /// (hits, misses) of the dynamic tier — the per-worker numbers the
+    /// engine folds into its `EngineReport` breakdown.
+    pub fn dynamic_counts(&self) -> (u64, u64) {
+        (self.dynamic.hits, self.dynamic.misses)
     }
 
     pub fn reset_dynamic(&mut self) {
@@ -137,6 +147,27 @@ mod tests {
             sys.read_row(&cs, row).unwrap();
         }
         assert_eq!(cs.stats.remote_reads.load(std::sync::atomic::Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn get_chunk_hits_share_the_cached_allocation() {
+        let cs = store("arc");
+        let mut sys = CacheSystem::new(8, 2, EvictPolicy::Fifo);
+        sys.fill_static(std::iter::once(0));
+        let first = sys.get_chunk(&cs, 0).unwrap();
+        let second = sys.get_chunk(&cs, 0).unwrap();
+        // The hit hands back the same allocation — no chunk-sized copy.
+        assert!(Arc::ptr_eq(&first, &second));
+        // Cost counters agree: one static fetch, then a dynamic hit; a
+        // copying path would have to re-read the chunk instead.
+        assert_eq!(cs.stats.chunk_reads(), 1);
+        assert_eq!(
+            cs.stats.dynamic_hits.load(std::sync::atomic::Ordering::Relaxed),
+            1
+        );
+        assert_eq!(cs.stats.total_cost(), COST_STATIC + COST_DYNAMIC);
+        let (hits, misses) = sys.dynamic_counts();
+        assert_eq!((hits, misses), (1, 1));
     }
 
     #[test]

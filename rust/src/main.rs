@@ -5,7 +5,7 @@
 //! glisp partition --dataset twitter-s --parts 8 --algo adadne
 //! glisp sample    --dataset wiki-s --parts 4 --fanouts 15,10,5 --batches 50
 //! glisp train     --model sage --steps 200 --parts 2 [--eval]
-//! glisp infer     --n 20000 --parts 4 --task both
+//! glisp infer     --n 20000 --parts 4 --layers 3 --task both [--seq]
 //! glisp datasets
 //! ```
 
@@ -233,6 +233,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_infer(args: &Args) -> Result<()> {
     let n = args.get_usize("n", 10_000);
     let parts = args.get_usize("parts", 4);
+    let layers = args.get_usize("layers", 2);
     let task = args.get_str("task", "vertex").to_string();
     let mut rng = Rng::new(args.get_u64("seed", 1));
     let g = generator::chung_lu(n, n * 7, 2.1, &mut rng);
@@ -240,7 +241,7 @@ fn cmd_infer(args: &Args) -> Result<()> {
     let dir = std::env::temp_dir().join("glisp_infer_cli");
     let _ = std::fs::remove_dir_all(&dir);
 
-    let runtime = Runtime::load(Runtime::default_dir())?;
+    let runtime = Runtime::load_with_layers(Runtime::default_dir(), layers)?;
     let enc = init_encoder_params(&runtime, 3)?;
     let mut engine = LayerwiseEngine::new(
         &g,
@@ -248,14 +249,20 @@ fn cmd_infer(args: &Args) -> Result<()> {
         runtime,
         FeatureStore::unlabeled(64),
         enc.clone(),
-        EngineConfig::default(),
+        EngineConfig {
+            layers,
+            // --seq: single-threaded partition sweeps (bit-identical,
+            // slower; the fig13 baseline).
+            parallel: !args.has("seq"),
+            ..Default::default()
+        },
         dir,
     )?;
     let timer = Timer::start();
     let (h, report) = engine.run_vertex_embedding()?;
     let lw_secs = timer.secs();
     println!(
-        "layerwise vertex embedding: {lw_secs:.2}s, {} vertex-computations, \
+        "layerwise vertex embedding (K={layers}): {lw_secs:.2}s, {} vertex-computations, \
          {} chunk reads, {} dynamic hits (ratio {:.3}), virtual cost {}",
         report.vertices_computed,
         report.chunk_reads,
@@ -263,9 +270,22 @@ fn cmd_infer(args: &Args) -> Result<()> {
         report.dynamic_hit_ratio,
         report.virtual_cost
     );
+    for w in &report.workers {
+        if w.vertices_computed > 0 {
+            println!(
+                "  worker {:>2}: {} vertices, fill {} chunks, model {:.2}s, \
+                 dyn hit ratio {:.3}",
+                w.worker,
+                w.vertices_computed,
+                w.fill_chunks,
+                w.model_secs,
+                w.dynamic_hit_ratio()
+            );
+        }
+    }
 
     if task == "vertex" || task == "both" {
-        let runtime2 = Runtime::load(Runtime::default_dir())?;
+        let runtime2 = Runtime::load_with_layers(Runtime::default_dir(), layers)?;
         let mut sw = SamplewiseRunner::new(&g, runtime2, FeatureStore::unlabeled(64), enc, 5)?;
         let timer = Timer::start();
         let (_, rep) = sw.run_vertex_embedding()?;

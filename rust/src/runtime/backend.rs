@@ -15,7 +15,9 @@ use anyhow::Result;
 use crate::runtime::manifest::ArtifactSpec;
 use crate::runtime::tensor::HostTensor;
 
-pub trait ExecutorBackend {
+/// Backends are `Send`: the layerwise inference engine moves split
+/// handles onto scoped worker threads (one per partition sweep).
+pub trait ExecutorBackend: Send {
     /// Short backend id for logs and reports ("reference" | "pjrt").
     fn name(&self) -> &'static str;
 
@@ -31,4 +33,24 @@ pub trait ExecutorBackend {
     /// implementations must return outputs matching the spec's arity, in
     /// manifest order.
     fn execute(&mut self, spec: &ArtifactSpec, inputs: &[HostTensor]) -> Result<Vec<HostTensor>>;
+
+    /// A second, independently-executing handle to this backend for a
+    /// worker thread (mirrors `SamplingClient::split` on the training
+    /// side). `None` — the default — means the backend cannot be shared
+    /// and callers must fall back to a single-threaded sweep; the
+    /// stateless reference interpreter splits freely.
+    fn split(&self) -> Option<Box<dyn ExecutorBackend>> {
+        None
+    }
+
+    /// Whether `execute` accepts a leading ("row") dimension smaller than
+    /// the manifest's compiled value for THIS artifact — the tail block
+    /// of a chunked sweep. Per-spec because an interpreter may derive row
+    /// counts from the tensors for some artifact families while sizing
+    /// others from metadata. AOT-compiled backends (fixed-shape
+    /// executables) keep the default `false` and get zero-pad + truncate
+    /// from [`Runtime::execute_rows`](crate::runtime::Runtime::execute_rows).
+    fn supports_dynamic_rows(&self, _spec: &ArtifactSpec) -> bool {
+        false
+    }
 }

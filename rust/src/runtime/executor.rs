@@ -29,6 +29,14 @@ impl Runtime {
     /// built-in reference manifest + backend (with a log line), so
     /// examples, tests and benches run end-to-end hermetically.
     pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        Self::load_with_layers(dir, 2)
+    }
+
+    /// [`Self::load`] with a K-layer inference encoder in the fallback
+    /// manifest (`Manifest::reference_with_layers`). An on-disk
+    /// `manifest.json` wins unchanged — the engine validates its depth at
+    /// construction time.
+    pub fn load_with_layers(dir: impl AsRef<Path>, infer_layers: usize) -> Result<Runtime> {
         let dir = dir.as_ref();
         if dir.join("manifest.json").exists() {
             let manifest = Manifest::load(dir)?;
@@ -48,11 +56,23 @@ impl Runtime {
                 );
             });
             Ok(Runtime {
-                manifest: Manifest::reference_default(),
+                manifest: Manifest::reference_with_layers(infer_layers),
                 backend: Box::new(ReferenceBackend),
                 executions: AtomicU64::new(0),
             })
         }
+    }
+
+    /// An independently-executing handle over the same manifest for a
+    /// worker thread, or `None` when the backend cannot be shared (the
+    /// engine then falls back to a single-threaded sweep). The split
+    /// runtime counts its own executions; callers fold them back.
+    pub fn split(&self) -> Option<Runtime> {
+        Some(Runtime {
+            manifest: self.manifest.clone(),
+            backend: self.backend.split()?,
+            executions: AtomicU64::new(0),
+        })
     }
 
     #[cfg(feature = "pjrt")]
@@ -127,6 +147,149 @@ impl Runtime {
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         Ok(out)
     }
+
+    /// Execute an artifact whose leading ("row") dimension is dynamic:
+    /// the first `row_inputs` inputs — and every output that leads with
+    /// the artifact's compiled row count (input 0's leading dim) — are
+    /// validated/produced with `rows` instead; the remaining inputs
+    /// (parameters) keep their exact manifest shapes. The caller names
+    /// the row-shaped prefix because shape alone is ambiguous: e.g.
+    /// `link_decode`'s `w1` is `[2·hidden, hidden]`, whose leading dim
+    /// happens to equal the compiled decode batch. This is the tail block
+    /// of a chunked sweep: the last `n % block` vertices execute at their
+    /// true size rather than padded with garbage rows. Backends without
+    /// dynamic-row support get zero-padded inputs and truncated outputs,
+    /// so callers always receive `rows`-sized tensors either way.
+    pub fn execute_rows(
+        &mut self,
+        name: &str,
+        rows: usize,
+        row_inputs: usize,
+        inputs: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        use anyhow::Context;
+        let full = *self
+            .manifest
+            .get(name)?
+            .inputs
+            .first()
+            .and_then(|s| s.shape.first())
+            .with_context(|| format!("{name}: artifact has no leading row dimension"))?;
+        if rows == full {
+            return self.execute(name, inputs);
+        }
+        anyhow::ensure!(
+            rows >= 1 && rows < full,
+            "{name}: {rows} rows outside 1..={full}"
+        );
+        let spec = self.manifest.get(name)?;
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "{name}: {} inputs given, manifest wants {}",
+                inputs.len(),
+                spec.inputs.len()
+            );
+        }
+        anyhow::ensure!(
+            row_inputs >= 1 && row_inputs <= spec.inputs.len(),
+            "{name}: row_inputs {row_inputs} outside 1..={}",
+            spec.inputs.len()
+        );
+        for (i, (t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            let mut want = s.shape.clone();
+            if i < row_inputs {
+                anyhow::ensure!(
+                    want.first() == Some(&full),
+                    "{name} input {i} ({}): declared row-shaped but manifest \
+                     shape {:?} does not lead with {full}",
+                    s.name,
+                    want
+                );
+                want[0] = rows;
+            }
+            if t.shape() != want.as_slice() {
+                bail!(
+                    "{name} input {i} ({}): shape {:?} != {:?} ({rows} of {full} rows)",
+                    s.name,
+                    t.shape(),
+                    want
+                );
+            }
+            if t.dtype() != s.dtype {
+                bail!("{name} input {i} ({}): dtype mismatch", s.name);
+            }
+        }
+        let out = if self.backend.supports_dynamic_rows(spec) {
+            self.backend.execute(spec, inputs)?
+        } else {
+            // Fixed-shape executable: zero-pad the row inputs up to the
+            // compiled size, then truncate the row outputs back down.
+            // Every output must be row-shaped — refusing up front beats
+            // guessing which outputs to truncate (the same leading-dim
+            // ambiguity `row_inputs` resolves on the input side).
+            for (i, s) in spec.outputs.iter().enumerate() {
+                anyhow::ensure!(
+                    s.shape.first() == Some(&full),
+                    "{name} output {i} ({}): shape {:?} is not row-shaped; \
+                     dynamic rows unsupported for this artifact on a \
+                     fixed-shape backend",
+                    s.name,
+                    s.shape
+                );
+            }
+            let padded: Vec<HostTensor> = inputs
+                .iter()
+                .zip(&spec.inputs)
+                .enumerate()
+                .map(|(i, (t, s))| {
+                    if i >= row_inputs {
+                        return t.clone();
+                    }
+                    let total: usize = s.shape.iter().product();
+                    match t {
+                        HostTensor::F32 { data, .. } => {
+                            let mut d = data.clone();
+                            d.resize(total, 0.0);
+                            HostTensor::f32(s.shape.clone(), d)
+                        }
+                        HostTensor::I32 { data, .. } => {
+                            let mut d = data.clone();
+                            d.resize(total, 0);
+                            HostTensor::i32(s.shape.clone(), d)
+                        }
+                    }
+                })
+                .collect();
+            self.backend
+                .execute(spec, &padded)?
+                .into_iter()
+                .zip(&spec.outputs)
+                .map(|(t, s)| {
+                    let rest: usize = s.shape[1..].iter().product();
+                    let mut shape = s.shape.clone();
+                    shape[0] = rows;
+                    match t {
+                        HostTensor::F32 { data, .. } => {
+                            HostTensor::f32(shape, data[..rows * rest].to_vec())
+                        }
+                        HostTensor::I32 { data, .. } => {
+                            HostTensor::i32(shape, data[..rows * rest].to_vec())
+                        }
+                    }
+                })
+                .collect()
+        };
+        if out.len() != spec.outputs.len() {
+            bail!(
+                "{name}: backend returned {} outputs, manifest wants {}",
+                out.len(),
+                spec.outputs.len()
+            );
+        }
+        self.executions
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok(out)
+    }
 }
 
 #[cfg(test)]
@@ -183,6 +346,132 @@ mod tests {
             .collect();
         inputs[0] = HostTensor::zeros(&[1, 1]);
         assert!(rt.execute("link_decode", &inputs).is_err());
+    }
+
+    #[test]
+    fn execute_rows_tail_block_matches_full_prefix() {
+        let mut rt = runtime();
+        let spec = rt.spec("sage_infer_layer0").unwrap().clone();
+        let full_inputs: Vec<HostTensor> = spec
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let n: usize = s.shape.iter().product();
+                HostTensor::f32(
+                    s.shape.clone(),
+                    (0..n).map(|j| ((i + j) % 13) as f32 * 0.25 - 1.0).collect(),
+                )
+            })
+            .collect();
+        let full_out = rt.execute("sage_infer_layer0", &full_inputs).unwrap();
+        // Same values, first 7 rows of every row-shaped input only.
+        let rows = 7usize;
+        let chunk = spec.inputs[0].shape[0];
+        let tail_inputs: Vec<HostTensor> = full_inputs
+            .iter()
+            .zip(&spec.inputs)
+            .map(|(t, s)| {
+                if s.shape.first() == Some(&chunk) {
+                    let rest: usize = s.shape[1..].iter().product();
+                    let mut shape = s.shape.clone();
+                    shape[0] = rows;
+                    HostTensor::f32(shape, t.as_f32()[..rows * rest].to_vec())
+                } else {
+                    t.clone()
+                }
+            })
+            .collect();
+        let tail_out = rt
+            .execute_rows("sage_infer_layer0", rows, 3, &tail_inputs)
+            .unwrap();
+        let dout = spec.outputs[0].shape[1];
+        assert_eq!(tail_out[0].shape(), &[rows, dout]);
+        // Row-independent math: the tail equals the full run's prefix
+        // bit-for-bit.
+        assert_eq!(tail_out[0].as_f32(), &full_out[0].as_f32()[..rows * dout]);
+    }
+
+    #[test]
+    fn execute_rows_link_decode_params_keep_manifest_shapes() {
+        // link_decode's w1 is [2*hidden, hidden] = [256, 128]: its leading
+        // dim equals the compiled decode batch, so only the explicit
+        // row-input prefix (emb_u, emb_v) may be row-substituted — the
+        // params must pass validation at their full manifest shapes.
+        let mut rt = runtime();
+        let spec = rt.spec("link_decode").unwrap().clone();
+        let batch = spec.inputs[0].shape[0];
+        assert_eq!(
+            spec.inputs[2].shape[0], batch,
+            "test premise: w1's leading dim collides with the batch"
+        );
+        let full_inputs: Vec<HostTensor> = spec
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let n: usize = s.shape.iter().product();
+                HostTensor::f32(
+                    s.shape.clone(),
+                    (0..n).map(|j| ((i + j) % 7) as f32 * 0.1 - 0.3).collect(),
+                )
+            })
+            .collect();
+        let full_out = rt.execute("link_decode", &full_inputs).unwrap();
+        let rows = 5usize;
+        let hidden = spec.inputs[0].shape[1];
+        let mut tail_inputs = full_inputs.clone();
+        for t in tail_inputs.iter_mut().take(2) {
+            *t = HostTensor::f32(vec![rows, hidden], t.as_f32()[..rows * hidden].to_vec());
+        }
+        let tail_out = rt
+            .execute_rows("link_decode", rows, 2, &tail_inputs)
+            .unwrap();
+        assert_eq!(tail_out[0].shape(), &[rows]);
+        assert_eq!(tail_out[0].as_f32(), &full_out[0].as_f32()[..rows]);
+    }
+
+    #[test]
+    fn execute_rows_rejects_oversized_and_zero_rows() {
+        let mut rt = runtime();
+        let spec = rt.spec("sage_infer_layer0").unwrap().clone();
+        let inputs: Vec<HostTensor> = spec
+            .inputs
+            .iter()
+            .map(|s| HostTensor::zeros(&s.shape))
+            .collect();
+        assert!(rt.execute_rows("sage_infer_layer0", 0, 3, &inputs).is_err());
+        let chunk = spec.inputs[0].shape[0];
+        assert!(rt
+            .execute_rows("sage_infer_layer0", chunk + 1, 3, &inputs)
+            .is_err());
+    }
+
+    #[test]
+    fn split_runtime_executes_independently() {
+        let rt = runtime();
+        let mut worker = rt.split().expect("reference backend splits");
+        assert_eq!(worker.backend_name(), "reference");
+        let spec = worker.spec("sage_infer_layer0").unwrap().clone();
+        let inputs: Vec<HostTensor> = spec
+            .inputs
+            .iter()
+            .map(|s| HostTensor::zeros(&s.shape))
+            .collect();
+        worker.execute("sage_infer_layer0", &inputs).unwrap();
+        assert_eq!(
+            worker.executions.load(std::sync::atomic::Ordering::Relaxed),
+            1
+        );
+        assert_eq!(rt.executions.load(std::sync::atomic::Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn load_with_layers_sizes_fallback_manifest() {
+        let dir = std::env::temp_dir().join("glisp_no_artifacts_here");
+        let rt = Runtime::load_with_layers(&dir, 3).unwrap();
+        assert_eq!(rt.manifest.infer_layers(), 3);
+        assert!(rt.spec("sage_infer_layer2").is_ok());
     }
 
     #[test]

@@ -133,6 +133,16 @@ impl Manifest {
             .with_context(|| format!("artifact '{name}' not in manifest"))
     }
 
+    /// Depth K of the inference encoder this manifest carries: the number
+    /// of consecutive `sage_infer_layer{k}` slices starting at 0. The
+    /// layerwise engine and `init_encoder_params` size themselves from
+    /// this, so the manifest is the single source of truth for K.
+    pub fn infer_layers(&self) -> usize {
+        (0..)
+            .take_while(|k| self.artifacts.contains_key(&format!("sage_infer_layer{k}")))
+            .count()
+    }
+
     /// The built-in manifest of the pure-Rust reference backend: the same
     /// artifact set, input order, shapes and metadata that
     /// python/compile/aot.py emits at its default configuration
@@ -141,6 +151,17 @@ impl Manifest {
     /// `artifacts/manifest.json` has not been built, so the whole stack
     /// stays runnable with zero native dependencies.
     pub fn reference_default() -> Manifest {
+        Self::reference_with_layers(2)
+    }
+
+    /// [`Self::reference_default`] with a K-layer inference encoder: emits
+    /// `sage_infer_layer{0..k}` slices (layer 0 reads `din`, every slice
+    /// writes `hidden`, relu on all but the final slice) and sizes the
+    /// samplewise `sage_embed` baseline to the same K-hop geometry, so the
+    /// layerwise engine and its Fig. 13 comparator stay aligned at any
+    /// depth. The training artifacts are depth-independent and unchanged.
+    pub fn reference_with_layers(k_infer: usize) -> Manifest {
+        assert!(k_infer >= 1, "inference encoder needs at least one layer");
         let mut artifacts = BTreeMap::new();
         let mut add = |spec: ArtifactSpec| {
             artifacts.insert(spec.name.clone(), spec);
@@ -185,14 +206,12 @@ impl Manifest {
             }
         }
 
-        // Layer slices of the 2-layer SAGE inference encoder.
-        for (layer, (din, dout, relu)) in [
-            (REF_DIN, REF_HIDDEN, true),
-            (REF_HIDDEN, REF_HIDDEN, false),
-        ]
-        .into_iter()
-        .enumerate()
-        {
+        // Layer slices of the K-layer SAGE inference encoder.
+        for layer in 0..k_infer {
+            let din = if layer == 0 { REF_DIN } else { REF_HIDDEN };
+            let dout = REF_HIDDEN;
+            // relu between layers; the final slice emits raw embeddings.
+            let relu = layer + 1 < k_infer;
             let inputs = vec![
                 fspec("h_self", &[REF_CHUNK, din]),
                 fspec("h_neigh", &[REF_CHUNK, REF_ENC_FANOUT, din]),
@@ -209,21 +228,26 @@ impl Manifest {
             add(artifact(format!("sage_infer_layer{layer}"), inputs, outputs, meta));
         }
 
-        // Samplewise baseline: full 2-hop SAGE tree forward to embeddings.
+        // Samplewise baseline: full K-hop SAGE tree forward to embeddings.
         {
             let mut inputs = Vec::new();
-            for (j, din) in [(0usize, REF_DIN), (1, REF_HIDDEN)] {
+            for j in 0..k_infer {
+                let din = if j == 0 { REF_DIN } else { REF_HIDDEN };
                 inputs.push(fspec(&format!("l{j}_w_self"), &[din, REF_HIDDEN]));
                 inputs.push(fspec(&format!("l{j}_w_neigh"), &[din, REF_HIDDEN]));
                 inputs.push(fspec(&format!("l{j}_b"), &[REF_HIDDEN]));
             }
-            let fanouts = [REF_ENC_FANOUT, REF_ENC_FANOUT];
+            let fanouts = vec![REF_ENC_FANOUT; k_infer];
             let (xs, masks) = ref_level_specs(REF_EMBED_BATCH, &fanouts, REF_DIN);
             inputs.extend(xs);
             inputs.extend(masks);
             let outputs = vec![fspec("emb", &[REF_EMBED_BATCH, REF_HIDDEN])];
+            let embed_fanouts = format!(
+                "[{}]",
+                fanouts.iter().map(|f| f.to_string()).collect::<Vec<_>>().join(",")
+            );
             let meta = Json::parse(&format!(
-                r#"{{"batch":{REF_EMBED_BATCH},"fanouts":[{REF_ENC_FANOUT},{REF_ENC_FANOUT}],"din":{REF_DIN},"hidden":{REF_HIDDEN}}}"#
+                r#"{{"batch":{REF_EMBED_BATCH},"fanouts":{embed_fanouts},"din":{REF_DIN},"hidden":{REF_HIDDEN}}}"#
             ))
             .expect("builtin meta");
             add(artifact("sage_embed".to_string(), inputs, outputs, meta));
@@ -375,6 +399,29 @@ mod tests {
     fn missing_artifact_errors() {
         let m = Manifest::parse(SAMPLE).unwrap();
         assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn reference_with_layers_emits_k_slices() {
+        let m = Manifest::reference_with_layers(3);
+        assert_eq!(m.infer_layers(), 3);
+        let l0 = m.get("sage_infer_layer0").unwrap();
+        assert_eq!(l0.meta_usize("din"), Some(64));
+        assert_eq!(l0.meta.get("relu").and_then(Json::as_bool), Some(true));
+        let l1 = m.get("sage_infer_layer1").unwrap();
+        assert_eq!(l1.meta_usize("din"), Some(128));
+        // Mid slices relu, the final slice does not.
+        assert_eq!(l1.meta.get("relu").and_then(Json::as_bool), Some(true));
+        let l2 = m.get("sage_infer_layer2").unwrap();
+        assert_eq!(l2.meta.get("relu").and_then(Json::as_bool), Some(false));
+        assert!(m.get("sage_infer_layer3").is_err());
+        // The samplewise baseline follows the same depth: 9 params,
+        // 4 level features, 3 masks.
+        let emb = m.get("sage_embed").unwrap();
+        assert_eq!(emb.inputs.len(), 9 + 4 + 3);
+        assert_eq!(emb.meta_usizes("fanouts"), Some(vec![10, 10, 10]));
+        // The default stays at the 2-layer aot.py geometry.
+        assert_eq!(Manifest::reference_default().infer_layers(), 2);
     }
 
     #[test]

@@ -3,6 +3,13 @@
 //! PJRT client, and executes them from the L3 hot paths. Adapted from
 //! /opt/xla-example/load_hlo — HLO *text* is the interchange format (see
 //! aot.py's docstring for why).
+//!
+//! `ExecutorBackend` requires `Send` (the inference engine moves split
+//! handles onto worker threads), so this impl compiles only if your
+//! xla-rs checkout's client/executable types are `Send`; wrap them in a
+//! `Send` owner if they are not. Thread *safety* is not required: this
+//! backend keeps the default `split() -> None`, so the engine never
+//! shares it across threads and falls back to its sequential sweep.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};

@@ -51,6 +51,19 @@ impl ExecutorBackend for ReferenceBackend {
             bail!("reference backend: no implementation for artifact '{name}'")
         }
     }
+
+    /// The interpreter is stateless — worker threads get fresh instances.
+    fn split(&self) -> Option<Box<dyn ExecutorBackend>> {
+        Some(Box::new(ReferenceBackend))
+    }
+
+    /// Only the row-sliced artifacts (`sage_infer_layer*`, `link_decode`)
+    /// derive their row count from the input tensors; the tree-format
+    /// handlers still size themselves from metadata and must take the
+    /// zero-pad + truncate path.
+    fn supports_dynamic_rows(&self, spec: &ArtifactSpec) -> bool {
+        spec.name.starts_with("sage_infer_layer") || spec.name == "link_decode"
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -980,7 +993,9 @@ fn run_embed(spec: &ArtifactSpec, inputs: &[HostTensor]) -> Result<Vec<HostTenso
 }
 
 fn run_infer_layer(spec: &ArtifactSpec, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
-    let n = spec.meta_usize("chunk").context("meta.chunk")?;
+    // Rows come from the h_self tensor, not meta.chunk: tail blocks of a
+    // sweep arrive with fewer rows than the manifest's block size.
+    let n = *inputs[0].shape().first().context("h_self rank")?;
     let f = spec.meta_usize("fanout").context("meta.fanout")?;
     let d_in = spec.meta_usize("din").context("meta.din")?;
     let d_out = spec.meta_usize("dout").context("meta.dout")?;
@@ -1010,7 +1025,8 @@ fn run_infer_layer(spec: &ArtifactSpec, inputs: &[HostTensor]) -> Result<Vec<Hos
 }
 
 fn run_link_decode(spec: &ArtifactSpec, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
-    let batch = spec.meta_usize("batch").context("meta.batch")?;
+    // Rows come from the emb_u tensor (see run_infer_layer).
+    let batch = *inputs[0].shape().first().context("emb_u rank")?;
     let hidden = spec.meta_usize("hidden").context("meta.hidden")?;
     let scores = link_decode_forward(
         inputs[0].as_f32(),
