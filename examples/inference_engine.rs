@@ -6,8 +6,15 @@
 //! Runs hermetically on the pure-Rust reference backend when `artifacts/`
 //! is absent; build artifacts + enable `--features pjrt` for PJRT/XLA.
 //!
+//! Note on threading knobs: the training-side `--server-workers` /
+//! `--shard-size` sampling-pool flags (quickstart, train_e2e, `glisp`
+//! CLI; DESIGN.md §9) do not apply here — inference samples the local
+//! graph directly, and its parallelism is the engine's one worker per
+//! partition (`--parts`, `--seq` to force the sequential sweep,
+//! DESIGN.md §8) plus `--producers` for the samplewise pipelined path.
+//!
 //! Run: `cargo run --release --example inference_engine [-- --n 8000
-//!       --parts 4 --layers 3 --seq --layerwise-only]`
+//!       --parts 4 --layers 3 --seq --layerwise-only --producers 2]`
 
 use glisp::cli::Args;
 use glisp::coordinator::{FeatureStore, PipelineConfig};
@@ -93,7 +100,10 @@ fn main() -> anyhow::Result<()> {
         );
 
         // Same again, batch assembly pipelined (DESIGN.md §7).
-        let pcfg = PipelineConfig::default();
+        let pcfg = PipelineConfig {
+            producers: args.get_usize("producers", 2),
+            ..Default::default()
+        };
         let runtime3 = Runtime::load_with_layers(Runtime::default_dir(), layers)?;
         let mut swp = SamplewiseRunner::new(g, runtime3, FeatureStore::unlabeled(64), enc, 5)?;
         let t = Timer::start();

@@ -7,17 +7,22 @@
 //! pjrt` to execute the AOT HLO artifacts on PJRT instead.
 //!
 //! Run: `cargo run --release --example quickstart`
+//! Pool mode (R server workers per partition + sharded gathers — same
+//! losses bit-for-bit, DESIGN.md §9):
+//!      `cargo run --release --example quickstart -- --server-workers 4 --shard-size 16`
 
 use std::sync::Arc;
 
+use glisp::cli::Args;
 use glisp::coordinator::{Batcher, FeatureStore, PipelineConfig, Trainer, TrainerConfig};
 use glisp::graph::generator;
 use glisp::partition::{quality, AdaDNE, Partitioner};
 use glisp::runtime::Runtime;
-use glisp::sampling::SamplingService;
+use glisp::sampling::{SamplingService, ServiceConfig};
 use glisp::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
     // 1. A labeled synthetic graph: 5k vertices, 60k edges, 8 communities.
     let mut rng = Rng::new(42);
     let g = generator::labeled_community_graph(5_000, 60_000, 8, 0.9, &mut rng);
@@ -29,8 +34,19 @@ fn main() -> anyhow::Result<()> {
     let q = quality(&g, &ea);
     println!("AdaDNE: RF={:.3} VB={:.3} EB={:.3}", q.rf, q.vb, q.eb);
 
-    // 3. Launch one sampling server per partition (Gather-Apply).
-    let service = SamplingService::launch(&g, &ea, 1);
+    // 3. Launch a sampling-server pool per partition (Gather-Apply);
+    //    --server-workers / --shard-size only change throughput, never the
+    //    sampled values (per-seed RNG streams).
+    let svc_cfg = ServiceConfig::new(
+        args.get_usize("server-workers", 1),
+        args.get_usize("shard-size", 0),
+    );
+    let service = SamplingService::launch_cfg(&g, &ea, 1, svc_cfg);
+    println!(
+        "sampling: {} partitions x {} pool workers",
+        service.partitions.len(),
+        service.config.workers
+    );
 
     // 4. A trainer wired to the AOT GraphSAGE train-step artifact.
     let features = FeatureStore::labeled(64, labels.clone(), 8, 0.6);
@@ -58,6 +74,9 @@ fn main() -> anyhow::Result<()> {
 
     // 6. Per-server workload: balanced thanks to vertex-cut + Gather-Apply.
     println!("server workload (edges scanned): {:?}", service.workload());
+    if service.config.workers > 1 {
+        println!("per-worker requests: {:?}", service.worker_requests());
+    }
     service.shutdown();
     Ok(())
 }

@@ -9,7 +9,10 @@
 //! Batches are produced by the pipelined producer by default (sampling +
 //! feature assembly overlap the model step, DESIGN.md §7); pass `--sync`
 //! for the strictly sequential path, `--producers N` / `--queue D` /
-//! `--unordered` to tune the pipeline.
+//! `--unordered` to tune the pipeline. `--server-workers R` launches an
+//! R-worker pool per sampling partition and `--shard-size S` splits
+//! gathers into S-seed shards the pool serves concurrently (DESIGN.md §9)
+//! — pure throughput knobs, the loss curve is bit-identical.
 //!
 //! Runs hermetically on the pure-Rust reference backend when `artifacts/`
 //! is absent; build artifacts + enable `--features pjrt` for PJRT/XLA.
@@ -23,7 +26,7 @@ use glisp::coordinator::{Batcher, FeatureStore, PipelineConfig, Trainer, Trainer
 use glisp::graph::generator;
 use glisp::partition::{quality, AdaDNE, Partitioner};
 use glisp::runtime::Runtime;
-use glisp::sampling::SamplingService;
+use glisp::sampling::{SamplingService, ServiceConfig};
 use glisp::util::rng::Rng;
 use glisp::util::timer::Timer;
 
@@ -39,6 +42,10 @@ fn main() -> anyhow::Result<()> {
         queue_depth: args.get_usize("queue", 2),
         ordered: !args.has("unordered"),
     };
+    let svc_cfg = ServiceConfig::new(
+        args.get_usize("server-workers", 1),
+        args.get_usize("shard-size", 0),
+    );
 
     println!("== GLISP end-to-end training driver ==");
     let t_total = Timer::start();
@@ -57,7 +64,16 @@ fn main() -> anyhow::Result<()> {
         "[partition] AdaDNE {} parts in {:.2}s: RF={:.3} VB={:.3} EB={:.3}",
         parts, t.secs(), q.rf, q.vb, q.eb
     );
-    let service = SamplingService::launch(&g, &ea, 1);
+    let service = SamplingService::launch_cfg(&g, &ea, 1, svc_cfg);
+    println!(
+        "[sampling] {parts} partitions x {} pool workers{}",
+        service.config.workers,
+        if service.config.shard_size == usize::MAX {
+            String::new()
+        } else {
+            format!(", gather shard size {}", service.config.shard_size)
+        }
+    );
 
     // Trainer.
     let features = FeatureStore::labeled(64, labels.clone(), classes, 0.6);
@@ -125,6 +141,12 @@ fn main() -> anyhow::Result<()> {
     assert!(acc > 1.5 / classes as f64, "accuracy no better than chance");
 
     println!("[workload] per-server edges scanned: {:?}", service.workload());
+    if service.config.workers > 1 {
+        println!(
+            "[workload] per-worker requests (pool attribution): {:?}",
+            service.worker_requests()
+        );
+    }
     println!("== done in {:.1}s ==", t_total.secs());
     service.shutdown();
     Ok(())

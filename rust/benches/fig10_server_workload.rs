@@ -7,7 +7,9 @@ use glisp::coordinator::metrics::normalized_workload;
 use glisp::harness::workloads::{bench_datasets, load};
 use glisp::harness::{bar_chart, f2, Table};
 use glisp::partition::{edge_cut_to_assignment, AdaDNE, EdgeCutLDG, Partitioner};
-use glisp::sampling::{balanced_seeds, sample_tree, SampleConfig, SamplingService};
+use glisp::sampling::{
+    balanced_seeds, sample_tree, SampleConfig, SamplingService, ServiceConfig,
+};
 use glisp::util::rng::Rng;
 
 const FANOUTS: [usize; 3] = [15, 10, 5];
@@ -43,21 +45,49 @@ fn main() {
         ]);
         svc.shutdown();
 
+        // The exact balanced-seed traffic both GLISP variants replay
+        // (same client seed + seed RNG, so workloads must be byte-equal).
+        let run_glisp_traffic = |svc: &SamplingService| {
+            let mut client = svc.client(2);
+            let mut rng = Rng::new(5);
+            for _ in 0..rounds {
+                let seeds = balanced_seeds(svc, 16, &mut rng);
+                sample_tree(&mut client, &seeds, &FANOUTS, &SampleConfig::default()).unwrap();
+            }
+        };
+
         // GLISP, balanced seeds.
         let ea = AdaDNE::default().partition(&g, parts, 1);
         let svc = SamplingService::launch(&g, &ea, 1);
-        let mut client = svc.client(2);
-        let mut rng = Rng::new(5);
-        for _ in 0..rounds {
-            let seeds = balanced_seeds(&svc, 16, &mut rng);
-            sample_tree(&mut client, &seeds, &FANOUTS, &SampleConfig::default()).unwrap();
-        }
-        let w = normalized_workload(&svc.workload());
+        run_glisp_traffic(&svc);
+        let glisp_raw = svc.workload();
+        let w = normalized_workload(&glisp_raw);
         t.row(&[
             "GLISP".into(),
             f2(w[0]), f2(w[1]), f2(w[2]), f2(w[3]),
             f2(w.iter().cloned().fold(f64::MIN, f64::max)),
         ]);
+
+        // GLISP with a 4-worker pool per partition + sharded gathers: the
+        // per-seed RNG contract (DESIGN.md §9) means the *workload* row is
+        // byte-identical to the 1-worker run above — asserted, not assumed
+        // — while the shards spread over the pool (attribution printed).
+        let pool = SamplingService::launch_cfg(&g, &ea, 1, ServiceConfig::new(4, 16));
+        run_glisp_traffic(&pool);
+        assert_eq!(
+            pool.workload(),
+            glisp_raw,
+            "pooled workload must be bit-identical to the 1-worker run"
+        );
+        let wp = normalized_workload(&pool.workload());
+        t.row(&[
+            "GLISP 4w-pool".into(),
+            f2(wp[0]), f2(wp[1]), f2(wp[2]), f2(wp[3]),
+            f2(wp.iter().cloned().fold(f64::MIN, f64::max)),
+        ]);
+        let attribution = pool.worker_requests();
+        let busy = pool.worker_busy_secs();
+        pool.shutdown();
 
         // GLISP-P0 worst case: all seeds from partition 0.
         svc.reset_stats();
@@ -79,10 +109,18 @@ fn main() {
         svc.shutdown();
         t.print();
 
+        println!("per-worker gather shards served (GLISP 4w-pool): {attribution:?}");
+        let busy_ms: Vec<Vec<f64>> = busy
+            .iter()
+            .map(|p| p.iter().map(|s| (s * 1e5).round() / 100.0).collect())
+            .collect();
+        println!("per-worker busy ms (GLISP 4w-pool):              {busy_ms:?}");
         let labels: Vec<String> = (0..parts).map(|i| format!("s{i}")).collect();
         print!("{}", bar_chart(&format!("{} GLISP workload", spec.name), &labels, &w));
     }
     println!("\npaper Fig. 10: DistDGL shows severe imbalance even with balanced");
     println!("seeds; GLISP stays near 1.0; GLISP-P0 degrades server 0 slightly but");
-    println!("still significantly outperforms DistDGL.");
+    println!("still significantly outperforms DistDGL. The 4w-pool row shows the");
+    println!("intra-partition worker pool preserves the workload bit-for-bit while");
+    println!("spreading each server's shards over its pool members.");
 }

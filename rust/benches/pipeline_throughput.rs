@@ -1,14 +1,18 @@
 //! Pipelined vs synchronous training throughput: the same GraphSAGE train
 //! step fed by (a) the strictly sequential sample → assemble → execute
 //! loop and (b) the producer pipeline (coordinator::pipeline, DESIGN.md
-//! §7) at several producer counts. Overlap hides the sampling round behind
-//! the model step, so pipelined steps/s ≥ sync steps/s whenever a spare
-//! core exists; ordered mode additionally reproduces the sync loss curve
-//! bit-for-bit (asserted here on the first pipelined run).
+//! §7) at several producer counts, and (c) the pipeline backed by a
+//! 4-worker sampling pool per partition with sharded gathers (DESIGN.md
+//! §9). Overlap hides the sampling round behind the model step, so
+//! pipelined steps/s ≥ sync steps/s whenever a spare core exists, and the
+//! server pool lets the sampling side itself scale with cores; ordered
+//! mode additionally reproduces the sync loss curve bit-for-bit — for the
+//! pool rows too (per-seed server RNG) — asserted below.
 
 use glisp::coordinator::PipelineConfig;
-use glisp::harness::workloads::train_stack;
+use glisp::harness::workloads::train_stack_cfg;
 use glisp::harness::{f2, Table};
+use glisp::sampling::ServiceConfig;
 use glisp::util::timer::Timer;
 
 fn main() -> anyhow::Result<()> {
@@ -20,9 +24,10 @@ fn main() -> anyhow::Result<()> {
         .unwrap_or(30usize);
     let n = 8_000;
     let parts = 4;
+    let pool = ServiceConfig::new(4, 16);
 
-    let modes: [(&str, Option<PipelineConfig>); 4] = [
-        ("sync", None),
+    let modes: [(&str, Option<PipelineConfig>, ServiceConfig); 6] = [
+        ("sync", None, ServiceConfig::default()),
         (
             "pipelined x1 ordered",
             Some(PipelineConfig {
@@ -30,6 +35,7 @@ fn main() -> anyhow::Result<()> {
                 queue_depth: 2,
                 ordered: true,
             }),
+            ServiceConfig::default(),
         ),
         (
             "pipelined x2 ordered",
@@ -38,6 +44,16 @@ fn main() -> anyhow::Result<()> {
                 queue_depth: 2,
                 ordered: true,
             }),
+            ServiceConfig::default(),
+        ),
+        (
+            "pipelined x2 ordered, 4w pool",
+            Some(PipelineConfig {
+                producers: 2,
+                queue_depth: 2,
+                ordered: true,
+            }),
+            pool,
         ),
         (
             "pipelined x4 unordered",
@@ -46,17 +62,30 @@ fn main() -> anyhow::Result<()> {
                 queue_depth: 2,
                 ordered: false,
             }),
+            ServiceConfig::default(),
+        ),
+        (
+            "pipelined x4 unordered, 4w pool",
+            Some(PipelineConfig {
+                producers: 4,
+                queue_depth: 2,
+                ordered: false,
+            }),
+            pool,
         ),
     ];
 
     let mut t = Table::new(
-        &format!("n={n}, {parts} servers, sage, {steps} timed steps"),
+        &format!(
+            "n={n}, {parts} servers, sage, {steps} timed steps \
+             (4w pool = 4 workers/partition, shard 16)"
+        ),
         &["mode", "steps/s", "seeds/s", "vs sync"],
     );
     let mut base_rate = 0.0f64;
     let mut sync_losses: Vec<f32> = Vec::new();
-    for (name, pcfg) in modes {
-        let mut s = train_stack(n, parts, "sage", &art)?;
+    for (name, pcfg, svc_cfg) in modes {
+        let mut s = train_stack_cfg(n, parts, "sage", &art, svc_cfg)?;
         s.trainer.train(&mut s.batcher, 3)?; // warmup + compile
         let timer = Timer::start();
         let losses = match &pcfg {
@@ -69,6 +98,8 @@ fn main() -> anyhow::Result<()> {
             base_rate = rate;
             sync_losses = losses;
         } else if pcfg.as_ref().is_some_and(|p| p.ordered) {
+            // Bit-exactness across producer counts AND server pool
+            // geometries — the per-seed determinism contract (DESIGN §9).
             assert_eq!(
                 sync_losses, losses,
                 "{name}: ordered pipelined losses must equal sync"
@@ -85,8 +116,11 @@ fn main() -> anyhow::Result<()> {
     t.print();
     println!("\nThe producer pipeline overlaps K-hop sampling + feature assembly with");
     println!("the model step (paper §III-C keeps sampling off the trainer's critical");
-    println!("path). Ordered mode is bit-exact vs sync (verified above); unordered");
-    println!("trades the exact update order for immunity to producer skew. On a");
-    println!("single-core runner the pipeline degrades gracefully to ~sync speed.");
+    println!("path). Ordered mode is bit-exact vs sync (verified above, including");
+    println!("with the 4-worker server pool); unordered trades the exact update");
+    println!("order for immunity to producer skew. The pool rows let a hotspot");
+    println!("gather parallelize inside each partition — on a multi-core host the");
+    println!("4w rows should lead; on a single-core runner everything degrades");
+    println!("gracefully to ~sync speed.");
     Ok(())
 }

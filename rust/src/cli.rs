@@ -1,5 +1,7 @@
 //! Minimal CLI argument parser (clap is not in the offline vendor set).
-//! Supports `glisp <subcommand> --flag value --switch` with typed lookups.
+//! Supports `glisp <subcommand> --flag value --switch` with typed lookups,
+//! e.g. `glisp train --model sage --server-workers 4 --shard-size 16`
+//! (the sampling-pool knobs shared by the CLI and the examples).
 
 use std::collections::BTreeMap;
 

@@ -15,10 +15,13 @@
 //! * the consumer (trainer / samplewise runner) executes batches as they
 //!   arrive, optionally reassembled in index order via [`Reorder`].
 //!
-//! Determinism: batch `i`'s sampling stream is [`batch_rng`]`(seed, i)` and
-//! server responses are salt-derived per request, so a sampled batch is a
-//! pure function of its index — with ordered reassembly, pipelined training
-//! reproduces the synchronous loss curve bit-for-bit.
+//! Determinism: batch `i`'s sampling stream is [`batch_rng`]`(seed, i)`,
+//! and on the server side every seed occurrence samples from its own
+//! (salt, seed-index)-derived stream (DESIGN.md §7/§9) — so a sampled
+//! batch is a pure function of its index, independent of producer
+//! interleaving, server worker-pool size, and gather shard splits. With
+//! ordered reassembly, pipelined training reproduces the synchronous loss
+//! curve bit-for-bit.
 
 use std::collections::HashMap;
 use std::sync::{Condvar, Mutex};

@@ -386,8 +386,9 @@ mod tests {
 
     /// A trainer + batcher wired to `svc` with fixed seeds — calling it
     /// twice against one service yields identically-initialized trainers
-    /// (responses are salt-derived, so sharing the service is
-    /// interference-free), which is what the bit-exactness tests compare.
+    /// (responses are derived per seed occurrence from (salt, index), so
+    /// sharing the service is interference-free), which is what the
+    /// bit-exactness tests compare.
     fn twin(svc: &SamplingService) -> (Trainer, Batcher) {
         let dir = crate::test_artifacts_dir();
         let labels = Arc::new(test_graph().label);
@@ -412,7 +413,15 @@ mod tests {
     fn stack() -> (SamplingService, Trainer, Batcher) {
         let g = test_graph();
         let ea = AdaDNE::default().partition(&g, 2, 0);
-        let svc = SamplingService::launch(&g, &ea, 1);
+        // A 2-worker pool with mid-request shard splits: the bit-exactness
+        // tests below thereby also pin the pool path to the sync semantics
+        // (per-seed server streams, DESIGN.md §9).
+        let svc = SamplingService::launch_cfg(
+            &g,
+            &ea,
+            1,
+            crate::sampling::ServiceConfig::new(2, 48),
+        );
         let (trainer, batcher) = twin(&svc);
         (svc, trainer, batcher)
     }

@@ -115,9 +115,13 @@ impl PartitionGraph {
         b - a
     }
 
-    /// Neighbors of `local` restricted to `etype` — a subslice located via
-    /// the run-length type index (runs per vertex are few; linear scan).
-    pub fn out_neighbors_of_type(&self, local: u32, etype: u8) -> &[VId] {
+    /// Absolute `[start, end)` local-edge index range of `local`'s
+    /// out-edges restricted to `etype`, located via the run-length type
+    /// index (runs per vertex are few; linear scan). Indices address
+    /// `out_dst`/`out_weight` directly — this is what the sampling pool's
+    /// shard workers use for weight lookup, with no pointer-provenance
+    /// recovery. Empty range `(a, a)` when the vertex has no such edges.
+    pub fn out_range_of_type(&self, local: u32, etype: u8) -> (usize, usize) {
         let (e0, _) = self.out_range(local);
         let (r0, r1) = (
             self.out_et_indptr[local as usize] as usize,
@@ -127,11 +131,18 @@ impl PartitionGraph {
         for r in r0..r1 {
             let end = self.out_et_end[r];
             if self.out_et_ids[r] == etype {
-                return &self.out_dst[e0 + start as usize..e0 + end as usize];
+                return (e0 + start as usize, e0 + end as usize);
             }
             start = end;
         }
-        &[]
+        (e0, e0)
+    }
+
+    /// Neighbors of `local` restricted to `etype` — a subslice of
+    /// `out_dst` addressed by [`Self::out_range_of_type`].
+    pub fn out_neighbors_of_type(&self, local: u32, etype: u8) -> &[VId] {
+        let (a, b) = self.out_range_of_type(local, etype);
+        &self.out_dst[a..b]
     }
 
     /// Recover the type of a local edge by binary search over its vertex's
@@ -418,6 +429,30 @@ mod tests {
         let l2 = p0.local_id(2).unwrap();
         let (a, _) = p0.out_range(l2);
         assert_eq!(p0.edge_type_of(a as u32), 2); // 2->0 is t2
+    }
+
+    #[test]
+    fn out_range_of_type_indexes_match_slices_and_types() {
+        let mut rng = Rng::new(11);
+        let g = generator::heterogeneous_graph(400, 3500, 2, 4, 2.2, &mut rng);
+        let assign: Vec<u16> = (0..g.m()).map(|e| (e % 2) as u16).collect();
+        for p in build_partitions(&g, &assign, 2) {
+            for v in 0..p.nv() as u32 {
+                let (v0, v1) = p.out_range(v);
+                for t in 0..4u8 {
+                    let (a, b) = p.out_range_of_type(v, t);
+                    // The range addresses out_dst directly and stays within
+                    // the vertex's edge window.
+                    assert!(v0 <= a && a <= b && b <= v1);
+                    assert_eq!(&p.out_dst[a..b], p.out_neighbors_of_type(v, t));
+                    // Every edge in the range carries the requested type —
+                    // the weight-lookup contract of the gather ops.
+                    for e in a..b {
+                        assert_eq!(p.edge_type_of(e as u32), t);
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -12,7 +12,7 @@ use crate::graph::generator::{self, DatasetSpec, GenKind};
 use crate::inference::{init_encoder_params, EngineConfig, LayerwiseEngine};
 use crate::partition::{AdaDNE, EdgeAssignment, Partitioner};
 use crate::runtime::Runtime;
-use crate::sampling::SamplingService;
+use crate::sampling::{SamplingService, ServiceConfig};
 use crate::util::rng::Rng;
 
 pub fn bench_scale() -> f64 {
@@ -67,12 +67,26 @@ pub fn train_stack(
     model: &str,
     artifacts: &std::path::Path,
 ) -> anyhow::Result<TrainStack> {
+    train_stack_cfg(n, parts, model, artifacts, ServiceConfig::default())
+}
+
+/// [`train_stack`] with explicit sampling-service threading knobs (worker
+/// pool size / gather shard size, DESIGN.md §9) — the pool rows of the
+/// pipeline_throughput bench and any bench that wants per-partition
+/// parallel servers.
+pub fn train_stack_cfg(
+    n: usize,
+    parts: usize,
+    model: &str,
+    artifacts: &std::path::Path,
+    svc_cfg: ServiceConfig,
+) -> anyhow::Result<TrainStack> {
     let classes = 8;
     let mut rng = Rng::new(1);
     let g = generator::labeled_community_graph(n, n * 12, classes, 0.9, &mut rng);
     let labels = Arc::new(g.label.clone());
     let ea = AdaDNE::default().partition(&g, parts, 1);
-    let service = SamplingService::launch(&g, &ea, 1);
+    let service = SamplingService::launch_cfg(&g, &ea, 1, svc_cfg);
     let features = FeatureStore::labeled(64, labels.clone(), classes, 0.6);
     let trainer = Trainer::new(
         artifacts,

@@ -10,7 +10,10 @@
 //! coordinator's producer machinery (`pipeline::assemble_tensors`,
 //! `pipeline::batch_rng`) to overlap local sampling + feature assembly with
 //! the embed-artifact execution. Chunk RNG streams are derived per chunk
-//! index, so both modes produce identical embeddings.
+//! index, so both modes produce identical embeddings. (Inference samples
+//! the *local* graph directly — there is no sampling service here, so the
+//! service's `--server-workers`/`--shard-size` pool knobs do not apply;
+//! the per-seed stream contract it relies on is stated in DESIGN.md §7/§9.)
 
 use anyhow::{Context, Result};
 

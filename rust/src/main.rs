@@ -4,10 +4,17 @@
 //! ```text
 //! glisp partition --dataset twitter-s --parts 8 --algo adadne
 //! glisp sample    --dataset wiki-s --parts 4 --fanouts 15,10,5 --batches 50
+//!                 [--server-workers 4 --shard-size 16]
 //! glisp train     --model sage --steps 200 --parts 2 [--eval]
+//!                 [--server-workers 4 --shard-size 16]
 //! glisp infer     --n 20000 --parts 4 --layers 3 --task both [--seq]
 //! glisp datasets
 //! ```
+//!
+//! `--server-workers R` launches an R-worker pool per sampling partition
+//! and `--shard-size S` splits gathers into S-seed shards the pool serves
+//! concurrently (0 = never split). Sampled outputs are bit-identical for
+//! any setting (DESIGN.md §9) — these are pure throughput knobs.
 
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
@@ -23,7 +30,7 @@ use glisp::partition::{
     quality, AdaDNE, DistributedNE, EdgeCutLDG, Hash1D, Hash2D, Partitioner,
 };
 use glisp::runtime::Runtime;
-use glisp::sampling::{balanced_seeds, sample_tree, SampleConfig, SamplingService};
+use glisp::sampling::{balanced_seeds, sample_tree, SampleConfig, SamplingService, ServiceConfig};
 use glisp::util::rng::Rng;
 use glisp::util::timer::Timer;
 
@@ -121,6 +128,14 @@ fn cmd_partition(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The sampling-service threading knobs shared by `sample` and `train`.
+fn service_config(args: &Args) -> ServiceConfig {
+    ServiceConfig::new(
+        args.get_usize("server-workers", 1),
+        args.get_usize("shard-size", 0),
+    )
+}
+
 fn cmd_sample(args: &Args) -> Result<()> {
     let g = dataset_by_name(args.get_str("dataset", "wiki-s"), args.get_u64("seed", 1))?;
     let parts = args.get_usize("parts", 4);
@@ -134,7 +149,7 @@ fn cmd_sample(args: &Args) -> Result<()> {
     let weighted = args.has("weighted");
 
     let ea = AdaDNE::default().partition(&g, parts, 1);
-    let svc = SamplingService::launch(&g, &ea, 1);
+    let svc = SamplingService::launch_cfg(&g, &ea, 1, service_config(args));
     let mut client = svc.client(2);
     let mut rng = Rng::new(3);
     let cfg = SampleConfig {
@@ -161,6 +176,9 @@ fn cmd_sample(args: &Args) -> Result<()> {
         "normalized: {:?}",
         norm.iter().map(|x| (x * 100.0).round() / 100.0).collect::<Vec<_>>()
     );
+    if svc.config.workers > 1 {
+        println!("per-worker requests (pool attribution): {:?}", svc.worker_requests());
+    }
     svc.shutdown();
     Ok(())
 }
@@ -175,7 +193,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let g = generator::labeled_community_graph(n, n * 12, classes, 0.9, &mut rng);
     let labels = Arc::new(g.label.clone());
     let ea = AdaDNE::default().partition(&g, parts, 1);
-    let svc = SamplingService::launch(&g, &ea, 1);
+    let svc = SamplingService::launch_cfg(&g, &ea, 1, service_config(args));
     let features = FeatureStore::labeled(64, labels.clone(), classes, 0.6);
     let mut trainer = Trainer::new(
         Runtime::default_dir(),
@@ -192,6 +210,15 @@ fn cmd_train(args: &Args) -> Result<()> {
         trainer.params.num_parameters(),
         trainer.batch,
         trainer.fanouts
+    );
+    println!(
+        "sampling: {parts} partitions x {} pool workers, shard size {}",
+        svc.config.workers,
+        if svc.config.shard_size == usize::MAX {
+            "off".to_string()
+        } else {
+            svc.config.shard_size.to_string()
+        }
     );
     // 80/20 train/test split.
     let split = (n * 8) / 10;

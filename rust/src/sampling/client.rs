@@ -9,6 +9,12 @@
 //!   single owner server (the edge-cut / DistDGL architecture Fig. 10
 //!   measures against).
 //!
+//! Per-server requests larger than `shard_size` seeds are split into
+//! seed-range **shards** sharing one salt, so a partition's worker pool
+//! serves a hotspot gather concurrently (DESIGN.md §9); per-seed RNG
+//! streams on the server make the merged response bit-identical for any
+//! shard split and worker count.
+//!
 //! A dead partition server is an error, not a panic: `sample_one_hop`
 //! reports *which* partitions failed so the coordinator can surface it.
 
@@ -50,6 +56,11 @@ pub struct SamplingClient {
     pub membership: Arc<BitMatrix>,
     pub mode: RouteMode,
     pub rng: Rng,
+    /// Max seeds per Gather shard: per-server requests longer than this
+    /// are split into seed-range shards (same salt, increasing
+    /// `seed_offset`) that a server pool executes concurrently.
+    /// `usize::MAX` or 0 (normalized at use) disables splitting.
+    pub shard_size: usize,
 }
 
 impl SamplingClient {
@@ -64,14 +75,6 @@ impl SamplingClient {
         c
     }
 
-    /// Partitions a seed is routed to under the current mode.
-    fn route(&self, v: VId) -> Vec<usize> {
-        match &self.mode {
-            RouteMode::AllReplicas => self.membership.row_ones(v as usize).collect(),
-            RouteMode::Owner(owner) => vec![owner[v as usize] as usize],
-        }
-    }
-
     /// One Gather + Apply round (Algorithm 1, lines 9–10): sample up to
     /// `fanout` neighbors for every seed. Duplicate seeds are sampled
     /// independently (each occurrence is its own tree slot).
@@ -81,54 +84,104 @@ impl SamplingClient {
         fanout: usize,
         cfg: &SampleConfig,
     ) -> Result<OneHopSample> {
-        // --- Gather: bucket seed occurrences by server ---
+        // --- Gather: bucket seed occurrences by server. Membership bits
+        // are iterated in place — no per-seed route Vec allocation. ---
         let p = self.servers.len();
         let mut per_server_seeds: Vec<Vec<VId>> = vec![Vec::new(); p];
         // seat[i] = list of (server, index within that server's request)
         let mut seat: Vec<Vec<(usize, u32)>> = vec![Vec::new(); seeds.len()];
         for (i, &s) in seeds.iter().enumerate() {
-            for srv in self.route(s) {
+            let mut take = |srv: usize| {
                 seat[i].push((srv, per_server_seeds[srv].len() as u32));
                 per_server_seeds[srv].push(s);
+            };
+            match &self.mode {
+                RouteMode::AllReplicas => {
+                    for srv in self.membership.row_ones(s as usize) {
+                        take(srv);
+                    }
+                }
+                RouteMode::Owner(owner) => take(owner[s as usize] as usize),
             }
         }
+        // 0 and usize::MAX both mean "never split" (ServiceConfig::new's
+        // CLI contract) — a shard size of 0 must not degenerate into
+        // one-seed shards.
+        let shard = if self.shard_size == 0 {
+            usize::MAX
+        } else {
+            self.shard_size
+        };
         let (tx, rx) = std::sync::mpsc::channel();
-        let mut sent: Vec<usize> = Vec::new();
+        // shards_of[srv] = number of shards sent to that server (0 = none).
+        let mut shards_of: Vec<usize> = vec![0; p];
+        let mut total_sent = 0usize;
         for (srv, sv_seeds) in per_server_seeds.into_iter().enumerate() {
             if sv_seeds.is_empty() {
                 continue;
             }
-            // Per-request salt: the server derives its sampling stream from
-            // it, keeping responses independent of request arrival order.
+            // One salt per *logical* server request, drawn in server-index
+            // order — the client RNG stream is therefore invariant to the
+            // shard size, and all shards of one request share the salt.
             let salt = self.rng.next_u64();
-            let req = GatherRequest {
-                seeds: sv_seeds,
-                fanout,
-                cfg: cfg.clone(),
-                salt,
+            let n_shards = sv_seeds.len().div_ceil(shard);
+            shards_of[srv] = n_shards;
+            total_sent += n_shards;
+            let send_shard = |req: GatherRequest| -> Result<()> {
+                if self.servers[srv].send(ServerMsg::Gather(req, tx.clone())).is_err() {
+                    bail!("sampling server for partition {srv} hung up before the gather");
+                }
+                Ok(())
             };
-            if self.servers[srv].send(ServerMsg::Gather(req, tx.clone())).is_err() {
-                bail!("sampling server for partition {srv} hung up before the gather");
+            if n_shards == 1 {
+                send_shard(GatherRequest {
+                    seeds: sv_seeds,
+                    fanout,
+                    cfg: cfg.clone(),
+                    salt,
+                    seed_offset: 0,
+                })?;
+            } else {
+                for (si, chunk) in sv_seeds.chunks(shard).enumerate() {
+                    send_shard(GatherRequest {
+                        seeds: chunk.to_vec(),
+                        fanout,
+                        cfg: cfg.clone(),
+                        salt,
+                        seed_offset: (si * shard) as u32,
+                    })?;
+                }
             }
-            sent.push(srv);
         }
         drop(tx);
-        let mut responses: Vec<Option<GatherResponse>> = (0..p).map(|_| None).collect();
-        for _ in 0..sent.len() {
+        // responses[srv][shard] slots, filled as shards come back in any
+        // order (the echoed seed_offset identifies the slot).
+        let mut responses: Vec<Vec<Option<GatherResponse>>> =
+            shards_of.iter().map(|&n| vec![None; n]).collect();
+        for _ in 0..total_sent {
             match rx.recv() {
                 Ok(r) => {
-                    let part = r.part_id;
-                    responses[part] = Some(r);
+                    let slot = r.seed_offset as usize / shard;
+                    responses[r.part_id][slot] = Some(r);
                 }
                 Err(_) => {
-                    let missing: Vec<usize> = sent
-                        .iter()
-                        .copied()
-                        .filter(|&s| responses[s].is_none())
+                    let missing: Vec<usize> = (0..p)
+                        .filter(|&s| responses[s].iter().any(|r| r.is_none()))
                         .collect();
                     bail!("sampling server(s) for partition(s) {missing:?} died mid-gather");
                 }
             }
+        }
+        // A seat (srv, pos) lands in shard pos/shard at local index
+        // pos - shard_base.
+        fn slice_of<'r>(
+            responses: &'r [Vec<Option<GatherResponse>>],
+            shard: usize,
+            srv: usize,
+            pos: u32,
+        ) -> Option<(&'r GatherResponse, usize)> {
+            let r = responses[srv].get(pos as usize / shard)?.as_ref()?;
+            Some((r, pos as usize - r.seed_offset as usize))
         }
 
         // --- Apply: join (uniform) or global top-k (weighted) per seed ---
@@ -146,9 +199,9 @@ impl SamplingClient {
                 tk.reset(fanout);
                 let mut tiebreak = 0u64;
                 for &(srv, pos) in seats {
-                    if let Some(r) = &responses[srv] {
-                        let nbrs = r.neighbors_of(pos as usize);
-                        let scores = r.scores_of(pos as usize);
+                    if let Some((r, j)) = slice_of(&responses, shard, srv, pos) {
+                        let nbrs = r.neighbors_of(j);
+                        let scores = r.scores_of(j);
                         for (&n, &s) in nbrs.iter().zip(scores) {
                             tk.push(s, tiebreak, n);
                             tiebreak += 1;
@@ -161,8 +214,8 @@ impl SamplingClient {
             } else {
                 let start = out.neighbors.len();
                 for &(srv, pos) in seats {
-                    if let Some(r) = &responses[srv] {
-                        out.neighbors.extend_from_slice(r.neighbors_of(pos as usize));
+                    if let Some((r, j)) = slice_of(&responses, shard, srv, pos) {
+                        out.neighbors.extend_from_slice(r.neighbors_of(j));
                     }
                 }
                 // Stochastic rounding can overshoot fanout by a little:
@@ -188,9 +241,12 @@ mod tests {
     use crate::graph::generator;
     use crate::graph::hetero::build_partitions;
     use crate::partition::{AdaDNE, Partitioner};
-    use crate::sampling::server::{spawn, ServerStats};
+    use crate::sampling::server::{spawn, spawn_pool, ServerStats};
 
-    fn launch_small() -> (SamplingClient, Vec<Sender<ServerMsg>>) {
+    fn launch_small_sized(
+        workers: usize,
+        shard_size: usize,
+    ) -> (SamplingClient, Vec<Sender<ServerMsg>>) {
         let mut rng = Rng::new(130);
         let g = generator::chung_lu(600, 6000, 2.1, &mut rng);
         let ea = AdaDNE::default().partition(&g, 3, 0);
@@ -204,16 +260,31 @@ mod tests {
         }
         let mut servers = Vec::new();
         for p in parts {
-            let (tx, _h) = spawn(Arc::new(p), Arc::new(ServerStats::default()), 9);
-            servers.push(tx);
+            if workers == 1 {
+                let (tx, _h) = spawn(Arc::new(p), Arc::new(ServerStats::default()), 9);
+                servers.push(tx);
+            } else {
+                let (tx, _h) = spawn_pool(
+                    Arc::new(p),
+                    Arc::new(ServerStats::with_workers(workers)),
+                    9,
+                    workers,
+                );
+                servers.push(tx);
+            }
         }
         let client = SamplingClient {
             servers: servers.clone(),
             membership: Arc::new(membership),
             mode: RouteMode::AllReplicas,
             rng: Rng::new(77),
+            shard_size,
         };
         (client, servers)
+    }
+
+    fn launch_small() -> (SamplingClient, Vec<Sender<ServerMsg>>) {
+        launch_small_sized(1, usize::MAX)
     }
 
     #[test]
@@ -293,7 +364,7 @@ mod tests {
     #[test]
     fn identical_salted_requests_commute() {
         // Two clients with the same seed issue the same batch in opposite
-        // order; the per-request salt makes the responses identical — the
+        // order; per-seed salted streams make the responses identical — the
         // arrival-order independence the pipelined trainer relies on.
         let (client, _s) = launch_small();
         let mut c1 = client.split(7);
@@ -312,5 +383,38 @@ mod tests {
         let b2 = c2.sample_one_hop(&batch_b, 5, &SampleConfig::default()).unwrap();
         assert_eq!(a1.neighbors, a2.neighbors);
         assert_eq!(b1.neighbors, b2.neighbors);
+    }
+
+    #[test]
+    fn sharded_pool_client_reproduces_unsharded_samples() {
+        // Same client seed against (1 worker, no sharding) and (4 workers,
+        // shards that split every per-server request mid-way): bit-equal
+        // neighbor lists — the client-visible face of the per-seed RNG.
+        let mut seeds: Vec<VId> = (0..96).collect();
+        seeds.extend([7; 16]); // duplicate occurrences straddling shards
+        for cfg in [
+            SampleConfig::default(),
+            SampleConfig {
+                weighted: true,
+                ..Default::default()
+            },
+        ] {
+            let (base_client, _s1) = launch_small_sized(1, usize::MAX);
+            let mut base = base_client.split(3);
+            let want = base.sample_one_hop(&seeds, 5, &cfg).unwrap();
+            for (workers, shard) in [(4usize, 9usize), (4, 1), (2, 30)] {
+                let (pool_client, _s2) = launch_small_sized(workers, shard);
+                let mut c = pool_client.split(3);
+                let got = c.sample_one_hop(&seeds, 5, &cfg).unwrap();
+                assert_eq!(
+                    got.offsets, want.offsets,
+                    "offsets drifted (workers={workers} shard={shard})"
+                );
+                assert_eq!(
+                    got.neighbors, want.neighbors,
+                    "neighbors drifted (workers={workers} shard={shard})"
+                );
+            }
+        }
     }
 }

@@ -14,5 +14,5 @@ pub mod subgraph;
 
 pub use client::{OneHopSample, RouteMode, SamplingClient};
 pub use request::{Direction, GatherRequest, GatherResponse, SampleConfig, PAD};
-pub use service::{balanced_seeds, SamplingService};
+pub use service::{balanced_seeds, SamplingService, ServiceConfig};
 pub use subgraph::{sample_tree, TreeSample};

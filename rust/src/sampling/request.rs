@@ -34,17 +34,40 @@ impl Default for SampleConfig {
 
 /// One-hop gather request: sample up to `fanout` neighbors for each seed.
 /// Seeds are global vertex IDs already filtered to this server's replicas.
+///
+/// A large logical request may be split by the client into seed-range
+/// *shards* — contiguous slices of the per-server seed list, each carrying
+/// the same `salt` and its own `seed_offset` — so a partition's worker
+/// pool can serve one hotspot gather concurrently (DESIGN.md §9).
 #[derive(Clone, Debug)]
 pub struct GatherRequest {
     pub seeds: Vec<VId>,
     pub fanout: usize,
     pub cfg: SampleConfig,
-    /// Client-drawn RNG salt: the server derives this request's sampling
-    /// stream from (server seed, salt) instead of a persistent per-server
-    /// stream, so responses do not depend on the order in which concurrent
-    /// clients' requests arrive — the property the pipelined producer's
-    /// ordered (bit-exact) mode rests on (DESIGN.md §7).
+    /// Client-drawn RNG salt, one per *logical* per-server request (shared
+    /// by all of its shards). The server derives each seed occurrence's
+    /// sampling stream from (server seed, salt, seed index) — see
+    /// `seed_offset` — instead of a persistent per-server stream, so
+    /// responses depend neither on the order in which concurrent clients'
+    /// requests arrive nor on which pool worker serves which shard — the
+    /// property the pipelined producer's ordered (bit-exact) mode rests on
+    /// (DESIGN.md §7/§9).
     pub salt: u64,
+    /// Index of `seeds[0]` within the logical per-server request this shard
+    /// belongs to (0 for an unsharded request). Seed occurrence i of this
+    /// shard samples from the per-seed stream (server seed, salt,
+    /// seed_offset + i), which makes responses bit-identical for any shard
+    /// split and any worker count.
+    pub seed_offset: u32,
+}
+
+/// Per-seed sampling stream index mixer shared by server and tests: the
+/// stream of occurrence `index` under `salt` is `Rng::new(server_seed ^
+/// seed_stream_key(salt, index))`.
+#[inline]
+pub fn seed_stream_key(salt: u64, index: u64) -> u64 {
+    salt.wrapping_mul(0xA076_1D64_78BD_642F)
+        ^ index.wrapping_add(1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
 }
 
 /// Per-seed sampled neighbors in a flattened (offsets, neighbors) layout.
@@ -53,6 +76,9 @@ pub struct GatherRequest {
 #[derive(Clone, Debug, Default)]
 pub struct GatherResponse {
     pub part_id: usize,
+    /// Echo of the request's shard offset so the client can slot shard
+    /// responses back into per-server seed order during the merge.
+    pub seed_offset: u32,
     pub offsets: Vec<u32>,
     pub neighbors: Vec<VId>,
     pub scores: Vec<f64>,
@@ -74,11 +100,11 @@ impl GatherResponse {
     }
 }
 
-/// Messages a partition server accepts.
+/// Messages a partition server accepts. With a worker pool, each pool
+/// member consumes exactly one `Shutdown` off the shared inbox (the
+/// service sends one per worker).
 pub enum ServerMsg {
     Gather(GatherRequest, std::sync::mpsc::Sender<GatherResponse>),
-    /// Fetch the precomputed one-hop neighbor cache plan for boundary
-    /// vertices (used by the inference engine's static cache fill).
     Shutdown,
 }
 
@@ -90,6 +116,7 @@ mod tests {
     fn response_slicing() {
         let r = GatherResponse {
             part_id: 0,
+            seed_offset: 0,
             offsets: vec![0, 2, 2, 5],
             neighbors: vec![7, 8, 1, 2, 3],
             scores: vec![],
@@ -98,5 +125,15 @@ mod tests {
         assert_eq!(r.neighbors_of(0), &[7, 8]);
         assert_eq!(r.neighbors_of(1), &[] as &[VId]);
         assert_eq!(r.neighbors_of(2), &[1, 2, 3]);
+    }
+
+    #[test]
+    fn seed_stream_keys_are_index_and_salt_sensitive() {
+        // The per-seed derivation must decorrelate across both axes: two
+        // occurrences of the same vertex in one request (same salt,
+        // different index) and the same index under different salts.
+        assert_ne!(seed_stream_key(1, 0), seed_stream_key(1, 1));
+        assert_ne!(seed_stream_key(1, 0), seed_stream_key(2, 0));
+        assert_eq!(seed_stream_key(7, 3), seed_stream_key(7, 3));
     }
 }

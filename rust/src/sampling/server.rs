@@ -1,22 +1,29 @@
-//! Per-partition sampling server (paper Algorithms 2–3, server side). One
-//! OS thread per partition owns that partition's compact graph and serves
-//! one-hop Gather requests over an mpsc inbox. Work counters are shared
-//! atomics so the harness can measure the Fig. 10 workload skew without
-//! perturbing the servers.
+//! Per-partition sampling server pool (paper Algorithms 2–3, server side).
+//! Each partition owns a read-only compact graph shared by R pool workers
+//! (`spawn_pool`): the workers pull Gather shards off one shared inbox, so
+//! a single hotspot gather — split into seed-range shards by the client —
+//! parallelizes *inside* the partition ("the one hop sampling request of
+//! high degree vertices handled by multiple servers", §III-C). Work
+//! counters are shared atomics so the harness can measure the Fig. 10
+//! workload skew without perturbing the servers; per-worker slots attribute
+//! requests/busy-time to individual pool members (DESIGN.md §9).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::graph::csr::VId;
 use crate::graph::hetero::PartitionGraph;
 use crate::sampling::algo_d;
 use crate::sampling::request::{
-    Direction, GatherRequest, GatherResponse, SampleConfig, ServerMsg,
+    seed_stream_key, Direction, GatherRequest, GatherResponse, SampleConfig, ServerMsg,
 };
 use crate::util::rng::Rng;
 
-/// Shared per-server workload counters (Fig. 10's measurement).
+/// Shared per-server workload counters (Fig. 10's measurement). The scalar
+/// totals are partition-level and invariant to the pool size; the
+/// `worker_*` vectors (sized by `with_workers`, empty for ad-hoc servers)
+/// attribute requests and busy time to individual pool workers.
 #[derive(Debug, Default)]
 pub struct ServerStats {
     pub requests: AtomicU64,
@@ -30,6 +37,35 @@ pub struct ServerStats {
     /// servers run on parallel machines, so the busiest one gates
     /// completion (Fig. 9's simulated-throughput column).
     pub busy_ns: AtomicU64,
+    /// Requests (shards) served by each pool worker; sums to `requests`.
+    pub worker_requests: Vec<AtomicU64>,
+    /// Per-worker CPU nanoseconds; sums to `busy_ns`.
+    pub worker_busy_ns: Vec<AtomicU64>,
+}
+
+impl ServerStats {
+    /// Stats with per-worker attribution slots for an R-worker pool.
+    pub fn with_workers(workers: usize) -> Self {
+        Self {
+            worker_requests: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            worker_busy_ns: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            ..Default::default()
+        }
+    }
+
+    pub fn reset(&self) {
+        self.requests.store(0, Ordering::Relaxed);
+        self.seeds.store(0, Ordering::Relaxed);
+        self.edges_scanned.store(0, Ordering::Relaxed);
+        self.neighbors_returned.store(0, Ordering::Relaxed);
+        self.busy_ns.store(0, Ordering::Relaxed);
+        for w in &self.worker_requests {
+            w.store(0, Ordering::Relaxed);
+        }
+        for w in &self.worker_busy_ns {
+            w.store(0, Ordering::Relaxed);
+        }
+    }
 }
 
 /// CPU time of the calling thread (CLOCK_THREAD_CPUTIME_ID).
@@ -48,28 +84,49 @@ pub fn thread_cpu_ns() -> u64 {
 pub struct PartitionServer {
     pub graph: Arc<PartitionGraph>,
     pub stats: Arc<ServerStats>,
-    /// Per-partition seed; each request's sampling stream is derived from
-    /// (seed, request salt) so responses are independent of arrival order
-    /// under concurrent clients (the pipelined producer's determinism
-    /// contract, DESIGN.md §7).
+    /// Per-partition seed; each seed occurrence's sampling stream is
+    /// derived from (seed, request salt, per-server seed index) so
+    /// responses are independent of arrival order under concurrent clients
+    /// AND of how a request is sharded across pool workers (DESIGN.md
+    /// §7/§9).
     seed: u64,
+    /// Pool slot for worker-attributed stats (0 for single-thread servers).
+    worker: usize,
 }
 
 impl PartitionServer {
     pub fn new(graph: Arc<PartitionGraph>, stats: Arc<ServerStats>, seed: u64) -> Self {
+        Self::for_worker(graph, stats, seed, 0)
+    }
+
+    /// A pool member: identical sampling behavior, distinct stats slot.
+    pub fn for_worker(
+        graph: Arc<PartitionGraph>,
+        stats: Arc<ServerStats>,
+        seed: u64,
+        worker: usize,
+    ) -> Self {
         let part = graph.part_id as u64;
         Self {
             graph,
             stats,
             seed: seed ^ part.wrapping_mul(0x9E3779B97F4A7C15),
+            worker,
         }
     }
 
-    fn request_rng(&self, salt: u64) -> Rng {
-        Rng::new(self.seed ^ salt.wrapping_mul(0xA076_1D64_78BD_642F))
+    /// The sampling stream of one seed occurrence: a pure function of
+    /// (partition seed, request salt, per-server seed index). `index` is
+    /// the occurrence's position in the *logical* per-server request
+    /// (shard offset + position within the shard), so any shard split and
+    /// any worker count reproduce identical responses.
+    fn seed_stream(&self, salt: u64, index: u64) -> Rng {
+        Rng::new(self.seed ^ seed_stream_key(salt, index))
     }
 
-    /// Blocking server loop; returns on Shutdown or closed inbox.
+    /// Blocking single-worker server loop; returns on Shutdown or closed
+    /// inbox. Kept for ad-hoc servers (tests, tools); the service launches
+    /// pools via [`spawn_pool`].
     pub fn run(mut self, inbox: Receiver<ServerMsg>) {
         while let Ok(msg) = inbox.recv() {
             match msg {
@@ -83,22 +140,49 @@ impl PartitionServer {
         }
     }
 
+    /// Pool-worker loop over a shared inbox. The mutex is held only while
+    /// blocked in `recv` — the winner releases it before serving, so R
+    /// workers serve R shards concurrently while one peer parks on the
+    /// lock waiting for the next message. Each worker consumes exactly one
+    /// `Shutdown` (the service sends one per worker).
+    pub fn run_shared(mut self, inbox: Arc<Mutex<Receiver<ServerMsg>>>) {
+        loop {
+            let msg = {
+                let rx = inbox.lock().unwrap();
+                rx.recv()
+            };
+            match msg {
+                Ok(ServerMsg::Gather(req, reply)) => {
+                    let resp = self.gather(&req);
+                    let _ = reply.send(resp);
+                }
+                Ok(ServerMsg::Shutdown) | Err(_) => break,
+            }
+        }
+    }
+
     /// One-hop gather over the local partition: UniformGatherOp /
     /// WeightedGatherOp depending on cfg.weighted.
     pub fn gather(&mut self, req: &GatherRequest) -> GatherResponse {
         let t_busy = thread_cpu_ns();
-        let mut rng = self.request_rng(req.salt);
         let g = self.graph.clone();
+        let cap = req.seeds.len() * req.fanout;
         let mut resp = GatherResponse {
             part_id: g.part_id,
+            seed_offset: req.seed_offset,
             offsets: Vec::with_capacity(req.seeds.len() + 1),
-            neighbors: Vec::new(),
-            scores: if req.cfg.weighted { Vec::new() } else { Vec::new() },
+            neighbors: Vec::with_capacity(cap),
+            scores: if req.cfg.weighted {
+                Vec::with_capacity(cap)
+            } else {
+                Vec::new()
+            },
             work_edges: 0,
         };
         resp.offsets.push(0);
-        for &seed in &req.seeds {
+        for (i, &seed) in req.seeds.iter().enumerate() {
             if let Some(local) = g.local_id(seed) {
+                let mut rng = self.seed_stream(req.salt, req.seed_offset as u64 + i as u64);
                 if req.cfg.weighted {
                     self.gather_weighted(&mut rng, local, req.fanout, &req.cfg, &mut resp);
                 } else {
@@ -117,14 +201,19 @@ impl PartitionServer {
         self.stats
             .neighbors_returned
             .fetch_add(resp.neighbors.len() as u64, Ordering::Relaxed);
-        self.stats
-            .busy_ns
-            .fetch_add(thread_cpu_ns().saturating_sub(t_busy), Ordering::Relaxed);
+        let busy = thread_cpu_ns().saturating_sub(t_busy);
+        self.stats.busy_ns.fetch_add(busy, Ordering::Relaxed);
+        if let Some(w) = self.stats.worker_requests.get(self.worker) {
+            w.fetch_add(1, Ordering::Relaxed);
+        }
+        if let Some(w) = self.stats.worker_busy_ns.get(self.worker) {
+            w.fetch_add(busy, Ordering::Relaxed);
+        }
         resp
     }
 
     /// Candidate edge range honoring direction + optional edge type.
-    /// Returns (global neighbor ids, first local edge index) as a slice.
+    /// Returns (global neighbor ids, first local edge index).
     fn candidates<'g>(
         g: &'g PartitionGraph,
         local: u32,
@@ -137,12 +226,11 @@ impl PartitionServer {
                     (g.out_neighbors(local), a)
                 }
                 Some(t) => {
-                    let sl = g.out_neighbors_of_type(local, t);
-                    // The slice aliases out_dst; its element offset IS the
-                    // absolute local edge index (for weight lookup).
-                    let base = (sl.as_ptr() as usize - g.out_dst.as_ptr() as usize)
-                        / std::mem::size_of::<VId>();
-                    (sl, base)
+                    // Absolute local-edge indices straight from the type
+                    // run index (for weight lookup) — no pointer-offset
+                    // recovery games.
+                    let (a, b) = g.out_range_of_type(local, t);
+                    (&g.out_dst[a..b], a)
                 }
             },
             Direction::In => {
@@ -232,7 +320,8 @@ impl PartitionServer {
     }
 }
 
-/// Spawn a server thread; returns its inbox sender.
+/// Spawn a single-worker server thread; returns its inbox sender. Kept for
+/// tests and ad-hoc wiring — the service launches [`spawn_pool`]s.
 pub fn spawn(
     graph: Arc<PartitionGraph>,
     stats: Arc<ServerStats>,
@@ -242,6 +331,29 @@ pub fn spawn(
     let server = PartitionServer::new(graph, stats, seed);
     let handle = std::thread::spawn(move || server.run(rx));
     (tx, handle)
+}
+
+/// Spawn an R-worker pool over one shared inbox for a partition. All
+/// workers share the read-only `Arc<PartitionGraph>` and the same
+/// partition seed (per-seed streams make them interchangeable); shutdown
+/// requires one `ServerMsg::Shutdown` per worker.
+pub fn spawn_pool(
+    graph: Arc<PartitionGraph>,
+    stats: Arc<ServerStats>,
+    seed: u64,
+    workers: usize,
+) -> (Sender<ServerMsg>, Vec<std::thread::JoinHandle<()>>) {
+    let workers = workers.max(1);
+    let (tx, rx) = std::sync::mpsc::channel();
+    let rx = Arc::new(Mutex::new(rx));
+    let handles = (0..workers)
+        .map(|w| {
+            let server = PartitionServer::for_worker(graph.clone(), stats.clone(), seed, w);
+            let rx = rx.clone();
+            std::thread::spawn(move || server.run_shared(rx))
+        })
+        .collect();
+    (tx, handles)
 }
 
 #[cfg(test)]
@@ -258,6 +370,16 @@ mod tests {
         Arc::new(build_partitions(&g, &ea.part_of_edge, 1).remove(0))
     }
 
+    fn req(seeds: Vec<VId>, fanout: usize, salt: u64, cfg: SampleConfig) -> GatherRequest {
+        GatherRequest {
+            seeds,
+            fanout,
+            salt,
+            cfg,
+            seed_offset: 0,
+        }
+    }
+
     #[test]
     fn uniform_single_server_full_degree() {
         // With one partition, local_deg == global_deg => exactly min(f, deg)
@@ -266,12 +388,7 @@ mod tests {
         let mut srv =
             PartitionServer::new(pg.clone(), Arc::new(ServerStats::default()), 1);
         let seeds: Vec<VId> = (0..50).map(|i| pg.global(i)).collect();
-        let resp = srv.gather(&GatherRequest {
-            seeds: seeds.clone(),
-            fanout: 5,
-            salt: 11,
-            cfg: SampleConfig::default(),
-        });
+        let resp = srv.gather(&req(seeds.clone(), 5, 11, SampleConfig::default()));
         for (i, &s) in seeds.iter().enumerate() {
             let l = pg.local_id(s).unwrap();
             let expect = pg.local_out_degree(l).min(5);
@@ -292,12 +409,7 @@ mod tests {
         let hub = (0..pg.nv() as u32)
             .max_by_key(|&l| pg.local_out_degree(l))
             .unwrap();
-        let resp = srv.gather(&GatherRequest {
-            seeds: vec![pg.global(hub)],
-            fanout: 10,
-            salt: 22,
-            cfg: SampleConfig::default(),
-        });
+        let resp = srv.gather(&req(vec![pg.global(hub)], 10, 22, SampleConfig::default()));
         // Multigraph can hold genuine duplicate edges; compare against the
         // multiset of candidates instead of requiring distinct values.
         assert_eq!(resp.neighbors_of(0).len(), 10.min(pg.local_out_degree(hub)));
@@ -309,15 +421,15 @@ mod tests {
         let mut srv =
             PartitionServer::new(pg.clone(), Arc::new(ServerStats::default()), 3);
         let seeds: Vec<VId> = (0..20).map(|i| pg.global(i)).collect();
-        let resp = srv.gather(&GatherRequest {
+        let resp = srv.gather(&req(
             seeds,
-            fanout: 4,
-            salt: 33,
-            cfg: SampleConfig {
+            4,
+            33,
+            SampleConfig {
                 weighted: true,
                 ..Default::default()
             },
-        });
+        ));
         assert_eq!(resp.scores.len(), resp.neighbors.len());
         for i in 0..resp.offsets.len() - 1 {
             let sc = resp.scores_of(i);
@@ -333,15 +445,15 @@ mod tests {
         let mut srv =
             PartitionServer::new(pg.clone(), Arc::new(ServerStats::default()), 4);
         let seeds: Vec<VId> = (0..100).map(|i| pg.global(i)).collect();
-        let resp = srv.gather(&GatherRequest {
-            seeds: seeds.clone(),
-            fanout: 8,
-            salt: 44,
-            cfg: SampleConfig {
+        let resp = srv.gather(&req(
+            seeds.clone(),
+            8,
+            44,
+            SampleConfig {
                 etype: Some(1),
                 ..Default::default()
             },
-        });
+        ));
         for (i, &s) in seeds.iter().enumerate() {
             let l = pg.local_id(s).unwrap();
             let allowed = pg.out_neighbors_of_type(l, 1);
@@ -357,15 +469,15 @@ mod tests {
         let mut srv =
             PartitionServer::new(pg.clone(), Arc::new(ServerStats::default()), 5);
         let seeds: Vec<VId> = (0..50).map(|i| pg.global(i)).collect();
-        let resp = srv.gather(&GatherRequest {
-            seeds: seeds.clone(),
-            fanout: 5,
-            salt: 55,
-            cfg: SampleConfig {
+        let resp = srv.gather(&req(
+            seeds.clone(),
+            5,
+            55,
+            SampleConfig {
                 direction: Direction::In,
                 ..Default::default()
             },
-        });
+        ));
         for (i, &s) in seeds.iter().enumerate() {
             let l = pg.local_id(s).unwrap();
             for n in resp.neighbors_of(i) {
@@ -380,12 +492,7 @@ mod tests {
         let stats = Arc::new(ServerStats::default());
         let mut srv = PartitionServer::new(pg.clone(), stats.clone(), 6);
         let seeds: Vec<VId> = (0..10).map(|i| pg.global(i)).collect();
-        srv.gather(&GatherRequest {
-            seeds,
-            fanout: 3,
-            salt: 66,
-            cfg: SampleConfig::default(),
-        });
+        srv.gather(&req(seeds, 3, 66, SampleConfig::default()));
         assert_eq!(stats.requests.load(Ordering::Relaxed), 1);
         assert_eq!(stats.seeds.load(Ordering::Relaxed), 10);
     }
@@ -396,12 +503,7 @@ mod tests {
         let (tx, handle) = spawn(pg.clone(), Arc::new(ServerStats::default()), 7);
         let (rtx, rrx) = std::sync::mpsc::channel();
         tx.send(ServerMsg::Gather(
-            GatherRequest {
-                seeds: vec![pg.global(0)],
-                fanout: 3,
-                salt: 77,
-                cfg: SampleConfig::default(),
-            },
+            req(vec![pg.global(0)], 3, 77, SampleConfig::default()),
             rtx,
         ))
         .unwrap();
@@ -409,5 +511,146 @@ mod tests {
         assert_eq!(resp.offsets.len(), 2);
         tx.send(ServerMsg::Shutdown).unwrap();
         handle.join().unwrap();
+    }
+
+    /// The tentpole regression: splitting a request into seed-range shards
+    /// — including splits landing mid-way through a run of duplicate seeds
+    /// — must reproduce the unsharded response bit-for-bit, because every
+    /// seed occurrence samples from its own (salt, index)-derived stream.
+    #[test]
+    fn sharded_gather_is_bit_identical_to_full_request() {
+        let pg = one_partition();
+        let hub = (0..pg.nv() as u32)
+            .max_by_key(|&l| pg.local_out_degree(l))
+            .unwrap();
+        // Duplicate-heavy seed list: the hub appears many times, straddling
+        // every shard boundary below.
+        let mut seeds: Vec<VId> = vec![pg.global(hub); 7];
+        seeds.extend((0..23).map(|i| pg.global(i)));
+        seeds.extend([pg.global(hub); 5]);
+        for cfg in [
+            SampleConfig::default(),
+            SampleConfig {
+                weighted: true,
+                ..Default::default()
+            },
+            SampleConfig {
+                etype: Some(1),
+                ..Default::default()
+            },
+            SampleConfig {
+                direction: Direction::In,
+                ..Default::default()
+            },
+        ] {
+            let mut srv =
+                PartitionServer::new(pg.clone(), Arc::new(ServerStats::default()), 9);
+            let salt = 0xF00D;
+            let full = srv.gather(&req(seeds.clone(), 6, salt, cfg.clone()));
+            for shard in [3usize, 5, 16] {
+                let mut neighbors = Vec::new();
+                let mut scores = Vec::new();
+                let mut lens = Vec::new();
+                for (si, chunk) in seeds.chunks(shard).enumerate() {
+                    let r = srv.gather(&GatherRequest {
+                        seeds: chunk.to_vec(),
+                        fanout: 6,
+                        salt,
+                        cfg: cfg.clone(),
+                        seed_offset: (si * shard) as u32,
+                    });
+                    assert_eq!(r.seed_offset as usize, si * shard);
+                    for i in 0..chunk.len() {
+                        lens.push(r.neighbors_of(i).len());
+                    }
+                    neighbors.extend_from_slice(&r.neighbors);
+                    scores.extend_from_slice(&r.scores);
+                }
+                assert_eq!(neighbors, full.neighbors, "shard={shard} cfg={cfg:?}");
+                assert_eq!(scores, full.scores, "shard={shard} cfg={cfg:?}");
+                let full_lens: Vec<usize> =
+                    (0..seeds.len()).map(|i| full.neighbors_of(i).len()).collect();
+                assert_eq!(lens, full_lens, "shard={shard} cfg={cfg:?}");
+            }
+        }
+    }
+
+    /// Duplicate occurrences of one seed draw from distinct index-derived
+    /// streams — sampling them independently — while the same occurrence
+    /// index reproduces exactly (the per-seed determinism contract).
+    #[test]
+    fn duplicate_occurrences_use_independent_per_seed_streams() {
+        let pg = one_partition();
+        let hub = (0..pg.nv() as u32)
+            .max_by_key(|&l| pg.local_out_degree(l))
+            .unwrap();
+        assert!(pg.local_out_degree(hub) > 16, "need a hub for this test");
+        let mut srv = PartitionServer::new(pg.clone(), Arc::new(ServerStats::default()), 10);
+        let r1 = srv.gather(&req(vec![pg.global(hub); 8], 4, 5, SampleConfig::default()));
+        let r2 = srv.gather(&req(vec![pg.global(hub); 8], 4, 5, SampleConfig::default()));
+        // Same salt + same indices => identical response.
+        assert_eq!(r1.neighbors, r2.neighbors);
+        // Occurrences must not all be identical draws (independence): with
+        // deg > 16 and fanout 4 the probability of 8 identical samples is
+        // negligible.
+        let first = r1.neighbors_of(0).to_vec();
+        assert!(
+            (1..8).any(|i| r1.neighbors_of(i) != &first[..]),
+            "duplicate occurrences all drew the same sample: {first:?}"
+        );
+    }
+
+    #[test]
+    fn pool_round_trip_and_worker_attribution() {
+        let pg = one_partition();
+        let workers = 4;
+        let stats = Arc::new(ServerStats::with_workers(workers));
+        let (tx, handles) = spawn_pool(pg.clone(), stats.clone(), 11, workers);
+        assert_eq!(handles.len(), workers);
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        let shards = 12usize;
+        for s in 0..shards {
+            tx.send(ServerMsg::Gather(
+                GatherRequest {
+                    seeds: (0..8).map(|i| pg.global(i)).collect(),
+                    fanout: 3,
+                    salt: 13,
+                    cfg: SampleConfig::default(),
+                    seed_offset: (s * 8) as u32,
+                },
+                rtx.clone(),
+            ))
+            .unwrap();
+        }
+        drop(rtx);
+        let mut got = 0;
+        while rrx.recv().is_ok() {
+            got += 1;
+        }
+        assert_eq!(got, shards);
+        assert_eq!(stats.requests.load(Ordering::Relaxed), shards as u64);
+        let per_worker: u64 = stats
+            .worker_requests
+            .iter()
+            .map(|w| w.load(Ordering::Relaxed))
+            .sum();
+        assert_eq!(per_worker, shards as u64, "attribution must sum to totals");
+        let per_worker_busy: u64 = stats
+            .worker_busy_ns
+            .iter()
+            .map(|w| w.load(Ordering::Relaxed))
+            .sum();
+        assert_eq!(
+            per_worker_busy,
+            stats.busy_ns.load(Ordering::Relaxed),
+            "busy-time attribution must sum to the partition total"
+        );
+        // Per-worker shutdown: one Shutdown per pool member.
+        for _ in 0..workers {
+            tx.send(ServerMsg::Shutdown).unwrap();
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 }

@@ -1,7 +1,10 @@
-//! Sampling service lifecycle: launch P partition servers (one thread
-//! each), hand out clients, expose per-server workload counters, shut down
-//! cleanly. This is the in-process analogue of the paper's "P servers will
-//! be launched, each for one partition".
+//! Sampling service lifecycle: launch P partition server *pools* (R
+//! workers each over one shared inbox), hand out clients, expose per-server
+//! workload counters, shut down cleanly. This is the in-process analogue of
+//! the paper's "P servers will be launched, each for one partition", with
+//! §III-C's "one hop sampling request of high degree vertices handled by
+//! multiple servers" realized inside each partition by the worker pool +
+//! client-side seed-range sharding (DESIGN.md §9).
 
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
@@ -11,30 +14,81 @@ use crate::graph::hetero::{build_partitions, PartitionGraph};
 use crate::partition::EdgeAssignment;
 use crate::sampling::client::{RouteMode, SamplingClient};
 use crate::sampling::request::ServerMsg;
-use crate::sampling::server::{spawn, ServerStats};
+use crate::sampling::server::{spawn_pool, ServerStats};
 use crate::util::bitset::BitMatrix;
 use crate::util::rng::Rng;
+
+/// Threading knobs of the sampling service. Per-seed RNG streams make the
+/// sampled output bit-identical for ANY (workers, shard_size) — these only
+/// trade throughput (`workers=1` + no sharding keeps the old
+/// one-thread-per-partition deployment: same thread layout and message
+/// protocol).
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceConfig {
+    /// Pool workers per partition sharing one inbox.
+    pub workers: usize,
+    /// Max seeds per Gather shard (client-side request splitting);
+    /// `usize::MAX` or 0 = never split.
+    pub shard_size: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            workers: 1,
+            shard_size: usize::MAX,
+        }
+    }
+}
+
+impl ServiceConfig {
+    /// The canonical normalization (also applied by `launch_*_cfg`):
+    /// `workers == 0` means 1; `shard_size == 0` means "never split"
+    /// (the `--shard-size 0` default of the examples and the `glisp` CLI).
+    pub fn new(workers: usize, shard_size: usize) -> Self {
+        Self {
+            workers: workers.max(1),
+            shard_size: if shard_size == 0 { usize::MAX } else { shard_size },
+        }
+    }
+}
 
 pub struct SamplingService {
     pub servers: Vec<Sender<ServerMsg>>,
     pub stats: Vec<Arc<ServerStats>>,
     pub membership: Arc<BitMatrix>,
     pub partitions: Vec<Arc<PartitionGraph>>,
+    pub config: ServiceConfig,
     handles: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl SamplingService {
-    /// Partition `g` with `assign` and launch one server per partition.
+    /// Partition `g` with `assign` and launch one single-worker server per
+    /// partition (the paper's base deployment).
     pub fn launch(g: &Graph, assign: &EdgeAssignment, seed: u64) -> Self {
-        let parts = build_partitions(g, &assign.part_of_edge, assign.num_parts);
-        Self::launch_with_partitions(g.n, parts, seed)
+        Self::launch_cfg(g, assign, seed, ServiceConfig::default())
     }
 
-    pub fn launch_with_partitions(
+    /// Partition `g` with `assign` and launch one `cfg.workers`-strong
+    /// server pool per partition.
+    pub fn launch_cfg(g: &Graph, assign: &EdgeAssignment, seed: u64, cfg: ServiceConfig) -> Self {
+        let parts = build_partitions(g, &assign.part_of_edge, assign.num_parts);
+        Self::launch_with_partitions_cfg(g.n, parts, seed, cfg)
+    }
+
+    pub fn launch_with_partitions(n: usize, parts: Vec<PartitionGraph>, seed: u64) -> Self {
+        Self::launch_with_partitions_cfg(n, parts, seed, ServiceConfig::default())
+    }
+
+    pub fn launch_with_partitions_cfg(
         n: usize,
         parts: Vec<PartitionGraph>,
         seed: u64,
+        cfg: ServiceConfig,
     ) -> Self {
+        // Normalize through the one canonical rule (0 workers -> 1,
+        // shard 0 -> never split).
+        let cfg = ServiceConfig::new(cfg.workers, cfg.shard_size);
         let num_parts = parts.len();
         let mut membership = BitMatrix::new(n, num_parts);
         for p in &parts {
@@ -48,12 +102,12 @@ impl SamplingService {
         let mut handles = Vec::new();
         let mut partitions = Vec::new();
         for p in parts {
-            let st = Arc::new(ServerStats::default());
+            let st = Arc::new(ServerStats::with_workers(cfg.workers));
             let pa = Arc::new(p);
-            let (tx, h) = spawn(pa.clone(), st.clone(), seed);
+            let (tx, hs) = spawn_pool(pa.clone(), st.clone(), seed, cfg.workers);
             servers.push(tx);
             stats.push(st);
-            handles.push(h);
+            handles.extend(hs);
             partitions.push(pa);
         }
         Self {
@@ -61,6 +115,7 @@ impl SamplingService {
             stats,
             membership,
             partitions,
+            config: cfg,
             handles,
         }
     }
@@ -72,6 +127,7 @@ impl SamplingService {
             membership: self.membership.clone(),
             mode: RouteMode::AllReplicas,
             rng: Rng::new(seed),
+            shard_size: self.config.shard_size,
         }
     }
 
@@ -82,10 +138,12 @@ impl SamplingService {
             membership: self.membership.clone(),
             mode: RouteMode::Owner(owner),
             rng: Rng::new(seed),
+            shard_size: self.config.shard_size,
         }
     }
 
     /// Per-server edges-scanned counters — the Fig. 10 workload metric.
+    /// Invariant to `workers`/`shard_size` (per-seed streams).
     pub fn workload(&self) -> Vec<u64> {
         self.stats
             .iter()
@@ -93,20 +151,47 @@ impl SamplingService {
             .collect()
     }
 
+    /// Requests (shards) served per pool worker, per partition — the
+    /// DESIGN.md §9 attribution view of how a partition's pool shares its
+    /// inbox.
+    pub fn worker_requests(&self) -> Vec<Vec<u64>> {
+        self.stats
+            .iter()
+            .map(|s| {
+                s.worker_requests
+                    .iter()
+                    .map(|w| w.load(std::sync::atomic::Ordering::Relaxed))
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// CPU seconds spent serving gathers per pool worker, per partition
+    /// (sums to [`Self::busy_secs`] per partition) — shows whether a
+    /// pool's members actually share the serving time or one worker wins
+    /// every inbox race.
+    pub fn worker_busy_secs(&self) -> Vec<Vec<f64>> {
+        self.stats
+            .iter()
+            .map(|s| {
+                s.worker_busy_ns
+                    .iter()
+                    .map(|w| w.load(std::sync::atomic::Ordering::Relaxed) as f64 / 1e9)
+                    .collect()
+            })
+            .collect()
+    }
+
     pub fn reset_stats(&self) {
-        use std::sync::atomic::Ordering;
         for s in &self.stats {
-            s.requests.store(0, Ordering::Relaxed);
-            s.seeds.store(0, Ordering::Relaxed);
-            s.edges_scanned.store(0, Ordering::Relaxed);
-            s.neighbors_returned.store(0, Ordering::Relaxed);
-            s.busy_ns.store(0, Ordering::Relaxed);
+            s.reset();
         }
     }
 
-    /// Per-server busy time in seconds. `max` of this vector is the
-    /// simulated distributed makespan of the traffic since the last reset
-    /// (the servers run in parallel in the paper's deployment).
+    /// Per-server busy time in seconds (all pool workers summed). `max` of
+    /// this vector is the simulated distributed makespan of the traffic
+    /// since the last reset (the servers run in parallel in the paper's
+    /// deployment).
     pub fn busy_secs(&self) -> Vec<f64> {
         self.stats
             .iter()
@@ -119,9 +204,13 @@ impl SamplingService {
         self.partitions.iter().map(|p| p.nbytes()).sum()
     }
 
+    /// Per-worker shutdown: every pool member consumes exactly one
+    /// `Shutdown` off the shared inbox, then all threads are joined.
     pub fn shutdown(self) {
         for tx in &self.servers {
-            let _ = tx.send(ServerMsg::Shutdown);
+            for _ in 0..self.config.workers {
+                let _ = tx.send(ServerMsg::Shutdown);
+            }
         }
         for h in self.handles {
             let _ = h.join();
@@ -152,7 +241,8 @@ mod tests {
     use super::*;
     use crate::graph::generator;
     use crate::partition::{AdaDNE, Partitioner};
-    use crate::sampling::request::SampleConfig;
+    use crate::sampling::request::{Direction, SampleConfig};
+    use crate::sampling::subgraph::sample_tree;
 
     #[test]
     fn launch_sample_shutdown() {
@@ -252,5 +342,125 @@ mod tests {
             "owner routing must concentrate the load: {per_server:?}"
         );
         svc.shutdown();
+    }
+
+    /// Launch twin services over identical partitions and compare
+    /// `sample_one_hop` bit-for-bit across pool geometries. This is the
+    /// acceptance matrix of the worker-pool refactor: uniform / weighted /
+    /// etype-filtered / In-direction, workers ∈ {1, 4}, and shard sizes
+    /// that split requests mid-way (including mid-duplicate-run).
+    #[test]
+    fn one_hop_is_invariant_to_workers_and_shards() {
+        let mut rng = Rng::new(142);
+        let g = generator::heterogeneous_graph(900, 11_000, 2, 3, 2.2, &mut rng);
+        let ea = AdaDNE::default().partition(&g, 3, 0);
+        let cfgs = [
+            SampleConfig::default(),
+            SampleConfig {
+                weighted: true,
+                ..Default::default()
+            },
+            SampleConfig {
+                etype: Some(1),
+                ..Default::default()
+            },
+            SampleConfig {
+                direction: Direction::In,
+                ..Default::default()
+            },
+        ];
+        // Balanced seeds + a duplicated hub run straddling shard bounds.
+        let base = SamplingService::launch(&g, &ea, 1);
+        let mut srng = Rng::new(4);
+        let mut seeds = balanced_seeds(&base, 24, &mut srng);
+        let hub = (0..g.n as VId).max_by_key(|&v| g.out_neighbors(v).len()).unwrap();
+        seeds.extend([hub; 13]);
+        let mut want = Vec::new();
+        for cfg in &cfgs {
+            let mut c = base.client(6);
+            want.push(c.sample_one_hop(&seeds, 7, cfg).unwrap());
+        }
+        base.shutdown();
+        for (workers, shard) in [(4usize, 10usize), (4, 3), (1, 5)] {
+            let svc = SamplingService::launch_cfg(
+                &g,
+                &ea,
+                1,
+                ServiceConfig {
+                    workers,
+                    shard_size: shard,
+                },
+            );
+            for (cfg, want) in cfgs.iter().zip(&want) {
+                let mut c = svc.client(6);
+                let got = c.sample_one_hop(&seeds, 7, cfg).unwrap();
+                assert_eq!(
+                    got.offsets, want.offsets,
+                    "offsets drifted: workers={workers} shard={shard} cfg={cfg:?}"
+                );
+                assert_eq!(
+                    got.neighbors, want.neighbors,
+                    "neighbors drifted: workers={workers} shard={shard} cfg={cfg:?}"
+                );
+            }
+            svc.shutdown();
+        }
+    }
+
+    /// `sample_tree` (the full K-hop Gather-Apply loop) and the partition-
+    /// level ServerStats totals must also be pool-invariant; only the
+    /// per-worker attribution may differ (and must sum to the totals).
+    #[test]
+    fn sample_tree_and_stats_totals_are_pool_invariant() {
+        use std::sync::atomic::Ordering;
+        let mut rng = Rng::new(143);
+        let g = generator::chung_lu(900, 9000, 2.1, &mut rng);
+        let ea = AdaDNE::default().partition(&g, 3, 0);
+        let fanouts = [6usize, 4];
+        let seeds: Vec<VId> = (0..48).collect();
+
+        // Both services use the same shard size so request counts match;
+        // only the worker count differs.
+        let shard = 11usize;
+        let svc1 = SamplingService::launch_cfg(&g, &ea, 1, ServiceConfig::new(1, shard));
+        let mut c1 = svc1.client(8);
+        let t1 = sample_tree(&mut c1, &seeds, &fanouts, &SampleConfig::default()).unwrap();
+        let totals1: Vec<[u64; 4]> = svc1
+            .stats
+            .iter()
+            .map(|s| {
+                [
+                    s.requests.load(Ordering::Relaxed),
+                    s.seeds.load(Ordering::Relaxed),
+                    s.edges_scanned.load(Ordering::Relaxed),
+                    s.neighbors_returned.load(Ordering::Relaxed),
+                ]
+            })
+            .collect();
+        svc1.shutdown();
+
+        let svc4 = SamplingService::launch_cfg(&g, &ea, 1, ServiceConfig::new(4, shard));
+        let mut c4 = svc4.client(8);
+        let t4 = sample_tree(&mut c4, &seeds, &fanouts, &SampleConfig::default()).unwrap();
+        let totals4: Vec<[u64; 4]> = svc4
+            .stats
+            .iter()
+            .map(|s| {
+                [
+                    s.requests.load(Ordering::Relaxed),
+                    s.seeds.load(Ordering::Relaxed),
+                    s.edges_scanned.load(Ordering::Relaxed),
+                    s.neighbors_returned.load(Ordering::Relaxed),
+                ]
+            })
+            .collect();
+        assert_eq!(t1.levels, t4.levels, "tree levels must be bit-equal");
+        assert_eq!(t1.masks, t4.masks);
+        assert_eq!(totals1, totals4, "per-partition stats totals must match");
+        for (stats, tot) in svc4.worker_requests().iter().zip(&totals4) {
+            assert_eq!(stats.len(), 4);
+            assert_eq!(stats.iter().sum::<u64>(), tot[0], "attribution sums to requests");
+        }
+        svc4.shutdown();
     }
 }
