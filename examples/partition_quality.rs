@@ -3,10 +3,15 @@
 //! metrics plus the interior-vertex fraction that drives the inference
 //! engine's static cache (Fig. 15a).
 //!
-//! Run: `cargo run --release --example partition_quality -- --dataset twitter-s --parts 8`
+//! `--threads T` runs the neighbor-expansion propose phase and the
+//! compact-structure build on T threads (DESIGN.md §10). The assignment is
+//! bit-identical for any value — when T > 1 the explorer re-runs AdaDNE
+//! serially and asserts it, printing both walls.
+//!
+//! Run: `cargo run --release --example partition_quality -- --dataset twitter-s --parts 8 --threads 4`
 
 use glisp::cli::Args;
-use glisp::graph::hetero::build_partitions;
+use glisp::graph::hetero::build_partitions_threads;
 use glisp::graph::{generator, metrics};
 use glisp::harness::{f2, f3, Table};
 use glisp::partition::{quality, AdaDNE, DistributedNE, EdgeCutLDG, Hash1D, Hash2D, Partitioner};
@@ -16,6 +21,7 @@ fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let name = args.get_str("dataset", "twitter-s");
     let parts = args.get_usize("parts", 8);
+    let threads = args.get_usize("threads", 1);
     let spec = generator::paper_datasets()
         .into_iter()
         .find(|d| d.name == name)
@@ -31,19 +37,33 @@ fn main() -> anyhow::Result<()> {
         Box::new(Hash1D),
         Box::new(Hash2D),
         Box::new(EdgeCutLDG::default()),
-        Box::new(DistributedNE::default()),
-        Box::new(AdaDNE::default()),
+        Box::new(DistributedNE {
+            threads,
+            ..Default::default()
+        }),
+        Box::new(AdaDNE {
+            threads,
+            ..Default::default()
+        }),
     ];
     let mut t = Table::new(
-        &format!("{name} x {parts} partitions"),
-        &["algorithm", "RF", "VB", "EB", "interior %", "time(s)"],
+        &format!("{name} x {parts} partitions ({threads} offline threads)"),
+        &["algorithm", "RF", "VB", "EB", "interior %", "partition(s)", "build(s)"],
     );
+    // The AdaDNE row's assignment + wall, reused by the determinism check
+    // below instead of re-running the parallel pass.
+    let mut ada_run = None;
     for p in algos {
         let timer = Timer::start();
         let ea = p.partition(&g, parts, 1);
         let secs = timer.secs();
+        if p.name() == "AdaDNE" {
+            ada_run = Some((ea.clone(), secs));
+        }
         let q = quality(&g, &ea);
-        let pgs = build_partitions(&g, &ea.part_of_edge, parts);
+        let timer = Timer::start();
+        let pgs = build_partitions_threads(&g, &ea.part_of_edge, parts, threads)?;
+        let build_secs = timer.secs();
         let interior: usize = pgs.iter().map(|pg| pg.interior_count()).sum();
         let total: usize = pgs.iter().map(|pg| pg.nv()).sum();
         t.row(&[
@@ -53,8 +73,28 @@ fn main() -> anyhow::Result<()> {
             f3(q.eb),
             f2(100.0 * interior as f64 / total as f64),
             f2(secs),
+            f2(build_secs),
         ]);
     }
     t.print();
+
+    if threads > 1 {
+        // Determinism contract (DESIGN.md §10): the parallel offline stage
+        // must reproduce the serial schedule bit-for-bit. The parallel run
+        // and its wall come from the table row above.
+        let (parallel, par_secs) = ada_run.expect("AdaDNE is in the algo suite");
+        let timer = Timer::start();
+        let serial = AdaDNE::default().partition(&g, parts, 1);
+        let serial_secs = timer.secs();
+        assert_eq!(
+            serial.part_of_edge, parallel.part_of_edge,
+            "thread count leaked into the AdaDNE assignment"
+        );
+        println!(
+            "AdaDNE determinism check: 1 thread {serial_secs:.2}s vs {threads} threads \
+             {par_secs:.2}s ({:.2}x) — assignments bit-identical",
+            serial_secs / par_secs.max(1e-9)
+        );
+    }
     Ok(())
 }

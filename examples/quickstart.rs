@@ -30,7 +30,13 @@ fn main() -> anyhow::Result<()> {
     println!("graph: {} vertices, {} edges", g.n, g.m());
 
     // 2. Vertex-cut partitioning with AdaDNE (the paper's contribution).
-    let ea = AdaDNE::default().partition(&g, 2, 1);
+    //    --threads T runs the offline propose phase on T threads; the
+    //    assignment is bit-identical for any value (DESIGN.md §10).
+    let ea = AdaDNE {
+        threads: args.get_usize("threads", 1),
+        ..Default::default()
+    }
+    .partition(&g, 2, 1);
     let q = quality(&g, &ea);
     println!("AdaDNE: RF={:.3} VB={:.3} EB={:.3}", q.rf, q.vb, q.eb);
 
@@ -41,7 +47,7 @@ fn main() -> anyhow::Result<()> {
         args.get_usize("server-workers", 1),
         args.get_usize("shard-size", 0),
     );
-    let service = SamplingService::launch_cfg(&g, &ea, 1, svc_cfg);
+    let service = SamplingService::launch_cfg(&g, &ea, 1, svc_cfg)?;
     println!(
         "sampling: {} partitions x {} pool workers",
         service.partitions.len(),

@@ -56,15 +56,22 @@ fn main() -> anyhow::Result<()> {
     let labels = Arc::new(g.label.clone());
     println!("[data] {} vertices, {} edges, {} classes", g.n, g.m(), classes);
 
-    // Partition + launch sampling service.
+    // Partition + launch sampling service. --threads T parallelizes the
+    // offline propose phase; the assignment is bit-identical for any value
+    // (DESIGN.md §10).
     let t = Timer::start();
-    let ea = AdaDNE::default().partition(&g, parts, 1);
+    let threads = args.get_usize("threads", 1);
+    let ea = AdaDNE {
+        threads,
+        ..Default::default()
+    }
+    .partition(&g, parts, 1);
     let q = quality(&g, &ea);
     println!(
-        "[partition] AdaDNE {} parts in {:.2}s: RF={:.3} VB={:.3} EB={:.3}",
-        parts, t.secs(), q.rf, q.vb, q.eb
+        "[partition] AdaDNE {} parts in {:.2}s ({} threads): RF={:.3} VB={:.3} EB={:.3}",
+        parts, t.secs(), threads, q.rf, q.vb, q.eb
     );
-    let service = SamplingService::launch_cfg(&g, &ea, 1, svc_cfg);
+    let service = SamplingService::launch_cfg(&g, &ea, 1, svc_cfg)?;
     println!(
         "[sampling] {parts} partitions x {} pool workers{}",
         service.config.workers,

@@ -74,7 +74,7 @@ fn framework_row(
     // Build the compact partition structures ONCE per framework; each
     // (weighted × workers) cell launches from a memcpy clone instead of
     // re-running the full partition assembly four times.
-    let parts = build_partitions(g, &ea.part_of_edge, ea.num_parts);
+    let parts = build_partitions(g, &ea.part_of_edge, ea.num_parts).unwrap();
     let mut cells = vec![name.to_string()];
     for weighted in [false, true] {
         for (workers, shard) in [(1usize, 0usize), (POOL_WORKERS, POOL_SHARD)] {

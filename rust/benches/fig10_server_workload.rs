@@ -30,7 +30,7 @@ fn main() {
         let va = EdgeCutLDG::default().partition_vertices(&g, parts, 1);
         let owner = std::sync::Arc::new(va.part_of_vertex.clone());
         let ea = edge_cut_to_assignment(&g, &va);
-        let svc = SamplingService::launch(&g, &ea, 1);
+        let svc = SamplingService::launch(&g, &ea, 1).unwrap();
         let mut client = svc.owner_client(owner, 2);
         let mut rng = Rng::new(5);
         for _ in 0..rounds {
@@ -58,7 +58,7 @@ fn main() {
 
         // GLISP, balanced seeds.
         let ea = AdaDNE::default().partition(&g, parts, 1);
-        let svc = SamplingService::launch(&g, &ea, 1);
+        let svc = SamplingService::launch(&g, &ea, 1).unwrap();
         run_glisp_traffic(&svc);
         let glisp_raw = svc.workload();
         let w = normalized_workload(&glisp_raw);
@@ -72,7 +72,7 @@ fn main() {
         // per-seed RNG contract (DESIGN.md §9) means the *workload* row is
         // byte-identical to the 1-worker run above — asserted, not assumed
         // — while the shards spread over the pool (attribution printed).
-        let pool = SamplingService::launch_cfg(&g, &ea, 1, ServiceConfig::new(4, 16));
+        let pool = SamplingService::launch_cfg(&g, &ea, 1, ServiceConfig::new(4, 16)).unwrap();
         run_glisp_traffic(&pool);
         assert_eq!(
             pool.workload(),

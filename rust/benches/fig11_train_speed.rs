@@ -44,11 +44,11 @@ fn main() -> anyhow::Result<()> {
             let _baseline;
             if glisp_stack {
                 let ea = AdaDNE::default().partition(&g, parts, 1);
-                svc = Some(SamplingService::launch(&g, &ea, 1));
+                svc = Some(SamplingService::launch(&g, &ea, 1)?);
                 client = svc.as_ref().unwrap().client(2);
                 _baseline = None;
             } else {
-                let stack = BaselineStack::launch(&g, parts, 1);
+                let stack = BaselineStack::launch(&g, parts, 1)?;
                 client = stack.client(2);
                 _baseline = Some(stack);
                 svc = None;

@@ -12,12 +12,14 @@ use std::sync::Arc;
 
 use glisp::coordinator::trainer::sync_round;
 use glisp::coordinator::{Batcher, FeatureStore, Trainer, TrainerConfig};
-use glisp::graph::generator;
+use glisp::graph::{build_partitions_threads, generator};
 use glisp::harness::{f2, f3, Table};
 use glisp::partition::{AdaDNE, Partitioner};
 use glisp::sampling::SamplingService;
 use glisp::util::rng::Rng;
 use glisp::util::timer::Timer;
+
+const OFFLINE_THREADS: usize = 4;
 
 fn main() -> anyhow::Result<()> {
     let art = glisp::test_artifacts_dir();
@@ -31,8 +33,37 @@ fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(1);
     let g = generator::labeled_community_graph(n, n * 10, classes, 0.9, &mut rng);
     let labels = Arc::new(g.label.clone());
+
+    // Offline-stage scaling: the same partition + build pipeline on one
+    // thread vs OFFLINE_THREADS, asserted bit-identical (DESIGN.md §10) —
+    // the offline analogue of the trainer-count scaling below.
+    let timer = Timer::start();
     let ea = AdaDNE::default().partition(&g, 4, 1);
-    let svc = SamplingService::launch(&g, &ea, 1);
+    let pgs = build_partitions_threads(&g, &ea.part_of_edge, 4, 1)?;
+    let offline_1t = timer.secs();
+    let timer = Timer::start();
+    let ea_par = AdaDNE {
+        threads: OFFLINE_THREADS,
+        ..Default::default()
+    }
+    .partition(&g, 4, 1);
+    let pgs_par = build_partitions_threads(&g, &ea_par.part_of_edge, 4, OFFLINE_THREADS)?;
+    let offline_par = timer.secs();
+    assert_eq!(
+        ea.part_of_edge, ea_par.part_of_edge,
+        "thread count leaked into the AdaDNE assignment"
+    );
+    for (a, b) in pgs.iter().zip(&pgs_par) {
+        assert_eq!(a.global_id, b.global_id, "parallel build diverged");
+        assert_eq!(a.out_dst, b.out_dst);
+        assert_eq!(a.in_eid, b.in_eid);
+    }
+    println!(
+        "offline stage (AdaDNE partition + build, 4 parts): 1 thread {offline_1t:.2}s, \
+         {OFFLINE_THREADS} threads {offline_par:.2}s ({:.2}x) — outputs bit-identical\n",
+        offline_1t / offline_par.max(1e-9)
+    );
+    let svc = SamplingService::launch_with_partitions(g.n, pgs_par, 1);
 
     let mut t = Table::new(
         &format!("synchronous data parallelism ({rounds} rounds each; sim = parallel trainers)"),

@@ -21,7 +21,7 @@ fn main() -> anyhow::Result<()> {
         let g = load(&spec, 1);
         let parts = 4;
         let ea = AdaDNE::default().partition(&g, parts, 1);
-        let pgs = build_partitions(&g, &ea.part_of_edge, parts);
+        let pgs = build_partitions(&g, &ea.part_of_edge, parts)?;
         let interior: usize = pgs.iter().map(|p| p.interior_count()).sum();
         let total: usize = pgs.iter().map(|p| p.nv()).sum();
         let frac = 100.0 * interior as f64 / total as f64;

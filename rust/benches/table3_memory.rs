@@ -26,7 +26,7 @@ fn main() {
     );
     for (name, n, m, vt, et) in cases {
         let g = generator::heterogeneous_graph(n, m, vt, et, 2.1, &mut rng);
-        let parts = build_partitions(&g, &vec![0u16; g.m()], 1);
+        let parts = build_partitions(&g, &vec![0u16; g.m()], 1).unwrap();
         let ours = memfoot::glisp_bytes(&parts) as f64 / 1e6;
         let dgl = memfoot::distdgl_like_bytes(&g) as f64 / 1e6;
         let gl = memfoot::graphlearn_like_bytes(&g) as f64 / 1e6;

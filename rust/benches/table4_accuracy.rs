@@ -27,7 +27,7 @@ fn main() -> anyhow::Result<()> {
     let g = generator::labeled_community_graph(n, n * 10, classes, 0.9, &mut rng);
     let labels = Arc::new(g.label.clone());
     let ea = AdaDNE::default().partition(&g, 2, 1);
-    let svc = SamplingService::launch(&g, &ea, 1);
+    let svc = SamplingService::launch(&g, &ea, 1)?;
     let split = (n * 8) / 10;
 
     let mut t = Table::new(

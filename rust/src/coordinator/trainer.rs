@@ -421,7 +421,8 @@ mod tests {
             &ea,
             1,
             crate::sampling::ServiceConfig::new(2, 48),
-        );
+        )
+        .unwrap();
         let (trainer, batcher) = twin(&svc);
         (svc, trainer, batcher)
     }

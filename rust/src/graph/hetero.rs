@@ -214,27 +214,107 @@ impl PartitionGraph {
 }
 
 /// Build all partitions' compact structures from the full graph and a
-/// per-edge partition assignment (vertex-cut). One pass computes partition
-/// membership; each partition is then assembled independently.
-pub fn build_partitions(g: &Graph, assign: &[u16], num_parts: usize) -> Vec<PartitionGraph> {
-    assert_eq!(assign.len(), g.m());
+/// per-edge partition assignment (vertex-cut), on one thread. One pass
+/// computes partition membership; each partition is then assembled
+/// independently. Errors (instead of panicking) on an assignment whose
+/// length or partition ids don't match the graph.
+pub fn build_partitions(
+    g: &Graph,
+    assign: &[u16],
+    num_parts: usize,
+) -> anyhow::Result<Vec<PartitionGraph>> {
+    build_partitions_threads(g, assign, num_parts, 1)
+}
+
+/// [`build_partitions`] with an explicit thread count (DESIGN.md §10): the
+/// membership scan is sharded over `threads` vertex ranges (per-shard
+/// `BitMatrix` OR-merged afterwards) and the per-partition assembly runs
+/// one builder per partition, `threads` at a time. The output is identical
+/// for any `threads` value — each partition's structure is a pure function
+/// of (graph, assignment) and the membership union is commutative.
+pub fn build_partitions_threads(
+    g: &Graph,
+    assign: &[u16],
+    num_parts: usize,
+    threads: usize,
+) -> anyhow::Result<Vec<PartitionGraph>> {
+    if assign.len() != g.m() {
+        anyhow::bail!(
+            "edge assignment covers {} edges but the graph has {} — \
+             partition and graph are out of sync",
+            assign.len(),
+            g.m()
+        );
+    }
+    if let Some(&bad) = assign.iter().find(|&&p| p as usize >= num_parts) {
+        anyhow::bail!(
+            "edge assignment references partition {bad} but only {num_parts} partitions exist"
+        );
+    }
+    let threads = threads.max(1);
     let out_deg = g.out_degrees();
     let in_deg = g.in_degrees();
+    let membership = membership_scan(g, assign, num_parts, threads);
 
-    // Which partitions does each global vertex touch?
-    let mut membership = BitMatrix::new(g.n, num_parts);
-    for u in 0..g.n {
-        let (a, b) = g.edge_range(u as VId);
-        for e in a..b {
-            let p = assign[e] as usize;
-            membership.set(u, p);
-            membership.set(g.dst[e] as usize, p);
+    let mut parts: Vec<Option<PartitionGraph>> = (0..num_parts).map(|_| None).collect();
+    if threads == 1 || num_parts == 1 {
+        for (p, slot) in parts.iter_mut().enumerate() {
+            *slot = Some(build_one(g, assign, p, num_parts, &membership, &out_deg, &in_deg));
         }
+    } else {
+        let chunk = num_parts.div_ceil(threads.min(num_parts));
+        let (membership, out_deg, in_deg) = (&membership, &out_deg, &in_deg);
+        std::thread::scope(|s| {
+            for (ci, slots) in parts.chunks_mut(chunk).enumerate() {
+                s.spawn(move || {
+                    for (i, slot) in slots.iter_mut().enumerate() {
+                        let p = ci * chunk + i;
+                        *slot =
+                            Some(build_one(g, assign, p, num_parts, membership, out_deg, in_deg));
+                    }
+                });
+            }
+        });
     }
+    Ok(parts.into_iter().map(|p| p.expect("builder filled every slot")).collect())
+}
 
-    (0..num_parts)
-        .map(|p| build_one(g, assign, p, num_parts, &membership, &out_deg, &in_deg))
-        .collect()
+/// Which partitions does each global vertex touch? Sharded over contiguous
+/// source-vertex ranges; each shard sets bits for both endpoints of its
+/// range's edges into a private matrix, and the shards OR-merge (set union
+/// is commutative, so the result is shard-count invariant).
+fn membership_scan(g: &Graph, assign: &[u16], num_parts: usize, threads: usize) -> BitMatrix {
+    let scan_range = |lo: usize, hi: usize| {
+        let mut m = BitMatrix::new(g.n, num_parts);
+        for u in lo..hi {
+            let (a, b) = g.edge_range(u as VId);
+            for e in a..b {
+                let p = assign[e] as usize;
+                m.set(u, p);
+                m.set(g.dst[e] as usize, p);
+            }
+        }
+        m
+    };
+    if threads <= 1 || g.n < 2 {
+        return scan_range(0, g.n);
+    }
+    let shard = g.n.div_ceil(threads);
+    let mut shards: Vec<BitMatrix> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..g.n)
+            .step_by(shard)
+            .map(|lo| {
+                let scan_range = &scan_range;
+                s.spawn(move || scan_range(lo, (lo + shard).min(g.n)))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("membership shard panicked")).collect()
+    });
+    let mut membership = shards.pop().expect("at least one shard");
+    for other in &shards {
+        membership.or_with(other);
+    }
+    membership
 }
 
 fn build_one(
@@ -252,7 +332,20 @@ fn build_one(
         .collect();
     global_id.sort_unstable();
     let nv = global_id.len();
-    let lid = |gid: VId| global_id.binary_search(&gid).unwrap() as u32;
+    // Direct-index global→local table, built once: the edge gather below
+    // does two lookups per edge, and a per-lookup binary search made the
+    // assembly O(E log V) per partition. `global_id` stays sorted, so the
+    // table assigns exactly the ids `PartitionGraph::local_id`'s binary
+    // search resolves at query time.
+    let mut global_to_local = vec![u32::MAX; g.n];
+    for (l, &gid) in global_id.iter().enumerate() {
+        global_to_local[gid as usize] = l as u32;
+    }
+    let lid = |gid: VId| {
+        let l = global_to_local[gid as usize];
+        debug_assert_ne!(l, u32::MAX, "vertex {gid} not a member of partition {part}");
+        l
+    };
 
     // Gather this partition's edges as (src_local, etype, dst, weight, ...).
     let mut edges: Vec<(u32, u8, VId, f32)> = Vec::new();
@@ -393,7 +486,7 @@ mod tests {
     #[test]
     fn partition_edge_conservation() {
         let (g, assign) = tiny();
-        let parts = build_partitions(&g, &assign, 2);
+        let parts = build_partitions(&g, &assign, 2).unwrap();
         let total: usize = parts.iter().map(|p| p.ne()).sum();
         assert_eq!(total, g.m());
         assert_eq!(parts[0].ne(), 3);
@@ -401,9 +494,81 @@ mod tests {
     }
 
     #[test]
+    fn mismatched_assignment_errors_with_both_counts() {
+        let (g, assign) = tiny();
+        let err = build_partitions(&g, &assign[..assign.len() - 1], 2).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains('5') && msg.contains('6'), "error must name both counts: {msg}");
+    }
+
+    #[test]
+    fn out_of_range_partition_id_errors() {
+        let (g, mut assign) = tiny();
+        assign[3] = 7;
+        let err = build_partitions(&g, &assign, 2).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains('7') && msg.contains('2'), "error must name the bad id: {msg}");
+    }
+
+    /// The parallel build (sharded membership scan + chunked builders) must
+    /// produce byte-identical structures for any thread count, including
+    /// thread counts above the partition count.
+    #[test]
+    fn parallel_build_matches_serial_bit_for_bit() {
+        let mut rng = Rng::new(12);
+        let g = generator::heterogeneous_graph(700, 6500, 2, 4, 2.2, &mut rng);
+        let assign: Vec<u16> = (0..g.m()).map(|e| (e % 3) as u16).collect();
+        let serial = build_partitions_threads(&g, &assign, 3, 1).unwrap();
+        for threads in [2usize, 3, 8] {
+            let par = build_partitions_threads(&g, &assign, 3, threads).unwrap();
+            for (a, b) in serial.iter().zip(&par) {
+                assert_eq!(a.global_id, b.global_id, "threads={threads}");
+                assert_eq!(a.out_indptr, b.out_indptr);
+                assert_eq!(a.out_dst, b.out_dst);
+                assert_eq!(a.out_weight, b.out_weight);
+                assert_eq!(a.out_et_indptr, b.out_et_indptr);
+                assert_eq!(a.out_et_ids, b.out_et_ids);
+                assert_eq!(a.out_et_end, b.out_et_end);
+                assert_eq!(a.in_indptr, b.in_indptr);
+                assert_eq!(a.in_src, b.in_src);
+                assert_eq!(a.in_eid, b.in_eid);
+                assert_eq!(a.out_deg_global, b.out_deg_global);
+                assert_eq!(a.in_deg_global, b.in_deg_global);
+                assert_eq!(a.partition_set.raw(), b.partition_set.raw());
+            }
+        }
+    }
+
+    /// Pins the local ids the direct-index global→local table assigns: they
+    /// must be exactly the positions `local_id`'s binary search resolves,
+    /// for every vertex referenced by the out/in edge arrays.
+    #[test]
+    fn lookup_table_assigns_binary_search_local_ids() {
+        let (g, assign) = tiny();
+        let parts = build_partitions(&g, &assign, 2).unwrap();
+        // Partition 0 = {0,1,2} (edges 0->1, 0->2, 2->0): pinned layout.
+        assert_eq!(parts[0].global_id, vec![0, 1, 2]);
+        assert_eq!(parts[0].out_indptr, vec![0, 2, 2, 3]);
+        assert_eq!(parts[0].out_dst, vec![1, 2, 0]);
+        assert_eq!(parts[0].in_src, vec![2, 0, 0]);
+        assert_eq!(parts[0].in_eid, vec![2, 0, 1]);
+        for p in &parts {
+            for l in 0..p.nv() as u32 {
+                assert_eq!(p.local_id(p.global(l)), Some(l));
+                // Every in-edge row keyed under l must reference a local
+                // out-edge that really targets l's global id — i.e. the
+                // table and the binary search agree on dst local ids too.
+                for i in p.in_range(l).0..p.in_range(l).1 {
+                    assert_eq!(p.out_dst[p.in_eid[i] as usize], p.global(l));
+                }
+            }
+        }
+    }
+
+    #[test]
     fn local_global_bijection() {
         let (g, assign) = tiny();
-        for p in build_partitions(&g, &assign, 2) {
+        for p in build_partitions(&g, &assign, 2).unwrap() {
             for l in 0..p.nv() as u32 {
                 assert_eq!(p.local_id(p.global(l)), Some(l));
             }
@@ -414,7 +579,7 @@ mod tests {
     #[test]
     fn edge_type_recovered_by_query() {
         let (g, assign) = tiny();
-        let parts = build_partitions(&g, &assign, 2);
+        let parts = build_partitions(&g, &assign, 2).unwrap();
         // Partition 0 holds 0->1(t0), 0->2(t1), 2->0(t2).
         let p0 = &parts[0];
         let l0 = p0.local_id(0).unwrap();
@@ -436,7 +601,7 @@ mod tests {
         let mut rng = Rng::new(11);
         let g = generator::heterogeneous_graph(400, 3500, 2, 4, 2.2, &mut rng);
         let assign: Vec<u16> = (0..g.m()).map(|e| (e % 2) as u16).collect();
-        for p in build_partitions(&g, &assign, 2) {
+        for p in build_partitions(&g, &assign, 2).unwrap() {
             for v in 0..p.nv() as u32 {
                 let (v0, v1) = p.out_range(v);
                 for t in 0..4u8 {
@@ -458,7 +623,7 @@ mod tests {
     #[test]
     fn in_edges_reference_local_out_edges() {
         let (g, assign) = tiny();
-        for p in build_partitions(&g, &assign, 2) {
+        for p in build_partitions(&g, &assign, 2).unwrap() {
             for v in 0..p.nv() as u32 {
                 let (a, b) = p.in_range(v);
                 for i in a..b {
@@ -473,7 +638,7 @@ mod tests {
     #[test]
     fn membership_bits_cover_both_endpoints() {
         let (g, assign) = tiny();
-        let parts = build_partitions(&g, &assign, 2);
+        let parts = build_partitions(&g, &assign, 2).unwrap();
         // Vertex 0 has edges in both partitions => boundary in both.
         for p in &parts {
             let l = p.local_id(0).unwrap();
@@ -485,7 +650,7 @@ mod tests {
     #[test]
     fn global_degrees_carried() {
         let (g, assign) = tiny();
-        let parts = build_partitions(&g, &assign, 2);
+        let parts = build_partitions(&g, &assign, 2).unwrap();
         let p0 = &parts[0];
         let l0 = p0.local_id(0).unwrap();
         assert_eq!(p0.out_deg_global[l0 as usize], 2);
@@ -497,7 +662,7 @@ mod tests {
         let mut rng = Rng::new(9);
         let g = generator::heterogeneous_graph(500, 4000, 2, 4, 2.2, &mut rng);
         let assign: Vec<u16> = (0..g.m()).map(|e| (e % 3) as u16).collect();
-        for p in build_partitions(&g, &assign, 3) {
+        for p in build_partitions(&g, &assign, 3).unwrap() {
             for v in 0..p.nv() as u32 {
                 let (a, b) = p.out_range(v);
                 let types: Vec<u8> =
@@ -514,7 +679,7 @@ mod tests {
         let mut rng = Rng::new(10);
         let g = generator::chung_lu(2000, 16_000, 2.1, &mut rng);
         let assign: Vec<u16> = (0..g.m()).map(|e| (e % 4) as u16).collect();
-        for p in build_partitions(&g, &assign, 4) {
+        for p in build_partitions(&g, &assign, 4).unwrap() {
             let interior = p.interior_count();
             assert!(interior <= p.nv());
             assert!(p.nbytes() > 0);

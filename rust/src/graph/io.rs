@@ -198,7 +198,7 @@ mod tests {
         let mut rng = Rng::new(40);
         let g = generator::heterogeneous_graph(800, 6000, 2, 3, 2.2, &mut rng);
         let assign: Vec<u16> = (0..g.m()).map(|e| (e % 2) as u16).collect();
-        let parts = build_partitions(&g, &assign, 2);
+        let parts = build_partitions(&g, &assign, 2).unwrap();
         let dir = std::env::temp_dir().join("glisp_io_test");
         save_partition(&parts[0], &dir, "p0").unwrap();
         let loaded = load_partition(&dir, "p0").unwrap();
@@ -219,5 +219,56 @@ mod tests {
     fn missing_meta_errors() {
         let dir = std::env::temp_dir().join("glisp_io_missing");
         assert!(load_partition(&dir, "nope").is_err());
+    }
+
+    /// The full offline→online contract: AdaDNE (parallel propose) →
+    /// parallel build → save → load → pooled SamplingService must
+    /// reproduce the in-memory service's sampled bits exactly — the disk
+    /// layout carries everything the per-seed RNG contract (DESIGN.md §9)
+    /// depends on.
+    #[test]
+    fn saved_partitions_reproduce_in_memory_sample_bits() {
+        use crate::graph::hetero::build_partitions_threads;
+        use crate::partition::{AdaDNE, Partitioner};
+        use crate::sampling::{sample_tree, SampleConfig, SamplingService, ServiceConfig};
+
+        let mut rng = Rng::new(41);
+        let g = generator::heterogeneous_graph(900, 9000, 2, 3, 2.2, &mut rng);
+        let ea = AdaDNE {
+            threads: 2,
+            ..Default::default()
+        }
+        .partition(&g, 3, 1);
+        let parts = build_partitions_threads(&g, &ea.part_of_edge, 3, 2).unwrap();
+
+        let dir = std::env::temp_dir().join("glisp_io_sampling_round_trip");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut loaded = Vec::new();
+        for p in &parts {
+            save_partition(p, &dir, &format!("part{}", p.part_id)).unwrap();
+            loaded.push(load_partition(&dir, &format!("part{}", p.part_id)).unwrap());
+        }
+
+        let cfg = ServiceConfig::new(2, 8);
+        let mem = SamplingService::launch_with_partitions_cfg(g.n, parts, 1, cfg);
+        let disk = SamplingService::launch_with_partitions_cfg(g.n, loaded, 1, cfg);
+        let seeds: Vec<u32> = (0..64).collect();
+        for scfg in [
+            SampleConfig::default(),
+            SampleConfig {
+                weighted: true,
+                ..Default::default()
+            },
+        ] {
+            let mut mc = mem.client(9);
+            let mut dc = disk.client(9);
+            let tm = sample_tree(&mut mc, &seeds, &[6, 4], &scfg).unwrap();
+            let td = sample_tree(&mut dc, &seeds, &[6, 4], &scfg).unwrap();
+            assert_eq!(tm.levels, td.levels, "sampled ids drifted after save/load");
+            assert_eq!(tm.masks, td.masks);
+        }
+        mem.shutdown();
+        disk.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

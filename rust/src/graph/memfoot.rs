@@ -110,7 +110,7 @@ mod tests {
         let mut rng = Rng::new(50);
         let g = generator::heterogeneous_graph(5_000, 60_000, 3, 4, 2.1, &mut rng);
         let assign: Vec<u16> = vec![0u16; g.m()];
-        let parts = build_partitions(&g, &assign, 1);
+        let parts = build_partitions(&g, &assign, 1).unwrap();
         let ours = glisp_bytes(&parts);
         let dgl = distdgl_like_bytes(&g);
         let euler = euler_like_bytes(&g);

@@ -11,4 +11,4 @@ pub mod metrics;
 pub mod reorder;
 
 pub use csr::{EId, Graph, VId};
-pub use hetero::{build_partitions, PartitionGraph};
+pub use hetero::{build_partitions, build_partitions_threads, PartitionGraph};

@@ -5,4 +5,7 @@ pub mod report;
 pub mod workloads;
 
 pub use report::{bar_chart, f2, f3, ix, speedup, Table};
-pub use workloads::{infer_stack, train_stack, train_stack_cfg, InferStack, TrainStack};
+pub use workloads::{
+    infer_stack, partition_threads, stack_partitioner, train_stack, train_stack_cfg, InferStack,
+    TrainStack,
+};

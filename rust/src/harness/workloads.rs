@@ -22,6 +22,27 @@ pub fn bench_scale() -> f64 {
         .unwrap_or(1.0)
 }
 
+/// Propose-phase threads for the offline AdaDNE stage of the shared
+/// stacks (GLISP_PARTITION_THREADS, default 1). Pure throughput knob: the
+/// assignment is bit-identical for any value (DESIGN.md §10), so benches
+/// stay comparable whatever the setting.
+pub fn partition_threads() -> usize {
+    std::env::var("GLISP_PARTITION_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1)
+        .max(1)
+}
+
+/// The AdaDNE instance every shared stack partitions with —
+/// [`partition_threads`] propose threads, paper-default policy knobs.
+pub fn stack_partitioner() -> AdaDNE {
+    AdaDNE {
+        threads: partition_threads(),
+        ..Default::default()
+    }
+}
+
 /// The Table I-analogue suite used by the partitioning/sampling benches.
 pub fn bench_datasets() -> Vec<DatasetSpec> {
     let s = bench_scale();
@@ -85,8 +106,8 @@ pub fn train_stack_cfg(
     let mut rng = Rng::new(1);
     let g = generator::labeled_community_graph(n, n * 12, classes, 0.9, &mut rng);
     let labels = Arc::new(g.label.clone());
-    let ea = AdaDNE::default().partition(&g, parts, 1);
-    let service = SamplingService::launch_cfg(&g, &ea, 1, svc_cfg);
+    let ea = stack_partitioner().partition(&g, parts, 1);
+    let service = SamplingService::launch_cfg(&g, &ea, 1, svc_cfg)?;
     let features = FeatureStore::labeled(64, labels.clone(), classes, 0.6);
     let trainer = Trainer::new(
         artifacts,
@@ -128,7 +149,7 @@ pub fn infer_stack(
 ) -> anyhow::Result<InferStack> {
     let mut rng = Rng::new(1);
     let g = generator::chung_lu(n, n * 7, 2.1, &mut rng);
-    let ea = AdaDNE::default().partition(&g, parts, 1);
+    let ea = stack_partitioner().partition(&g, parts, 1);
     let _ = std::fs::remove_dir_all(&work_dir);
     let runtime = Runtime::load_with_layers(artifacts, cfg.layers)?;
     let enc = init_encoder_params(&runtime, 3)?;

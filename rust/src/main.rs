@@ -3,6 +3,7 @@
 //!
 //! ```text
 //! glisp partition --dataset twitter-s --parts 8 --algo adadne
+//!                 [--threads 4] [--save /tmp/parts]
 //! glisp sample    --dataset wiki-s --parts 4 --fanouts 15,10,5 --batches 50
 //!                 [--server-workers 4 --shard-size 16]
 //! glisp train     --model sage --steps 200 --parts 2 [--eval]
@@ -14,7 +15,11 @@
 //! `--server-workers R` launches an R-worker pool per sampling partition
 //! and `--shard-size S` splits gathers into S-seed shards the pool serves
 //! concurrently (0 = never split). Sampled outputs are bit-identical for
-//! any setting (DESIGN.md §9) — these are pure throughput knobs.
+//! any setting (DESIGN.md §9) — these are pure throughput knobs, and so is
+//! `glisp partition --threads T`: the offline propose phase and the
+//! compact-structure build run on T threads with a bit-identical result
+//! (DESIGN.md §10). `--save DIR` additionally assembles the last
+//! algorithm's partitions and writes the binary layouts to DIR.
 
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
@@ -64,10 +69,18 @@ fn dataset_by_name(name: &str, seed: u64) -> Result<glisp::graph::Graph> {
     Ok(generator::generate(&spec, seed))
 }
 
-fn partitioner_by_name(name: &str) -> Result<Box<dyn Partitioner>> {
+fn partitioner_by_name(name: &str, threads: usize) -> Result<Box<dyn Partitioner>> {
     Ok(match name {
-        "adadne" => Box::new(AdaDNE::default()),
-        "dne" => Box::new(DistributedNE::default()),
+        "adadne" => Box::new(AdaDNE {
+            threads,
+            ..Default::default()
+        }),
+        "dne" => Box::new(DistributedNE {
+            threads,
+            ..Default::default()
+        }),
+        // The remaining baselines are single-pass streams; the propose
+        // thread knob does not apply.
         "edgecut" => Box::new(EdgeCutLDG::default()),
         "hash1d" => Box::new(Hash1D),
         "hash2d" => Box::new(Hash2D),
@@ -111,20 +124,45 @@ fn cmd_datasets(_args: &Args) -> Result<()> {
 fn cmd_partition(args: &Args) -> Result<()> {
     let g = dataset_by_name(args.get_str("dataset", "wiki-s"), args.get_u64("seed", 1))?;
     let parts = args.get_usize("parts", 8);
+    let threads = args.get_usize("threads", 1);
     let mut t = Table::new(
-        &format!("Partition quality, {} parts", parts),
+        &format!("Partition quality, {parts} parts, {threads} offline threads"),
         &["algorithm", "RF", "VB", "EB", "time(s)"],
     );
     let algos = args.get_str("algo", "edgecut,dne,adadne").to_string();
+    let mut last: Option<glisp::partition::EdgeAssignment> = None;
     for name in algos.split(',') {
-        let p = partitioner_by_name(name)?;
+        let p = partitioner_by_name(name, threads)?;
         let timer = Timer::start();
         let ea = p.partition(&g, parts, args.get_u64("seed", 1));
         let secs = timer.secs();
         let q = quality(&g, &ea);
         t.row(&[name.into(), f3(q.rf), f3(q.vb), f3(q.eb), f2(secs)]);
+        last = Some(ea);
     }
     t.print();
+    // --save DIR: assemble the compact structures for the last algorithm
+    // in the list (with the same thread knob) and write the binary
+    // layouts, completing the offline partition → build → save path.
+    if let (Some(dir), Some(ea)) = (args.get("save"), last) {
+        let dir = std::path::PathBuf::from(dir);
+        let timer = Timer::start();
+        let pgs =
+            glisp::graph::build_partitions_threads(&g, &ea.part_of_edge, parts, threads)?;
+        let build_secs = timer.secs();
+        let timer = Timer::start();
+        for pg in &pgs {
+            glisp::graph::io::save_partition(pg, &dir, &format!("part{}", pg.part_id))?;
+        }
+        let bytes: usize = pgs.iter().map(|p| p.nbytes()).sum();
+        println!(
+            "built {parts} partitions in {build_secs:.2}s ({threads} threads), \
+             saved {:.1} MiB to {} in {:.2}s",
+            bytes as f64 / (1024.0 * 1024.0),
+            dir.display(),
+            timer.secs()
+        );
+    }
     Ok(())
 }
 
@@ -149,7 +187,7 @@ fn cmd_sample(args: &Args) -> Result<()> {
     let weighted = args.has("weighted");
 
     let ea = AdaDNE::default().partition(&g, parts, 1);
-    let svc = SamplingService::launch_cfg(&g, &ea, 1, service_config(args));
+    let svc = SamplingService::launch_cfg(&g, &ea, 1, service_config(args))?;
     let mut client = svc.client(2);
     let mut rng = Rng::new(3);
     let cfg = SampleConfig {
@@ -193,7 +231,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let g = generator::labeled_community_graph(n, n * 12, classes, 0.9, &mut rng);
     let labels = Arc::new(g.label.clone());
     let ea = AdaDNE::default().partition(&g, parts, 1);
-    let svc = SamplingService::launch_cfg(&g, &ea, 1, service_config(args));
+    let svc = SamplingService::launch_cfg(&g, &ea, 1, service_config(args))?;
     let features = FeatureStore::labeled(64, labels.clone(), classes, 0.6);
     let mut trainer = Trainer::new(
         Runtime::default_dir(),

@@ -20,6 +20,9 @@ pub struct AdaDNE {
     pub lambda0: f64,
     pub alpha: f64,
     pub beta: f64,
+    /// Propose-phase worker threads (DESIGN.md §10). Pure throughput knob:
+    /// the assignment is bit-identical for any value.
+    pub threads: usize,
 }
 
 impl Default for AdaDNE {
@@ -28,6 +31,7 @@ impl Default for AdaDNE {
             lambda0: 0.1,
             alpha: 1.0,
             beta: 1.0,
+            threads: 1,
         }
     }
 }
@@ -48,6 +52,7 @@ impl Partitioner for AdaDNE {
                     alpha: self.alpha,
                     beta: self.beta,
                 },
+                threads: self.threads,
             },
         )
     }

@@ -9,6 +9,9 @@ use crate::partition::types::{EdgeAssignment, Partitioner};
 pub struct DistributedNE {
     pub lambda: f64,
     pub tau: f64,
+    /// Propose-phase worker threads (DESIGN.md §10). Pure throughput knob:
+    /// the assignment is bit-identical for any value.
+    pub threads: usize,
 }
 
 impl Default for DistributedNE {
@@ -16,6 +19,7 @@ impl Default for DistributedNE {
         Self {
             lambda: 0.1,
             tau: 1.1,
+            threads: 1,
         }
     }
 }
@@ -33,6 +37,7 @@ impl Partitioner for DistributedNE {
             &ExpansionConfig {
                 lambda0: self.lambda,
                 policy: Policy::Dne { tau: self.tau },
+                threads: self.threads,
             },
         )
     }

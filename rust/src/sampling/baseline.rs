@@ -18,14 +18,14 @@ pub struct BaselineStack {
 impl BaselineStack {
     /// Partition with the edge-cut comparator and launch owner-routed
     /// servers. `client()` then reproduces the DistDGL data path.
-    pub fn launch(g: &Graph, num_parts: usize, seed: u64) -> Self {
+    pub fn launch(g: &Graph, num_parts: usize, seed: u64) -> anyhow::Result<Self> {
         let va = EdgeCutLDG::default().partition_vertices(g, num_parts, seed);
         let ea = edge_cut_to_assignment(g, &va);
-        let service = SamplingService::launch(g, &ea, seed);
-        Self {
+        let service = SamplingService::launch(g, &ea, seed)?;
+        Ok(Self {
             service,
             owner: Arc::new(va.part_of_vertex),
-        }
+        })
     }
 
     pub fn client(&self, seed: u64) -> SamplingClient {
@@ -50,7 +50,7 @@ mod tests {
     fn baseline_samples_correct_neighbors() {
         let mut rng = Rng::new(160);
         let g = generator::chung_lu(800, 8000, 2.1, &mut rng);
-        let stack = BaselineStack::launch(&g, 4, 1);
+        let stack = BaselineStack::launch(&g, 4, 1).unwrap();
         let mut client = stack.client(2);
         let seeds: Vec<u32> = (0..32).collect();
         let t = sample_tree(&mut client, &seeds, &[5], &SampleConfig::default()).unwrap();
@@ -75,7 +75,7 @@ mod tests {
         let parts = 4;
 
         // Baseline: edge-cut + owner routing.
-        let stack = BaselineStack::launch(&g, parts, 1);
+        let stack = BaselineStack::launch(&g, parts, 1).unwrap();
         let mut bclient = stack.client(3);
         let seeds: Vec<u32> = (0..512).collect();
         sample_tree(&mut bclient, &seeds, &[15, 10], &SampleConfig::default()).unwrap();
@@ -91,7 +91,7 @@ mod tests {
         // GLISP: AdaDNE + replica routing.
         use crate::partition::{AdaDNE, Partitioner};
         let ea = AdaDNE::default().partition(&g, parts, 1);
-        let svc = SamplingService::launch(&g, &ea, 1);
+        let svc = SamplingService::launch(&g, &ea, 1).unwrap();
         let mut gclient = svc.client(3);
         sample_tree(&mut gclient, &seeds, &[15, 10], &SampleConfig::default()).unwrap();
         let glisp_wl: Vec<f64> = svc.workload().iter().map(|&w| w.max(1) as f64).collect();

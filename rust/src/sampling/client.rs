@@ -250,7 +250,7 @@ mod tests {
         let mut rng = Rng::new(130);
         let g = generator::chung_lu(600, 6000, 2.1, &mut rng);
         let ea = AdaDNE::default().partition(&g, 3, 0);
-        let parts = build_partitions(&g, &ea.part_of_edge, 3);
+        let parts = build_partitions(&g, &ea.part_of_edge, 3).unwrap();
         let mut membership = BitMatrix::new(g.n, 3);
         for p in &parts {
             for (l, &gid) in p.global_id.iter().enumerate() {

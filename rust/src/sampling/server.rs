@@ -367,7 +367,7 @@ mod tests {
         let mut rng = Rng::new(120);
         let g = generator::heterogeneous_graph(1000, 12_000, 2, 3, 2.2, &mut rng);
         let ea = AdaDNE::default().partition(&g, 1, 0);
-        Arc::new(build_partitions(&g, &ea.part_of_edge, 1).remove(0))
+        Arc::new(build_partitions(&g, &ea.part_of_edge, 1).unwrap().remove(0))
     }
 
     fn req(seeds: Vec<VId>, fanout: usize, salt: u64, cfg: SampleConfig) -> GatherRequest {

@@ -10,7 +10,7 @@ use std::sync::mpsc::Sender;
 use std::sync::Arc;
 
 use crate::graph::csr::{Graph, VId};
-use crate::graph::hetero::{build_partitions, PartitionGraph};
+use crate::graph::hetero::{build_partitions_threads, PartitionGraph};
 use crate::partition::EdgeAssignment;
 use crate::sampling::client::{RouteMode, SamplingClient};
 use crate::sampling::request::ServerMsg;
@@ -64,16 +64,29 @@ pub struct SamplingService {
 
 impl SamplingService {
     /// Partition `g` with `assign` and launch one single-worker server per
-    /// partition (the paper's base deployment).
-    pub fn launch(g: &Graph, assign: &EdgeAssignment, seed: u64) -> Self {
+    /// partition (the paper's base deployment). Errors if the assignment
+    /// doesn't match the graph (edge count or partition ids).
+    pub fn launch(g: &Graph, assign: &EdgeAssignment, seed: u64) -> anyhow::Result<Self> {
         Self::launch_cfg(g, assign, seed, ServiceConfig::default())
     }
 
     /// Partition `g` with `assign` and launch one `cfg.workers`-strong
-    /// server pool per partition.
-    pub fn launch_cfg(g: &Graph, assign: &EdgeAssignment, seed: u64, cfg: ServiceConfig) -> Self {
-        let parts = build_partitions(g, &assign.part_of_edge, assign.num_parts);
-        Self::launch_with_partitions_cfg(g.n, parts, seed, cfg)
+    /// server pool per partition. The compact structures are assembled with
+    /// `cfg.workers` builder threads (output is thread-count invariant,
+    /// DESIGN.md §10).
+    pub fn launch_cfg(
+        g: &Graph,
+        assign: &EdgeAssignment,
+        seed: u64,
+        cfg: ServiceConfig,
+    ) -> anyhow::Result<Self> {
+        let parts = build_partitions_threads(
+            g,
+            &assign.part_of_edge,
+            assign.num_parts,
+            cfg.workers.max(1),
+        )?;
+        Ok(Self::launch_with_partitions_cfg(g.n, parts, seed, cfg))
     }
 
     pub fn launch_with_partitions(n: usize, parts: Vec<PartitionGraph>, seed: u64) -> Self {
@@ -249,7 +262,7 @@ mod tests {
         let mut rng = Rng::new(140);
         let g = generator::chung_lu(800, 8000, 2.1, &mut rng);
         let ea = AdaDNE::default().partition(&g, 4, 0);
-        let svc = SamplingService::launch(&g, &ea, 1);
+        let svc = SamplingService::launch(&g, &ea, 1).unwrap();
         let mut client = svc.client(2);
         let seeds = balanced_seeds(&svc, 8, &mut rng);
         assert_eq!(seeds.len(), 32);
@@ -265,11 +278,26 @@ mod tests {
     }
 
     #[test]
+    fn launch_rejects_mismatched_assignment() {
+        // PR 2's non-panicking data-path convention, extended offline: a
+        // stale or truncated assignment must surface as an error naming the
+        // counts, not as a build_partitions panic.
+        let mut rng = Rng::new(144);
+        let g = generator::chung_lu(300, 2000, 2.1, &mut rng);
+        let ea = EdgeAssignment {
+            num_parts: 2,
+            part_of_edge: vec![0; g.m() - 1],
+        };
+        let err = SamplingService::launch(&g, &ea, 1).unwrap_err();
+        assert!(format!("{err:#}").contains("out of sync"));
+    }
+
+    #[test]
     fn multiple_clients_share_servers() {
         let mut rng = Rng::new(141);
         let g = generator::chung_lu(500, 5000, 2.1, &mut rng);
         let ea = AdaDNE::default().partition(&g, 2, 0);
-        let svc = SamplingService::launch(&g, &ea, 1);
+        let svc = SamplingService::launch(&g, &ea, 1).unwrap();
         let mut c1 = svc.client(10);
         let mut c2 = svc.client(11);
         let t1 = std::thread::spawn(move || {
@@ -308,7 +336,7 @@ mod tests {
             num_parts: parts,
             part_of_edge: (0..g.m()).map(|e| (e % parts) as u16).collect(),
         };
-        let svc = SamplingService::launch(&g, &ea, 1);
+        let svc = SamplingService::launch(&g, &ea, 1).unwrap();
         let occurrences = 40usize;
         let seeds: Vec<VId> = vec![0; occurrences];
 
@@ -370,7 +398,7 @@ mod tests {
             },
         ];
         // Balanced seeds + a duplicated hub run straddling shard bounds.
-        let base = SamplingService::launch(&g, &ea, 1);
+        let base = SamplingService::launch(&g, &ea, 1).unwrap();
         let mut srng = Rng::new(4);
         let mut seeds = balanced_seeds(&base, 24, &mut srng);
         let hub = (0..g.n as VId).max_by_key(|&v| g.out_neighbors(v).len()).unwrap();
@@ -390,7 +418,8 @@ mod tests {
                     workers,
                     shard_size: shard,
                 },
-            );
+            )
+            .unwrap();
             for (cfg, want) in cfgs.iter().zip(&want) {
                 let mut c = svc.client(6);
                 let got = c.sample_one_hop(&seeds, 7, cfg).unwrap();
@@ -422,7 +451,7 @@ mod tests {
         // Both services use the same shard size so request counts match;
         // only the worker count differs.
         let shard = 11usize;
-        let svc1 = SamplingService::launch_cfg(&g, &ea, 1, ServiceConfig::new(1, shard));
+        let svc1 = SamplingService::launch_cfg(&g, &ea, 1, ServiceConfig::new(1, shard)).unwrap();
         let mut c1 = svc1.client(8);
         let t1 = sample_tree(&mut c1, &seeds, &fanouts, &SampleConfig::default()).unwrap();
         let totals1: Vec<[u64; 4]> = svc1
@@ -439,7 +468,7 @@ mod tests {
             .collect();
         svc1.shutdown();
 
-        let svc4 = SamplingService::launch_cfg(&g, &ea, 1, ServiceConfig::new(4, shard));
+        let svc4 = SamplingService::launch_cfg(&g, &ea, 1, ServiceConfig::new(4, shard)).unwrap();
         let mut c4 = svc4.client(8);
         let t4 = sample_tree(&mut c4, &seeds, &fanouts, &SampleConfig::default()).unwrap();
         let totals4: Vec<[u64; 4]> = svc4

@@ -101,7 +101,7 @@ mod tests {
         let mut rng = Rng::new(150);
         let g = generator::chung_lu(1000, 10_000, 2.1, &mut rng);
         let ea = AdaDNE::default().partition(&g, 3, 0);
-        SamplingService::launch(&g, &ea, 1)
+        SamplingService::launch(&g, &ea, 1).unwrap()
     }
 
     #[test]
@@ -157,7 +157,7 @@ mod tests {
         let mut rng = Rng::new(151);
         let g = generator::chung_lu(700, 7000, 2.1, &mut rng);
         let ea = AdaDNE::default().partition(&g, 3, 0);
-        let svc = SamplingService::launch(&g, &ea, 1);
+        let svc = SamplingService::launch(&g, &ea, 1).unwrap();
         let mut client = svc.client(8);
         let seeds: Vec<VId> = (0..16).collect();
         let t = sample_tree(&mut client, &seeds, &[4], &SampleConfig::default()).unwrap();

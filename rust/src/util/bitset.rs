@@ -149,6 +149,16 @@ impl BitMatrix {
             .sum()
     }
 
+    /// Union another matrix of identical shape into this one — the shard
+    /// merge of the parallel partition-membership scan (graph::hetero).
+    pub fn or_with(&mut self, other: &BitMatrix) {
+        assert_eq!(self.bits, other.bits);
+        assert_eq!(self.data.len(), other.data.len());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a |= b;
+        }
+    }
+
     /// Memory footprint in bytes (Table III accounting).
     pub fn nbytes(&self) -> usize {
         self.data.len() * 8
@@ -205,6 +215,18 @@ mod tests {
         assert!(m.get(1, 99) && !m.get(1, 0));
         assert_eq!(m.row_ones(2).collect::<Vec<_>>(), vec![50]);
         assert_eq!(m.row_count(1), 1);
+    }
+
+    #[test]
+    fn matrix_or_with_unions_rows() {
+        let mut a = BitMatrix::new(3, 70);
+        let mut b = BitMatrix::new(3, 70);
+        a.set(0, 1);
+        b.set(0, 69);
+        b.set(2, 5);
+        a.or_with(&b);
+        assert!(a.get(0, 1) && a.get(0, 69) && a.get(2, 5));
+        assert_eq!(a.row_count(1), 0);
     }
 
     #[test]

@@ -85,7 +85,7 @@ fn partition_structures_preserve_the_graph() {
         let g = arbitrary_graph(rng);
         let parts = rng.range(2, 5);
         let ea = AdaDNE::default().partition(&g, parts, rng.next_u64());
-        let pgs = build_partitions(&g, &ea.part_of_edge, parts);
+        let pgs = build_partitions(&g, &ea.part_of_edge, parts).unwrap();
         // Edge conservation.
         let total: usize = pgs.iter().map(|p| p.ne()).sum();
         prop_assert_eq!(total, g.m());
@@ -113,6 +113,42 @@ fn partition_structures_preserve_the_graph() {
         let q = quality(&g, &ea);
         for p in &pgs {
             prop_assert_eq!(p.nv(), q.vertices_per_part[p.part_id]);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn expansion_is_thread_count_invariant_on_arbitrary_graphs() {
+    prop_check("offline thread invariance", 10, |rng| {
+        let g = arbitrary_graph(rng);
+        let parts = rng.range(2, 7);
+        let seed = rng.next_u64();
+        let threads = rng.range(2, 9);
+        let serial = AdaDNE::default().partition(&g, parts, seed);
+        let par = AdaDNE {
+            threads,
+            ..Default::default()
+        }
+        .partition(&g, parts, seed);
+        prop_assert_eq!(serial.part_of_edge.clone(), par.part_of_edge);
+        let serial = DistributedNE::default().partition(&g, parts, seed);
+        let par = DistributedNE {
+            threads,
+            ..Default::default()
+        }
+        .partition(&g, parts, seed);
+        prop_assert_eq!(serial.part_of_edge.clone(), par.part_of_edge.clone());
+        // The parallel builder over the parallel assignment matches the
+        // fully-serial offline pipeline structure-for-structure.
+        let a = build_partitions(&g, &serial.part_of_edge, parts).unwrap();
+        let b = glisp::graph::build_partitions_threads(&g, &par.part_of_edge, parts, threads)
+            .unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            prop_assert_eq!(x.global_id.clone(), y.global_id.clone());
+            prop_assert_eq!(x.out_dst.clone(), y.out_dst.clone());
+            prop_assert_eq!(x.in_eid.clone(), y.in_eid.clone());
+            prop_assert_eq!(x.partition_set.raw().to_vec(), y.partition_set.raw().to_vec());
         }
         Ok(())
     });
@@ -175,7 +211,7 @@ fn io_round_trip_arbitrary_partitions() {
         let g = generator::heterogeneous_graph(n, n * 8, 3, 4, 2.2, rng);
         let parts = rng.range(1, 4);
         let ea = Hash2D.partition(&g, parts, rng.next_u64());
-        let pgs = build_partitions(&g, &ea.part_of_edge, parts);
+        let pgs = build_partitions(&g, &ea.part_of_edge, parts).unwrap();
         let dir = std::env::temp_dir().join(format!("glisp_prop_io_{}", rng.next_u64()));
         for p in &pgs {
             glisp::graph::io::save_partition(p, &dir, &format!("p{}", p.part_id)).unwrap();
@@ -209,7 +245,7 @@ fn edge_type_queries_match_ground_truth() {
         let n = rng.range(100, 600);
         let g = generator::heterogeneous_graph(n, n * 6, 2, 5, 2.2, rng);
         let ea = Hash1D.partition(&g, 2, rng.next_u64());
-        for p in build_partitions(&g, &ea.part_of_edge, 2) {
+        for p in build_partitions(&g, &ea.part_of_edge, 2).unwrap() {
             for v in 0..p.nv() as u32 {
                 let (a, b) = p.out_range(v);
                 // Reconstruct per-edge types via the query and check the
@@ -238,7 +274,7 @@ fn primary_partition_is_always_a_member() {
         let parts = rng.range(2, 6);
         let ea = AdaDNE::default().partition(&g, parts, rng.next_u64());
         let pp = primary_partition(&g, &ea);
-        let pgs = build_partitions(&g, &ea.part_of_edge, parts);
+        let pgs = build_partitions(&g, &ea.part_of_edge, parts).unwrap();
         for v in 0..g.n {
             // A vertex with any incident edge must be present in its
             // primary partition's structure.

@@ -24,7 +24,7 @@ fn tree_shapes_and_masks_are_consistent() {
         let g = arbitrary_powerlaw(rng);
         let parts = rng.range(2, 5);
         let ea = AdaDNE::default().partition(&g, parts, rng.next_u64());
-        let svc = SamplingService::launch(&g, &ea, rng.next_u64());
+        let svc = SamplingService::launch(&g, &ea, rng.next_u64()).unwrap();
         let mut client = svc.client(rng.next_u64());
         let hops = rng.range(1, 4);
         let fanouts: Vec<usize> = (0..hops).map(|_| rng.range(2, 8)).collect();
@@ -64,7 +64,7 @@ fn sampled_children_are_true_neighbors() {
         let g = arbitrary_powerlaw(rng);
         let parts = rng.range(2, 5);
         let ea = AdaDNE::default().partition(&g, parts, rng.next_u64());
-        let svc = SamplingService::launch(&g, &ea, rng.next_u64());
+        let svc = SamplingService::launch(&g, &ea, rng.next_u64()).unwrap();
         for weighted in [false, true] {
             let mut client = svc.client(rng.next_u64());
             let seeds = balanced_seeds(&svc, 8, rng);
@@ -98,7 +98,7 @@ fn full_neighborhood_when_fanout_exceeds_degree() {
         let n = rng.range(100, 400);
         let g = generator::erdos_renyi(n, n * 2, rng);
         let ea = AdaDNE::default().partition(&g, 2, rng.next_u64());
-        let svc = SamplingService::launch(&g, &ea, rng.next_u64());
+        let svc = SamplingService::launch(&g, &ea, rng.next_u64()).unwrap();
         let mut client = svc.client(rng.next_u64());
         let seeds: Vec<VId> = (0..16.min(n as u32)).collect();
         let f = 64;
@@ -135,7 +135,7 @@ fn uniform_sampling_is_unbiased_across_partitions() {
         }
         let g = Graph::from_edges(deg + 1, &edges);
         let ea = AdaDNE::default().partition(&g, 3, rng.next_u64());
-        let svc = SamplingService::launch(&g, &ea, rng.next_u64());
+        let svc = SamplingService::launch(&g, &ea, rng.next_u64()).unwrap();
         let mut client = svc.client(rng.next_u64());
         let f = 8;
         let trials = 3000;
@@ -177,7 +177,7 @@ fn weighted_sampling_prefers_heavy_edges() {
         }
         let g = Graph::from_typed_edges(deg + 1, &edges);
         let ea = AdaDNE::default().partition(&g, 2, rng.next_u64());
-        let svc = SamplingService::launch(&g, &ea, rng.next_u64());
+        let svc = SamplingService::launch(&g, &ea, rng.next_u64()).unwrap();
         let mut client = svc.client(rng.next_u64());
         let cfg = SampleConfig {
             weighted: true,
@@ -208,7 +208,7 @@ fn workload_spreads_under_replica_routing() {
         let g = arbitrary_powerlaw(rng);
         let parts = 4;
         let ea = AdaDNE::default().partition(&g, parts, rng.next_u64());
-        let svc = SamplingService::launch(&g, &ea, rng.next_u64());
+        let svc = SamplingService::launch(&g, &ea, rng.next_u64()).unwrap();
         let mut client = svc.client(rng.next_u64());
         for _ in 0..10 {
             let seeds = balanced_seeds(&svc, 16, rng);

@@ -149,7 +149,7 @@ fn loss_decreases_in_ten_steps_for_all_models() {
     let g = generator::labeled_community_graph(n, n * 12, 8, 0.9, &mut rng);
     let labels = Arc::new(g.label.clone());
     let ea = AdaDNE::default().partition(&g, 2, 1);
-    let svc = SamplingService::launch(&g, &ea, 1);
+    let svc = SamplingService::launch(&g, &ea, 1).unwrap();
     for model in ["gcn", "sage", "gat"] {
         let features = FeatureStore::labeled(64, labels.clone(), 8, 0.6);
         let lr = if model == "sage" { 0.1 } else { 0.4 };

@@ -26,7 +26,7 @@ fn training_converges_for_all_three_models() {
     let g = generator::labeled_community_graph(n, n * 12, 8, 0.9, &mut rng);
     let labels = Arc::new(g.label.clone());
     let ea = AdaDNE::default().partition(&g, 2, 1);
-    let svc = SamplingService::launch(&g, &ea, 1);
+    let svc = SamplingService::launch(&g, &ea, 1).unwrap();
     for model in ["gcn", "sage", "gat"] {
         let features = FeatureStore::labeled(64, labels.clone(), 8, 0.6);
         let lr = if model == "sage" { 0.1 } else { 0.4 };
@@ -61,7 +61,7 @@ fn trained_model_beats_chance_on_held_out_vertices() {
     let g = generator::labeled_community_graph(n, n * 12, classes, 0.9, &mut rng);
     let labels = Arc::new(g.label.clone());
     let ea = AdaDNE::default().partition(&g, 2, 1);
-    let svc = SamplingService::launch(&g, &ea, 1);
+    let svc = SamplingService::launch(&g, &ea, 1).unwrap();
     let features = FeatureStore::labeled(64, labels.clone(), classes, 0.6);
     let mut trainer = Trainer::new(
         &art,
