@@ -3,29 +3,41 @@
 
 use glisp::graph::metrics::degree_distribution;
 use glisp::harness::workloads::{bench_datasets, load};
-use glisp::harness::{f2, Table};
+use glisp::harness::{BenchRecorder, BenchTable, Cell};
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     println!("== Fig. 8 — degree distribution of datasets (log-binned) ==");
+    let mut rec = BenchRecorder::new("fig08_degree_dist");
+    let mut summary = BenchTable::new(
+        "summary",
+        "Degree summary per dataset",
+        &["dataset", "avg deg", "max deg", "slope", "power law"],
+    );
     for spec in bench_datasets() {
         let g = load(&spec, 1);
         let d = degree_distribution(&g);
-        let mut t = Table::new(
+        let mut t = BenchTable::new(
+            spec.name,
             &format!("{} (n={}, m={})", spec.name, g.n, g.m()),
             &["degree >=", "vertices"],
         );
-        for (deg, cnt) in &d.hist {
-            t.row(&[format!("{deg}"), format!("{cnt}")]);
+        t.param_usize("n", g.n).param_usize("m", g.m());
+        for &(deg, cnt) in &d.hist {
+            t.row(vec![Cell::n(deg), Cell::n(cnt)]);
         }
-        t.print();
-        println!(
-            "avg degree {:.1}, max degree {}, log-log slope {} => power law: {}",
-            d.avg_degree,
-            d.max_degree,
-            f2(d.slope),
-            d.slope < -0.8 && d.max_degree as f64 > 10.0 * d.avg_degree
-        );
+        rec.table(&t);
+        let power_law = d.slope < -0.8 && d.max_degree as f64 > 10.0 * d.avg_degree;
+        summary.row(vec![
+            Cell::str(spec.name),
+            Cell::f2(d.avg_degree),
+            Cell::n(d.max_degree as u64),
+            Cell::f2(d.slope),
+            Cell::str(if power_law { "yes" } else { "no" }),
+        ]);
     }
+    rec.table(&summary);
     println!("\npaper: every dataset except OGBN-Products is power-law; the ER");
     println!("control (products-s) must show a bounded tail, the rest heavy tails.");
+    rec.finish()?;
+    Ok(())
 }

@@ -10,7 +10,7 @@
 
 use glisp::graph::{build_partitions, Graph};
 use glisp::harness::workloads::{bench_datasets, load};
-use glisp::harness::{f2, Table};
+use glisp::harness::{BenchRecorder, BenchTable, Cell};
 use glisp::partition::{
     edge_cut_to_assignment, AdaDNE, EdgeAssignment, EdgeCutLDG, Hash1D, Partitioner,
 };
@@ -69,13 +69,13 @@ fn framework_row(
     ea: &EdgeAssignment,
     owner: Option<std::sync::Arc<Vec<u16>>>,
     batches: usize,
-    t: &mut Table,
+    t: &mut BenchTable,
 ) {
     // Build the compact partition structures ONCE per framework; each
     // (weighted × workers) cell launches from a memcpy clone instead of
     // re-running the full partition assembly four times.
     let parts = build_partitions(g, &ea.part_of_edge, ea.num_parts).unwrap();
-    let mut cells = vec![name.to_string()];
+    let mut cells = vec![Cell::str(name)];
     for weighted in [false, true] {
         for (workers, shard) in [(1usize, 0usize), (POOL_WORKERS, POOL_SHARD)] {
             let svc = SamplingService::launch_with_partitions_cfg(
@@ -92,25 +92,32 @@ fn framework_row(
             if workers == 1 {
                 // The simulated-distributed number is a balance metric;
                 // one column (1-worker) suffices.
-                cells.push(f2(sim));
+                cells.push(Cell::f2(sim));
             }
-            cells.push(f2(wall));
+            cells.push(Cell::f2(wall));
             svc.shutdown();
         }
     }
-    t.row(&cells);
+    t.row(cells);
 }
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     println!("== Fig. 9 — sampling throughput (seeds/s), fanouts {FANOUTS:?} ==");
     let parts = 4;
     let batches = std::env::var("GLISP_BENCH_BATCHES")
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(30);
+    let mut rec = BenchRecorder::new("fig09_sampling_speed");
+    rec.config_usize("parts", parts)
+        .config_usize("batches", batches)
+        .config_str("fanouts", "15,10,5")
+        .config_usize("pool_workers", POOL_WORKERS)
+        .config_usize("pool_shard", POOL_SHARD);
     for spec in bench_datasets() {
         let g = load(&spec, 1);
-        let mut t = Table::new(
+        let mut t = BenchTable::new(
+            spec.name,
             &format!(
                 "{} × {parts} servers (sim = distributed makespan; \
                  4w = {POOL_WORKERS}-worker pool, shard {POOL_SHARD})",
@@ -126,6 +133,7 @@ fn main() {
                 "wei wall 4w",
             ],
         );
+        t.param_str("dataset", spec.name);
         // GLISP
         let ea = AdaDNE::default().partition(&g, parts, 1);
         framework_row("GLISP (AdaDNE+GA)", &g, &ea, None, batches, &mut t);
@@ -149,7 +157,7 @@ fn main() {
         };
         let owner = std::sync::Arc::new(owner);
         framework_row("GraphLearn-like (hash)", &g, &ea, Some(owner), batches, &mut t);
-        t.print();
+        rec.table(&t);
     }
     println!("\npaper Fig. 9: GLISP fastest everywhere, and more so for weighted");
     println!("sampling, where workload imbalance is amplified by the heavier op.");
@@ -159,4 +167,6 @@ fn main() {
     println!("'4w' reruns the same traffic against a {POOL_WORKERS}-worker pool per");
     println!("partition with sharded gathers — identical samples (per-seed RNG),");
     println!("higher wall throughput wherever spare cores exist.");
+    rec.finish()?;
+    Ok(())
 }

@@ -3,9 +3,9 @@
 //! partition 0). Paper's claim: baseline skewed despite balanced seeds;
 //! GLISP flat; GLISP-P0 degrades slightly but stays far better.
 
-use glisp::coordinator::metrics::normalized_workload;
+use glisp::coordinator::metrics::{fmt_durations, normalized_workload};
 use glisp::harness::workloads::{bench_datasets, load};
-use glisp::harness::{bar_chart, f2, Table};
+use glisp::harness::{bar_chart, BenchRecorder, BenchTable, Cell};
 use glisp::partition::{edge_cut_to_assignment, AdaDNE, EdgeCutLDG, Partitioner};
 use glisp::sampling::{
     balanced_seeds, sample_tree, SampleConfig, SamplingService, ServiceConfig,
@@ -14,17 +14,34 @@ use glisp::util::rng::Rng;
 
 const FANOUTS: [usize; 3] = [15, 10, 5];
 
-fn main() {
+fn workload_row(t: &mut BenchTable, stack: &str, w: &[f64]) {
+    t.row(vec![
+        Cell::str(stack),
+        Cell::f2(w[0]),
+        Cell::f2(w[1]),
+        Cell::f2(w[2]),
+        Cell::f2(w[3]),
+        Cell::f2(w.iter().cloned().fold(f64::MIN, f64::max)),
+    ]);
+}
+
+fn main() -> anyhow::Result<()> {
     println!("== Fig. 10 — normalized server workload (balanced seeds) ==");
     let parts = 4;
     let rounds = 20;
+    let mut rec = BenchRecorder::new("fig10_server_workload");
+    rec.config_usize("parts", parts)
+        .config_usize("rounds", rounds)
+        .config_str("fanouts", "15,10,5");
     for spec in bench_datasets().into_iter().skip(1) {
         // skip the ER control: the paper skips OGBN-Products here too
         let g = load(&spec, 1);
-        let mut t = Table::new(
+        let mut t = BenchTable::new(
+            spec.name,
             &format!("{} × {parts} servers (W_i / min W)", spec.name),
             &["stack", "s0", "s1", "s2", "s3", "max/min"],
         );
+        t.param_str("dataset", spec.name);
 
         // DistDGL-like.
         let va = EdgeCutLDG::default().partition_vertices(&g, parts, 1);
@@ -37,12 +54,7 @@ fn main() {
             let seeds = balanced_seeds(&svc, 16, &mut rng);
             sample_tree(&mut client, &seeds, &FANOUTS, &SampleConfig::default()).unwrap();
         }
-        let w = normalized_workload(&svc.workload());
-        t.row(&[
-            "DistDGL-like".into(),
-            f2(w[0]), f2(w[1]), f2(w[2]), f2(w[3]),
-            f2(w.iter().cloned().fold(f64::MIN, f64::max)),
-        ]);
+        workload_row(&mut t, "DistDGL-like", &normalized_workload(&svc.workload()));
         svc.shutdown();
 
         // The exact balanced-seed traffic both GLISP variants replay
@@ -62,29 +74,21 @@ fn main() {
         run_glisp_traffic(&svc);
         let glisp_raw = svc.workload();
         let w = normalized_workload(&glisp_raw);
-        t.row(&[
-            "GLISP".into(),
-            f2(w[0]), f2(w[1]), f2(w[2]), f2(w[3]),
-            f2(w.iter().cloned().fold(f64::MIN, f64::max)),
-        ]);
+        workload_row(&mut t, "GLISP", &w);
 
         // GLISP with a 4-worker pool per partition + sharded gathers: the
         // per-seed RNG contract (DESIGN.md §9) means the *workload* row is
         // byte-identical to the 1-worker run above — asserted, not assumed
-        // — while the shards spread over the pool (attribution printed).
+        // — while the shards spread over the pool (attribution recorded).
         let pool = SamplingService::launch_cfg(&g, &ea, 1, ServiceConfig::new(4, 16)).unwrap();
         run_glisp_traffic(&pool);
-        assert_eq!(
-            pool.workload(),
-            glisp_raw,
-            "pooled workload must be bit-identical to the 1-worker run"
+        rec.check(
+            &format!("{}_pooled_workload_bit_identical", spec.name),
+            pool.workload() == glisp_raw,
+            "4-worker pooled run must replay the 1-worker per-server workload byte-for-byte \
+             (per-seed RNG streams, DESIGN.md §9)",
         );
-        let wp = normalized_workload(&pool.workload());
-        t.row(&[
-            "GLISP 4w-pool".into(),
-            f2(wp[0]), f2(wp[1]), f2(wp[2]), f2(wp[3]),
-            f2(wp.iter().cloned().fold(f64::MIN, f64::max)),
-        ]);
+        workload_row(&mut t, "GLISP 4w-pool", &normalized_workload(&pool.workload()));
         let attribution = pool.worker_requests();
         let busy = pool.worker_busy_secs();
         pool.shutdown();
@@ -100,21 +104,31 @@ fn main() {
                 .collect();
             sample_tree(&mut client, &seeds, &FANOUTS, &SampleConfig::default()).unwrap();
         }
-        let w = normalized_workload(&svc.workload());
-        t.row(&[
-            "GLISP-P0".into(),
-            f2(w[0]), f2(w[1]), f2(w[2]), f2(w[3]),
-            f2(w.iter().cloned().fold(f64::MIN, f64::max)),
-        ]);
+        workload_row(&mut t, "GLISP-P0", &normalized_workload(&svc.workload()));
         svc.shutdown();
-        t.print();
+        rec.table(&t);
 
-        println!("per-worker gather shards served (GLISP 4w-pool): {attribution:?}");
-        let busy_ms: Vec<Vec<f64>> = busy
-            .iter()
-            .map(|p| p.iter().map(|s| (s * 1e5).round() / 100.0).collect())
-            .collect();
-        println!("per-worker busy ms (GLISP 4w-pool):              {busy_ms:?}");
+        // Pool attribution: which worker served how many gather shards on
+        // each server, and for how long it was busy.
+        let mut pt = BenchTable::new(
+            &format!("{}_pool", spec.name),
+            &format!("{} GLISP 4w-pool attribution (shards per worker)", spec.name),
+            &["server", "w0", "w1", "w2", "w3", "busy"],
+        );
+        pt.param_str("dataset", spec.name);
+        for (srv, reqs) in attribution.iter().enumerate() {
+            let total_busy: f64 = busy[srv].iter().sum();
+            pt.row(vec![
+                Cell::str(format!("s{srv}")),
+                Cell::n(reqs[0]),
+                Cell::n(reqs[1]),
+                Cell::n(reqs[2]),
+                Cell::n(reqs[3]),
+                Cell::d(total_busy),
+            ]);
+            println!("s{srv} per-worker busy: {:?}", fmt_durations(&busy[srv]));
+        }
+        rec.table(&pt);
         let labels: Vec<String> = (0..parts).map(|i| format!("s{i}")).collect();
         print!("{}", bar_chart(&format!("{} GLISP workload", spec.name), &labels, &w));
     }
@@ -123,4 +137,6 @@ fn main() {
     println!("still significantly outperforms DistDGL. The 4w-pool row shows the");
     println!("intra-partition worker pool preserves the workload bit-for-bit while");
     println!("spreading each server's shards over its pool members.");
+    rec.finish()?;
+    Ok(())
 }

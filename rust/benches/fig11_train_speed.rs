@@ -7,7 +7,7 @@ use std::sync::Arc;
 
 use glisp::coordinator::{Batcher, FeatureStore, Trainer, TrainerConfig};
 use glisp::graph::generator;
-use glisp::harness::{f2, Table};
+use glisp::harness::{BenchRecorder, BenchTable, Cell};
 use glisp::partition::{AdaDNE, Partitioner};
 use glisp::sampling::baseline::BaselineStack;
 use glisp::sampling::SamplingService;
@@ -30,9 +30,23 @@ fn main() -> anyhow::Result<()> {
     let labels = Arc::new(g.label.clone());
     let split = (n * 8) / 10;
 
-    let mut t = Table::new(
+    let mut rec = BenchRecorder::new("fig11_train_speed");
+    rec.config_usize("n", n)
+        .config_usize("parts", parts)
+        .config_usize("steps", steps)
+        .config_usize("classes", classes);
+    let mut t = BenchTable::new(
+        "models",
         &format!("n={n}, {parts} servers, {steps} timed steps (sim = parallel servers)"),
-        &["model", "GLISP sim", "base sim", "sim speedup", "sampling speedup", "GLISP wall", "base wall"],
+        &[
+            "model",
+            "GLISP sim",
+            "base sim",
+            "sim speedup",
+            "sampling speedup",
+            "GLISP wall",
+            "base wall",
+        ],
     );
     for model in ["gcn", "sage", "gat"] {
         let mut sim_rates = Vec::new();
@@ -89,22 +103,23 @@ fn main() -> anyhow::Result<()> {
                 b.shutdown();
             }
         }
-        t.row(&[
-            model.into(),
-            f2(sim_rates[0]),
-            f2(sim_rates[1]),
-            format!("{:.2}x", sim_rates[0] / sim_rates[1]),
-            format!("{:.2}x", makespans[1] / makespans[0].max(1e-9)),
-            f2(wall_rates[0]),
-            f2(wall_rates[1]),
+        t.row(vec![
+            Cell::str(model),
+            Cell::f2(sim_rates[0]),
+            Cell::f2(sim_rates[1]),
+            Cell::x(sim_rates[0] / sim_rates[1]),
+            Cell::x(makespans[1] / makespans[0].max(1e-9)),
+            Cell::f2(wall_rates[0]),
+            Cell::f2(wall_rates[1]),
         ]);
     }
-    t.print();
+    rec.table(&t);
     println!("\npaper Fig. 11: GLISP achieves 1.57x–6.53x over DistDGL/GraphLearn.");
     println!("'sim' replaces serialized server time with the bottleneck server's");
     println!("(parallel deployment). 'sampling speedup' is the ratio of bottleneck-");
     println!("server sampling time (base/GLISP) — the paper's GPU trainers are");
     println!("sampling-bound, so its end-to-end speedup tracks this column; on this");
     println!("1-core CPU testbed the model step dominates and compresses 'sim'.");
+    rec.finish()?;
     Ok(())
 }

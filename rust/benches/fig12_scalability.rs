@@ -13,7 +13,7 @@ use std::sync::Arc;
 use glisp::coordinator::trainer::sync_round;
 use glisp::coordinator::{Batcher, FeatureStore, Trainer, TrainerConfig};
 use glisp::graph::{build_partitions_threads, generator};
-use glisp::harness::{f2, f3, Table};
+use glisp::harness::{BenchRecorder, BenchTable, Cell};
 use glisp::partition::{AdaDNE, Partitioner};
 use glisp::sampling::SamplingService;
 use glisp::util::rng::Rng;
@@ -34,6 +34,11 @@ fn main() -> anyhow::Result<()> {
     let g = generator::labeled_community_graph(n, n * 10, classes, 0.9, &mut rng);
     let labels = Arc::new(g.label.clone());
 
+    let mut rec = BenchRecorder::new("fig12_scalability");
+    rec.config_usize("n", n)
+        .config_usize("rounds", rounds)
+        .config_usize("offline_threads", OFFLINE_THREADS);
+
     // Offline-stage scaling: the same partition + build pipeline on one
     // thread vs OFFLINE_THREADS, asserted bit-identical (DESIGN.md §10) —
     // the offline analogue of the trainer-count scaling below.
@@ -49,23 +54,36 @@ fn main() -> anyhow::Result<()> {
     .partition(&g, 4, 1);
     let pgs_par = build_partitions_threads(&g, &ea_par.part_of_edge, 4, OFFLINE_THREADS)?;
     let offline_par = timer.secs();
-    assert_eq!(
-        ea.part_of_edge, ea_par.part_of_edge,
-        "thread count leaked into the AdaDNE assignment"
+    rec.check(
+        "adadne_assignment_thread_invariant",
+        ea.part_of_edge == ea_par.part_of_edge,
+        "thread count must not leak into the AdaDNE edge assignment (DESIGN.md §10)",
     );
-    for (a, b) in pgs.iter().zip(&pgs_par) {
-        assert_eq!(a.global_id, b.global_id, "parallel build diverged");
-        assert_eq!(a.out_dst, b.out_dst);
-        assert_eq!(a.in_eid, b.in_eid);
-    }
-    println!(
-        "offline stage (AdaDNE partition + build, 4 parts): 1 thread {offline_1t:.2}s, \
-         {OFFLINE_THREADS} threads {offline_par:.2}s ({:.2}x) — outputs bit-identical\n",
-        offline_1t / offline_par.max(1e-9)
+    let builds_match = pgs.iter().zip(&pgs_par).all(|(a, b)| {
+        a.global_id == b.global_id && a.out_dst == b.out_dst && a.in_eid == b.in_eid
+    });
+    rec.check(
+        "parallel_build_bit_identical",
+        builds_match,
+        "compact partition structures built on 1 vs 4 threads must match byte-for-byte",
     );
+    let mut off = BenchTable::new(
+        "offline_stage",
+        &format!("offline stage, 4 parts, 1 vs {OFFLINE_THREADS} threads"),
+        &["stage", "1t", "4t", "speedup"],
+    );
+    off.param_usize("parts", 4).param_usize("threads", OFFLINE_THREADS);
+    off.row(vec![
+        Cell::str("partition+build"),
+        Cell::d(offline_1t),
+        Cell::d(offline_par),
+        Cell::x(offline_1t / offline_par.max(1e-9)),
+    ]);
+    rec.table(&off);
     let svc = SamplingService::launch_with_partitions(g.n, pgs_par, 1);
 
-    let mut t = Table::new(
+    let mut t = BenchTable::new(
+        "scaling",
         &format!("synchronous data parallelism ({rounds} rounds each; sim = parallel trainers)"),
         &["trainers", "first loss", "last loss", "sim samples/s", "sim scaling", "ideal"],
     );
@@ -107,21 +125,22 @@ fn main() -> anyhow::Result<()> {
         if workers == 1 {
             base_rate = rate;
         }
-        t.row(&[
-            format!("{workers}"),
-            f3(first as f64),
-            f3(last as f64),
-            f2(rate),
-            f2(rate / base_rate),
-            f2(workers as f64),
+        t.row(vec![
+            Cell::str(format!("{workers}")),
+            Cell::f3(first as f64),
+            Cell::f3(last as f64),
+            Cell::f2(rate),
+            Cell::x(rate / base_rate),
+            Cell::x(workers as f64),
         ]);
     }
-    t.print();
+    rec.table(&t);
     println!("\npaper Fig. 12: (a) trainer count does not change the convergence");
     println!("trajectory (same loss trend per round); (b) speedup slope ≈ 0.8 of");
     println!("ideal. 'sim' charges each round max(trainer time) + sync/apply time");
     println!("(trainers run in parallel in the paper's deployment; stragglers and");
     println!("the barrier produce the sublinear slope).");
     svc.shutdown();
+    rec.finish()?;
     Ok(())
 }

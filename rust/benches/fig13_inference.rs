@@ -9,7 +9,7 @@
 //! wall-clock win on top of the recomputation win. Both engine variants
 //! produce bit-identical embeddings (asserted below).
 
-use glisp::harness::{f2, infer_stack, ix, Table};
+use glisp::harness::{infer_stack, BenchRecorder, BenchTable, Cell};
 use glisp::inference::{init_decode_params, EngineConfig, SamplewiseRunner};
 use glisp::runtime::Runtime;
 use glisp::util::timer::Timer;
@@ -23,6 +23,8 @@ fn main() -> anyhow::Result<()> {
         .unwrap_or(6_000usize);
     let parts = 4usize;
     let work = std::env::temp_dir().join("glisp_fig13");
+    let mut rec = BenchRecorder::new("fig13_inference");
+    rec.config_usize("n", n).config_usize("parts", parts);
 
     // --- layerwise, worker-parallel (the engine's default) ---
     let mut par = infer_stack(n, parts, &art, work, EngineConfig::default())?;
@@ -37,7 +39,12 @@ fn main() -> anyhow::Result<()> {
     let (h_seq, _) = par.engine.run_vertex_embedding()?;
     let seq_v = timer.secs();
     par.engine.cfg.parallel = true;
-    assert_eq!(h, h_seq, "parallel sweep must be bit-identical");
+    rec.check(
+        "vertex_embedding_parallel_bit_identical",
+        h == h_seq,
+        "worker-parallel partition sweeps must reproduce the single-thread embeddings \
+         bit-for-bit (DESIGN.md §8)",
+    );
 
     // --- samplewise baseline ---
     let mut sw = SamplewiseRunner::new(
@@ -65,37 +72,49 @@ fn main() -> anyhow::Result<()> {
     let (_, sw_rep_l) = sw.run_link_prediction(&edges, &dec)?;
     let sw_l = timer.secs();
 
-    let mut t = Table::new(
+    let mut t = BenchTable::new(
+        "inference",
         &format!(
             "full-graph inference, n={n}, {parts} workers ({} edges scored)",
             edges.len()
         ),
-        &["task", "samplewise (s)", "layerwise 1-thr (s)", "layerwise par (s)", "speedup vs SW", "par vs 1-thr", "computations SW", "computations LW"],
+        &[
+            "task",
+            "samplewise",
+            "layerwise 1-thr",
+            "layerwise par",
+            "vs samplewise",
+            "par vs 1-thr",
+            "computations SW",
+            "computations LW",
+        ],
     );
-    t.row(&[
-        "vertex embedding".into(),
-        f2(sw_v),
-        f2(seq_v),
-        f2(lw_v),
-        format!("{:.2}x", sw_v / lw_v),
-        format!("{:.2}x", seq_v / lw_v),
-        ix(sw_rep.vertices_computed as usize),
-        ix(lw_rep.vertices_computed as usize),
+    t.param_usize("edges_scored", edges.len());
+    t.row(vec![
+        Cell::str("vertex embedding"),
+        Cell::d(sw_v),
+        Cell::d(seq_v),
+        Cell::d(lw_v),
+        Cell::x(sw_v / lw_v),
+        Cell::x(seq_v / lw_v),
+        Cell::n(sw_rep.vertices_computed),
+        Cell::n(lw_rep.vertices_computed),
     ]);
-    t.row(&[
-        "link prediction".into(),
-        f2(sw_l),
-        "-".into(),
-        f2(lw_l),
-        format!("{:.2}x", sw_l / lw_l),
-        "-".into(),
-        ix(sw_rep_l.vertices_computed as usize),
-        ix(edges.len() * 2),
+    t.row(vec![
+        Cell::str("link prediction"),
+        Cell::d(sw_l),
+        Cell::na(),
+        Cell::d(lw_l),
+        Cell::x(sw_l / lw_l),
+        Cell::na(),
+        Cell::n(sw_rep_l.vertices_computed),
+        Cell::n((edges.len() * 2) as u64),
     ]);
-    t.print();
+    rec.table(&t);
     println!("\npaper Fig. 13: 7.89x (vertex embedding) and 70.77x (link prediction);");
     println!("link prediction speeds up more because both endpoints' K-hop trees are");
     println!("recomputed per edge under samplewise inference. The 'par vs 1-thr'");
     println!("column is the additional win from one sweep thread per partition.");
+    rec.finish()?;
     Ok(())
 }

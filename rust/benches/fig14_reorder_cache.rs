@@ -7,7 +7,7 @@
 use glisp::coordinator::FeatureStore;
 use glisp::graph::generator;
 use glisp::graph::reorder::ReorderAlgo;
-use glisp::harness::{f2, f3, ix, Table};
+use glisp::harness::{BenchRecorder, BenchTable, Cell};
 use glisp::inference::chunk_store::COST_REMOTE;
 use glisp::inference::{init_encoder_params, EngineConfig, LayerwiseEngine};
 use glisp::partition::{AdaDNE, Partitioner};
@@ -25,7 +25,10 @@ fn main() -> anyhow::Result<()> {
     let g = generator::chung_lu(n, n * 7, 2.1, &mut rng);
     let ea = AdaDNE::default().partition(&g, 4, 1);
 
-    let mut t = Table::new(
+    let mut rec = BenchRecorder::new("fig14_reorder_cache");
+    rec.config_usize("n", n).config_usize("parts", 4);
+    let mut t = BenchTable::new(
+        "reorder",
         &format!("n={n}, 4 partitions, chunk 128, dyn cache 10% FIFO"),
         &["reorder", "chunk reads", "dyn hits", "hit ratio", "reads vs NS", "speedup vs no-cache"],
     );
@@ -62,19 +65,20 @@ fn main() -> anyhow::Result<()> {
         // With a 100% static fill, retrieval cost = chunk fetches at the
         // local-disk tier (+ the dynamic tier absorbing row reuse for free).
         let cost = rep.virtual_cost - rep.dynamic_hits; // exclude row-hit pennies
-        t.row(&[
-            algo.name().into(),
-            ix(rep.chunk_reads as usize),
-            ix(rep.dynamic_hits as usize),
-            f3(rep.dynamic_hit_ratio),
-            f2(rep.chunk_reads as f64 / ns_reads as f64),
-            f2(baseline_cost as f64 / cost.max(1) as f64),
+        t.row(vec![
+            Cell::str(algo.name()),
+            Cell::n(rep.chunk_reads),
+            Cell::n(rep.dynamic_hits),
+            Cell::f3(rep.dynamic_hit_ratio),
+            Cell::f2(rep.chunk_reads as f64 / ns_reads as f64),
+            Cell::x(baseline_cost as f64 / cost.max(1) as f64),
         ]);
     }
-    t.print();
+    rec.table(&t);
     println!("\npaper Fig. 14: NS already gains 2.52x from the caches alone; PDS");
     println!("reads the fewest chunks (41.5% of NS) with the highest dynamic hit");
     println!("ratio (>29%), reaching 8.10x; DS lands below PS because plain degree");
     println!("sort discards the locality the partitioner already mined.");
+    rec.finish()?;
     Ok(())
 }

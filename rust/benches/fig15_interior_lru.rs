@@ -5,7 +5,7 @@
 
 use glisp::graph::hetero::build_partitions;
 use glisp::harness::workloads::{bench_datasets, load};
-use glisp::harness::{f2, f3, Table};
+use glisp::harness::{BenchRecorder, BenchTable, Cell};
 use glisp::inference::dynamic_cache::{DynamicCache, EvictPolicy};
 use glisp::inference::ChunkStore;
 use glisp::partition::{AdaDNE, Partitioner};
@@ -13,7 +13,9 @@ use glisp::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
     println!("== Fig. 15a — interior vertex fraction under AdaDNE ==");
-    let mut t = Table::new(
+    let mut rec = BenchRecorder::new("fig15_interior_lru");
+    let mut t = BenchTable::new(
+        "interior",
         "interior vs boundary vertices",
         &["dataset", "parts", "interior %", "boundary %"],
     );
@@ -25,14 +27,14 @@ fn main() -> anyhow::Result<()> {
         let interior: usize = pgs.iter().map(|p| p.interior_count()).sum();
         let total: usize = pgs.iter().map(|p| p.nv()).sum();
         let frac = 100.0 * interior as f64 / total as f64;
-        t.row(&[
-            spec.name.into(),
-            format!("{parts}"),
-            f2(frac),
-            f2(100.0 - frac),
+        t.row(vec![
+            Cell::str(spec.name),
+            Cell::n(parts as u64),
+            Cell::f2(frac),
+            Cell::f2(100.0 - frac),
         ]);
     }
-    t.print();
+    rec.table(&t);
     println!("paper Fig. 15a: interior vertices dominate (>70%), justifying the");
     println!("partition-based static cache design.\n");
 
@@ -56,10 +58,12 @@ fn main() -> anyhow::Result<()> {
     let num_chunks = store.num_chunks;
     let mut rng = Rng::new(3);
 
-    let mut t = Table::new(
+    let mut t = BenchTable::new(
+        "lru_vs_fifo",
         &format!("{} access replay, cache = 10% of chunks", spec.name),
         &["policy", "hits", "misses", "hit ratio"],
     );
+    t.param_str("dataset", spec.name).param_usize("chunk_size", chunk_size);
     for policy in [EvictPolicy::Lru, EvictPolicy::Fifo] {
         let mut cache = DynamicCache::new(num_chunks / 10, policy);
         for &v in &order {
@@ -76,15 +80,16 @@ fn main() -> anyhow::Result<()> {
                 }
             }
         }
-        t.row(&[
-            format!("{policy:?}"),
-            format!("{}", cache.hits),
-            format!("{}", cache.misses),
-            f3(cache.hit_ratio()),
+        t.row(vec![
+            Cell::str(format!("{policy:?}")),
+            Cell::n(cache.hits),
+            Cell::n(cache.misses),
+            Cell::f3(cache.hit_ratio()),
         ]);
     }
-    t.print();
+    rec.table(&t);
     println!("paper Fig. 15b: LRU does not beat FIFO, so GLISP ships the simpler");
     println!("FIFO policy for the dynamic cache.");
+    rec.finish()?;
     Ok(())
 }

@@ -11,7 +11,7 @@
 
 use glisp::coordinator::PipelineConfig;
 use glisp::harness::workloads::train_stack_cfg;
-use glisp::harness::{f2, Table};
+use glisp::harness::{BenchRecorder, BenchTable, Cell};
 use glisp::sampling::ServiceConfig;
 use glisp::util::timer::Timer;
 
@@ -75,7 +75,13 @@ fn main() -> anyhow::Result<()> {
         ),
     ];
 
-    let mut t = Table::new(
+    let mut rec = BenchRecorder::new("pipeline_throughput");
+    rec.config_usize("n", n)
+        .config_usize("parts", parts)
+        .config_usize("steps", steps)
+        .config_str("model", "sage");
+    let mut t = BenchTable::new(
+        "modes",
         &format!(
             "n={n}, {parts} servers, sage, {steps} timed steps \
              (4w pool = 4 workers/partition, shard 16)"
@@ -100,20 +106,22 @@ fn main() -> anyhow::Result<()> {
         } else if pcfg.as_ref().is_some_and(|p| p.ordered) {
             // Bit-exactness across producer counts AND server pool
             // geometries — the per-seed determinism contract (DESIGN §9).
-            assert_eq!(
-                sync_losses, losses,
-                "{name}: ordered pipelined losses must equal sync"
+            rec.check(
+                &format!("{}_losses_bit_equal_sync", glisp::harness::bench::slug(name)),
+                sync_losses == losses,
+                "ordered pipelined losses must reproduce the sync loss curve \
+                 bit-for-bit (DESIGN.md §7/§9)",
             );
         }
-        t.row(&[
-            name.into(),
-            f2(rate),
-            f2(rate * s.trainer.batch as f64),
-            format!("{:.2}x", rate / base_rate),
+        t.row(vec![
+            Cell::str(name),
+            Cell::f2(rate),
+            Cell::f2(rate * s.trainer.batch as f64),
+            Cell::x(rate / base_rate),
         ]);
         s.service.shutdown();
     }
-    t.print();
+    rec.table(&t);
     println!("\nThe producer pipeline overlaps K-hop sampling + feature assembly with");
     println!("the model step (paper §III-C keeps sampling off the trainer's critical");
     println!("path). Ordered mode is bit-exact vs sync (verified above, including");
@@ -122,5 +130,6 @@ fn main() -> anyhow::Result<()> {
     println!("gather parallelize inside each partition — on a multi-core host the");
     println!("4w rows should lead; on a single-core runner everything degrades");
     println!("gracefully to ~sync speed.");
+    rec.finish()?;
     Ok(())
 }

@@ -11,7 +11,7 @@
 
 use glisp::graph::Graph;
 use glisp::harness::workloads::{bench_datasets, load};
-use glisp::harness::{f2, f3, Table};
+use glisp::harness::{BenchRecorder, BenchTable, Cell};
 use glisp::partition::{quality, AdaDNE, DistributedNE, EdgeAssignment, EdgeCutLDG, Partitioner};
 use glisp::util::timer::Timer;
 
@@ -50,12 +50,15 @@ fn algos() -> Vec<Algo> {
     ]
 }
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     println!("== Table II — partition quality ==");
+    let mut rec = BenchRecorder::new("table2_partition_quality");
+    rec.config_usize("par_threads", PAR_THREADS);
     for spec in bench_datasets() {
         let g = load(&spec, 1);
         for &parts in &[4usize, 8] {
-            let mut t = Table::new(
+            let mut t = BenchTable::new(
+                &format!("{}_x{}", spec.name, parts),
                 &format!(
                     "{} × {} partitions (1t/{PAR_THREADS}t = propose threads, \
                      assignments asserted bit-identical)",
@@ -63,34 +66,42 @@ fn main() {
                 ),
                 &["algorithm", "RF", "VB", "EB", "1t(s)", &format!("{PAR_THREADS}t(s)")],
             );
+            t.param_str("dataset", spec.name).param_usize("parts", parts);
             for (name, algo) in &algos() {
                 let timer = Timer::start();
                 let ea = algo(&g, parts, 1);
                 let serial_secs = timer.secs();
                 let par_cell = if *name == "EdgeCutLDG" {
                     // Streaming baseline: no propose phase to parallelize.
-                    "-".to_string()
+                    Cell::na()
                 } else {
                     let timer = Timer::start();
                     let par = algo(&g, parts, PAR_THREADS);
                     let par_secs = timer.secs();
-                    assert_eq!(
-                        ea.part_of_edge, par.part_of_edge,
-                        "{name}: thread count leaked into the assignment"
+                    rec.check(
+                        &format!(
+                            "{}_x{}_{}_assignment_thread_invariant",
+                            spec.name,
+                            parts,
+                            name.to_lowercase()
+                        ),
+                        ea.part_of_edge == par.part_of_edge,
+                        "propose-phase thread count must not leak into the edge \
+                         assignment (DESIGN.md §10)",
                     );
-                    f2(par_secs)
+                    Cell::d(par_secs)
                 };
                 let q = quality(&g, &ea);
-                t.row(&[
-                    (*name).into(),
-                    f3(q.rf),
-                    f3(q.vb),
-                    f3(q.eb),
-                    f2(serial_secs),
+                t.row(vec![
+                    Cell::str(*name),
+                    Cell::f3(q.rf),
+                    Cell::f3(q.vb),
+                    Cell::f3(q.eb),
+                    Cell::d(serial_secs),
                     par_cell,
                 ]);
             }
-            t.print();
+            rec.table(&t);
         }
     }
     println!("\npaper Table II: AdaDNE achieves the lowest VB and EB in all cases,");
@@ -99,4 +110,6 @@ fn main() {
     println!("reruns the identical schedule with a parallel propose phase — on a");
     println!("≥{PAR_THREADS}-core host it should approach the thread count; on a 1-core");
     println!("testbed it degrades gracefully to ~1x.");
+    rec.finish()?;
+    Ok(())
 }

@@ -7,22 +7,31 @@
 use glisp::graph::generator;
 use glisp::graph::hetero::build_partitions;
 use glisp::graph::memfoot;
-use glisp::harness::{f2, Table};
+use glisp::harness::{BenchRecorder, BenchTable, Cell};
 use glisp::util::rng::Rng;
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     println!("== Table III — graph structure memory footprint (MB) ==");
     let mut rng = Rng::new(1);
     let scale = glisp::harness::workloads::bench_scale();
+    let mut rec = BenchRecorder::new("table3_memory");
     let cases = [
         ("products-h", (12_000.0 * scale) as usize, (300_000.0 * scale) as usize, 2, 3),
         ("wiki-h", (45_000.0 * scale) as usize, (300_000.0 * scale) as usize, 3, 4),
         ("twitter-h", (21_000.0 * scale) as usize, (740_000.0 * scale) as usize, 2, 4),
         ("paper-h", (55_000.0 * scale) as usize, (800_000.0 * scale) as usize, 3, 5),
     ];
-    let mut t = Table::new(
-        "memory footprint by layout",
-        &["dataset", "DistDGL-like", "GraphLearn-like", "Euler-like", "GLISP", "GLISP vs best other"],
+    let mut t = BenchTable::new(
+        "memory",
+        "memory footprint by layout (MB)",
+        &[
+            "dataset",
+            "DistDGL-like",
+            "GraphLearn-like",
+            "Euler-like",
+            "GLISP",
+            "GLISP vs best other",
+        ],
     );
     for (name, n, m, vt, et) in cases {
         let g = generator::heterogeneous_graph(n, m, vt, et, 2.1, &mut rng);
@@ -32,16 +41,18 @@ fn main() {
         let gl = memfoot::graphlearn_like_bytes(&g) as f64 / 1e6;
         let euler = memfoot::euler_like_bytes(&g) as f64 / 1e6;
         let best_other = dgl.min(gl).min(euler);
-        t.row(&[
-            name.into(),
-            f2(dgl),
-            f2(gl),
-            f2(euler),
-            f2(ours),
-            format!("{:.2}x smaller", best_other / ours),
+        t.row(vec![
+            Cell::str(name),
+            Cell::f2(dgl),
+            Cell::f2(gl),
+            Cell::f2(euler),
+            Cell::f2(ours),
+            Cell::x(best_other / ours),
         ]);
     }
-    t.print();
+    rec.table(&t);
     println!("\npaper Table III: GLISP has the smallest footprint on all datasets");
     println!("(e.g. OGBN-Products 0.6 GB vs DistDGL 2.0 GB vs GraphLearn 5.5 GB).");
+    rec.finish()?;
+    Ok(())
 }

@@ -9,7 +9,7 @@ use std::sync::Arc;
 
 use glisp::coordinator::{Batcher, FeatureStore, Trainer, TrainerConfig};
 use glisp::graph::generator;
-use glisp::harness::{f3, Table};
+use glisp::harness::{BenchRecorder, BenchTable, Cell};
 use glisp::partition::{AdaDNE, Partitioner};
 use glisp::sampling::SamplingService;
 use glisp::util::rng::Rng;
@@ -30,7 +30,12 @@ fn main() -> anyhow::Result<()> {
     let svc = SamplingService::launch(&g, &ea, 1)?;
     let split = (n * 8) / 10;
 
-    let mut t = Table::new(
+    let mut rec = BenchRecorder::new("table4_accuracy");
+    rec.config_usize("n", n)
+        .config_usize("classes", classes)
+        .config_usize("steps", steps);
+    let mut t = BenchTable::new(
+        "accuracy",
         &format!("labeled community graph (n={n}, {classes} classes, {steps} steps)"),
         &["model", "test accuracy", "final loss"],
     );
@@ -55,20 +60,23 @@ fn main() -> anyhow::Result<()> {
             test_seeds.iter().map(|&v| labels[v as usize]).collect();
         let acc = trainer.evaluate(&test_seeds, &test_labels)?;
         accs.push(acc);
-        t.row(&[
-            model.into(),
-            f3(acc),
-            f3(*losses.last().unwrap() as f64),
+        t.row(vec![
+            Cell::str(model),
+            Cell::f3(acc),
+            Cell::f3(*losses.last().unwrap() as f64),
         ]);
     }
-    t.print();
     let chance = 1.0 / classes as f64;
+    let spread = accs.iter().cloned().fold(f64::MIN, f64::max)
+        - accs.iter().cloned().fold(f64::MAX, f64::min);
+    t.param("chance", glisp::util::json::Json::Num(chance));
+    t.param("spread", glisp::util::json::Json::Num(spread));
+    rec.table(&t);
     println!("\nchance accuracy: {chance:.3}");
     println!(
-        "parity band: max-min spread {:.3} (paper Table IV spreads are <= 0.02 per dataset)",
-        accs.iter().cloned().fold(f64::MIN, f64::max)
-            - accs.iter().cloned().fold(f64::MAX, f64::min)
+        "parity band: max-min spread {spread:.3} (paper Table IV spreads are <= 0.02 per dataset)"
     );
     svc.shutdown();
+    rec.finish()?;
     Ok(())
 }

@@ -7,7 +7,7 @@
 //! worker-parallel sweep, the report also breaks fill/model down per
 //! worker — the per-partition rows below are the Table V accounting.
 
-use glisp::harness::{f2, f3, infer_stack, Table};
+use glisp::harness::{infer_stack, BenchRecorder, BenchTable, Cell};
 use glisp::inference::{init_decode_params, EngineConfig};
 
 fn main() -> anyhow::Result<()> {
@@ -21,18 +21,21 @@ fn main() -> anyhow::Result<()> {
     let work = std::env::temp_dir().join("glisp_table5");
     let mut stack = infer_stack(n, parts, &art, work, EngineConfig::default())?;
 
-    let mut t = Table::new(
+    let mut rec = BenchRecorder::new("table5_cache_fill");
+    rec.config_usize("n", n).config_usize("parts", parts);
+    let mut t = BenchTable::new(
+        "tasks",
         &format!("n={n}, {parts} workers"),
-        &["task", "fill chunks", "fill cost", "model secs", "fill secs", "fill/model wall"],
+        &["task", "fill chunks", "fill cost", "model", "fill", "fill/model wall"],
     );
     let (h, rep) = stack.engine.run_vertex_embedding()?;
-    t.row(&[
-        "vertex embedding".into(),
-        format!("{}", rep.fill_chunks),
-        format!("{}", rep.fill_cost),
-        f2(rep.model_secs),
-        f2(rep.fill_secs),
-        f2(rep.fill_secs / rep.model_secs.max(1e-9)),
+    t.row(vec![
+        Cell::str("vertex embedding"),
+        Cell::n(rep.fill_chunks),
+        Cell::n(rep.fill_cost),
+        Cell::d(rep.model_secs),
+        Cell::d(rep.fill_secs),
+        Cell::f2(rep.fill_secs / rep.model_secs.max(1e-9)),
     ]);
     let dec = init_decode_params(&stack.engine.runtime, 9)?;
     let edges: Vec<(u32, u32)> = (0..stack.g.n as u32)
@@ -41,37 +44,43 @@ fn main() -> anyhow::Result<()> {
         .map(|u| (u, stack.g.out_neighbors(u)[0]))
         .collect();
     let (_, rep_l) = stack.engine.run_link_prediction(&h, &edges, &dec)?;
-    t.row(&[
-        "link prediction".into(),
-        format!("{}", rep_l.fill_chunks),
-        format!("{}", rep_l.fill_cost),
-        f2(rep_l.model_secs),
-        f2(rep_l.fill_secs),
-        f2(rep_l.fill_secs / rep_l.model_secs.max(1e-9)),
+    t.row(vec![
+        Cell::str("link prediction"),
+        Cell::n(rep_l.fill_chunks),
+        Cell::n(rep_l.fill_cost),
+        Cell::d(rep_l.model_secs),
+        Cell::d(rep_l.fill_secs),
+        Cell::f2(rep_l.fill_secs / rep_l.model_secs.max(1e-9)),
     ]);
-    t.print();
+    rec.table(&t);
 
     // Per-worker breakdown of the vertex-embedding run (fills sum to the
     // aggregate row above — asserted so the accounting cannot drift).
-    let mut pw = Table::new(
+    let mut pw = BenchTable::new(
+        "per_worker",
         "vertex embedding, per worker (summed over K slices)",
-        &["worker", "vertices", "fill chunks", "fill cost", "model secs", "dyn hit ratio"],
+        &["worker", "vertices", "fill chunks", "fill cost", "model", "dyn hit ratio"],
     );
     for w in rep.workers.iter().filter(|w| w.vertices_computed > 0) {
-        pw.row(&[
-            format!("{}", w.worker),
-            format!("{}", w.vertices_computed),
-            format!("{}", w.fill_chunks),
-            format!("{}", w.fill_cost),
-            f2(w.model_secs),
-            f3(w.dynamic_hit_ratio()),
+        pw.row(vec![
+            Cell::str(format!("{}", w.worker)),
+            Cell::n(w.vertices_computed),
+            Cell::n(w.fill_chunks),
+            Cell::n(w.fill_cost),
+            Cell::d(w.model_secs),
+            Cell::f3(w.dynamic_hit_ratio()),
         ]);
     }
-    pw.print();
+    rec.table(&pw);
     let fill_sum: u64 = rep.workers.iter().map(|w| w.fill_chunks).sum();
-    assert_eq!(fill_sum, rep.fill_chunks, "per-worker fills must sum to the total");
+    rec.check(
+        "per_worker_fills_sum_to_total",
+        fill_sum == rep.fill_chunks,
+        "per-worker fill_chunks must sum to the aggregate report's total",
+    );
 
     println!("\npaper Table V: fill 3251s vs model 59987s (vertex embedding) and");
     println!("5635s vs 61760s (link prediction) — fill < 10% of model time.");
+    rec.finish()?;
     Ok(())
 }

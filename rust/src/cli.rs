@@ -10,6 +10,10 @@ pub struct Args {
     pub subcommand: Option<String>,
     pub flags: BTreeMap<String, String>,
     pub switches: Vec<String>,
+    /// Bare tokens after the subcommand that are neither a `--flag`'s name
+    /// nor its value, in order — e.g. the bench names in
+    /// `glisp bench fig13 table5 --report`.
+    pub positionals: Vec<String>,
 }
 
 impl Args {
@@ -30,6 +34,8 @@ impl Args {
                     }
                     _ => out.switches.push(name.to_string()),
                 }
+            } else {
+                out.positionals.push(a);
             }
         }
         out
@@ -94,5 +100,18 @@ mod tests {
     fn negative_number_values() {
         let a = parse("x --alpha -1.5");
         assert_eq!(a.get_f64("alpha", 0.0), -1.5);
+    }
+
+    #[test]
+    fn positionals_after_subcommand() {
+        let a = parse("bench fig13 table5 --report --scale 0.25");
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+        assert_eq!(a.positionals, vec!["fig13", "table5"]);
+        assert!(a.has("report"));
+        assert_eq!(a.get_f64("scale", 1.0), 0.25);
+        // A flag's value is consumed by the flag, never misread as a
+        // positional.
+        let a = parse("bench --scale 0.25 fig13");
+        assert_eq!(a.positionals, vec!["fig13"]);
     }
 }

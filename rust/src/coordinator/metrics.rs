@@ -1,7 +1,10 @@
 //! Training/serving metrics: loss curves, throughput, and the normalized
-//! per-server workload of Fig. 10.
+//! per-server workload of Fig. 10. Human-facing timing strings go through
+//! [`crate::util::timer::fmt_duration`] (re-exported here as the slice
+//! helper [`fmt_durations`]) — no per-call-site unit choices.
 
 use crate::util::stats::Summary;
+use crate::util::timer::fmt_duration;
 
 #[derive(Clone, Debug, Default)]
 pub struct LossCurve {
@@ -46,6 +49,12 @@ pub fn throughput(items_per_iter: usize, secs: &[f64]) -> Summary {
     Summary::from_iter(secs.iter().map(|&s| items_per_iter as f64 / s.max(1e-12)))
 }
 
+/// Format a slice of per-server/per-worker durations (seconds) with the
+/// shared [`fmt_duration`] rounding — e.g. Fig. 10's busy-time columns.
+pub fn fmt_durations(secs: &[f64]) -> Vec<String> {
+    secs.iter().map(|&s| fmt_duration(s)).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -64,6 +73,14 @@ mod tests {
     fn normalized_workload_min_is_one() {
         let w = normalized_workload(&[10, 20, 40]);
         assert_eq!(w, vec![1.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn durations_use_the_shared_formatter() {
+        assert_eq!(
+            fmt_durations(&[1.5, 0.001234, 0.0]),
+            vec!["1.50s", "1.23ms", "0ns"]
+        );
     }
 
     #[test]

@@ -1,0 +1,928 @@
+//! Machine-readable bench artifacts: every fig/table bench threads its
+//! rows through a [`BenchRecorder`], which renders the familiar ASCII
+//! tables *and* writes a schema-versioned `BENCH_<bench>.json` artifact
+//! (at the repo root by default, `GLISP_BENCH_DIR` to redirect).
+//!
+//! The artifact carries, per run:
+//! * **run metadata** ([`RunMeta`]) — git SHA + dirty flag, UTC date,
+//!   host core count, executor backend, the `GLISP_*` env knobs in
+//!   effect — so a number is never separated from its provenance;
+//! * **sections** ([`Section`]) — one per rendered table, with typed
+//!   columns (durations are recorded as wall nanoseconds, unit `"ns"`)
+//!   and rows of raw scalar values, not display strings;
+//! * **assertion outcomes** ([`Assertion`]) — the bit-equality and
+//!   pool/thread-invariance checks the benches already perform
+//!   (DESIGN.md §7–§10 contracts), recorded as machine-checkable fields
+//!   *before* panicking on failure, so a red run still leaves evidence.
+//!
+//! Determinism contract: cell *values* are measurements and vary run to
+//! run; everything else — key order (BTreeMap), section/row order, the
+//! schema itself — is deterministic, so two artifacts from the same
+//! commit diff cleanly (`glisp bench --diff A --against B`). The schema
+//! is validated on every load by [`BenchArtifact::from_json`], which
+//! rejects unknown fields and version mismatches: bump
+//! [`SCHEMA_VERSION`] whenever a field is added, removed or retyped
+//! (DESIGN.md §11 has the field-by-field reference and the bump policy).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::harness::report::{f2, f3, ix, Table};
+use crate::util::json::{emit_pretty, Json};
+use crate::util::timer::fmt_duration;
+
+/// Version stamped into and required from every artifact. Bump on any
+/// schema change; the CI schema-validation step then fails until the
+/// committed artifacts and docs are regenerated.
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// The bench suite: (short name, cargo bench target, paper target).
+/// Shared by `glisp bench`, the EXPERIMENTS.md generator and CI so the
+/// three can never disagree about what "all benches" means.
+pub const BENCHES: &[(&str, &str, &str)] = &[
+    ("fig08", "fig08_degree_dist", "Fig. 8 — degree distributions of the dataset suite"),
+    ("fig09", "fig09_sampling_speed", "Fig. 9 — sampling throughput vs baselines"),
+    ("fig10", "fig10_server_workload", "Fig. 10 — normalized server workload balance"),
+    ("fig11", "fig11_train_speed", "Fig. 11 — end-to-end training speed vs baseline"),
+    ("fig12", "fig12_scalability", "Fig. 12 — convergence + scaling with trainer count"),
+    ("fig13", "fig13_inference", "Fig. 13 — layerwise vs samplewise inference"),
+    ("fig14", "fig14_reorder_cache", "Fig. 14 — reorder algorithms + caching system"),
+    ("fig15", "fig15_interior_lru", "Fig. 15 — interior fraction; LRU vs FIFO"),
+    ("table2", "table2_partition_quality", "Table II — partition quality (RF/VB/EB)"),
+    ("table3", "table3_memory", "Table III — graph structure memory footprint"),
+    ("table4", "table4_accuracy", "Table IV — test accuracy parity via the full stack"),
+    ("table5", "table5_cache_fill", "Table V — static cache fill vs model inference"),
+    ("pipeline", "pipeline_throughput", "DESIGN.md §7/§9 — pipelined vs sync training"),
+];
+
+/// Resolve a short or full bench name to its cargo bench target.
+pub fn resolve_bench(name: &str) -> Option<&'static str> {
+    BENCHES
+        .iter()
+        .find(|(short, target, _)| *short == name || *target == name)
+        .map(|(_, target, _)| *target)
+}
+
+/// Where `BENCH_*.json` artifacts are written and read: `GLISP_BENCH_DIR`
+/// when set and non-empty, else the repo root (one level above the crate).
+pub fn artifact_dir() -> PathBuf {
+    match std::env::var("GLISP_BENCH_DIR") {
+        Ok(d) if !d.is_empty() => PathBuf::from(d),
+        _ => repo_root(),
+    }
+}
+
+/// The repo root (one level above `rust/`), where artifacts are committed
+/// and EXPERIMENTS.md lives.
+pub fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(Path::to_path_buf)
+        .unwrap_or_else(|| PathBuf::from("."))
+}
+
+/// Column key derived from a display label: lowercased, alnum runs joined
+/// by single underscores ("uni wall 4w" -> "uni_wall_4w", "1t(s)" -> "1t_s").
+pub fn slug(label: &str) -> String {
+    let mut out = String::new();
+    let mut gap = false;
+    for c in label.chars() {
+        if c.is_ascii_alphanumeric() {
+            if gap && !out.is_empty() {
+                out.push('_');
+            }
+            gap = false;
+            out.push(c.to_ascii_lowercase());
+        } else {
+            gap = true;
+        }
+    }
+    out
+}
+
+/// The value kind of one cell; the first typed cell fixes its column's
+/// recorded unit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CellKind {
+    /// Free text (row labels).
+    Str,
+    /// Dimensionless float (ratios, rates, MB, ...).
+    Num,
+    /// Integer count.
+    Count,
+    /// Wall-clock duration, recorded as nanoseconds.
+    DurNs,
+    /// Speedup factor, displayed as "1.23x".
+    Speedup,
+    /// Not applicable ("-"), recorded as null; does not fix the unit.
+    Na,
+}
+
+impl CellKind {
+    fn unit(self) -> &'static str {
+        match self {
+            CellKind::Str => "str",
+            CellKind::Num => "num",
+            CellKind::Count => "count",
+            CellKind::DurNs => "ns",
+            CellKind::Speedup => "speedup",
+            CellKind::Na => "num",
+        }
+    }
+}
+
+const UNITS: &[&str] = &["str", "num", "count", "ns", "speedup"];
+
+/// One table cell: the raw JSON value that lands in the artifact plus the
+/// display string for the rendered ASCII table. Non-finite floats record
+/// as null and display as "-" (JSON has no NaN).
+pub struct Cell {
+    pub v: Json,
+    pub s: String,
+    pub kind: CellKind,
+}
+
+fn finite(x: f64) -> Option<f64> {
+    x.is_finite().then_some(x)
+}
+
+impl Cell {
+    pub fn str(x: impl Into<String>) -> Cell {
+        let s = x.into();
+        Cell { v: Json::Str(s.clone()), s, kind: CellKind::Str }
+    }
+
+    /// Dimensionless value displayed with 2 decimals.
+    pub fn f2(x: f64) -> Cell {
+        match finite(x) {
+            Some(x) => Cell { v: Json::Num(x), s: f2(x), kind: CellKind::Num },
+            None => Cell::na(),
+        }
+    }
+
+    /// Dimensionless value displayed with 3 decimals.
+    pub fn f3(x: f64) -> Cell {
+        match finite(x) {
+            Some(x) => Cell { v: Json::Num(x), s: f3(x), kind: CellKind::Num },
+            None => Cell::na(),
+        }
+    }
+
+    /// Integer count.
+    pub fn n(x: u64) -> Cell {
+        Cell { v: Json::Num(x as f64), s: ix(x as usize), kind: CellKind::Count }
+    }
+
+    /// Duration in seconds; recorded as wall nanoseconds, displayed via
+    /// [`fmt_duration`].
+    pub fn d(secs: f64) -> Cell {
+        match finite(secs) {
+            Some(secs) if secs >= 0.0 => Cell {
+                v: Json::Num((secs * 1e9).round()),
+                s: fmt_duration(secs),
+                kind: CellKind::DurNs,
+            },
+            _ => Cell::na(),
+        }
+    }
+
+    /// Speedup factor, displayed as "1.23x".
+    pub fn x(r: f64) -> Cell {
+        match finite(r) {
+            Some(r) => Cell { v: Json::Num(r), s: format!("{r:.2}x"), kind: CellKind::Speedup },
+            None => Cell::na(),
+        }
+    }
+
+    /// Not-applicable cell ("-" / null).
+    pub fn na() -> Cell {
+        Cell { v: Json::Null, s: "-".to_string(), kind: CellKind::Na }
+    }
+}
+
+/// A typed column of a [`Section`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct Column {
+    pub key: String,
+    pub label: String,
+    pub unit: String,
+}
+
+/// One recorded table: id + title, free-form params (the knobs this table
+/// was produced under), typed columns and raw-value rows.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Section {
+    pub id: String,
+    pub title: String,
+    pub params: BTreeMap<String, Json>,
+    pub columns: Vec<Column>,
+    pub rows: Vec<Vec<Json>>,
+}
+
+impl Section {
+    /// Index of the column with this key.
+    pub fn col(&self, key: &str) -> Option<usize> {
+        self.columns.iter().position(|c| c.key == key)
+    }
+
+    /// First row whose `key_col` cell is the string `key_val`.
+    pub fn find_row(&self, key_col: &str, key_val: &str) -> Option<&[Json]> {
+        let k = self.col(key_col)?;
+        self.rows
+            .iter()
+            .find(|r| r.get(k).and_then(Json::as_str) == Some(key_val))
+            .map(Vec::as_slice)
+    }
+
+    /// Numeric cell lookup: row keyed by (`key_col` == `key_val`), value
+    /// from `col`.
+    pub fn cell_f64(&self, key_col: &str, key_val: &str, col: &str) -> Option<f64> {
+        let c = self.col(col)?;
+        self.find_row(key_col, key_val)?.get(c)?.as_f64()
+    }
+}
+
+/// One recorded assertion outcome (bit-equality, pool invariance, ...).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Assertion {
+    pub name: String,
+    pub passed: bool,
+    pub detail: String,
+}
+
+/// Provenance of a run: where, when, from which commit, with which knobs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunMeta {
+    /// `git rev-parse HEAD` (env `GLISP_GIT_SHA` overrides; "unknown"
+    /// when git is unavailable).
+    pub git_sha: String,
+    /// `git status --porcelain` non-empty; `None` when git is unavailable.
+    pub git_dirty: Option<bool>,
+    /// UTC calendar date of the run, `YYYY-MM-DD`.
+    pub date_utc: String,
+    /// Seconds since the Unix epoch.
+    pub unix_time: u64,
+    /// `std::thread::available_parallelism()` on the measuring host.
+    pub host_cores: usize,
+    /// Executor backend compiled in: "pjrt" or "reference".
+    pub backend: String,
+    /// `GLISP_BENCH_SCALE` in effect (1.0 = default).
+    pub bench_scale: f64,
+    /// Every `GLISP_*` env knob that was set for the run.
+    pub env: BTreeMap<String, String>,
+}
+
+impl RunMeta {
+    pub fn capture() -> RunMeta {
+        let unix_time = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        let (git_sha, git_dirty) = git_info();
+        RunMeta {
+            git_sha,
+            git_dirty,
+            date_utc: utc_date(unix_time),
+            unix_time,
+            host_cores: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            backend: if cfg!(feature = "pjrt") { "pjrt" } else { "reference" }.to_string(),
+            bench_scale: crate::harness::workloads::bench_scale(),
+            env: bench_env(),
+        }
+    }
+}
+
+/// The `GLISP_*` env knobs that shape bench workloads, captured verbatim
+/// into the artifact so a run can be reproduced.
+pub fn bench_env() -> BTreeMap<String, String> {
+    const KNOBS: &[&str] = &[
+        "GLISP_BENCH_SCALE",
+        "GLISP_BENCH_N",
+        "GLISP_BENCH_STEPS",
+        "GLISP_BENCH_BATCHES",
+        "GLISP_PARTITION_THREADS",
+        "GLISP_BENCH_DIR",
+        "GLISP_ARTIFACTS",
+    ];
+    let mut out = BTreeMap::new();
+    for k in KNOBS {
+        if let Ok(v) = std::env::var(k) {
+            out.insert(k.to_string(), v);
+        }
+    }
+    out
+}
+
+fn git_info() -> (String, Option<bool>) {
+    if let Ok(sha) = std::env::var("GLISP_GIT_SHA") {
+        if !sha.is_empty() {
+            return (sha, None);
+        }
+    }
+    let root = repo_root();
+    let run = |args: &[&str]| -> Option<String> {
+        let out = std::process::Command::new("git")
+            .args(args)
+            .current_dir(&root)
+            .output()
+            .ok()?;
+        out.status
+            .success()
+            .then(|| String::from_utf8_lossy(&out.stdout).trim().to_string())
+    };
+    match run(&["rev-parse", "HEAD"]) {
+        Some(sha) if !sha.is_empty() => {
+            let dirty = run(&["status", "--porcelain"]).map(|s| !s.is_empty());
+            (sha, dirty)
+        }
+        _ => ("unknown".to_string(), None),
+    }
+}
+
+/// Civil UTC date from a Unix timestamp (Howard Hinnant's algorithm; no
+/// external time crate in the offline vendor set).
+pub fn utc_date(unix: u64) -> String {
+    let days = (unix / 86_400) as i64;
+    let z = days + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097);
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let y = yoe + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = doy - (153 * mp + 2) / 5 + 1;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 };
+    let y = if m <= 2 { y + 1 } else { y };
+    format!("{y:04}-{m:02}-{d:02}")
+}
+
+/// The full artifact: what `BENCH_<bench>.json` serializes to and what
+/// every consumer (report generator, diff, CI validation) parses back.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchArtifact {
+    pub schema_version: u32,
+    pub bench: String,
+    pub meta: RunMeta,
+    /// Bench-level knobs (partition count, fanouts, steps, ...).
+    pub config: BTreeMap<String, Json>,
+    pub sections: Vec<Section>,
+    pub assertions: Vec<Assertion>,
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+impl BenchArtifact {
+    pub fn to_json(&self) -> Json {
+        let meta = obj(vec![
+            ("backend", Json::Str(self.meta.backend.clone())),
+            ("bench_scale", Json::Num(self.meta.bench_scale)),
+            ("date_utc", Json::Str(self.meta.date_utc.clone())),
+            (
+                "env",
+                Json::Obj(
+                    self.meta
+                        .env
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                        .collect(),
+                ),
+            ),
+            (
+                "git_dirty",
+                self.meta.git_dirty.map(Json::Bool).unwrap_or(Json::Null),
+            ),
+            ("git_sha", Json::Str(self.meta.git_sha.clone())),
+            ("host_cores", Json::Num(self.meta.host_cores as f64)),
+            ("unix_time", Json::Num(self.meta.unix_time as f64)),
+        ]);
+        let sections = self
+            .sections
+            .iter()
+            .map(|s| {
+                obj(vec![
+                    (
+                        "columns",
+                        Json::Arr(
+                            s.columns
+                                .iter()
+                                .map(|c| {
+                                    obj(vec![
+                                        ("key", Json::Str(c.key.clone())),
+                                        ("label", Json::Str(c.label.clone())),
+                                        ("unit", Json::Str(c.unit.clone())),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                    ("id", Json::Str(s.id.clone())),
+                    ("params", Json::Obj(s.params.clone())),
+                    (
+                        "rows",
+                        Json::Arr(s.rows.iter().map(|r| Json::Arr(r.clone())).collect()),
+                    ),
+                    ("title", Json::Str(s.title.clone())),
+                ])
+            })
+            .collect();
+        let assertions = self
+            .assertions
+            .iter()
+            .map(|a| {
+                obj(vec![
+                    ("detail", Json::Str(a.detail.clone())),
+                    ("name", Json::Str(a.name.clone())),
+                    ("passed", Json::Bool(a.passed)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("assertions", Json::Arr(assertions)),
+            ("bench", Json::Str(self.bench.clone())),
+            ("config", Json::Obj(self.config.clone())),
+            ("meta", meta),
+            ("schema_version", Json::Num(self.schema_version as f64)),
+            ("sections", Json::Arr(sections)),
+        ])
+    }
+
+    /// Strict deserialization: unknown fields, a version mismatch, ragged
+    /// rows or an unknown column unit are errors — this is the schema-drift
+    /// detector CI runs over every emitted artifact.
+    pub fn from_json(j: &Json) -> Result<BenchArtifact, String> {
+        let top = as_obj(j, "artifact")?;
+        expect_keys(
+            top,
+            &["assertions", "bench", "config", "meta", "schema_version", "sections"],
+            "artifact",
+        )?;
+        let schema_version = get_u64(top, "schema_version")? as u32;
+        if schema_version != SCHEMA_VERSION {
+            return Err(format!(
+                "schema_version {schema_version} != supported {SCHEMA_VERSION}; \
+                 regenerate the artifact (see DESIGN.md §11 bump policy)"
+            ));
+        }
+        let meta_obj = as_obj(top.get("meta").ok_or("missing meta")?, "meta")?;
+        expect_keys(
+            meta_obj,
+            &[
+                "backend", "bench_scale", "date_utc", "env", "git_dirty", "git_sha",
+                "host_cores", "unix_time",
+            ],
+            "meta",
+        )?;
+        let env_obj = as_obj(meta_obj.get("env").ok_or("missing meta.env")?, "meta.env")?;
+        let mut env = BTreeMap::new();
+        for (k, v) in env_obj {
+            env.insert(
+                k.clone(),
+                v.as_str().ok_or_else(|| format!("meta.env.{k}: not a string"))?.to_string(),
+            );
+        }
+        let meta = RunMeta {
+            git_sha: get_str(meta_obj, "git_sha")?,
+            git_dirty: match meta_obj.get("git_dirty") {
+                Some(Json::Null) | None => None,
+                Some(Json::Bool(b)) => Some(*b),
+                _ => return Err("meta.git_dirty: not a bool or null".into()),
+            },
+            date_utc: get_str(meta_obj, "date_utc")?,
+            unix_time: get_u64(meta_obj, "unix_time")?,
+            host_cores: get_u64(meta_obj, "host_cores")? as usize,
+            backend: get_str(meta_obj, "backend")?,
+            bench_scale: meta_obj
+                .get("bench_scale")
+                .and_then(Json::as_f64)
+                .ok_or("meta.bench_scale: not a number")?,
+            env,
+        };
+        let config = as_obj(top.get("config").ok_or("missing config")?, "config")?.clone();
+        let mut sections = Vec::new();
+        for (i, sj) in top
+            .get("sections")
+            .and_then(Json::as_arr)
+            .ok_or("sections: not an array")?
+            .iter()
+            .enumerate()
+        {
+            sections.push(section_from_json(sj, i)?);
+        }
+        let mut assertions = Vec::new();
+        for (i, aj) in top
+            .get("assertions")
+            .and_then(Json::as_arr)
+            .ok_or("assertions: not an array")?
+            .iter()
+            .enumerate()
+        {
+            let a = as_obj(aj, "assertion")?;
+            expect_keys(a, &["detail", "name", "passed"], &format!("assertions[{i}]"))?;
+            assertions.push(Assertion {
+                name: get_str(a, "name")?,
+                passed: a
+                    .get("passed")
+                    .and_then(Json::as_bool)
+                    .ok_or_else(|| format!("assertions[{i}].passed: not a bool"))?,
+                detail: get_str(a, "detail")?,
+            });
+        }
+        Ok(BenchArtifact {
+            schema_version,
+            bench: get_str(top, "bench")?,
+            meta,
+            config,
+            sections,
+            assertions,
+        })
+    }
+
+    pub fn section(&self, id: &str) -> Option<&Section> {
+        self.sections.iter().find(|s| s.id == id)
+    }
+
+    /// Parse + validate one artifact file.
+    pub fn load(path: &Path) -> anyhow::Result<BenchArtifact> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        BenchArtifact::from_json(&j).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+    }
+}
+
+fn as_obj<'a>(j: &'a Json, what: &str) -> Result<&'a BTreeMap<String, Json>, String> {
+    match j {
+        Json::Obj(m) => Ok(m),
+        _ => Err(format!("{what}: not an object")),
+    }
+}
+
+fn expect_keys(m: &BTreeMap<String, Json>, keys: &[&str], what: &str) -> Result<(), String> {
+    for k in m.keys() {
+        if !keys.contains(&k.as_str()) {
+            return Err(format!("{what}: unknown field \"{k}\" (schema drift?)"));
+        }
+    }
+    for k in keys {
+        if !m.contains_key(*k) {
+            return Err(format!("{what}: missing field \"{k}\""));
+        }
+    }
+    Ok(())
+}
+
+fn get_str(m: &BTreeMap<String, Json>, k: &str) -> Result<String, String> {
+    m.get(k)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| format!("{k}: not a string"))
+}
+
+fn get_u64(m: &BTreeMap<String, Json>, k: &str) -> Result<u64, String> {
+    match m.get(k).and_then(Json::as_f64) {
+        Some(x) if x >= 0.0 && x.fract() == 0.0 => Ok(x as u64),
+        _ => Err(format!("{k}: not a non-negative integer")),
+    }
+}
+
+fn section_from_json(sj: &Json, i: usize) -> Result<Section, String> {
+    let s = as_obj(sj, "section")?;
+    expect_keys(s, &["columns", "id", "params", "rows", "title"], &format!("sections[{i}]"))?;
+    let mut columns = Vec::new();
+    for cj in s.get("columns").and_then(Json::as_arr).ok_or("columns: not an array")? {
+        let c = as_obj(cj, "column")?;
+        expect_keys(c, &["key", "label", "unit"], &format!("sections[{i}].columns"))?;
+        let unit = get_str(c, "unit")?;
+        if !UNITS.contains(&unit.as_str()) {
+            return Err(format!("sections[{i}]: unknown column unit \"{unit}\""));
+        }
+        columns.push(Column { key: get_str(c, "key")?, label: get_str(c, "label")?, unit });
+    }
+    let mut rows = Vec::new();
+    for (r, rj) in s
+        .get("rows")
+        .and_then(Json::as_arr)
+        .ok_or("rows: not an array")?
+        .iter()
+        .enumerate()
+    {
+        let row = rj
+            .as_arr()
+            .ok_or_else(|| format!("sections[{i}].rows[{r}]: not an array"))?;
+        if row.len() != columns.len() {
+            return Err(format!(
+                "sections[{i}].rows[{r}]: {} cells for {} columns",
+                row.len(),
+                columns.len()
+            ));
+        }
+        for (c, cell) in row.iter().enumerate() {
+            if matches!(cell, Json::Arr(_) | Json::Obj(_)) {
+                return Err(format!("sections[{i}].rows[{r}][{c}]: cell is not a scalar"));
+            }
+        }
+        rows.push(row.to_vec());
+    }
+    Ok(Section {
+        id: get_str(s, "id")?,
+        title: get_str(s, "title")?,
+        params: as_obj(s.get("params").ok_or("missing params")?, "params")?.clone(),
+        columns,
+        rows,
+    })
+}
+
+/// Load + validate every `BENCH_*.json` in a directory, sorted by file
+/// name (deterministic report order).
+pub fn load_dir(dir: &Path) -> anyhow::Result<Vec<BenchArtifact>> {
+    let mut paths: Vec<PathBuf> = match std::fs::read_dir(dir) {
+        Ok(rd) => rd
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+            })
+            .collect(),
+        Err(_) => Vec::new(),
+    };
+    paths.sort();
+    paths.iter().map(|p| BenchArtifact::load(p)).collect()
+}
+
+/// A table being recorded: renders exactly like [`Table`] and additionally
+/// captures typed values for the artifact. Hand it to
+/// [`BenchRecorder::table`] when complete.
+pub struct BenchTable {
+    id: String,
+    title: String,
+    labels: Vec<String>,
+    kinds: Vec<Option<CellKind>>,
+    display_rows: Vec<Vec<String>>,
+    value_rows: Vec<Vec<Json>>,
+    params: BTreeMap<String, Json>,
+}
+
+impl BenchTable {
+    pub fn new(id: &str, title: &str, columns: &[&str]) -> BenchTable {
+        BenchTable {
+            id: id.to_string(),
+            title: title.to_string(),
+            labels: columns.iter().map(|s| s.to_string()).collect(),
+            kinds: vec![None; columns.len()],
+            display_rows: Vec::new(),
+            value_rows: Vec::new(),
+            params: BTreeMap::new(),
+        }
+    }
+
+    /// Record a table-scoped parameter (dataset, parts, ...).
+    pub fn param(&mut self, key: &str, v: Json) -> &mut Self {
+        self.params.insert(key.to_string(), v);
+        self
+    }
+
+    pub fn param_usize(&mut self, key: &str, v: usize) -> &mut Self {
+        self.param(key, Json::Num(v as f64))
+    }
+
+    pub fn param_str(&mut self, key: &str, v: &str) -> &mut Self {
+        self.param(key, Json::Str(v.to_string()))
+    }
+
+    pub fn row(&mut self, cells: Vec<Cell>) -> &mut Self {
+        assert_eq!(cells.len(), self.labels.len(), "table {}: ragged row", self.id);
+        let mut disp = Vec::with_capacity(cells.len());
+        let mut vals = Vec::with_capacity(cells.len());
+        for (i, c) in cells.into_iter().enumerate() {
+            if c.kind != CellKind::Na {
+                match self.kinds[i] {
+                    None => self.kinds[i] = Some(c.kind),
+                    Some(k) => assert_eq!(
+                        k, c.kind,
+                        "table {}: column \"{}\" mixes {:?} and {:?} cells",
+                        self.id, self.labels[i], k, c.kind
+                    ),
+                }
+            }
+            disp.push(c.s);
+            vals.push(c.v);
+        }
+        self.display_rows.push(disp);
+        self.value_rows.push(vals);
+        self
+    }
+
+    /// Render the human table (same layout as [`Table`]).
+    pub fn render(&self) -> String {
+        let headers: Vec<&str> = self.labels.iter().map(String::as_str).collect();
+        let mut t = Table::new(&self.title, &headers);
+        for r in &self.display_rows {
+            t.row(r);
+        }
+        t.render()
+    }
+
+    fn section(&self) -> Section {
+        Section {
+            id: self.id.clone(),
+            title: self.title.clone(),
+            params: self.params.clone(),
+            columns: self
+                .labels
+                .iter()
+                .zip(&self.kinds)
+                .map(|(l, k)| Column {
+                    key: slug(l),
+                    label: l.clone(),
+                    unit: k.unwrap_or(CellKind::Num).unit().to_string(),
+                })
+                .collect(),
+            rows: self.value_rows.clone(),
+        }
+    }
+}
+
+/// Records one bench run and writes its `BENCH_<bench>.json` on
+/// [`finish`](BenchRecorder::finish).
+pub struct BenchRecorder {
+    art: BenchArtifact,
+    dir: PathBuf,
+}
+
+impl BenchRecorder {
+    pub fn new(bench: &str) -> BenchRecorder {
+        BenchRecorder {
+            art: BenchArtifact {
+                schema_version: SCHEMA_VERSION,
+                bench: bench.to_string(),
+                meta: RunMeta::capture(),
+                config: BTreeMap::new(),
+                sections: Vec::new(),
+                assertions: Vec::new(),
+            },
+            dir: artifact_dir(),
+        }
+    }
+
+    /// Record a bench-level knob.
+    pub fn config(&mut self, key: &str, v: Json) -> &mut Self {
+        self.art.config.insert(key.to_string(), v);
+        self
+    }
+
+    pub fn config_usize(&mut self, key: &str, v: usize) -> &mut Self {
+        self.config(key, Json::Num(v as f64))
+    }
+
+    pub fn config_f64(&mut self, key: &str, v: f64) -> &mut Self {
+        self.config(key, if v.is_finite() { Json::Num(v) } else { Json::Null })
+    }
+
+    pub fn config_str(&mut self, key: &str, v: &str) -> &mut Self {
+        self.config(key, Json::Str(v.to_string()))
+    }
+
+    /// Print a finished table and record it as a section.
+    pub fn table(&mut self, t: &BenchTable) {
+        print!("{}", t.render());
+        self.art.sections.push(t.section());
+    }
+
+    /// Record an assertion outcome, then enforce it: on failure the
+    /// artifact is flushed first (with `passed: false`), so a red run
+    /// still leaves machine-readable evidence of which contract broke.
+    pub fn check(&mut self, name: &str, passed: bool, detail: &str) {
+        self.art.assertions.push(Assertion {
+            name: name.to_string(),
+            passed,
+            detail: detail.to_string(),
+        });
+        if !passed {
+            let _ = self.write();
+            panic!("bench assertion failed: {name}: {detail}");
+        }
+    }
+
+    fn write(&self) -> anyhow::Result<PathBuf> {
+        let path = self.dir.join(format!("BENCH_{}.json", self.art.bench));
+        let mut text = emit_pretty(&self.art.to_json());
+        text.push('\n');
+        std::fs::create_dir_all(&self.dir)?;
+        std::fs::write(&path, text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        Ok(path)
+    }
+
+    /// Write `BENCH_<bench>.json` and report where it landed.
+    pub fn finish(self) -> anyhow::Result<PathBuf> {
+        let path = self.write()?;
+        println!("\nbench artifact: {}", path.display());
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_artifact() -> BenchArtifact {
+        let mut t = BenchTable::new("demo", "Demo section", &["task", "wall (s)", "speedup", "n"]);
+        t.param_str("dataset", "wiki-s").param_usize("parts", 4);
+        t.row(vec![Cell::str("a"), Cell::d(1.5), Cell::x(2.0), Cell::n(7)]);
+        t.row(vec![Cell::str("b"), Cell::na(), Cell::x(0.5), Cell::n(0)]);
+        let mut rec = BenchRecorder::new("unit_test");
+        rec.config_usize("steps", 10);
+        rec.art.sections.push(t.section());
+        rec.art.assertions.push(Assertion {
+            name: "bit_identical".into(),
+            passed: true,
+            detail: "demo".into(),
+        });
+        rec.art
+    }
+
+    #[test]
+    fn bench_artifact_schema_round_trip() {
+        let a = sample_artifact();
+        let text = emit_pretty(&a.to_json());
+        let parsed = Json::parse(&text).unwrap();
+        let b = BenchArtifact::from_json(&parsed).unwrap();
+        assert_eq!(a, b);
+        // Typed column units survive the trip.
+        let s = b.section("demo").unwrap();
+        let units: Vec<&str> = s.columns.iter().map(|c| c.unit.as_str()).collect();
+        assert_eq!(units, ["str", "ns", "speedup", "count"]);
+        assert_eq!(s.cell_f64("task", "a", "wall_s"), Some(1.5e9));
+        assert_eq!(s.cell_f64("task", "b", "wall_s"), None); // na cell
+        assert_eq!(s.params.get("parts"), Some(&Json::Num(4.0)));
+    }
+
+    #[test]
+    fn bench_artifact_rejects_drift() {
+        let a = sample_artifact();
+        // Version bump required.
+        let mut j = a.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("schema_version".into(), Json::Num((SCHEMA_VERSION + 1) as f64));
+        }
+        assert!(BenchArtifact::from_json(&j).unwrap_err().contains("schema_version"));
+        // Unknown field rejected.
+        let mut j = a.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("surprise".into(), Json::Null);
+        }
+        assert!(BenchArtifact::from_json(&j).unwrap_err().contains("unknown field"));
+        // Ragged row rejected.
+        let mut bad = a.clone();
+        bad.sections[0].rows[0].pop();
+        assert!(BenchArtifact::from_json(&bad.to_json()).is_err());
+    }
+
+    #[test]
+    fn bench_artifact_slugs_and_dates() {
+        assert_eq!(slug("uni wall 4w"), "uni_wall_4w");
+        assert_eq!(slug("1t(s)"), "1t_s");
+        assert_eq!(slug("par vs 1-thr"), "par_vs_1_thr");
+        assert_eq!(slug("  RF  "), "rf");
+        assert_eq!(utc_date(0), "1970-01-01");
+        assert_eq!(utc_date(86_400), "1970-01-02");
+        assert_eq!(utc_date(951_782_400), "2000-02-29"); // leap day
+        assert_eq!(utc_date(1_786_147_200), "2026-08-08");
+    }
+
+    #[test]
+    fn bench_artifact_resolves_bench_names() {
+        assert_eq!(resolve_bench("fig13"), Some("fig13_inference"));
+        assert_eq!(resolve_bench("fig13_inference"), Some("fig13_inference"));
+        assert_eq!(resolve_bench("nope"), None);
+        assert_eq!(BENCHES.len(), 13);
+    }
+
+    /// CI's schema-validation step: every artifact emitted by the sweep
+    /// (GLISP_BENCH_DIR) and every artifact committed at the repo root
+    /// must deserialize through the schema types. Vacuously green when no
+    /// artifacts exist yet.
+    #[test]
+    fn bench_artifact_validate_emitted() {
+        let mut dirs = vec![repo_root()];
+        if let Ok(d) = std::env::var("GLISP_BENCH_DIR") {
+            if !d.is_empty() {
+                dirs.push(PathBuf::from(d));
+            }
+        }
+        for dir in dirs {
+            let arts = load_dir(&dir).unwrap_or_else(|e| panic!("{}: {e}", dir.display()));
+            for a in arts {
+                assert_eq!(a.schema_version, SCHEMA_VERSION);
+                assert!(!a.bench.is_empty());
+                // Round-trip: emit -> parse -> same value.
+                let text = emit_pretty(&a.to_json());
+                let again = BenchArtifact::from_json(&Json::parse(&text).unwrap()).unwrap();
+                assert_eq!(a, again);
+            }
+        }
+    }
+}

@@ -1,9 +1,27 @@
-//! Bench harness: table/figure rendering and the shared synthetic workload
-//! suite (criterion substitute; see DESIGN.md §4).
+//! Bench harness: artifact recording, table/figure rendering, and the shared
+//! synthetic workload suite (criterion substitute; see DESIGN.md §4).
+//!
+//! Three layers, each consumed by the 13 bench binaries in `rust/benches/`:
+//!
+//! - [`workloads`] builds the deterministic synthetic graph/training stacks
+//!   every bench runs against. The determinism contract (DESIGN.md §7–§10)
+//!   is inherited from there: fixed seeds, round-synchronous parallel
+//!   stages, ordered pipelined training — so re-running a bench on the same
+//!   host reproduces every non-timing column bit-for-bit.
+//! - [`bench`] is the recording layer: a [`BenchRecorder`] collects the
+//!   rows a bench would previously `println!`, plus run metadata (git SHA,
+//!   date, thread/worker config, host cores) and the bit-equality /
+//!   pool-invariance assertion outcomes, and writes a schema-versioned
+//!   `BENCH_<bench>.json` artifact (DESIGN.md §11).
+//! - [`report`] renders tables/figures for terminal output and regenerates
+//!   the measured sections of EXPERIMENTS.md from committed artifacts
+//!   (`glisp bench --report`).
 
+pub mod bench;
 pub mod report;
 pub mod workloads;
 
+pub use bench::{BenchRecorder, BenchTable, Cell};
 pub use report::{bar_chart, f2, f3, ix, speedup, Table};
 pub use workloads::{
     infer_stack, partition_threads, stack_partitioner, train_stack, train_stack_cfg, InferStack,

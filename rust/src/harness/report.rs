@@ -1,7 +1,27 @@
-//! ASCII/markdown table rendering for the bench harness — every bench
-//! prints the same rows the paper's table/figure reports (criterion is not
-//! in the offline vendor set; see util::timer::measure for the timing
-//! core).
+//! Human-facing bench output: ASCII/markdown table rendering (criterion
+//! is not in the offline vendor set; see `util::timer::measure` for the
+//! timing core) plus the EXPERIMENTS.md writer, which regenerates the
+//! measured section of that file from the `BENCH_*.json` artifacts the
+//! [`bench`](crate::harness::bench) recorder emits.
+//!
+//! The regeneration contract: everything between [`GEN_BEGIN`] and
+//! [`GEN_END`] in EXPERIMENTS.md is machine-written — `glisp bench
+//! --report` replaces it from the artifacts committed at the repo root,
+//! deterministically, so the committed file is always byte-for-byte
+//! reproducible from the committed artifacts (pinned by the
+//! `bench_artifact_experiments_md_in_sync` test and checked in CI). Hand
+//! edits inside the markers are overwritten by design. Durations are
+//! rendered through the one shared [`fmt_duration`] helper, the same one
+//! the recorders use, so units cannot drift between the JSON and the
+//! prose.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use crate::harness::bench::{self, BenchArtifact, Section, BENCHES};
+use crate::util::json::{emit, Json};
+use crate::util::timer::fmt_duration;
 
 /// A simple right-aligned table with a header row.
 pub struct Table {
@@ -85,9 +105,396 @@ pub fn bar_chart(title: &str, labels: &[String], values: &[f64]) -> String {
     out
 }
 
+/// Start marker of the machine-written span of EXPERIMENTS.md.
+pub const GEN_BEGIN: &str =
+    "<!-- BEGIN GENERATED BENCH RESULTS (regenerate with `glisp bench --report`; do not hand-edit) -->";
+/// End marker of the machine-written span of EXPERIMENTS.md.
+pub const GEN_END: &str = "<!-- END GENERATED BENCH RESULTS -->";
+
+/// A PR 2–5 speedup claim: where in which artifact its measured value
+/// lives, and the bar it was shipped against. `den_col` turns the lookup
+/// into a ratio of two cells of the same row.
+struct Claim {
+    label: &'static str,
+    origin: &'static str,
+    bench: &'static str,
+    section: &'static str,
+    row_col: &'static str,
+    row_val: &'static str,
+    num_col: &'static str,
+    den_col: Option<&'static str>,
+    expected: &'static str,
+    threshold: f64,
+}
+
+const CLAIMS: &[Claim] = &[
+    Claim {
+        label: "Pipelined producer overlaps sampling with the train step",
+        origin: "PR 2",
+        bench: "pipeline_throughput",
+        section: "modes",
+        row_col: "mode",
+        row_val: "pipelined x2 ordered",
+        num_col: "vs_sync",
+        den_col: None,
+        expected: ">=1.00x, losses bit-equal to sync",
+        threshold: 1.0,
+    },
+    Claim {
+        label: "Worker-parallel K-slice inference sweeps",
+        origin: "PR 3",
+        bench: "fig13_inference",
+        section: "inference",
+        row_col: "task",
+        row_val: "vertex embedding",
+        num_col: "par_vs_1_thr",
+        den_col: None,
+        expected: ">=1.50x, approaching the partition count on a >=4-core host",
+        threshold: 1.5,
+    },
+    Claim {
+        label: "Worker-pooled sampling accelerates hotspot gathers",
+        origin: "PR 4",
+        bench: "fig09_sampling_speed",
+        section: "twitter-s",
+        row_col: "framework",
+        row_val: "GLISP (AdaDNE+GA)",
+        num_col: "uni_wall_4w",
+        den_col: Some("uni_wall_1w"),
+        expected: ">=1.50x on a >=4-core host",
+        threshold: 1.5,
+    },
+    Claim {
+        label: "4-worker pool lifts pipelined training throughput",
+        origin: "PR 4",
+        bench: "pipeline_throughput",
+        section: "modes",
+        row_col: "mode",
+        row_val: "pipelined x2 ordered, 4w pool",
+        num_col: "vs_sync",
+        den_col: None,
+        expected: ">=1.50x on a >=4-core host",
+        threshold: 1.5,
+    },
+    Claim {
+        label: "Parallel offline stage (AdaDNE propose + build)",
+        origin: "PR 5",
+        bench: "fig12_scalability",
+        section: "offline_stage",
+        row_col: "stage",
+        row_val: "partition+build",
+        num_col: "speedup",
+        den_col: None,
+        expected: ">=1.50x at 4 threads on a >=4-core host",
+        threshold: 1.5,
+    },
+];
+
+fn claim_measured(c: &Claim, artifacts: &[BenchArtifact]) -> Option<f64> {
+    let a = artifacts.iter().find(|a| a.bench == c.bench)?;
+    let s = a.section(c.section)?;
+    let num = s.cell_f64(c.row_col, c.row_val, c.num_col)?;
+    match c.den_col {
+        None => Some(num),
+        Some(d) => {
+            let den = s.cell_f64(c.row_col, c.row_val, d)?;
+            (den > 0.0).then(|| num / den)
+        }
+    }
+}
+
+/// Render one artifact cell for markdown, honoring the column unit: `ns`
+/// cells go through [`fmt_duration`], `speedup` cells render as "1.23x",
+/// numbers use the compact JSON float form, nulls render as an em dash.
+fn fmt_cell(v: &Json, unit: &str) -> String {
+    match v {
+        Json::Null => "—".to_string(),
+        Json::Str(s) => s.clone(),
+        Json::Bool(b) => b.to_string(),
+        Json::Num(x) => match unit {
+            "ns" => fmt_duration(*x / 1e9),
+            "speedup" => format!("{x:.2}x"),
+            _ => emit(v),
+        },
+        other => emit(other),
+    }
+}
+
+fn md_row(cells: &[String], out: &mut String) {
+    out.push('|');
+    for c in cells {
+        out.push(' ');
+        out.push_str(c);
+        out.push_str(" |");
+    }
+    out.push('\n');
+}
+
+fn render_section_md(s: &Section, out: &mut String) {
+    out.push_str(&format!("#### {} (`{}`)\n\n", s.title, s.id));
+    if !s.params.is_empty() {
+        let params: Vec<String> =
+            s.params.iter().map(|(k, v)| format!("{k}={}", emit(v))).collect();
+        out.push_str(&format!("_params: {}_\n\n", params.join(", ")));
+    }
+    let labels: Vec<String> = s.columns.iter().map(|c| c.label.clone()).collect();
+    md_row(&labels, out);
+    md_row(&vec!["---".to_string(); s.columns.len()], out);
+    for row in &s.rows {
+        let cells: Vec<String> = row
+            .iter()
+            .zip(&s.columns)
+            .map(|(v, c)| fmt_cell(v, &c.unit))
+            .collect();
+        md_row(&cells, out);
+    }
+    out.push('\n');
+}
+
+/// Render the full machine-written body of EXPERIMENTS.md from the loaded
+/// artifacts. Pure and deterministic: the same artifacts always produce
+/// the same bytes.
+pub fn render_measured(artifacts: &[BenchArtifact]) -> String {
+    let mut out = String::new();
+    out.push_str("## Measured (generated)\n\n");
+    if artifacts.is_empty() {
+        out.push_str(
+            "No `BENCH_*.json` artifacts are committed at the repo root yet: every\n\
+             measured cell below is pending until the first artifact sweep lands.\n\
+             Run `glisp bench --all --report`, or download the artifacts from CI's\n\
+             `bench-artifacts` job and re-run `glisp bench --report`.\n\n",
+        );
+    } else {
+        out.push_str(&format!(
+            "Generated from {} committed `BENCH_*.json` artifact(s). Regenerate with\n\
+             `glisp bench --report` after a sweep; never edit inside the markers.\n\n",
+            artifacts.len()
+        ));
+    }
+
+    out.push_str("### Speedup claims — expected vs measured\n\n");
+    md_row(
+        &["claim", "source", "measures", "expected", "measured", "status"]
+            .map(str::to_string),
+        &mut out,
+    );
+    md_row(&vec!["---".to_string(); 6], &mut out);
+    for c in CLAIMS {
+        let measures = match c.den_col {
+            None => format!(
+                "`{}` `{}[{}={}].{}`",
+                c.bench, c.section, c.row_col, c.row_val, c.num_col
+            ),
+            Some(d) => format!(
+                "`{}` `{}[{}={}].{} / .{}`",
+                c.bench, c.section, c.row_col, c.row_val, c.num_col, d
+            ),
+        };
+        let (measured, status) = match claim_measured(c, artifacts) {
+            None => ("—".to_string(), "pending".to_string()),
+            Some(v) => (
+                format!("{v:.2}x"),
+                if v >= c.threshold { "met".to_string() } else { "below".to_string() },
+            ),
+        };
+        md_row(
+            &[
+                c.label.to_string(),
+                c.origin.to_string(),
+                measures,
+                c.expected.to_string(),
+                measured,
+                status,
+            ],
+            &mut out,
+        );
+    }
+    out.push('\n');
+
+    out.push_str("### Artifact inventory\n\n");
+    md_row(
+        &["bench", "paper target", "git sha", "date (UTC)", "backend", "cores", "checks"]
+            .map(str::to_string),
+        &mut out,
+    );
+    md_row(&vec!["---".to_string(); 7], &mut out);
+    for (_, target, paper) in BENCHES {
+        let row = match artifacts.iter().find(|a| a.bench == *target) {
+            None => [
+                format!("`{target}`"),
+                paper.to_string(),
+                "—".to_string(),
+                "—".to_string(),
+                "—".to_string(),
+                "—".to_string(),
+                "pending".to_string(),
+            ],
+            Some(a) => {
+                let sha: String = a.meta.git_sha.chars().take(9).collect();
+                let passed = a.assertions.iter().filter(|x| x.passed).count();
+                let checks = if a.assertions.is_empty() {
+                    "no checks".to_string()
+                } else {
+                    format!("{passed}/{} passed", a.assertions.len())
+                };
+                [
+                    format!("`{target}`"),
+                    paper.to_string(),
+                    format!("`{sha}`"),
+                    a.meta.date_utc.clone(),
+                    a.meta.backend.clone(),
+                    format!("{}", a.meta.host_cores),
+                    checks,
+                ]
+            }
+        };
+        md_row(&row, &mut out);
+    }
+    out.push('\n');
+
+    for a in artifacts {
+        let paper = BENCHES
+            .iter()
+            .find(|(_, t, _)| *t == a.bench)
+            .map(|(_, _, p)| *p)
+            .unwrap_or("(unregistered bench)");
+        out.push_str(&format!("### {} — {}\n\n", a.bench, paper));
+        let dirty = match a.meta.git_dirty {
+            Some(true) => ", dirty tree",
+            Some(false) => ", clean tree",
+            None => "",
+        };
+        out.push_str(&format!(
+            "_git `{}`{dirty} · {} · {} backend · {} cores · scale {}_\n\n",
+            a.meta.git_sha,
+            a.meta.date_utc,
+            a.meta.backend,
+            a.meta.host_cores,
+            emit(&Json::Num(a.meta.bench_scale)),
+        ));
+        if !a.config.is_empty() {
+            let cfg: Vec<String> =
+                a.config.iter().map(|(k, v)| format!("{k}={}", emit(v))).collect();
+            out.push_str(&format!("_config: {}_\n\n", cfg.join(", ")));
+        }
+        for s in &a.sections {
+            render_section_md(s, &mut out);
+        }
+        if !a.assertions.is_empty() {
+            out.push_str("Recorded checks:\n\n");
+            for x in &a.assertions {
+                out.push_str(&format!(
+                    "- [{}] {} — {}\n",
+                    if x.passed { "x" } else { " " },
+                    x.name,
+                    x.detail
+                ));
+            }
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// Replace the machine-written span of `existing` (between [`GEN_BEGIN`]
+/// and [`GEN_END`]) with `body`.
+pub fn splice_generated(existing: &str, body: &str) -> anyhow::Result<String> {
+    let start = existing
+        .find(GEN_BEGIN)
+        .context("EXPERIMENTS.md: BEGIN GENERATED marker not found")?;
+    let end = existing
+        .find(GEN_END)
+        .context("EXPERIMENTS.md: END GENERATED marker not found")?;
+    anyhow::ensure!(end > start, "EXPERIMENTS.md: END marker precedes BEGIN marker");
+    let mut out = String::new();
+    out.push_str(&existing[..start]);
+    out.push_str(GEN_BEGIN);
+    out.push_str("\n\n");
+    out.push_str(body.trim_end());
+    out.push_str("\n\n");
+    out.push_str(GEN_END);
+    out.push_str(&existing[end + GEN_END.len()..]);
+    Ok(out)
+}
+
+/// Regenerate EXPERIMENTS.md from the artifacts in `artifact_dir`.
+/// Returns the file path, the regenerated text and whether it differs
+/// from what is on disk; writes only when `write` is set.
+pub fn regenerate_experiments(
+    artifact_dir: &Path,
+    write: bool,
+) -> anyhow::Result<(PathBuf, String, bool)> {
+    let md_path = bench::repo_root().join("EXPERIMENTS.md");
+    let existing = std::fs::read_to_string(&md_path)
+        .with_context(|| format!("read {}", md_path.display()))?;
+    let artifacts = bench::load_dir(artifact_dir)?;
+    let body = render_measured(&artifacts);
+    let new = splice_generated(&existing, &body)?;
+    let changed = new != existing;
+    if write && changed {
+        std::fs::write(&md_path, &new).with_context(|| format!("write {}", md_path.display()))?;
+    }
+    Ok((md_path, new, changed))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// The acceptance gate for the regeneration path: splicing the render
+    /// of the committed artifacts into the committed EXPERIMENTS.md must
+    /// reproduce the committed file byte-for-byte. Reads the repo root
+    /// directly (not `artifact_dir()`) so a `GLISP_BENCH_DIR` pointing at
+    /// a fresh CI sweep cannot leak into the check.
+    #[test]
+    fn bench_artifact_experiments_md_in_sync() {
+        let root = bench::repo_root();
+        let md = std::fs::read_to_string(root.join("EXPERIMENTS.md")).unwrap();
+        let artifacts = bench::load_dir(&root).unwrap();
+        let body = render_measured(&artifacts);
+        let spliced = splice_generated(&md, &body).unwrap();
+        assert_eq!(
+            spliced, md,
+            "EXPERIMENTS.md is out of sync with the committed BENCH_*.json artifacts; \
+             run `glisp bench --report`"
+        );
+    }
+
+    #[test]
+    fn bench_artifact_markers_spliced() {
+        let doc = format!("intro\n\n{GEN_BEGIN}\nstale\n{GEN_END}\n\ntail\n");
+        let out = splice_generated(&doc, "fresh body\n").unwrap();
+        assert!(out.starts_with("intro\n\n"));
+        assert!(out.ends_with("\n\ntail\n"));
+        assert!(out.contains(&format!("{GEN_BEGIN}\n\nfresh body\n\n{GEN_END}")));
+        assert!(!out.contains("stale"));
+        // Idempotent: splicing the same body again changes nothing.
+        assert_eq!(splice_generated(&out, "fresh body\n").unwrap(), out);
+        // Missing markers are an error, not a silent append.
+        assert!(splice_generated("no markers here", "x").is_err());
+    }
+
+    #[test]
+    fn bench_artifact_empty_render_is_pending() {
+        let body = render_measured(&[]);
+        assert!(body.contains("## Measured (generated)"));
+        assert!(body.contains("pending"));
+        // Every registered bench appears in the inventory.
+        for (_, target, _) in BENCHES {
+            assert!(body.contains(&format!("`{target}`")), "missing {target}");
+        }
+        // All five claims render with a pending measured column.
+        assert_eq!(body.matches("| pending |").count(), CLAIMS.len() + BENCHES.len());
+    }
+
+    #[test]
+    fn bench_artifact_cells_format_by_unit() {
+        assert_eq!(fmt_cell(&Json::Num(1.5e9), "ns"), "1.50s");
+        assert_eq!(fmt_cell(&Json::Num(2.0), "speedup"), "2.00x");
+        assert_eq!(fmt_cell(&Json::Num(42.0), "count"), "42");
+        assert_eq!(fmt_cell(&Json::Null, "num"), "—");
+        assert_eq!(fmt_cell(&Json::Str("gcn".into()), "str"), "gcn");
+    }
 
     #[test]
     fn table_renders_aligned() {

@@ -3,6 +3,28 @@
 //! same graphs. Sizes are tuned so the full `cargo bench` suite finishes
 //! in minutes on a laptop-class CPU; set GLISP_BENCH_SCALE to scale the
 //! vertex/edge counts (1.0 = default).
+//!
+//! # Determinism contract
+//!
+//! Every stack built here is reproducible bit-for-bit given the same
+//! `GLISP_BENCH_*` knobs — bench authors inherit this instead of
+//! re-deriving it per bench:
+//!
+//! - Graphs come from [`generator`] under fixed seeds, so vertex/edge sets
+//!   are identical across runs and hosts.
+//! - Partitions come from [`stack_partitioner`], whose round-synchronous
+//!   AdaDNE propose phase is bit-identical for any
+//!   `GLISP_PARTITION_THREADS` value (DESIGN.md §10).
+//! - Training through [`TrainStack`] is ordered-pipelined: losses are
+//!   bit-equal to the synchronous loop for any pipeline depth or sampling
+//!   worker-pool geometry (DESIGN.md §7, §9).
+//! - Layerwise inference through [`InferStack`] produces embeddings
+//!   bit-identical for any worker count (DESIGN.md §8).
+//!
+//! Consequently only *timing* columns of a bench may vary between runs;
+//! every count/ratio/loss column is stable, which is what lets the
+//! `BENCH_*.json` assertion outcomes ([`crate::harness::bench`]) make the
+//! equality claims machine-checkable.
 
 use std::sync::Arc;
 
@@ -15,6 +37,9 @@ use crate::runtime::Runtime;
 use crate::sampling::{SamplingService, ServiceConfig};
 use crate::util::rng::Rng;
 
+/// Global size multiplier for the synthetic suite (GLISP_BENCH_SCALE,
+/// default 1.0). Scaling changes the graphs, so artifacts are only
+/// comparable at equal scale — the recorder stamps it into run metadata.
 pub fn bench_scale() -> f64 {
     std::env::var("GLISP_BENCH_SCALE")
         .ok()
@@ -68,6 +93,8 @@ pub fn relnet_like() -> DatasetSpec {
     }
 }
 
+/// Materialize one suite dataset. Same `(spec, seed)` → same graph,
+/// bit-for-bit, on any host.
 pub fn load(spec: &DatasetSpec, seed: u64) -> Graph {
     generator::generate(spec, seed)
 }
@@ -82,6 +109,7 @@ pub struct TrainStack {
     pub batcher: Batcher,
 }
 
+/// Build a [`TrainStack`] with default sampling-service threading.
 pub fn train_stack(
     n: usize,
     parts: usize,
@@ -140,6 +168,8 @@ pub struct InferStack {
     pub engine: LayerwiseEngine,
 }
 
+/// Build an [`InferStack`] over a fresh work dir (any stale cache files
+/// under `work_dir` are removed first so fill-cost columns start cold).
 pub fn infer_stack(
     n: usize,
     parts: usize,

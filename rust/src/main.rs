@@ -10,6 +10,8 @@
 //!                 [--server-workers 4 --shard-size 16]
 //! glisp infer     --n 20000 --parts 4 --layers 3 --task both [--seq]
 //! glisp datasets
+//! glisp bench     [fig13 table5 ...] [--all] [--list] [--report] [--check]
+//!                 [--diff OLD.json --against NEW.json]
 //! ```
 //!
 //! `--server-workers R` launches an R-worker pool per sampling partition
@@ -37,7 +39,7 @@ use glisp::partition::{
 use glisp::runtime::Runtime;
 use glisp::sampling::{balanced_seeds, sample_tree, SampleConfig, SamplingService, ServiceConfig};
 use glisp::util::rng::Rng;
-use glisp::util::timer::Timer;
+use glisp::util::timer::{fmt_duration, Timer};
 
 fn main() {
     let args = Args::from_env();
@@ -47,9 +49,10 @@ fn main() {
         Some("train") => cmd_train(&args),
         Some("infer") => cmd_infer(&args),
         Some("datasets") => cmd_datasets(&args),
+        Some("bench") => cmd_bench(&args),
         _ => {
             eprintln!(
-                "usage: glisp <partition|sample|train|infer|datasets> [--flags]\n\
+                "usage: glisp <partition|sample|train|infer|datasets|bench> [--flags]\n\
                  see rust/src/main.rs for per-command flags"
             );
             std::process::exit(2);
@@ -59,6 +62,156 @@ fn main() {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
+}
+
+/// `glisp bench`: run bench targets (delegating to `cargo bench`), list the
+/// bench↔paper-figure mapping, regenerate EXPERIMENTS.md from the committed
+/// `BENCH_*.json` artifacts, or diff two artifact files. See README
+/// §Benchmarking and DESIGN.md §11.
+fn cmd_bench(args: &Args) -> Result<()> {
+    use glisp::harness::bench::{self, BenchArtifact, BENCHES};
+    use glisp::harness::report;
+
+    if let Some(old) = args.get("diff") {
+        let new = args
+            .get("against")
+            .context("usage: glisp bench --diff OLD.json --against NEW.json")?;
+        return bench_diff(
+            &BenchArtifact::load(std::path::Path::new(old))?,
+            &BenchArtifact::load(std::path::Path::new(new))?,
+        );
+    }
+
+    let wants_report = args.has("report") || args.has("check");
+    if args.has("list") || (args.positionals.is_empty() && !args.has("all") && !wants_report) {
+        let dir = bench::artifact_dir();
+        let mut t = Table::new(
+            "Bench suite (run with `glisp bench <name>` or `cargo bench --bench <target>`)",
+            &["name", "target", "paper ref", "artifact"],
+        );
+        for (name, target, paper) in BENCHES {
+            let present = dir.join(format!("BENCH_{target}.json")).exists();
+            t.row(&[
+                (*name).into(),
+                (*target).into(),
+                (*paper).into(),
+                if present { "yes" } else { "-" }.into(),
+            ]);
+        }
+        t.print();
+        println!("artifact dir: {} (override with GLISP_BENCH_DIR)", dir.display());
+        return Ok(());
+    }
+
+    let targets: Vec<&str> = if args.has("all") {
+        BENCHES.iter().map(|(_, t, _)| *t).collect()
+    } else {
+        args.positionals
+            .iter()
+            .map(|n| {
+                bench::resolve_bench(n)
+                    .with_context(|| format!("unknown bench {n}; try `glisp bench --list`"))
+            })
+            .collect::<Result<_>>()?
+    };
+    for target in &targets {
+        println!("== cargo bench --bench {target}");
+        let status = std::process::Command::new("cargo")
+            .args(["bench", "--bench", target])
+            .current_dir(env!("CARGO_MANIFEST_DIR"))
+            .status()
+            .context("spawn cargo (is a Rust toolchain on PATH?)")?;
+        anyhow::ensure!(status.success(), "bench {target} failed ({status})");
+    }
+
+    if wants_report {
+        let (path, _, changed) =
+            report::regenerate_experiments(&bench::artifact_dir(), !args.has("check"))?;
+        if args.has("check") {
+            anyhow::ensure!(
+                !changed,
+                "{} is out of sync with the committed artifacts; run `glisp bench --report`",
+                path.display()
+            );
+            println!("{} is in sync with the artifacts", path.display());
+        } else if changed {
+            println!("regenerated measured sections of {}", path.display());
+        } else {
+            println!("{} already up to date", path.display());
+        }
+    }
+    Ok(())
+}
+
+/// Print a cell-by-cell comparison of two bench artifacts (rows matched by
+/// each section's first column, the label column by convention).
+fn bench_diff(
+    old: &glisp::harness::bench::BenchArtifact,
+    new: &glisp::harness::bench::BenchArtifact,
+) -> Result<()> {
+    use glisp::harness::bench::Assertion;
+    use glisp::util::json::{emit, Json};
+
+    anyhow::ensure!(
+        old.bench == new.bench,
+        "artifacts are from different benches ({} vs {})",
+        old.bench,
+        new.bench
+    );
+    println!(
+        "bench {}: {} ({}) -> {} ({})",
+        new.bench, old.meta.git_sha, old.meta.date_utc, new.meta.git_sha, new.meta.date_utc
+    );
+    if old.meta.bench_scale != new.meta.bench_scale || old.meta.env != new.meta.env {
+        println!(
+            "  WARNING: workload knobs differ (scale {} vs {}) — timings not comparable",
+            old.meta.bench_scale, new.meta.bench_scale
+        );
+    }
+    for ns in &new.sections {
+        let Some(os) = old.section(&ns.id) else {
+            println!("  section {} only in new run", ns.id);
+            continue;
+        };
+        println!("  section {}:", ns.id);
+        let Some(key) = ns.columns.first().map(|c| c.key.clone()) else { continue };
+        for row in &ns.rows {
+            let label = match row.first() {
+                Some(Json::Str(s)) => s.clone(),
+                Some(v) => emit(v),
+                None => continue,
+            };
+            for (ci, col) in ns.columns.iter().enumerate().skip(1) {
+                let new_v = row.get(ci);
+                let old_v = os.find_row(&key, &label).and_then(|r| r.get(ci));
+                let (Some(Json::Num(a)), Some(Json::Num(b))) = (old_v, new_v) else {
+                    continue;
+                };
+                if a == b {
+                    continue;
+                }
+                if col.unit == "ns" {
+                    println!(
+                        "    {label} / {}: {} -> {} ({:+.1}%)",
+                        col.label,
+                        fmt_duration(a / 1e9),
+                        fmt_duration(b / 1e9),
+                        (b - a) / a * 100.0
+                    );
+                } else {
+                    println!("    {label} / {}: {a} -> {b}", col.label);
+                }
+            }
+        }
+    }
+    let named = |xs: &[Assertion]| -> Vec<String> {
+        xs.iter().map(|x| format!("{}={}", x.name, x.passed)).collect()
+    };
+    if named(&old.assertions) != named(&new.assertions) {
+        println!("  checks old: {:?}", named(&old.assertions));
+        println!("  checks new: {:?}", named(&new.assertions));
+    }
+    Ok(())
 }
 
 fn dataset_by_name(name: &str, seed: u64) -> Result<glisp::graph::Graph> {
@@ -156,11 +309,12 @@ fn cmd_partition(args: &Args) -> Result<()> {
         }
         let bytes: usize = pgs.iter().map(|p| p.nbytes()).sum();
         println!(
-            "built {parts} partitions in {build_secs:.2}s ({threads} threads), \
-             saved {:.1} MiB to {} in {:.2}s",
+            "built {parts} partitions in {} ({threads} threads), \
+             saved {:.1} MiB to {} in {}",
+            fmt_duration(build_secs),
             bytes as f64 / (1024.0 * 1024.0),
             dir.display(),
-            timer.secs()
+            fmt_duration(timer.secs())
         );
     }
     Ok(())
@@ -204,7 +358,8 @@ fn cmd_sample(args: &Args) -> Result<()> {
     let secs = timer.secs();
     println!(
         "sampled {batches} batches (fanouts {fanouts:?}, weighted={weighted}) \
-         in {secs:.2}s — {:.0} slots/s",
+         in {} — {:.0} slots/s",
+        fmt_duration(secs),
         slots as f64 / secs
     );
     let wl = svc.workload();
@@ -281,7 +436,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         println!("step {:>5}  loss {:.4}", i * 10 + chunk.len(), mean);
     }
     println!(
-        "trained {steps} steps in {secs:.1}s ({:.2} steps/s, {:.0} samples/s)",
+        "trained {steps} steps in {} ({:.2} steps/s, {:.0} samples/s)",
+        fmt_duration(secs),
         steps as f64 / secs,
         steps as f64 * trainer.batch as f64 / secs
     );

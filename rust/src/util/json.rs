@@ -278,6 +278,75 @@ pub fn emit(v: &Json) -> String {
     s
 }
 
+/// Emit human-diffable JSON: 2-space indentation, one object key per
+/// line, and arrays kept on one line when every element is a scalar (so a
+/// bench table row stays one line in the `BENCH_*.json` artifacts).
+/// Object keys are emitted in `BTreeMap` order, so the output is
+/// deterministic for a given value.
+pub fn emit_pretty(v: &Json) -> String {
+    let mut s = String::new();
+    write_pretty(v, 0, &mut s);
+    s
+}
+
+fn is_scalar(v: &Json) -> bool {
+    matches!(v, Json::Null | Json::Bool(_) | Json::Num(_) | Json::Str(_))
+}
+
+fn write_pretty(v: &Json, indent: usize, out: &mut String) {
+    let pad = "  ".repeat(indent + 1);
+    let close_pad = "  ".repeat(indent);
+    match v {
+        Json::Arr(a) if !a.is_empty() && a.iter().all(is_scalar) => {
+            out.push('[');
+            for (i, x) in a.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(", ");
+                }
+                write_json(x, out);
+            }
+            out.push(']');
+        }
+        Json::Arr(a) => {
+            if a.is_empty() {
+                out.push_str("[]");
+                return;
+            }
+            out.push_str("[\n");
+            for (i, x) in a.iter().enumerate() {
+                out.push_str(&pad);
+                write_pretty(x, indent + 1, out);
+                if i + 1 < a.len() {
+                    out.push(',');
+                }
+                out.push('\n');
+            }
+            out.push_str(&close_pad);
+            out.push(']');
+        }
+        Json::Obj(m) => {
+            if m.is_empty() {
+                out.push_str("{}");
+                return;
+            }
+            out.push_str("{\n");
+            for (i, (k, x)) in m.iter().enumerate() {
+                out.push_str(&pad);
+                write_json(&Json::Str(k.clone()), out);
+                out.push_str(": ");
+                write_pretty(x, indent + 1, out);
+                if i + 1 < m.len() {
+                    out.push(',');
+                }
+                out.push('\n');
+            }
+            out.push_str(&close_pad);
+            out.push('}');
+        }
+        _ => write_json(v, out),
+    }
+}
+
 fn write_json(v: &Json, out: &mut String) {
     match v {
         Json::Null => out.push_str("null"),
@@ -392,5 +461,18 @@ mod tests {
         let j = Json::parse(src).unwrap();
         let j2 = Json::parse(&emit(&j)).unwrap();
         assert_eq!(j, j2);
+    }
+
+    #[test]
+    fn pretty_round_trips_and_inlines_scalar_rows() {
+        let src = r#"{"rows":[[1,"a",null],[2,"b",true]],"meta":{"n":3},"empty":[],"eo":{}}"#;
+        let j = Json::parse(src).unwrap();
+        let p = emit_pretty(&j);
+        assert_eq!(Json::parse(&p).unwrap(), j);
+        // Scalar rows stay on one line; object keys are one per line.
+        assert!(p.contains("[1, \"a\", null]"), "{p}");
+        assert!(p.contains("\"empty\": []"), "{p}");
+        assert!(p.contains("\"eo\": {}"), "{p}");
+        assert!(p.starts_with("{\n  \""), "{p}");
     }
 }

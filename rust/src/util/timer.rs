@@ -27,6 +27,38 @@ impl Timer {
     }
 }
 
+/// Render a duration with an auto-selected unit (s / ms / us / ns) and
+/// three significant digits. This is THE duration formatter: every
+/// human-facing timing string (bench tables, coordinator metrics) and the
+/// markdown regenerated from `BENCH_*.json` artifacts goes through it, so
+/// units can no longer drift between call sites. Rounding is pinned by
+/// unit test: >= 100 in-unit -> 0 decimals, >= 10 -> 1, else 2; the ns
+/// tier is always a whole number. Negative or non-finite inputs render
+/// as "-".
+pub fn fmt_duration(secs: f64) -> String {
+    if !secs.is_finite() || secs < 0.0 {
+        return "-".to_string();
+    }
+    let sig3 = |v: f64, unit: &str| -> String {
+        if v >= 100.0 {
+            format!("{v:.0}{unit}")
+        } else if v >= 10.0 {
+            format!("{v:.1}{unit}")
+        } else {
+            format!("{v:.2}{unit}")
+        }
+    };
+    if secs >= 1.0 {
+        sig3(secs, "s")
+    } else if secs >= 1e-3 {
+        sig3(secs * 1e3, "ms")
+    } else if secs >= 1e-6 {
+        sig3(secs * 1e6, "us")
+    } else {
+        format!("{}ns", (secs * 1e9).round() as u64)
+    }
+}
+
 /// Time a closure, returning (result, seconds).
 pub fn time<R>(f: impl FnOnce() -> R) -> (R, f64) {
     let t = Timer::start();
@@ -61,6 +93,21 @@ mod tests {
         let t = Timer::start();
         std::thread::sleep(Duration::from_millis(5));
         assert!(t.ms() >= 4.0);
+    }
+
+    #[test]
+    fn fmt_duration_rounding_is_pinned() {
+        assert_eq!(fmt_duration(1.5), "1.50s");
+        assert_eq!(fmt_duration(123.4), "123s");
+        assert_eq!(fmt_duration(12.34), "12.3s");
+        assert_eq!(fmt_duration(0.001234), "1.23ms");
+        assert_eq!(fmt_duration(0.0123), "12.3ms");
+        assert_eq!(fmt_duration(0.1234), "123ms");
+        assert_eq!(fmt_duration(0.0000123), "12.3us");
+        assert_eq!(fmt_duration(1.23e-7), "123ns");
+        assert_eq!(fmt_duration(0.0), "0ns");
+        assert_eq!(fmt_duration(-1.0), "-");
+        assert_eq!(fmt_duration(f64::NAN), "-");
     }
 
     #[test]
