@@ -10,6 +10,12 @@
 //! Pool mode (R server workers per partition + sharded gathers — same
 //! losses bit-for-bit, DESIGN.md §9):
 //!      `cargo run --release --example quickstart -- --server-workers 4 --shard-size 16`
+//! Multi-process mode (DESIGN.md §12) — same losses bit-for-bit again;
+//! start one `glisp serve --graph quickstart --parts P --partition i
+//! --listen ADDRi` process per partition, then:
+//!      `cargo run --release --example quickstart -- --parts P --connect ADDR0,ADDR1[,...]`
+//! (`--shutdown-remote` additionally stops the fleet on exit; the
+//! `loss digest` line is the FNV-1a fingerprint CI diffs across modes.)
 
 use std::sync::Arc;
 
@@ -32,27 +38,39 @@ fn main() -> anyhow::Result<()> {
     // 2. Vertex-cut partitioning with AdaDNE (the paper's contribution).
     //    --threads T runs the offline propose phase on T threads; the
     //    assignment is bit-identical for any value (DESIGN.md §10).
-    let ea = AdaDNE {
-        threads: args.get_usize("threads", 1),
-        ..Default::default()
-    }
-    .partition(&g, 2, 1);
-    let q = quality(&g, &ea);
-    println!("AdaDNE: RF={:.3} VB={:.3} EB={:.3}", q.rf, q.vb, q.eb);
-
-    // 3. Launch a sampling-server pool per partition (Gather-Apply);
-    //    --server-workers / --shard-size only change throughput, never the
-    //    sampled values (per-seed RNG streams).
+    let parts = args.get_usize("parts", 2);
     let svc_cfg = ServiceConfig::new(
         args.get_usize("server-workers", 1),
         args.get_usize("shard-size", 0),
     );
-    let service = SamplingService::launch_cfg(&g, &ea, 1, svc_cfg)?;
-    println!(
-        "sampling: {} partitions x {} pool workers",
-        service.partitions.len(),
-        service.config.workers
-    );
+    // 3. A sampling service: either launch a server pool per partition in
+    //    this process, or `--connect` to partitions already running as
+    //    `glisp serve --graph quickstart` processes (DESIGN.md §12). The
+    //    per-seed RNG streams make the sampled values — and the losses —
+    //    bit-identical either way.
+    let connect: Option<Vec<String>> = args
+        .get("connect")
+        .map(|v| v.split(',').filter(|a| !a.is_empty()).map(String::from).collect());
+    let service = if let Some(addrs) = &connect {
+        let service = SamplingService::connect(addrs, g.n, svc_cfg)?;
+        println!("sampling: connected to {} partition server processes", addrs.len());
+        service
+    } else {
+        let ea = AdaDNE {
+            threads: args.get_usize("threads", 1),
+            ..Default::default()
+        }
+        .partition(&g, parts, 1);
+        let q = quality(&g, &ea);
+        println!("AdaDNE: RF={:.3} VB={:.3} EB={:.3}", q.rf, q.vb, q.eb);
+        let service = SamplingService::launch_cfg(&g, &ea, 1, svc_cfg)?;
+        println!(
+            "sampling: {} partitions x {} pool workers",
+            service.num_partitions(),
+            service.config.workers
+        );
+        service
+    };
 
     // 4. A trainer wired to the AOT GraphSAGE train-step artifact.
     let features = FeatureStore::labeled(64, labels.clone(), 8, 0.6);
@@ -77,12 +95,19 @@ fn main() -> anyhow::Result<()> {
     let mut batcher = Batcher::new(seeds, lab, trainer.batch, 5)?;
     let losses = trainer.train_pipelined(&mut batcher, 20, &PipelineConfig::default())?;
     println!("loss: first {:.4} -> last {:.4}", losses[0], losses.last().unwrap());
+    // FNV-1a over the loss curve's f32 bits: CI diffs this line between the
+    // in-process and --connect runs to prove wire-transport bit-identity.
+    println!("loss digest: {:016x}", glisp::util::digest::f32_digest(&losses));
 
     // 6. Per-server workload: balanced thanks to vertex-cut + Gather-Apply.
-    println!("server workload (edges scanned): {:?}", service.workload());
+    println!("server workload (edges scanned): {:?}", service.workload()?);
     if service.config.workers > 1 {
-        println!("per-worker requests: {:?}", service.worker_requests());
+        println!("per-worker requests: {:?}", service.worker_requests()?);
     }
-    service.shutdown();
+    if connect.is_some() && !args.has("shutdown-remote") {
+        service.disconnect();
+    } else {
+        service.shutdown();
+    }
     Ok(())
 }

@@ -17,6 +17,12 @@
 //! Runs hermetically on the pure-Rust reference backend when `artifacts/`
 //! is absent; build artifacts + enable `--features pjrt` for PJRT/XLA.
 //!
+//! `--connect ADDR,ADDR,...` trains against partition servers running as
+//! separate `glisp serve --graph train --n N --parts P` processes instead
+//! of launching them in-process (DESIGN.md §12); the loss curve — see the
+//! `loss digest` line — is bit-identical across the two deployments, which
+//! the CI wire job asserts. `--shutdown-remote` stops the fleet on exit.
+//!
 //! Run: `cargo run --release --example train_e2e [-- --steps 300 --parts 4]`
 
 use std::sync::Arc;
@@ -56,31 +62,45 @@ fn main() -> anyhow::Result<()> {
     let labels = Arc::new(g.label.clone());
     println!("[data] {} vertices, {} edges, {} classes", g.n, g.m(), classes);
 
-    // Partition + launch sampling service. --threads T parallelizes the
-    // offline propose phase; the assignment is bit-identical for any value
-    // (DESIGN.md §10).
-    let t = Timer::start();
-    let threads = args.get_usize("threads", 1);
-    let ea = AdaDNE {
-        threads,
-        ..Default::default()
-    }
-    .partition(&g, parts, 1);
-    let q = quality(&g, &ea);
-    println!(
-        "[partition] AdaDNE {} parts in {:.2}s ({} threads): RF={:.3} VB={:.3} EB={:.3}",
-        parts, t.secs(), threads, q.rf, q.vb, q.eb
-    );
-    let service = SamplingService::launch_cfg(&g, &ea, 1, svc_cfg)?;
-    println!(
-        "[sampling] {parts} partitions x {} pool workers{}",
-        service.config.workers,
-        if service.config.shard_size == usize::MAX {
-            String::new()
-        } else {
-            format!(", gather shard size {}", service.config.shard_size)
+    // Partition + launch sampling service in-process, or --connect to a
+    // fleet of `glisp serve --graph train` processes hosting the identical
+    // stack (DESIGN.md §12). --threads T parallelizes the offline propose
+    // phase; the assignment is bit-identical for any value (DESIGN.md §10).
+    let connect: Option<Vec<String>> = args
+        .get("connect")
+        .map(|v| v.split(',').filter(|a| !a.is_empty()).map(String::from).collect());
+    let service = if let Some(addrs) = &connect {
+        let service = SamplingService::connect(addrs, g.n, svc_cfg)?;
+        println!(
+            "[sampling] connected to {} partition server processes: {addrs:?}",
+            service.num_partitions()
+        );
+        service
+    } else {
+        let t = Timer::start();
+        let threads = args.get_usize("threads", 1);
+        let ea = AdaDNE {
+            threads,
+            ..Default::default()
         }
-    );
+        .partition(&g, parts, 1);
+        let q = quality(&g, &ea);
+        println!(
+            "[partition] AdaDNE {} parts in {:.2}s ({} threads): RF={:.3} VB={:.3} EB={:.3}",
+            parts, t.secs(), threads, q.rf, q.vb, q.eb
+        );
+        let service = SamplingService::launch_cfg(&g, &ea, 1, svc_cfg)?;
+        println!(
+            "[sampling] {parts} partitions x {} pool workers{}",
+            service.config.workers,
+            if service.config.shard_size == usize::MAX {
+                String::new()
+            } else {
+                format!(", gather shard size {}", service.config.shard_size)
+            }
+        );
+        service
+    };
 
     // Trainer.
     let features = FeatureStore::labeled(64, labels.clone(), classes, 0.6);
@@ -118,6 +138,7 @@ fn main() -> anyhow::Result<()> {
     // Train, logging every 20 steps.
     let t_train = Timer::start();
     let mut curve = Vec::new();
+    let mut full_curve: Vec<f32> = Vec::new();
     for block in 0..steps.div_ceil(20) {
         let k = 20.min(steps - block * 20);
         let losses = if sync {
@@ -127,9 +148,13 @@ fn main() -> anyhow::Result<()> {
         };
         let mean: f32 = losses.iter().sum::<f32>() / losses.len() as f32;
         curve.push(mean);
+        full_curve.extend_from_slice(&losses);
         println!("[train] step {:>4}  loss {:.4}", (block + 1) * 20, mean);
     }
     let train_secs = t_train.secs();
+    // FNV-1a over every per-step loss's f32 bits — the cross-deployment
+    // bit-equality witness the CI wire job diffs (DESIGN.md §12).
+    println!("[train] loss digest: {:016x}", glisp::util::digest::f32_digest(&full_curve));
     println!(
         "[train] {steps} steps in {train_secs:.1}s = {:.2} steps/s ({:.0} seeds/s)",
         steps as f64 / train_secs,
@@ -147,14 +172,18 @@ fn main() -> anyhow::Result<()> {
     println!("[eval] test accuracy {acc:.3} over {} vertices", test_seeds.len());
     assert!(acc > 1.5 / classes as f64, "accuracy no better than chance");
 
-    println!("[workload] per-server edges scanned: {:?}", service.workload());
-    if service.config.workers > 1 {
+    println!("[workload] per-server edges scanned: {:?}", service.workload()?);
+    if service.config.workers > 1 || connect.is_some() {
         println!(
             "[workload] per-worker requests (pool attribution): {:?}",
-            service.worker_requests()
+            service.worker_requests()?
         );
     }
     println!("== done in {:.1}s ==", t_total.secs());
-    service.shutdown();
+    if connect.is_some() && !args.has("shutdown-remote") {
+        service.disconnect();
+    } else {
+        service.shutdown();
+    }
     Ok(())
 }

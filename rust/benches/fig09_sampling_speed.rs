@@ -7,6 +7,11 @@
 //! 1-worker and a 4-worker sampling pool per partition (shard size
 //! POOL_SHARD, DESIGN.md §9); per-seed RNG streams make the sampled trees
 //! bit-identical, so the pair isolates the pool's wall-clock win.
+//!
+//! A final `wire_transport` table reruns the pooled GLISP row over the
+//! in-process channel, a TCP loopback socket, and a Unix domain socket
+//! (DESIGN.md §12), asserting a witness tree is bit-identical across all
+//! three transports (`wire_bits_identical` in BENCH_fig09*.json).
 
 use glisp::graph::{build_partitions, Graph};
 use glisp::harness::workloads::{bench_datasets, load};
@@ -43,21 +48,18 @@ fn run_stack(
     // warmup
     let seeds = balanced_seeds(svc, 8, &mut rng);
     sample_tree(&mut client, &seeds, &FANOUTS, &cfg).unwrap();
-    svc.reset_stats();
+    svc.reset_stats().unwrap();
     let timer = Timer::start();
     let mut seeds_done = 0usize;
     for _ in 0..batches {
-        let seeds = balanced_seeds(svc, 64 / svc.partitions.len().max(1), &mut rng);
+        let seeds = balanced_seeds(svc, 64 / svc.num_partitions().max(1), &mut rng);
         seeds_done += seeds.len();
         sample_tree(&mut client, &seeds, &FANOUTS, &cfg).unwrap();
     }
     let wall = timer.secs();
-    let client_secs = wall - svc.busy_secs().iter().sum::<f64>();
-    let makespan = svc
-        .busy_secs()
-        .into_iter()
-        .fold(0f64, f64::max)
-        + client_secs.max(0.0);
+    let busy = svc.busy_secs().unwrap();
+    let client_secs = wall - busy.iter().sum::<f64>();
+    let makespan = busy.into_iter().fold(0f64, f64::max) + client_secs.max(0.0);
     (seeds_done as f64 / wall, seeds_done as f64 / makespan.max(1e-9))
 }
 
@@ -159,6 +161,82 @@ fn main() -> anyhow::Result<()> {
         framework_row("GraphLearn-like (hash)", &g, &ea, Some(owner), batches, &mut t);
         rec.table(&t);
     }
+
+    // == Wire-transport rows (DESIGN.md §12): the identical pooled GLISP
+    // workload served over the in-process channel, a TCP loopback socket,
+    // and a Unix domain socket. Timing may differ (syscalls + frame
+    // codec); the sampled bits must not — per-seed RNG streams are keyed
+    // on (partition seed, salt, seed index) only, so the recorder check
+    // asserts a shared witness tree is bit-identical across transports.
+    {
+        let spec = &bench_datasets()[0];
+        let g = load(spec, 1);
+        let ea = AdaDNE::default().partition(&g, parts, 1);
+        let cfg = ServiceConfig::new(POOL_WORKERS, POOL_SHARD);
+        let mut t = BenchTable::new(
+            "wire_transport",
+            &format!(
+                "{} × {parts} servers per transport ({POOL_WORKERS}-worker pools, shard {POOL_SHARD})",
+                spec.name
+            ),
+            &["transport", "uni wall", "wei wall"],
+        );
+        t.param_str("dataset", spec.name);
+        let mut trees: Vec<Vec<u32>> = Vec::new();
+        for transport in ["channel", "tcp", "unix"] {
+            let (svc, servers) = match transport {
+                "channel" => (SamplingService::launch_cfg(&g, &ea, 1, cfg)?, Vec::new()),
+                "tcp" => SamplingService::launch_remote(
+                    &g,
+                    &ea,
+                    1,
+                    cfg,
+                    &vec!["tcp:127.0.0.1:0".to_string(); parts],
+                )?,
+                _ => {
+                    let listens: Vec<String> = (0..parts)
+                        .map(|p| {
+                            let path =
+                                std::env::temp_dir().join(format!("glisp_fig09_wire_{p}.sock"));
+                            format!("unix:{}", path.display())
+                        })
+                        .collect();
+                    SamplingService::launch_remote(&g, &ea, 1, cfg, &listens)?
+                }
+            };
+            // Bit-equality witness: same seeds + same client seed on every
+            // transport, flattened levels compared below.
+            let mut wrng = Rng::new(99);
+            let wseeds = balanced_seeds(&svc, 16, &mut wrng);
+            let tree = sample_tree(
+                &mut svc.client(11),
+                &wseeds,
+                &FANOUTS,
+                &SampleConfig::default(),
+            )
+            .unwrap();
+            trees.push(tree.levels.concat());
+            let mut cells = vec![Cell::str(transport)];
+            for weighted in [false, true] {
+                let (wall, _) = run_stack(&svc, svc.client(2), weighted, batches);
+                cells.push(Cell::f2(wall));
+            }
+            t.row(cells);
+            svc.shutdown();
+            for s in servers {
+                s.join();
+            }
+        }
+        let identical = trees.iter().all(|tr| *tr == trees[0]);
+        rec.check(
+            "wire_bits_identical",
+            identical,
+            "flattened sample_tree levels bit-equal across channel/tcp/unix transports",
+        );
+        assert!(identical, "wire transport changed sampled bits");
+        rec.table(&t);
+    }
+
     println!("\npaper Fig. 9: GLISP fastest everywhere, and more so for weighted");
     println!("sampling, where workload imbalance is amplified by the heavier op.");
     println!("'sim' divides by max per-server busy time + client time (servers run");

@@ -54,7 +54,7 @@ fn main() -> anyhow::Result<()> {
             let seeds = balanced_seeds(&svc, 16, &mut rng);
             sample_tree(&mut client, &seeds, &FANOUTS, &SampleConfig::default()).unwrap();
         }
-        workload_row(&mut t, "DistDGL-like", &normalized_workload(&svc.workload()));
+        workload_row(&mut t, "DistDGL-like", &normalized_workload(&svc.workload()?));
         svc.shutdown();
 
         // The exact balanced-seed traffic both GLISP variants replay
@@ -72,7 +72,7 @@ fn main() -> anyhow::Result<()> {
         let ea = AdaDNE::default().partition(&g, parts, 1);
         let svc = SamplingService::launch(&g, &ea, 1).unwrap();
         run_glisp_traffic(&svc);
-        let glisp_raw = svc.workload();
+        let glisp_raw = svc.workload()?;
         let w = normalized_workload(&glisp_raw);
         workload_row(&mut t, "GLISP", &w);
 
@@ -84,17 +84,17 @@ fn main() -> anyhow::Result<()> {
         run_glisp_traffic(&pool);
         rec.check(
             &format!("{}_pooled_workload_bit_identical", spec.name),
-            pool.workload() == glisp_raw,
+            pool.workload()? == glisp_raw,
             "4-worker pooled run must replay the 1-worker per-server workload byte-for-byte \
              (per-seed RNG streams, DESIGN.md §9)",
         );
-        workload_row(&mut t, "GLISP 4w-pool", &normalized_workload(&pool.workload()));
-        let attribution = pool.worker_requests();
-        let busy = pool.worker_busy_secs();
+        workload_row(&mut t, "GLISP 4w-pool", &normalized_workload(&pool.workload()?));
+        let attribution = pool.worker_requests()?;
+        let busy = pool.worker_busy_secs()?;
         pool.shutdown();
 
         // GLISP-P0 worst case: all seeds from partition 0.
-        svc.reset_stats();
+        svc.reset_stats()?;
         let mut client = svc.client(3);
         let mut rng = Rng::new(6);
         for _ in 0..rounds {
@@ -104,7 +104,7 @@ fn main() -> anyhow::Result<()> {
                 .collect();
             sample_tree(&mut client, &seeds, &FANOUTS, &SampleConfig::default()).unwrap();
         }
-        workload_row(&mut t, "GLISP-P0", &normalized_workload(&svc.workload()));
+        workload_row(&mut t, "GLISP-P0", &normalized_workload(&svc.workload()?));
         svc.shutdown();
         rec.table(&t);
 

@@ -83,14 +83,14 @@ fn main() -> anyhow::Result<()> {
                 train_seeds.iter().map(|&v| labels[v as usize]).collect();
             let mut batcher = Batcher::new(train_seeds, train_labels, trainer.batch, 5)?;
             trainer.train(&mut batcher, 3)?; // warmup + compile
-            service.reset_stats();
+            service.reset_stats()?;
             let timer = Timer::start();
             trainer.train(&mut batcher, steps)?;
             let wall = timer.secs();
             // Simulated distributed step time: servers run in parallel, so
             // replace the (serialized) total server busy time with the
             // busiest server's time.
-            let busy = service.busy_secs();
+            let busy = service.busy_secs()?;
             let makespan = busy.iter().cloned().fold(0f64, f64::max);
             let sim = (wall - busy.iter().sum::<f64>() + makespan).max(1e-9);
             sim_rates.push(steps as f64 / sim);

@@ -24,6 +24,6 @@ pub mod workloads;
 pub use bench::{BenchRecorder, BenchTable, Cell};
 pub use report::{bar_chart, f2, f3, ix, speedup, Table};
 pub use workloads::{
-    infer_stack, partition_threads, stack_partitioner, train_stack, train_stack_cfg, InferStack,
-    TrainStack,
+    infer_stack, partition_threads, stack_partitioner, train_stack, train_stack_cfg,
+    train_stack_connect, train_stack_graph, InferStack, TrainStack,
 };

@@ -130,12 +130,51 @@ pub fn train_stack_cfg(
     artifacts: &std::path::Path,
     svc_cfg: ServiceConfig,
 ) -> anyhow::Result<TrainStack> {
-    let classes = 8;
-    let mut rng = Rng::new(1);
-    let g = generator::labeled_community_graph(n, n * 12, classes, 0.9, &mut rng);
-    let labels = Arc::new(g.label.clone());
+    let (g, labels) = train_stack_graph(n);
     let ea = stack_partitioner().partition(&g, parts, 1);
     let service = SamplingService::launch_cfg(&g, &ea, 1, svc_cfg)?;
+    train_stack_over(service, n, labels, model, artifacts)
+}
+
+/// [`train_stack`] against an already-running socket fleet (DESIGN.md
+/// §12): the labeled graph is regenerated locally for features and the
+/// train split, but every gather goes to the `glisp serve` processes at
+/// `addrs` — which must host the SAME stack (`glisp serve --graph train
+/// --n N --parts P --seed 1`), or the fleet's membership won't match the
+/// local labels. Losses are bit-identical to [`train_stack_cfg`] at equal
+/// shard_size because the trainer's client RNG and the per-seed server
+/// streams are transport-independent.
+pub fn train_stack_connect(
+    n: usize,
+    model: &str,
+    artifacts: &std::path::Path,
+    addrs: &[String],
+    shard_size: usize,
+) -> anyhow::Result<TrainStack> {
+    let (g, labels) = train_stack_graph(n);
+    let service = SamplingService::connect(addrs, g.n, ServiceConfig::new(1, shard_size))?;
+    train_stack_over(service, n, labels, model, artifacts)
+}
+
+/// The stack's canonical labeled graph: same (generator, seed) as
+/// [`train_stack_cfg`] uses, exposed so `glisp serve` can host exactly it.
+pub fn train_stack_graph(n: usize) -> (Graph, Arc<Vec<u16>>) {
+    let mut rng = Rng::new(1);
+    let g = generator::labeled_community_graph(n, n * 12, 8, 0.9, &mut rng);
+    let labels = Arc::new(g.label.clone());
+    (g, labels)
+}
+
+/// Common tail of the train-stack builders: trainer + 80/20 batcher over
+/// an already-launched (or connected) sampling service.
+fn train_stack_over(
+    service: SamplingService,
+    n: usize,
+    labels: Arc<Vec<u16>>,
+    model: &str,
+    artifacts: &std::path::Path,
+) -> anyhow::Result<TrainStack> {
+    let classes = 8;
     let features = FeatureStore::labeled(64, labels.clone(), classes, 0.6);
     let trainer = Trainer::new(
         artifacts,

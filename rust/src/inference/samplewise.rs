@@ -10,10 +10,18 @@
 //! coordinator's producer machinery (`pipeline::assemble_tensors`,
 //! `pipeline::batch_rng`) to overlap local sampling + feature assembly with
 //! the embed-artifact execution. Chunk RNG streams are derived per chunk
-//! index, so both modes produce identical embeddings. (Inference samples
-//! the *local* graph directly — there is no sampling service here, so the
+//! index, so both modes produce identical embeddings. (These local paths
+//! sample the *local* graph directly — no sampling service, so the
 //! service's `--server-workers`/`--shard-size` pool knobs do not apply;
 //! the per-seed stream contract it relies on is stated in DESIGN.md §7/§9.)
+//!
+//! A third path ([`SamplewiseRunner::run_vertex_embedding_via`]) samples
+//! through a `SamplingClient` instead of the local graph — the inference
+//! mode of a socket deployment (`glisp infer --connect`, DESIGN.md §12),
+//! where the graph lives in `glisp serve` processes and only K-hop trees
+//! cross the wire. Chunk sampling streams are `client.split(chunk_index)`-
+//! derived, so the embeddings are bit-identical for an in-process and a
+//! remote service with the same seeds.
 
 use anyhow::{Context, Result};
 
@@ -23,7 +31,9 @@ use crate::graph::csr::{Graph, VId};
 use crate::runtime::tensor::HostTensor;
 use crate::runtime::Runtime;
 use crate::sampling::algo_d;
-use crate::sampling::request::PAD;
+use crate::sampling::request::{SampleConfig, PAD};
+use crate::sampling::subgraph::sample_tree;
+use crate::sampling::SamplingClient;
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug, Default)]
@@ -169,6 +179,57 @@ impl<'g> SamplewiseRunner<'g> {
         let out = self.runtime.execute("sage_embed", &inputs)?;
         report.model_secs += t_m.secs();
         Ok(out[0].as_f32().to_vec())
+    }
+
+    /// [`Self::embed_batch`], but sampling through a `SamplingClient`
+    /// (local pool or `--connect`ed socket fleet) instead of the local
+    /// graph. The chunk's sampling stream is split off the client by chunk
+    /// index — deterministic replay, and the same bits whichever transport
+    /// the client's servers sit behind.
+    pub fn embed_batch_via(
+        &mut self,
+        client: &SamplingClient,
+        seeds: &[VId],
+        report: &mut SamplewiseReport,
+    ) -> Result<Vec<f32>> {
+        assert!(seeds.len() <= self.batch);
+        let mut padded = seeds.to_vec();
+        padded.resize(self.batch, PAD);
+        let idx = self.embed_counter as u64;
+        self.embed_counter += 1;
+        let mut c = client.split(idx);
+        let t_s = crate::util::timer::Timer::start();
+        let tree = sample_tree(&mut c, &padded, &self.fanouts, &SampleConfig::default())?;
+        let (feats, mask_t) = assemble_tensors(&tree.levels, &tree.masks, &self.features);
+        report.sample_secs += t_s.secs();
+
+        let t_m = crate::util::timer::Timer::start();
+        report.vertices_computed += real_slots(&tree.levels);
+        let mut inputs: Vec<HostTensor> = self.enc_params.clone();
+        inputs.extend(feats);
+        inputs.extend(mask_t);
+        let out = self.runtime.execute("sage_embed", &inputs)?;
+        report.model_secs += t_m.secs();
+        Ok(out[0].as_f32().to_vec())
+    }
+
+    /// Full-graph vertex embedding through a sampling service — the
+    /// samplewise inference mode of `glisp infer --connect`.
+    pub fn run_vertex_embedding_via(
+        &mut self,
+        client: &SamplingClient,
+        n: usize,
+    ) -> Result<(Vec<f32>, SamplewiseReport)> {
+        let mut report = SamplewiseReport::default();
+        let mut out = vec![0f32; n * self.hidden];
+        let ids: Vec<VId> = (0..n as VId).collect();
+        for chunk in ids.chunks(self.batch) {
+            let emb = self.embed_batch_via(client, chunk, &mut report)?;
+            let base = chunk[0] as usize * self.hidden;
+            out[base..base + chunk.len() * self.hidden]
+                .copy_from_slice(&emb[..chunk.len() * self.hidden]);
+        }
+        Ok((out, report))
     }
 
     /// Full-graph vertex embedding, samplewise: loops every vertex.
@@ -349,6 +410,30 @@ mod tests {
         let (hp, rp) = pipe.run_vertex_embedding_pipelined(&pcfg).unwrap();
         assert_eq!(hs, hp, "pipelined embeddings must equal sync bit-for-bit");
         assert_eq!(rs.vertices_computed, rp.vertices_computed);
+    }
+
+    #[test]
+    fn service_backed_embedding_is_deterministic_and_finite() {
+        use crate::partition::{AdaDNE, Partitioner};
+        use crate::sampling::SamplingService;
+
+        let mut rng = Rng::new(313);
+        let g = generator::chung_lu(300, 2400, 2.1, &mut rng);
+        let ea = AdaDNE::default().partition(&g, 2, 0);
+        let svc = SamplingService::launch(&g, &ea, 1).unwrap();
+        let client = svc.client(4);
+        let mut r1 = runner(&g);
+        let (h1, report) = r1.run_vertex_embedding_via(&client, g.n).unwrap();
+        assert_eq!(h1.len(), 300 * r1.hidden());
+        assert!(h1.iter().all(|x| x.is_finite()));
+        assert!(report.vertices_computed > 0);
+        // Replay with a fresh runner + fresh client at the same seed: the
+        // split(chunk_index) streams make the embeddings reproduce exactly.
+        let client2 = svc.client(4);
+        let mut r2 = runner(&g);
+        let (h2, _) = r2.run_vertex_embedding_via(&client2, g.n).unwrap();
+        assert_eq!(h1, h2, "service-backed samplewise inference must replay bit-for-bit");
+        svc.shutdown();
     }
 
     #[test]

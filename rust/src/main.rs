@@ -9,6 +9,9 @@
 //! glisp train     --model sage --steps 200 --parts 2 [--eval]
 //!                 [--server-workers 4 --shard-size 16]
 //! glisp infer     --n 20000 --parts 4 --layers 3 --task both [--seq]
+//! glisp serve     --partition 0 --listen unix:/tmp/glisp0.sock
+//!                 (--graph train|infer|quickstart [--n N] | --dataset wiki-s
+//!                  | --load DIR) --parts 4 [--workers 4] [--service-seed 1]
 //! glisp datasets
 //! glisp bench     [fig13 table5 ...] [--all] [--list] [--report] [--check]
 //!                 [--diff OLD.json --against NEW.json]
@@ -22,6 +25,21 @@
 //! compact-structure build run on T threads with a bit-identical result
 //! (DESIGN.md §10). `--save DIR` additionally assembles the last
 //! algorithm's partitions and writes the binary layouts to DIR.
+//!
+//! **Multi-process deployment (DESIGN.md §12):** `glisp serve` runs ONE
+//! partition's server pool as its own process behind a TCP or Unix socket
+//! (`tcp:HOST:PORT` / `unix:PATH` / bare `HOST:PORT`). `sample`, `train`
+//! and `infer` accept `--connect ADDR,ADDR,...` to use such a fleet
+//! instead of launching servers in-process; the per-seed RNG contract
+//! makes every sampled bit — and therefore every loss — identical to the
+//! in-process run (the `loss digest` / `sample digest` lines are FNV-1a
+//! fingerprints CI diffs across deployments). `--shutdown-remote` stops
+//! the fleet when the client finishes; otherwise the servers keep running
+//! for the next client. The serving process must host the same graph the
+//! client builds locally: `--graph train` pairs with `glisp train`,
+//! `--graph infer` with `glisp infer --connect`, `--graph quickstart`
+//! with the quickstart example, `--dataset NAME` with `glisp sample`, and
+//! `--load DIR` serves partitions saved by `glisp partition --save`.
 
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
@@ -37,7 +55,10 @@ use glisp::partition::{
     quality, AdaDNE, DistributedNE, EdgeCutLDG, Hash1D, Hash2D, Partitioner,
 };
 use glisp::runtime::Runtime;
-use glisp::sampling::{balanced_seeds, sample_tree, SampleConfig, SamplingService, ServiceConfig};
+use glisp::sampling::{
+    balanced_seeds, sample_tree, serve_partition, SampleConfig, SamplingService, ServiceConfig,
+};
+use glisp::util::digest::{f32_digest, u32_digest};
 use glisp::util::rng::Rng;
 use glisp::util::timer::{fmt_duration, Timer};
 
@@ -48,11 +69,12 @@ fn main() {
         Some("sample") => cmd_sample(&args),
         Some("train") => cmd_train(&args),
         Some("infer") => cmd_infer(&args),
+        Some("serve") => cmd_serve(&args),
         Some("datasets") => cmd_datasets(&args),
         Some("bench") => cmd_bench(&args),
         _ => {
             eprintln!(
-                "usage: glisp <partition|sample|train|infer|datasets|bench> [--flags]\n\
+                "usage: glisp <partition|sample|train|infer|serve|datasets|bench> [--flags]\n\
                  see rust/src/main.rs for per-command flags"
             );
             std::process::exit(2);
@@ -328,9 +350,17 @@ fn service_config(args: &Args) -> ServiceConfig {
     )
 }
 
+/// `--connect a,b,c` parsed into socket addresses (None = in-process).
+fn connect_addrs(args: &Args) -> Option<Vec<String>> {
+    args.get("connect").map(|v| {
+        v.split(',')
+            .filter(|a| !a.is_empty())
+            .map(str::to_string)
+            .collect()
+    })
+}
+
 fn cmd_sample(args: &Args) -> Result<()> {
-    let g = dataset_by_name(args.get_str("dataset", "wiki-s"), args.get_u64("seed", 1))?;
-    let parts = args.get_usize("parts", 4);
     let fanouts: Vec<usize> = args
         .get_str("fanouts", "15,10,5")
         .split(',')
@@ -340,8 +370,18 @@ fn cmd_sample(args: &Args) -> Result<()> {
     let batch = args.get_usize("batch", 64);
     let weighted = args.has("weighted");
 
-    let ea = AdaDNE::default().partition(&g, parts, 1);
-    let svc = SamplingService::launch_cfg(&g, &ea, 1, service_config(args))?;
+    // In-process pool over the dataset, or an already-running socket fleet
+    // (which must host the same dataset: `glisp serve --dataset ...`).
+    let connected = connect_addrs(args);
+    let svc = if let Some(addrs) = &connected {
+        SamplingService::connect(addrs, 0, service_config(args))?
+    } else {
+        let g = dataset_by_name(args.get_str("dataset", "wiki-s"), args.get_u64("seed", 1))?;
+        let parts = args.get_usize("parts", 4);
+        let ea = AdaDNE::default().partition(&g, parts, 1);
+        SamplingService::launch_cfg(&g, &ea, 1, service_config(args))?
+    };
+    let parts = svc.num_partitions();
     let mut client = svc.client(2);
     let mut rng = Rng::new(3);
     let cfg = SampleConfig {
@@ -350,10 +390,16 @@ fn cmd_sample(args: &Args) -> Result<()> {
     };
     let timer = Timer::start();
     let mut slots = 0usize;
+    // Running FNV fingerprint over every sampled level — the cross-process
+    // bit-equality witness CI diffs between deployments.
+    let mut sampled: Vec<u32> = Vec::new();
     for _ in 0..batches {
         let seeds = balanced_seeds(&svc, batch / parts.max(1), &mut rng);
         let tree = sample_tree(&mut client, &seeds, &fanouts, &cfg)?;
         slots += tree.total_slots();
+        for lvl in &tree.levels {
+            sampled.extend_from_slice(lvl);
+        }
     }
     let secs = timer.secs();
     println!(
@@ -362,17 +408,22 @@ fn cmd_sample(args: &Args) -> Result<()> {
         fmt_duration(secs),
         slots as f64 / secs
     );
-    let wl = svc.workload();
+    println!("sample digest: {:016x}", u32_digest(&sampled));
+    let wl = svc.workload()?;
     let norm = glisp::coordinator::metrics::normalized_workload(&wl);
     println!("per-server workload (edges scanned): {wl:?}");
     println!(
         "normalized: {:?}",
         norm.iter().map(|x| (x * 100.0).round() / 100.0).collect::<Vec<_>>()
     );
-    if svc.config.workers > 1 {
-        println!("per-worker requests (pool attribution): {:?}", svc.worker_requests());
+    if svc.config.workers > 1 || connected.is_some() {
+        println!("per-worker requests (pool attribution): {:?}", svc.worker_requests()?);
     }
-    svc.shutdown();
+    if connected.is_some() && !args.has("shutdown-remote") {
+        svc.disconnect();
+    } else {
+        svc.shutdown();
+    }
     Ok(())
 }
 
@@ -385,8 +436,17 @@ fn cmd_train(args: &Args) -> Result<()> {
     let classes = 8;
     let g = generator::labeled_community_graph(n, n * 12, classes, 0.9, &mut rng);
     let labels = Arc::new(g.label.clone());
-    let ea = AdaDNE::default().partition(&g, parts, 1);
-    let svc = SamplingService::launch_cfg(&g, &ea, 1, service_config(args))?;
+    // In-process service, or an already-running `glisp serve --graph train`
+    // fleet hosting the identical graph/partitioning (losses bit-equal
+    // either way — DESIGN.md §12).
+    let connected = connect_addrs(args);
+    let svc = if let Some(addrs) = &connected {
+        SamplingService::connect(addrs, g.n, service_config(args))?
+    } else {
+        let ea = AdaDNE::default().partition(&g, parts, 1);
+        SamplingService::launch_cfg(&g, &ea, 1, service_config(args))?
+    };
+    let parts = svc.num_partitions();
     let features = FeatureStore::labeled(64, labels.clone(), classes, 0.6);
     let mut trainer = Trainer::new(
         Runtime::default_dir(),
@@ -435,6 +495,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         let mean: f32 = chunk.iter().sum::<f32>() / chunk.len() as f32;
         println!("step {:>5}  loss {:.4}", i * 10 + chunk.len(), mean);
     }
+    // FNV-1a over the full loss curve's f32 bit patterns: equal digests ⇔
+    // bit-equal training, the CI witness for in-process vs socket runs.
+    println!("loss digest: {:016x}", f32_digest(&losses));
     println!(
         "trained {steps} steps in {} ({:.2} steps/s, {:.0} samples/s)",
         fmt_duration(secs),
@@ -447,11 +510,18 @@ fn cmd_train(args: &Args) -> Result<()> {
         let acc = trainer.evaluate(&test_seeds, &test_labels)?;
         println!("test accuracy: {acc:.3}");
     }
-    svc.shutdown();
+    if connected.is_some() && !args.has("shutdown-remote") {
+        svc.disconnect();
+    } else {
+        svc.shutdown();
+    }
     Ok(())
 }
 
 fn cmd_infer(args: &Args) -> Result<()> {
+    if let Some(addrs) = connect_addrs(args) {
+        return cmd_infer_connect(args, &addrs);
+    }
     let n = args.get_usize("n", 10_000);
     let parts = args.get_usize("parts", 4);
     let layers = args.get_usize("layers", 2);
@@ -535,5 +605,123 @@ fn cmd_infer(args: &Args) -> Result<()> {
             rep.dynamic_hit_ratio
         );
     }
+    Ok(())
+}
+
+/// `glisp infer --connect`: samplewise vertex embedding with every K-hop
+/// tree sampled through the socket fleet (`glisp serve --graph infer`
+/// processes hosting the same chung_lu graph). The layerwise engine reads
+/// its partitions from local memory by design (DESIGN.md §8) and so has no
+/// remote mode; the samplewise path is the honest distributed-inference
+/// story (only trees cross the wire, features stay client-side).
+fn cmd_infer_connect(args: &Args, addrs: &[String]) -> Result<()> {
+    let n = args.get_usize("n", 10_000);
+    let layers = args.get_usize("layers", 2);
+    let mut rng = Rng::new(args.get_u64("seed", 1));
+    let g = generator::chung_lu(n, n * 7, 2.1, &mut rng);
+
+    let svc = SamplingService::connect(
+        addrs,
+        g.n,
+        ServiceConfig::new(1, args.get_usize("shard-size", 0)),
+    )?;
+    println!(
+        "connected to {} partition servers: {:?}",
+        svc.num_partitions(),
+        svc.endpoints.iter().map(|e| e.peer()).collect::<Vec<_>>()
+    );
+    let client = svc.client(4);
+    let runtime = Runtime::load_with_layers(Runtime::default_dir(), layers)?;
+    let enc = init_encoder_params(&runtime, 3)?;
+    let mut sw = SamplewiseRunner::new(&g, runtime, FeatureStore::unlabeled(64), enc, 5)?;
+    let timer = Timer::start();
+    let (h, rep) = sw.run_vertex_embedding_via(&client, g.n)?;
+    println!(
+        "samplewise vertex embedding via sampling service: {:.2}s, {} vertex-computations",
+        timer.secs(),
+        rep.vertices_computed
+    );
+    println!("embedding digest: {:016x}", f32_digest(&h));
+    if args.has("shutdown-remote") {
+        svc.shutdown();
+    } else {
+        svc.disconnect();
+    }
+    Ok(())
+}
+
+/// `glisp serve`: run ONE partition's sampling-server pool as this process,
+/// listening on a socket, until a client sends the Shutdown frame. The
+/// partition comes from `--load DIR` (saved by `glisp partition --save`) or
+/// is rebuilt from the named deterministic stack (`--graph train|infer|
+/// quickstart` or `--dataset NAME`) — bit-identical to what the matching
+/// client builds, because graph generation, AdaDNE and the structure build
+/// are all seed-driven (DESIGN.md §10).
+fn cmd_serve(args: &Args) -> Result<()> {
+    let part_id = args
+        .get_usize("partition", usize::MAX);
+    anyhow::ensure!(part_id != usize::MAX, "serve requires --partition <id>");
+    let listen = args
+        .get("listen")
+        .context("serve requires --listen tcp:HOST:PORT or unix:PATH")?;
+    let workers = args.get_usize("workers", 1);
+    // Must match the launch seed of the client-side reference run
+    // (every in-repo launch site uses 1).
+    let service_seed = args.get_u64("service-seed", 1);
+
+    let part = if let Some(dir) = args.get("load") {
+        glisp::graph::io::load_partition(
+            std::path::Path::new(dir),
+            &format!("part{part_id}"),
+        )?
+    } else {
+        let parts = args.get_usize("parts", 4);
+        let seed = args.get_u64("seed", 1);
+        let g = if let Some(name) = args.get("dataset") {
+            dataset_by_name(name, seed)?
+        } else {
+            match args.get_str("graph", "train") {
+                // The `glisp train` / train_e2e stack.
+                "train" => {
+                    let n = args.get_usize("n", 20_000);
+                    let mut rng = Rng::new(seed);
+                    generator::labeled_community_graph(n, n * 12, 8, 0.9, &mut rng)
+                }
+                // The `glisp infer --connect` stack.
+                "infer" => {
+                    let n = args.get_usize("n", 10_000);
+                    let mut rng = Rng::new(seed);
+                    generator::chung_lu(n, n * 7, 2.1, &mut rng)
+                }
+                // The quickstart example's stack.
+                "quickstart" => {
+                    let mut rng = Rng::new(42);
+                    generator::labeled_community_graph(5_000, 60_000, 8, 0.9, &mut rng)
+                }
+                other => bail!("unknown --graph {other} (train|infer|quickstart)"),
+            }
+        };
+        let ea = AdaDNE::default().partition(&g, parts, 1);
+        let mut pgs = glisp::graph::build_partitions_threads(
+            &g,
+            &ea.part_of_edge,
+            parts,
+            workers.max(1),
+        )?;
+        anyhow::ensure!(part_id < pgs.len(), "--partition {part_id} out of range 0..{parts}");
+        pgs.swap_remove(part_id)
+    };
+    anyhow::ensure!(
+        part.part_id == part_id,
+        "partition file serves partition {} but --partition {part_id} was requested",
+        part.part_id
+    );
+
+    let srv = serve_partition(Arc::new(part), listen, service_seed, workers)?;
+    // CI and scripts wait for this line (and for unix socket files) before
+    // starting clients.
+    println!("serving partition {part_id} at {} ({workers} workers)", srv.addr());
+    srv.join();
+    println!("partition {part_id} server stopped");
     Ok(())
 }

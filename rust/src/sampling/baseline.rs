@@ -82,6 +82,7 @@ mod tests {
         let base_wl: Vec<f64> = stack
             .service
             .workload()
+            .unwrap()
             .iter()
             .map(|&w| w.max(1) as f64)
             .collect();
@@ -94,7 +95,7 @@ mod tests {
         let svc = SamplingService::launch(&g, &ea, 1).unwrap();
         let mut gclient = svc.client(3);
         sample_tree(&mut gclient, &seeds, &[15, 10], &SampleConfig::default()).unwrap();
-        let glisp_wl: Vec<f64> = svc.workload().iter().map(|&w| w.max(1) as f64).collect();
+        let glisp_wl: Vec<f64> = svc.workload().unwrap().iter().map(|&w| w.max(1) as f64).collect();
         let glisp_balance = balance_ratio(&glisp_wl);
         svc.shutdown();
 

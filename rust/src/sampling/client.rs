@@ -19,11 +19,11 @@
 //! reports *which* partitions failed so the coordinator can surface it.
 
 use anyhow::{bail, Result};
-use std::sync::mpsc::Sender;
 use std::sync::Arc;
 
 use crate::graph::csr::VId;
-use crate::sampling::request::{GatherRequest, GatherResponse, SampleConfig, ServerMsg};
+use crate::sampling::request::{GatherRequest, GatherResponse, SampleConfig};
+use crate::sampling::transport::Transport;
 use crate::util::bitset::BitMatrix;
 use crate::util::rng::Rng;
 use crate::util::topk::TopK;
@@ -51,7 +51,10 @@ impl OneHopSample {
 
 #[derive(Clone)]
 pub struct SamplingClient {
-    pub servers: Vec<Sender<ServerMsg>>,
+    /// One transport endpoint per partition (in-process channel or socket
+    /// connection — the Gather/Apply logic below cannot tell the
+    /// difference, which is the DESIGN.md §12 bit-identity argument).
+    pub servers: Vec<Arc<dyn Transport>>,
     /// Global vertex → partition membership bits (from the partitioner).
     pub membership: Arc<BitMatrix>,
     pub mode: RouteMode,
@@ -127,12 +130,10 @@ impl SamplingClient {
             let n_shards = sv_seeds.len().div_ceil(shard);
             shards_of[srv] = n_shards;
             total_sent += n_shards;
-            let send_shard = |req: GatherRequest| -> Result<()> {
-                if self.servers[srv].send(ServerMsg::Gather(req, tx.clone())).is_err() {
-                    bail!("sampling server for partition {srv} hung up before the gather");
-                }
-                Ok(())
-            };
+            // Transport errors already name the partition and its peer
+            // address (socket) or channel (in-process).
+            let send_shard =
+                |req: GatherRequest| -> Result<()> { self.servers[srv].send_gather(req, &tx) };
             if n_shards == 1 {
                 send_shard(GatherRequest {
                     seeds: sv_seeds,
@@ -140,6 +141,7 @@ impl SamplingClient {
                     cfg: cfg.clone(),
                     salt,
                     seed_offset: 0,
+                    token: 0,
                 })?;
             } else {
                 for (si, chunk) in sv_seeds.chunks(shard).enumerate() {
@@ -149,6 +151,7 @@ impl SamplingClient {
                         cfg: cfg.clone(),
                         salt,
                         seed_offset: (si * shard) as u32,
+                        token: 0,
                     })?;
                 }
             }
@@ -165,8 +168,9 @@ impl SamplingClient {
                     responses[r.part_id][slot] = Some(r);
                 }
                 Err(_) => {
-                    let missing: Vec<usize> = (0..p)
+                    let missing: Vec<String> = (0..p)
                         .filter(|&s| responses[s].iter().any(|r| r.is_none()))
+                        .map(|s| format!("{s} ({})", self.servers[s].peer()))
                         .collect();
                     bail!("sampling server(s) for partition(s) {missing:?} died mid-gather");
                 }
@@ -241,8 +245,13 @@ mod tests {
     use crate::graph::generator;
     use crate::graph::hetero::build_partitions;
     use crate::partition::{AdaDNE, Partitioner};
+    use crate::sampling::request::ServerMsg;
     use crate::sampling::server::{spawn, spawn_pool, ServerStats};
+    use crate::sampling::transport::ChannelTransport;
+    use std::sync::mpsc::Sender;
 
+    /// Raw pool inboxes are returned alongside the client so tests can
+    /// sabotage individual servers (dead_server below).
     fn launch_small_sized(
         workers: usize,
         shard_size: usize,
@@ -259,22 +268,28 @@ mod tests {
             }
         }
         let mut servers = Vec::new();
+        let mut endpoints: Vec<Arc<dyn Transport>> = Vec::new();
         for p in parts {
-            if workers == 1 {
-                let (tx, _h) = spawn(Arc::new(p), Arc::new(ServerStats::default()), 9);
-                servers.push(tx);
+            let pa = Arc::new(p);
+            let st = Arc::new(ServerStats::with_workers(workers));
+            let tx = if workers == 1 {
+                let (tx, _h) = spawn(pa.clone(), st.clone(), 9);
+                tx
             } else {
-                let (tx, _h) = spawn_pool(
-                    Arc::new(p),
-                    Arc::new(ServerStats::with_workers(workers)),
-                    9,
-                    workers,
-                );
-                servers.push(tx);
-            }
+                let (tx, _h) = spawn_pool(pa.clone(), st.clone(), 9, workers);
+                tx
+            };
+            endpoints.push(Arc::new(ChannelTransport {
+                part_id: pa.part_id,
+                inbox: tx.clone(),
+                stats: st,
+                graph: pa,
+                workers,
+            }));
+            servers.push(tx);
         }
         let client = SamplingClient {
-            servers: servers.clone(),
+            servers: endpoints,
             membership: Arc::new(membership),
             mode: RouteMode::AllReplicas,
             rng: Rng::new(77),

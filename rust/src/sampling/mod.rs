@@ -1,7 +1,10 @@
 //! Graph sampling service (paper §III-C): Gather-Apply K-hop neighbor
 //! sampling over per-partition servers, with Vitter Algorithm D uniform
 //! sampling, Efraimidis–Spirakis A-ES weighted sampling, and the
-//! DistDGL-like single-owner baseline.
+//! DistDGL-like single-owner baseline. The protocol is transport-neutral
+//! (DESIGN.md §12): `wire` is the binary frame codec, `transport` carries
+//! it over in-process channels or TCP/Unix sockets, and the service/client
+//! layers above cannot tell the deployments apart (bit-identical samples).
 
 pub mod aes;
 pub mod algo_d;
@@ -11,8 +14,14 @@ pub mod request;
 pub mod server;
 pub mod service;
 pub mod subgraph;
+pub mod transport;
+pub mod wire;
 
 pub use client::{OneHopSample, RouteMode, SamplingClient};
 pub use request::{Direction, GatherRequest, GatherResponse, SampleConfig, PAD};
 pub use service::{balanced_seeds, SamplingService, ServiceConfig};
 pub use subgraph::{sample_tree, TreeSample};
+pub use transport::{
+    serve_partition, ChannelTransport, RemoteServer, SocketTransport, Transport,
+};
+pub use wire::{MembersInfo, StatsSnapshot, WIRE_VERSION};

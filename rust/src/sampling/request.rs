@@ -1,7 +1,9 @@
 //! Wire types of the sampling service — the client↔server protocol of the
-//! Gather-Apply architecture (paper Fig. 5 / Algorithms 1–4). Transport is
-//! `std::sync::mpsc` channels between threads (DESIGN.md §3: the paper's
-//! load-balance phenomena are transport-independent).
+//! Gather-Apply architecture (paper Fig. 5 / Algorithms 1–4). The message
+//! types are transport-independent (DESIGN.md §3): in-process they travel
+//! over `std::sync::mpsc` channels, across processes they are serialized
+//! by [`crate::sampling::wire`] and carried over TCP/Unix sockets by
+//! [`crate::sampling::transport`] (DESIGN.md §12).
 
 use crate::graph::csr::VId;
 
@@ -59,6 +61,12 @@ pub struct GatherRequest {
     /// seed_offset + i), which makes responses bit-identical for any shard
     /// split and any worker count.
     pub seed_offset: u32,
+    /// Transport correlation id, echoed verbatim in the response. Socket
+    /// transports assign it so concurrent gathers (e.g. pipelined batch
+    /// producers) can share one connection and still route each response
+    /// back to its caller; in-process channels have a reply channel per
+    /// call and leave it 0. Never an input to sampling.
+    pub token: u64,
 }
 
 /// Per-seed sampling stream index mixer shared by server and tests: the
@@ -84,6 +92,9 @@ pub struct GatherResponse {
     pub scores: Vec<f64>,
     /// Edges scanned serving this request — the workload unit of Fig. 10.
     pub work_edges: u64,
+    /// Echo of [`GatherRequest::token`] (response demultiplexing on shared
+    /// socket connections; 0 in-process).
+    pub token: u64,
 }
 
 impl GatherResponse {
@@ -121,6 +132,7 @@ mod tests {
             neighbors: vec![7, 8, 1, 2, 3],
             scores: vec![],
             work_edges: 0,
+            token: 0,
         };
         assert_eq!(r.neighbors_of(0), &[7, 8]);
         assert_eq!(r.neighbors_of(1), &[] as &[VId]);

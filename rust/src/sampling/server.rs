@@ -178,6 +178,7 @@ impl PartitionServer {
                 Vec::new()
             },
             work_edges: 0,
+            token: req.token,
         };
         resp.offsets.push(0);
         for (i, &seed) in req.seeds.iter().enumerate() {
@@ -377,6 +378,7 @@ mod tests {
             salt,
             cfg,
             seed_offset: 0,
+            token: 0,
         }
     }
 
@@ -558,6 +560,7 @@ mod tests {
                         salt,
                         cfg: cfg.clone(),
                         seed_offset: (si * shard) as u32,
+                        token: 0,
                     });
                     assert_eq!(r.seed_offset as usize, si * shard);
                     for i in 0..chunk.len() {
@@ -617,6 +620,7 @@ mod tests {
                     salt: 13,
                     cfg: SampleConfig::default(),
                     seed_offset: (s * 8) as u32,
+                    token: s as u64,
                 },
                 rtx.clone(),
             ))

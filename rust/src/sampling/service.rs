@@ -5,16 +5,27 @@
 //! §III-C's "one hop sampling request of high degree vertices handled by
 //! multiple servers" realized inside each partition by the worker pool +
 //! client-side seed-range sharding (DESIGN.md §9).
+//!
+//! Since the wire refactor (DESIGN.md §12) the service is also the client
+//! face of a *distributed* deployment: [`SamplingService::connect`] joins
+//! partition servers running as separate `glisp serve` processes over
+//! TCP/Unix sockets, and [`SamplingService::launch_remote`] spins up the
+//! socket deployment in-process (loopback) for tests and benchmarks. Both
+//! yield the same `SamplingClient` API, and the per-seed RNG contract
+//! makes every sampled bit identical across transports.
 
-use std::sync::mpsc::Sender;
+use anyhow::{bail, Context, Result};
 use std::sync::Arc;
 
 use crate::graph::csr::{Graph, VId};
 use crate::graph::hetero::{build_partitions_threads, PartitionGraph};
 use crate::partition::EdgeAssignment;
 use crate::sampling::client::{RouteMode, SamplingClient};
-use crate::sampling::request::ServerMsg;
 use crate::sampling::server::{spawn_pool, ServerStats};
+use crate::sampling::transport::{
+    serve_partition, ChannelTransport, RemoteServer, SocketTransport, Transport,
+};
+use crate::sampling::wire::StatsSnapshot;
 use crate::util::bitset::BitMatrix;
 use crate::util::rng::Rng;
 
@@ -25,7 +36,9 @@ use crate::util::rng::Rng;
 /// protocol).
 #[derive(Clone, Copy, Debug)]
 pub struct ServiceConfig {
-    /// Pool workers per partition sharing one inbox.
+    /// Pool workers per partition sharing one inbox. For a connected
+    /// (socket) service this is decided by each `glisp serve` process and
+    /// the field is ignored client-side.
     pub workers: usize,
     /// Max seeds per Gather shard (client-side request splitting);
     /// `usize::MAX` or 0 = never split.
@@ -53,12 +66,36 @@ impl ServiceConfig {
     }
 }
 
+/// Replica vertex-id list of one partition, as the service knows it:
+/// borrowed from the in-process partition structure, or shipped over the
+/// wire by the Members RPC when the partition lives in another process.
+enum MembersRef {
+    Local(Arc<PartitionGraph>),
+    Remote(Arc<Vec<VId>>),
+}
+
+impl MembersRef {
+    fn ids(&self) -> &[VId] {
+        match self {
+            MembersRef::Local(p) => &p.global_id,
+            MembersRef::Remote(ids) => ids,
+        }
+    }
+}
+
 pub struct SamplingService {
-    pub servers: Vec<Sender<ServerMsg>>,
+    /// One transport endpoint per partition, ordered by partition id.
+    pub endpoints: Vec<Arc<dyn Transport>>,
+    /// Direct stats handles — populated only for in-process deployments
+    /// (tests peek at individual counters through these); across the wire
+    /// use [`Self::workload`] etc., which go through the Stats RPC.
     pub stats: Vec<Arc<ServerStats>>,
     pub membership: Arc<BitMatrix>,
+    /// In-process partition structures; empty for a connected service
+    /// (the graphs live in the server processes).
     pub partitions: Vec<Arc<PartitionGraph>>,
     pub config: ServiceConfig,
+    members: Vec<MembersRef>,
     handles: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -66,7 +103,7 @@ impl SamplingService {
     /// Partition `g` with `assign` and launch one single-worker server per
     /// partition (the paper's base deployment). Errors if the assignment
     /// doesn't match the graph (edge count or partition ids).
-    pub fn launch(g: &Graph, assign: &EdgeAssignment, seed: u64) -> anyhow::Result<Self> {
+    pub fn launch(g: &Graph, assign: &EdgeAssignment, seed: u64) -> Result<Self> {
         Self::launch_cfg(g, assign, seed, ServiceConfig::default())
     }
 
@@ -79,7 +116,7 @@ impl SamplingService {
         assign: &EdgeAssignment,
         seed: u64,
         cfg: ServiceConfig,
-    ) -> anyhow::Result<Self> {
+    ) -> Result<Self> {
         let parts = build_partitions_threads(
             g,
             &assign.part_of_edge,
@@ -110,33 +147,145 @@ impl SamplingService {
             }
         }
         let membership = Arc::new(membership);
-        let mut servers = Vec::new();
+        let mut endpoints: Vec<Arc<dyn Transport>> = Vec::new();
         let mut stats = Vec::new();
         let mut handles = Vec::new();
         let mut partitions = Vec::new();
+        let mut members = Vec::new();
         for p in parts {
             let st = Arc::new(ServerStats::with_workers(cfg.workers));
             let pa = Arc::new(p);
             let (tx, hs) = spawn_pool(pa.clone(), st.clone(), seed, cfg.workers);
-            servers.push(tx);
+            endpoints.push(Arc::new(ChannelTransport {
+                part_id: pa.part_id,
+                inbox: tx,
+                stats: st.clone(),
+                graph: pa.clone(),
+                workers: cfg.workers,
+            }));
             stats.push(st);
             handles.extend(hs);
+            members.push(MembersRef::Local(pa.clone()));
             partitions.push(pa);
         }
         Self {
-            servers,
+            endpoints,
             stats,
             membership,
             partitions,
             config: cfg,
+            members,
             handles,
         }
+    }
+
+    /// Partition `g`, then run every partition server behind a socket
+    /// listener (`listens[p]`, `tcp:`/`unix:` syntax; `tcp:127.0.0.1:0`
+    /// picks a free port) and connect back to them — the loopback
+    /// multi-process deployment in one call, used by tests and the fig09
+    /// wire rows. Returns the connected service plus the server handles
+    /// (shut the service down first, then `join` the servers).
+    pub fn launch_remote(
+        g: &Graph,
+        assign: &EdgeAssignment,
+        seed: u64,
+        cfg: ServiceConfig,
+        listens: &[String],
+    ) -> Result<(Self, Vec<RemoteServer>)> {
+        let cfg = ServiceConfig::new(cfg.workers, cfg.shard_size);
+        if listens.len() != assign.num_parts {
+            bail!(
+                "need one listen address per partition: got {} for {} partitions",
+                listens.len(),
+                assign.num_parts
+            );
+        }
+        let parts = build_partitions_threads(
+            g,
+            &assign.part_of_edge,
+            assign.num_parts,
+            cfg.workers.max(1),
+        )?;
+        let mut servers = Vec::new();
+        for (p, listen) in parts.into_iter().zip(listens) {
+            servers.push(serve_partition(Arc::new(p), listen, seed, cfg.workers)?);
+        }
+        let addrs: Vec<String> = servers.iter().map(|s| s.addr().to_string()).collect();
+        let svc = Self::connect(&addrs, g.n, cfg)?;
+        Ok((svc, servers))
+    }
+
+    /// Join an already-running socket deployment: dial each address, learn
+    /// every server's partition id and replica set over the Members RPC,
+    /// and assemble the same membership matrix a local launch would build.
+    /// The servers must cover partitions 0..P exactly (any order of
+    /// addresses); `n` is the global vertex count (grown to fit the
+    /// replica ids if passed too small, e.g. 0 when unknown).
+    pub fn connect(addrs: &[String], n: usize, cfg: ServiceConfig) -> Result<Self> {
+        let cfg = ServiceConfig::new(cfg.workers, cfg.shard_size);
+        let mut eps = Vec::new();
+        for addr in addrs {
+            let t = SocketTransport::connect(addr)
+                .with_context(|| format!("joining sampling fleet member {addr}"))?;
+            let info = t.members()?;
+            eps.push((t, info));
+        }
+        eps.sort_by_key(|(_, m)| m.part_id);
+        for (want, (t, m)) in eps.iter().enumerate() {
+            if m.part_id as usize != want {
+                bail!(
+                    "connected servers must cover partitions 0..{} exactly: \
+                     expected partition {want}, but {} serves partition {}",
+                    addrs.len(),
+                    t.peer(),
+                    m.part_id
+                );
+            }
+        }
+        let max_gid = eps
+            .iter()
+            .flat_map(|(_, m)| m.ids.iter())
+            .copied()
+            .max()
+            .map(|v| v as usize + 1)
+            .unwrap_or(0);
+        let n = n.max(max_gid);
+        let mut membership = BitMatrix::new(n, eps.len());
+        let mut endpoints: Vec<Arc<dyn Transport>> = Vec::new();
+        let mut members = Vec::new();
+        for (t, m) in eps {
+            for &gid in &m.ids {
+                membership.set(gid as usize, m.part_id as usize);
+            }
+            endpoints.push(t);
+            members.push(MembersRef::Remote(Arc::new(m.ids)));
+        }
+        Ok(Self {
+            endpoints,
+            stats: Vec::new(),
+            membership: Arc::new(membership),
+            partitions: Vec::new(),
+            config: cfg,
+            members,
+            handles: Vec::new(),
+        })
+    }
+
+    /// Number of partitions the service fronts (local or remote).
+    pub fn num_partitions(&self) -> usize {
+        self.endpoints.len()
+    }
+
+    /// Replica vertex ids of partition `p` — local structure or the
+    /// Members handshake, whichever this deployment has.
+    pub fn members_of(&self, p: usize) -> &[VId] {
+        self.members[p].ids()
     }
 
     /// A client with GLISP's cooperative replica routing.
     pub fn client(&self, seed: u64) -> SamplingClient {
         SamplingClient {
-            servers: self.servers.clone(),
+            servers: self.endpoints.clone(),
             membership: self.membership.clone(),
             mode: RouteMode::AllReplicas,
             rng: Rng::new(seed),
@@ -147,7 +296,7 @@ impl SamplingService {
     /// A client with single-owner routing (the DistDGL-like baseline).
     pub fn owner_client(&self, owner: Arc<Vec<u16>>, seed: u64) -> SamplingClient {
         SamplingClient {
-            servers: self.servers.clone(),
+            servers: self.endpoints.clone(),
             membership: self.membership.clone(),
             mode: RouteMode::Owner(owner),
             rng: Rng::new(seed),
@@ -155,95 +304,107 @@ impl SamplingService {
         }
     }
 
+    /// Per-partition stats snapshots (one Stats RPC each for sockets,
+    /// atomic loads in-process) — the backing for all counter views below.
+    pub fn stats_snapshots(&self) -> Result<Vec<StatsSnapshot>> {
+        self.endpoints.iter().map(|e| e.stats()).collect()
+    }
+
     /// Per-server edges-scanned counters — the Fig. 10 workload metric.
     /// Invariant to `workers`/`shard_size` (per-seed streams).
-    pub fn workload(&self) -> Vec<u64> {
-        self.stats
-            .iter()
-            .map(|s| s.edges_scanned.load(std::sync::atomic::Ordering::Relaxed))
-            .collect()
+    pub fn workload(&self) -> Result<Vec<u64>> {
+        Ok(self.stats_snapshots()?.iter().map(|s| s.edges_scanned).collect())
     }
 
     /// Requests (shards) served per pool worker, per partition — the
     /// DESIGN.md §9 attribution view of how a partition's pool shares its
     /// inbox.
-    pub fn worker_requests(&self) -> Vec<Vec<u64>> {
-        self.stats
-            .iter()
-            .map(|s| {
-                s.worker_requests
-                    .iter()
-                    .map(|w| w.load(std::sync::atomic::Ordering::Relaxed))
-                    .collect()
-            })
-            .collect()
+    pub fn worker_requests(&self) -> Result<Vec<Vec<u64>>> {
+        Ok(self
+            .stats_snapshots()?
+            .into_iter()
+            .map(|s| s.worker_requests)
+            .collect())
     }
 
     /// CPU seconds spent serving gathers per pool worker, per partition
     /// (sums to [`Self::busy_secs`] per partition) — shows whether a
     /// pool's members actually share the serving time or one worker wins
     /// every inbox race.
-    pub fn worker_busy_secs(&self) -> Vec<Vec<f64>> {
-        self.stats
-            .iter()
-            .map(|s| {
-                s.worker_busy_ns
-                    .iter()
-                    .map(|w| w.load(std::sync::atomic::Ordering::Relaxed) as f64 / 1e9)
-                    .collect()
-            })
-            .collect()
+    pub fn worker_busy_secs(&self) -> Result<Vec<Vec<f64>>> {
+        Ok(self
+            .stats_snapshots()?
+            .into_iter()
+            .map(|s| s.worker_busy_ns.iter().map(|&ns| ns as f64 / 1e9).collect())
+            .collect())
     }
 
-    pub fn reset_stats(&self) {
-        for s in &self.stats {
-            s.reset();
+    pub fn reset_stats(&self) -> Result<()> {
+        for e in &self.endpoints {
+            e.reset_stats()?;
         }
+        Ok(())
     }
 
     /// Per-server busy time in seconds (all pool workers summed). `max` of
     /// this vector is the simulated distributed makespan of the traffic
     /// since the last reset (the servers run in parallel in the paper's
     /// deployment).
-    pub fn busy_secs(&self) -> Vec<f64> {
-        self.stats
+    pub fn busy_secs(&self) -> Result<Vec<f64>> {
+        Ok(self
+            .stats_snapshots()?
             .iter()
-            .map(|s| s.busy_ns.load(std::sync::atomic::Ordering::Relaxed) as f64 / 1e9)
-            .collect()
+            .map(|s| s.busy_ns as f64 / 1e9)
+            .collect())
     }
 
-    /// Total memory of the partitioned graph structures (Table III).
-    pub fn graph_bytes(&self) -> usize {
-        self.partitions.iter().map(|p| p.nbytes()).sum()
+    /// Total memory of the partitioned graph structures (Table III),
+    /// wherever they live.
+    pub fn graph_bytes(&self) -> Result<usize> {
+        Ok(self
+            .stats_snapshots()?
+            .iter()
+            .map(|s| s.graph_bytes as usize)
+            .sum())
     }
 
-    /// Per-worker shutdown: every pool member consumes exactly one
-    /// `Shutdown` off the shared inbox, then all threads are joined.
+    /// Stop every partition server this service fronts — pool workers
+    /// in-process, whole `glisp serve` processes across the wire — then
+    /// join any local threads. Errors from individual endpoints are
+    /// swallowed (a server that already died is already shut down).
     pub fn shutdown(self) {
-        for tx in &self.servers {
-            for _ in 0..self.config.workers {
-                let _ = tx.send(ServerMsg::Shutdown);
-            }
+        for e in &self.endpoints {
+            let _ = e.shutdown();
         }
         for h in self.handles {
             let _ = h.join();
         }
     }
+
+    /// Drop the connections WITHOUT stopping the servers — the multi-client
+    /// counterpart of [`Self::shutdown`] for socket deployments (another
+    /// trainer may still be using the fleet). In-process pools have no
+    /// detached existence, so for them this leaks the pool threads; only
+    /// call it on connected services.
+    pub fn disconnect(self) {}
 }
 
 /// Seeds spread evenly across partitions — the paper's "balanced seed"
 /// experimental setup (§IV-C): uniformly sample an equal number of seed
-/// vertices from each partition.
+/// vertices from each partition. Uses the replica id lists, so it works
+/// identically (same RNG consumption, same seeds) for local and connected
+/// services.
 pub fn balanced_seeds(
     service: &SamplingService,
     per_part: usize,
     rng: &mut Rng,
 ) -> Vec<VId> {
-    let mut seeds = Vec::with_capacity(per_part * service.partitions.len());
-    for p in &service.partitions {
+    let mut seeds = Vec::with_capacity(per_part * service.num_partitions());
+    for p in 0..service.num_partitions() {
+        let ids = service.members_of(p);
         for _ in 0..per_part {
-            let l = rng.usize(p.nv());
-            seeds.push(p.global(l as u32));
+            let l = rng.usize(ids.len());
+            seeds.push(ids[l]);
         }
     }
     seeds
@@ -271,7 +432,7 @@ mod tests {
             .unwrap();
         assert_eq!(got.offsets.len(), 33);
         // Work must be spread across all servers for AllReplicas routing.
-        let wl = svc.workload();
+        let wl = svc.workload().unwrap();
         assert_eq!(wl.len(), 4);
         assert!(wl.iter().sum::<u64>() > 0);
         svc.shutdown();
@@ -354,7 +515,7 @@ mod tests {
             "every replica server must see every hub occurrence: {per_server:?}"
         );
 
-        svc.reset_stats();
+        svc.reset_stats().unwrap();
         let owner = Arc::new(vec![0u16; g.n]);
         let mut oc = svc.owner_client(owner, 10);
         oc.sample_one_hop(&seeds, 8, &SampleConfig::default())
@@ -486,10 +647,86 @@ mod tests {
         assert_eq!(t1.levels, t4.levels, "tree levels must be bit-equal");
         assert_eq!(t1.masks, t4.masks);
         assert_eq!(totals1, totals4, "per-partition stats totals must match");
-        for (stats, tot) in svc4.worker_requests().iter().zip(&totals4) {
+        for (stats, tot) in svc4.worker_requests().unwrap().iter().zip(&totals4) {
             assert_eq!(stats.len(), 4);
             assert_eq!(stats.iter().sum::<u64>(), tot[0], "attribution sums to requests");
         }
         svc4.shutdown();
+    }
+
+    /// The headline invariant of DESIGN.md §12 at unit scope: a loopback
+    /// socket deployment (launch_remote over ephemeral TCP ports) returns
+    /// the same sampled bits, workload counters and balanced seeds as the
+    /// in-process pool with identical (seed, workers, shard_size).
+    #[test]
+    fn loopback_socket_service_matches_in_process() {
+        let mut rng = Rng::new(145);
+        let g = generator::heterogeneous_graph(700, 8000, 2, 3, 2.2, &mut rng);
+        let ea = AdaDNE::default().partition(&g, 3, 0);
+        let cfg = ServiceConfig::new(2, 9);
+
+        let local = SamplingService::launch_cfg(&g, &ea, 1, cfg).unwrap();
+        let mut srng = Rng::new(5);
+        let seeds = balanced_seeds(&local, 16, &mut srng);
+        let mut c = local.client(6);
+        let want = sample_tree(&mut c, &seeds, &[5, 3], &SampleConfig::default()).unwrap();
+        let want_wl = local.workload().unwrap();
+        local.shutdown();
+
+        let listens: Vec<String> = (0..3).map(|_| "tcp:127.0.0.1:0".to_string()).collect();
+        let (svc, servers) = SamplingService::launch_remote(&g, &ea, 1, cfg, &listens).unwrap();
+        assert_eq!(svc.num_partitions(), 3);
+        assert!(svc.partitions.is_empty(), "connected service holds no graphs");
+        let mut srng = Rng::new(5);
+        let remote_seeds = balanced_seeds(&svc, 16, &mut srng);
+        assert_eq!(remote_seeds, seeds, "balanced seeds must not depend on transport");
+        let mut c = svc.client(6);
+        let got = sample_tree(&mut c, &remote_seeds, &[5, 3], &SampleConfig::default()).unwrap();
+        assert_eq!(got.levels, want.levels, "socket transport changed sampled bits");
+        assert_eq!(got.masks, want.masks);
+        assert_eq!(svc.workload().unwrap(), want_wl, "workload counters must cross the wire");
+        assert!(svc.graph_bytes().unwrap() > 0);
+        svc.shutdown();
+        for s in servers {
+            s.join();
+        }
+    }
+
+    /// Connecting in shuffled address order still yields partition-id
+    /// ordered endpoints; a fleet that misses a partition is rejected with
+    /// an error naming the offender.
+    #[test]
+    fn connect_orders_by_partition_and_rejects_gaps() {
+        let mut rng = Rng::new(146);
+        let g = generator::chung_lu(400, 3600, 2.1, &mut rng);
+        let ea = AdaDNE::default().partition(&g, 3, 0);
+        let cfg = ServiceConfig::new(1, usize::MAX);
+        let listens: Vec<String> = (0..3).map(|_| "tcp:127.0.0.1:0".to_string()).collect();
+        let (svc, servers) = SamplingService::launch_remote(&g, &ea, 1, cfg, &listens).unwrap();
+        let addrs: Vec<String> =
+            svc.endpoints.iter().map(|e| e.peer().to_string()).collect();
+        svc.disconnect();
+
+        // Reversed address order must still map endpoint i -> partition i.
+        let shuffled: Vec<String> = addrs.iter().rev().cloned().collect();
+        let svc2 = SamplingService::connect(&shuffled, g.n, cfg).unwrap();
+        for (i, e) in svc2.endpoints.iter().enumerate() {
+            assert_eq!(e.part_id(), i);
+        }
+        svc2.disconnect();
+
+        // Dropping partition 0 from the fleet is a coverage error.
+        let partial: Vec<String> = addrs[1..].to_vec();
+        let err = SamplingService::connect(&partial, g.n, cfg).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("cover partitions"), "{msg}");
+        assert!(msg.contains(&addrs[1]), "error must name the offending server: {msg}");
+
+        // Shut the fleet down through a fresh connection.
+        let svc3 = SamplingService::connect(&addrs, g.n, cfg).unwrap();
+        svc3.shutdown();
+        for s in servers {
+            s.join();
+        }
     }
 }

@@ -1,0 +1,845 @@
+//! Transport abstraction for the sampling protocol (DESIGN.md §12): the
+//! same `GatherRequest`/`GatherResponse` messages flow either over
+//! in-process mpsc channels ([`ChannelTransport`] — the deployment every
+//! prior PR used) or over TCP/Unix-socket connections ([`SocketTransport`])
+//! to partition servers running as separate `glisp serve` processes.
+//!
+//! The per-seed RNG contract (DESIGN.md §7/§9) is what makes this split
+//! free: a server derives every sampled value from (partition seed, request
+//! salt, seed index), none of which the transport touches, so a loopback
+//! multi-process run is bit-identical to the in-process pool for any
+//! (workers, shard_size) — asserted end-to-end in `tests/wire_service.rs`
+//! and the CI wire job.
+//!
+//! Server side: [`serve_partition`] binds one listener per partition and
+//! feeds the existing [`spawn_pool`] worker pool through the same mpsc
+//! inbox the in-process service uses — pool workers cannot tell which
+//! transport a shard arrived by. Each accepted connection gets one reader
+//! thread (decodes frames, forwards gathers, answers control RPCs) and one
+//! writer thread (drains the pool's responses back onto the socket); both
+//! reuse per-connection scratch buffers, so steady-state encode/decode
+//! does not allocate per request.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+use crate::graph::csr::VId;
+use crate::graph::hetero::PartitionGraph;
+use crate::sampling::request::{GatherRequest, GatherResponse, ServerMsg};
+use crate::sampling::server::{spawn_pool, ServerStats};
+use crate::sampling::wire::{
+    encode_frame, read_frame, Frame, MembersInfo, StatsSnapshot,
+};
+
+/// One partition server endpoint, as seen by `SamplingClient` /
+/// `SamplingService`. Implementations must deliver the response for every
+/// accepted [`Transport::send_gather`] to the given reply sender, or make
+/// the failure observable by dropping the sender (a hung-up channel is the
+/// client's "server died mid-gather" signal — identical semantics in- and
+/// cross-process).
+pub trait Transport: Send + Sync {
+    /// Partition this endpoint serves.
+    fn part_id(&self) -> usize;
+
+    /// Human-readable peer name for error messages: `"channel"` in-process,
+    /// the socket address (e.g. `"tcp:127.0.0.1:4070"`) across the wire.
+    fn peer(&self) -> &str;
+
+    /// Submit one gather shard; its response (token echoed) arrives on
+    /// `reply`.
+    fn send_gather(&self, req: GatherRequest, reply: &Sender<GatherResponse>) -> Result<()>;
+
+    /// Snapshot the server's workload counters.
+    fn stats(&self) -> Result<StatsSnapshot>;
+
+    /// Zero the server's workload counters.
+    fn reset_stats(&self) -> Result<()>;
+
+    /// The server's partition id, pool size and replicated vertex ids.
+    fn members(&self) -> Result<MembersInfo>;
+
+    /// Stop the server (all pool workers). Idempotence is not required —
+    /// the service calls it once per endpoint.
+    fn shutdown(&self) -> Result<()>;
+}
+
+// ---------------------------------------------------------------------------
+// In-process endpoint
+// ---------------------------------------------------------------------------
+
+/// The classic in-process deployment: the endpoint IS the pool inbox, plus
+/// direct handles on the shared stats/graph for control operations.
+pub struct ChannelTransport {
+    pub part_id: usize,
+    pub inbox: Sender<ServerMsg>,
+    pub stats: Arc<ServerStats>,
+    pub graph: Arc<PartitionGraph>,
+    pub workers: usize,
+}
+
+impl Transport for ChannelTransport {
+    fn part_id(&self) -> usize {
+        self.part_id
+    }
+
+    fn peer(&self) -> &str {
+        "channel"
+    }
+
+    fn send_gather(&self, req: GatherRequest, reply: &Sender<GatherResponse>) -> Result<()> {
+        self.inbox
+            .send(ServerMsg::Gather(req, reply.clone()))
+            .map_err(|_| {
+                anyhow!(
+                    "sampling server for partition {} (channel) hung up before the gather",
+                    self.part_id
+                )
+            })
+    }
+
+    fn stats(&self) -> Result<StatsSnapshot> {
+        Ok(StatsSnapshot::capture(self.part_id, &self.stats, self.graph.nbytes()))
+    }
+
+    fn reset_stats(&self) -> Result<()> {
+        self.stats.reset();
+        Ok(())
+    }
+
+    fn members(&self) -> Result<MembersInfo> {
+        Ok(MembersInfo {
+            part_id: self.part_id as u32,
+            workers: self.workers as u32,
+            ids: self.graph.global_id.clone(),
+        })
+    }
+
+    fn shutdown(&self) -> Result<()> {
+        // One Shutdown per pool member (each worker consumes exactly one).
+        for _ in 0..self.workers.max(1) {
+            let _ = self.inbox.send(ServerMsg::Shutdown);
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Socket plumbing shared by client and server sides
+// ---------------------------------------------------------------------------
+
+/// A connected stream, TCP or Unix. Address syntax accepted everywhere a
+/// peer is named: `unix:/path/to.sock`, `tcp:HOST:PORT`, or bare
+/// `HOST:PORT` (TCP).
+pub enum Conn {
+    Tcp(TcpStream),
+    Unix(UnixStream),
+}
+
+impl Conn {
+    pub fn dial(addr: &str) -> Result<Conn> {
+        if let Some(path) = addr.strip_prefix("unix:") {
+            Ok(Conn::Unix(UnixStream::connect(path).with_context(|| {
+                format!("connecting to sampling server at unix:{path}")
+            })?))
+        } else {
+            let hostport = addr.strip_prefix("tcp:").unwrap_or(addr);
+            Ok(Conn::Tcp(TcpStream::connect(hostport).with_context(|| {
+                format!("connecting to sampling server at tcp:{hostport}")
+            })?))
+        }
+    }
+
+    /// An independently readable/writable handle on the same connection
+    /// (read half / write half split).
+    pub fn try_clone(&self) -> Result<Conn> {
+        Ok(match self {
+            Conn::Tcp(s) => Conn::Tcp(s.try_clone().context("cloning tcp stream")?),
+            Conn::Unix(s) => Conn::Unix(s.try_clone().context("cloning unix stream")?),
+        })
+    }
+
+    /// Disable Nagle batching on TCP (gather shards are latency-bound
+    /// small writes); no-op for Unix sockets.
+    fn set_low_latency(&self) {
+        if let Conn::Tcp(s) = self {
+            let _ = s.set_nodelay(true);
+        }
+    }
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.read(buf),
+            Conn::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.write(buf),
+            Conn::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.flush(),
+            Conn::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// A bound listener, TCP or Unix. Binding `tcp:HOST:0` picks a free port;
+/// [`Listener::local_addr`] reports the dialable address either way. A
+/// stale Unix socket file at the requested path is removed before binding
+/// (the standard daemon restart convention).
+pub enum Listener {
+    Tcp(TcpListener),
+    Unix(UnixListener, PathBuf),
+}
+
+impl Listener {
+    pub fn bind(addr: &str) -> Result<Listener> {
+        if let Some(path) = addr.strip_prefix("unix:") {
+            let pb = PathBuf::from(path);
+            if pb.exists() {
+                std::fs::remove_file(&pb)
+                    .with_context(|| format!("removing stale socket {path}"))?;
+            }
+            Ok(Listener::Unix(
+                UnixListener::bind(&pb).with_context(|| format!("binding unix:{path}"))?,
+                pb,
+            ))
+        } else {
+            let hostport = addr.strip_prefix("tcp:").unwrap_or(addr);
+            Ok(Listener::Tcp(
+                TcpListener::bind(hostport).with_context(|| format!("binding tcp:{hostport}"))?,
+            ))
+        }
+    }
+
+    /// The dialable address, in the same `tcp:`/`unix:` syntax `dial`
+    /// accepts (with the real port when bound to port 0).
+    pub fn local_addr(&self) -> Result<String> {
+        Ok(match self {
+            Listener::Tcp(l) => format!("tcp:{}", l.local_addr().context("tcp local_addr")?),
+            Listener::Unix(_, p) => format!("unix:{}", p.display()),
+        })
+    }
+
+    fn accept(&self) -> std::io::Result<Conn> {
+        Ok(match self {
+            Listener::Tcp(l) => Conn::Tcp(l.accept()?.0),
+            Listener::Unix(l, _) => Conn::Unix(l.accept()?.0),
+        })
+    }
+}
+
+impl Drop for Listener {
+    fn drop(&mut self) {
+        if let Listener::Unix(_, p) = self {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client side: SocketTransport
+// ---------------------------------------------------------------------------
+
+/// Write half of a client connection plus its reusable encode scratch and
+/// the token counter — one lock covers all three, so token assignment and
+/// frame write are atomic per request.
+struct WriteHalf {
+    conn: Conn,
+    buf: Vec<u8>,
+    next_token: u64,
+}
+
+/// Control-RPC replies routed off the shared reader thread. The `ctl`
+/// mutex in [`SocketTransport`] admits one control RPC at a time, so the
+/// next control frame received always belongs to the caller holding it.
+enum CtlReply {
+    Stats(StatsSnapshot),
+    Members(MembersInfo),
+    Ack,
+}
+
+/// A network client endpoint: one connection to one `glisp serve`
+/// partition process, shared by every [`crate::sampling::SamplingClient`]
+/// clone of a service (pipelined producers included — responses are
+/// demultiplexed by token). All errors name the peer address and the
+/// partition id, so a dead or unreachable fleet member is identifiable
+/// from the message alone.
+pub struct SocketTransport {
+    peer: String,
+    part_id: AtomicUsize,
+    wr: Mutex<WriteHalf>,
+    pending: Arc<Mutex<HashMap<u64, Sender<GatherResponse>>>>,
+    /// Set by the reader thread on its way out. Ordering contract with
+    /// `send_gather`: the reader STORES this before clearing `pending`,
+    /// and a sender INSERTS into `pending` before loading it — so every
+    /// interleaving either fails the send or gets its pending entry
+    /// dropped, and no caller can wait on a token the dead reader will
+    /// never deliver.
+    closed: Arc<AtomicBool>,
+    ctl: Mutex<Receiver<CtlReply>>,
+    reader: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl SocketTransport {
+    /// Dial `addr` and fetch the peer's identity (partition id). The
+    /// reader thread lives until the connection closes.
+    pub fn connect(addr: &str) -> Result<Arc<SocketTransport>> {
+        let conn = Conn::dial(addr)?;
+        conn.set_low_latency();
+        let rd = conn.try_clone()?;
+        let pending: Arc<Mutex<HashMap<u64, Sender<GatherResponse>>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let (ctl_tx, ctl_rx) = channel();
+        let closed = Arc::new(AtomicBool::new(false));
+        let t = Arc::new(SocketTransport {
+            peer: addr.to_string(),
+            part_id: AtomicUsize::new(usize::MAX),
+            wr: Mutex::new(WriteHalf { conn, buf: Vec::new(), next_token: 1 }),
+            pending: pending.clone(),
+            closed: closed.clone(),
+            ctl: Mutex::new(ctl_rx),
+            reader: Mutex::new(None),
+        });
+        let handle = std::thread::spawn(move || {
+            reader_loop(rd, pending, closed, ctl_tx);
+        });
+        *t.reader.lock().unwrap() = Some(handle);
+        let info = t.members().with_context(|| format!("handshaking with {addr}"))?;
+        t.part_id.store(info.part_id as usize, Ordering::Relaxed);
+        Ok(t)
+    }
+
+    fn write_frame(&self, f: &Frame) -> Result<()> {
+        let mut wr = self.wr.lock().unwrap();
+        encode_frame(&mut wr.buf, f);
+        let WriteHalf { conn, buf, .. } = &mut *wr;
+        conn.write_all(buf).map_err(|e| {
+            anyhow!(
+                "partition {} at {}: write failed: {e}",
+                self.part_id.load(Ordering::Relaxed),
+                self.peer
+            )
+        })
+    }
+
+    /// One control request/reply round trip. Holding the `ctl` receiver
+    /// lock serializes control RPCs per connection (gathers keep flowing
+    /// concurrently — they are demultiplexed by token, not ordering).
+    fn control(&self, f: Frame, what: &str) -> Result<CtlReply> {
+        let rx = self.ctl.lock().unwrap();
+        self.write_frame(&f)?;
+        rx.recv().map_err(|_| {
+            anyhow!(
+                "partition {} at {}: connection closed awaiting {what}",
+                self.part_id.load(Ordering::Relaxed),
+                self.peer
+            )
+        })
+    }
+}
+
+impl Transport for SocketTransport {
+    fn part_id(&self) -> usize {
+        self.part_id.load(Ordering::Relaxed)
+    }
+
+    fn peer(&self) -> &str {
+        &self.peer
+    }
+
+    fn send_gather(&self, mut req: GatherRequest, reply: &Sender<GatherResponse>) -> Result<()> {
+        let mut wr = self.wr.lock().unwrap();
+        let token = wr.next_token;
+        wr.next_token += 1;
+        req.token = token;
+        self.pending.lock().unwrap().insert(token, reply.clone());
+        encode_frame(&mut wr.buf, &Frame::Gather(req));
+        let WriteHalf { conn, buf, .. } = &mut *wr;
+        if let Err(e) = conn.write_all(buf) {
+            self.pending.lock().unwrap().remove(&token);
+            bail!(
+                "sampling server for partition {} at {}: gather write failed: {e}",
+                self.part_id.load(Ordering::Relaxed),
+                self.peer
+            );
+        }
+        // The OS may happily buffer a write to a dead peer. If the reader
+        // already exited (it clears `pending` AFTER setting `closed`, and
+        // we inserted BEFORE this load), nobody will ever deliver this
+        // token — fail the send instead of letting the caller wait on it.
+        if self.closed.load(Ordering::SeqCst) {
+            self.pending.lock().unwrap().remove(&token);
+            bail!(
+                "sampling server for partition {} at {}: connection closed before the gather",
+                self.part_id.load(Ordering::Relaxed),
+                self.peer
+            );
+        }
+        Ok(())
+    }
+
+    fn stats(&self) -> Result<StatsSnapshot> {
+        match self.control(Frame::Stats, "stats")? {
+            CtlReply::Stats(s) => Ok(s),
+            _ => bail!("partition {} at {}: unexpected stats reply", self.part_id(), self.peer),
+        }
+    }
+
+    fn reset_stats(&self) -> Result<()> {
+        match self.control(Frame::ResetStats, "reset-stats ack")? {
+            CtlReply::Ack => Ok(()),
+            _ => bail!("partition {} at {}: unexpected reset reply", self.part_id(), self.peer),
+        }
+    }
+
+    fn members(&self) -> Result<MembersInfo> {
+        match self.control(Frame::Members, "members")? {
+            CtlReply::Members(m) => Ok(m),
+            _ => bail!("partition {} at {}: unexpected members reply", self.part_id(), self.peer),
+        }
+    }
+
+    fn shutdown(&self) -> Result<()> {
+        match self.control(Frame::Shutdown, "shutdown ack")? {
+            CtlReply::Ack => Ok(()),
+            _ => bail!("partition {} at {}: unexpected shutdown reply", self.part_id(), self.peer),
+        }
+    }
+}
+
+impl Drop for SocketTransport {
+    fn drop(&mut self) {
+        // Closing the write half is enough: the server sees EOF and tears
+        // the connection down; our reader thread then exits on its own EOF.
+        if let Some(h) = self.reader.lock().unwrap().take() {
+            if let Ok(mut wr) = self.wr.lock() {
+                let _ = match &mut wr.conn {
+                    Conn::Tcp(s) => s.shutdown(std::net::Shutdown::Both),
+                    Conn::Unix(s) => s.shutdown(std::net::Shutdown::Both),
+                };
+            }
+            let _ = h.join();
+        }
+    }
+}
+
+/// Client-side reader: demultiplex gather responses by token, forward
+/// control replies to the (single) waiting control RPC. Exit drops every
+/// pending reply sender, which is how in-flight `sample_one_hop` calls
+/// observe a dead connection.
+fn reader_loop(
+    mut rd: Conn,
+    pending: Arc<Mutex<HashMap<u64, Sender<GatherResponse>>>>,
+    closed: Arc<AtomicBool>,
+    ctl_tx: Sender<CtlReply>,
+) {
+    let mut scratch = Vec::new();
+    loop {
+        match read_frame(&mut rd, &mut scratch) {
+            Ok(Some(Frame::GatherResp(r))) => {
+                let tx = pending.lock().unwrap().remove(&r.token);
+                if let Some(tx) = tx {
+                    let _ = tx.send(r);
+                }
+            }
+            Ok(Some(Frame::StatsResp(s))) => {
+                let _ = ctl_tx.send(CtlReply::Stats(s));
+            }
+            Ok(Some(Frame::MembersResp(m))) => {
+                let _ = ctl_tx.send(CtlReply::Members(m));
+            }
+            Ok(Some(Frame::Ack)) => {
+                let _ = ctl_tx.send(CtlReply::Ack);
+            }
+            // Request kinds arriving at a client, clean EOF, or a decode
+            // error all end the connection.
+            Ok(Some(_)) | Ok(None) | Err(_) => break,
+        }
+    }
+    // Store-then-clear; see the `closed` field's ordering contract.
+    closed.store(true, Ordering::SeqCst);
+    pending.lock().unwrap().clear();
+}
+
+// ---------------------------------------------------------------------------
+// Server side
+// ---------------------------------------------------------------------------
+
+/// A partition server listening on a socket: the accept loop, every
+/// connection handler, and the underlying worker pool. `join` blocks until
+/// a client sends the Shutdown frame (or `stop` is called).
+pub struct RemoteServer {
+    addr: String,
+    stop: Arc<AtomicBool>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    inbox: Sender<ServerMsg>,
+    workers: usize,
+}
+
+impl RemoteServer {
+    /// The dialable address (real port if bound to port 0).
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Wait for the server to be shut down (by a client's Shutdown frame
+    /// or [`Self::stop`]).
+    pub fn join(self) {
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+
+    /// Local shutdown: stop the pool and the accept loop without waiting
+    /// for a client to ask.
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for _ in 0..self.workers {
+            let _ = self.inbox.send(ServerMsg::Shutdown);
+        }
+        // Unblock the accept loop with a throwaway connection.
+        let _ = Conn::dial(&self.addr);
+    }
+}
+
+/// Launch one partition server on a socket: `workers` pool threads over
+/// the standard shared inbox ([`spawn_pool`] — the same pool the
+/// in-process service launches), plus an accept loop that bridges
+/// connections onto it. `seed` must equal the in-process service seed for
+/// bit-identical sampling (the per-partition stream derivation lives in
+/// the pool, not here).
+pub fn serve_partition(
+    graph: Arc<PartitionGraph>,
+    listen: &str,
+    seed: u64,
+    workers: usize,
+) -> Result<RemoteServer> {
+    let workers = workers.max(1);
+    let listener = Listener::bind(listen)?;
+    let addr = listener.local_addr()?;
+    let stats = Arc::new(ServerStats::with_workers(workers));
+    let (inbox, mut handles) = spawn_pool(graph.clone(), stats.clone(), seed, workers);
+    let stop = Arc::new(AtomicBool::new(false));
+    let accept = {
+        let stop = stop.clone();
+        let inbox = inbox.clone();
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            loop {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let conn = match listener.accept() {
+                    Ok(c) => c,
+                    Err(_) => {
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        continue;
+                    }
+                };
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                conn.set_low_latency();
+                let ctx = ConnCtx {
+                    inbox: inbox.clone(),
+                    stats: stats.clone(),
+                    graph: graph.clone(),
+                    workers,
+                    stop: stop.clone(),
+                    self_addr: addr.clone(),
+                };
+                // Handlers are detached: they exit when their client
+                // disconnects (EOF) or on shutdown; the process/test
+                // lifetime is governed by the accept + pool threads.
+                std::thread::spawn(move || handle_conn(conn, ctx));
+            }
+        })
+    };
+    handles.push(accept);
+    Ok(RemoteServer { addr, stop, handles, inbox, workers })
+}
+
+struct ConnCtx {
+    inbox: Sender<ServerMsg>,
+    stats: Arc<ServerStats>,
+    graph: Arc<PartitionGraph>,
+    workers: usize,
+    stop: Arc<AtomicBool>,
+    self_addr: String,
+}
+
+/// Serialize + write one server→client frame. The write half and its
+/// encode scratch live behind one per-connection mutex shared between the
+/// reader (control replies) and the writer thread (gather responses).
+fn write_frame_locked(wr: &Mutex<(Conn, Vec<u8>)>, f: &Frame) -> bool {
+    let mut g = wr.lock().unwrap();
+    let (conn, buf) = &mut *g;
+    encode_frame(buf, f);
+    conn.write_all(buf).is_ok()
+}
+
+/// One client connection: decode requests, feed gathers to the pool inbox
+/// (tagged with this connection's reply channel), answer control RPCs
+/// inline. Responses flow back through a dedicated writer thread so slow
+/// clients never block pool workers.
+fn handle_conn(conn: Conn, ctx: ConnCtx) {
+    let Ok(write_conn) = conn.try_clone() else {
+        return;
+    };
+    let wr = Arc::new(Mutex::new((write_conn, Vec::new())));
+    let (resp_tx, resp_rx) = channel::<GatherResponse>();
+    let writer = {
+        let wr = wr.clone();
+        std::thread::spawn(move || {
+            while let Ok(resp) = resp_rx.recv() {
+                if !write_frame_locked(&wr, &Frame::GatherResp(resp)) {
+                    break;
+                }
+            }
+        })
+    };
+    let mut rd = conn;
+    let mut scratch = Vec::new();
+    loop {
+        match read_frame(&mut rd, &mut scratch) {
+            Ok(Some(Frame::Gather(req))) => {
+                if ctx.inbox.send(ServerMsg::Gather(req, resp_tx.clone())).is_err() {
+                    break; // pool already shut down
+                }
+            }
+            Ok(Some(Frame::Stats)) => {
+                let snap = StatsSnapshot::capture(
+                    ctx.graph.part_id,
+                    &ctx.stats,
+                    ctx.graph.nbytes(),
+                );
+                if !write_frame_locked(&wr, &Frame::StatsResp(snap)) {
+                    break;
+                }
+            }
+            Ok(Some(Frame::ResetStats)) => {
+                ctx.stats.reset();
+                if !write_frame_locked(&wr, &Frame::Ack) {
+                    break;
+                }
+            }
+            Ok(Some(Frame::Members)) => {
+                let m = MembersInfo {
+                    part_id: ctx.graph.part_id as u32,
+                    workers: ctx.workers as u32,
+                    ids: ctx.graph.global_id.clone(),
+                };
+                if !write_frame_locked(&wr, &Frame::MembersResp(m)) {
+                    break;
+                }
+            }
+            Ok(Some(Frame::Shutdown)) => {
+                // FIFO inbox: gathers already queued are served before the
+                // pool sees these Shutdowns, so an orderly client (which
+                // only shuts down after collecting its responses) loses
+                // nothing.
+                ctx.stop.store(true, Ordering::SeqCst);
+                for _ in 0..ctx.workers {
+                    let _ = ctx.inbox.send(ServerMsg::Shutdown);
+                }
+                write_frame_locked(&wr, &Frame::Ack);
+                // Unblock the accept loop so it observes the stop flag.
+                let _ = Conn::dial(&ctx.self_addr);
+                break;
+            }
+            // Response kinds arriving at a server, clean client
+            // disconnect, or garbage all end this connection (the server
+            // itself keeps running for other clients unless Shutdown was
+            // received).
+            Ok(Some(_)) | Ok(None) | Err(_) => break,
+        }
+    }
+    drop(resp_tx);
+    let _ = writer.join();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator;
+    use crate::graph::hetero::build_partitions;
+    use crate::partition::{AdaDNE, Partitioner};
+    use crate::sampling::request::SampleConfig;
+    use crate::util::rng::Rng;
+
+    fn one_partition() -> Arc<PartitionGraph> {
+        let mut rng = Rng::new(150);
+        let g = generator::chung_lu(400, 4000, 2.1, &mut rng);
+        let ea = AdaDNE::default().partition(&g, 1, 0);
+        Arc::new(build_partitions(&g, &ea.part_of_edge, 1).unwrap().remove(0))
+    }
+
+    fn gather(seeds: Vec<VId>, salt: u64) -> GatherRequest {
+        GatherRequest {
+            seeds,
+            fanout: 4,
+            cfg: SampleConfig::default(),
+            salt,
+            seed_offset: 0,
+            token: 0,
+        }
+    }
+
+    #[test]
+    fn socket_round_trip_matches_channel_transport() {
+        let pg = one_partition();
+        // Channel reference.
+        let stats = Arc::new(ServerStats::with_workers(2));
+        let (tx, hs) = spawn_pool(pg.clone(), stats.clone(), 7, 2);
+        let chan = ChannelTransport {
+            part_id: 0,
+            inbox: tx,
+            stats,
+            graph: pg.clone(),
+            workers: 2,
+        };
+        let (rtx, rrx) = channel();
+        chan.send_gather(gather((0..32).map(|i| pg.global(i)).collect(), 0xAB), &rtx)
+            .unwrap();
+        let want = rrx.recv().unwrap();
+
+        // Socket server on an ephemeral TCP port.
+        let srv = serve_partition(pg.clone(), "tcp:127.0.0.1:0", 7, 2).unwrap();
+        let sock = SocketTransport::connect(srv.addr()).unwrap();
+        assert_eq!(sock.part_id(), 0);
+        let (rtx, rrx) = channel();
+        sock.send_gather(gather((0..32).map(|i| pg.global(i)).collect(), 0xAB), &rtx)
+            .unwrap();
+        let got = rrx.recv().unwrap();
+        assert_eq!(got.neighbors, want.neighbors, "wire transport changed sampled bits");
+        assert_eq!(got.offsets, want.offsets);
+        assert_eq!(got.work_edges, want.work_edges);
+
+        // Control RPCs.
+        let m = sock.members().unwrap();
+        assert_eq!(m.ids, pg.global_id);
+        assert_eq!(m.workers, 2);
+        let s = sock.stats().unwrap();
+        assert_eq!(s.requests, 1);
+        assert_eq!(s.graph_bytes as usize, pg.nbytes());
+        sock.reset_stats().unwrap();
+        assert_eq!(sock.stats().unwrap().requests, 0);
+
+        // Remote shutdown terminates the whole server.
+        sock.shutdown().unwrap();
+        srv.join();
+        chan.shutdown().unwrap();
+        for h in hs {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn unix_socket_round_trip_and_stale_file_cleanup() {
+        let pg = one_partition();
+        let path = std::env::temp_dir().join(format!("glisp_t_{}.sock", std::process::id()));
+        // Pre-plant a stale socket file; bind must clear it.
+        std::fs::write(&path, b"stale").unwrap();
+        let addr = format!("unix:{}", path.display());
+        let srv = serve_partition(pg.clone(), &addr, 3, 1).unwrap();
+        let sock = SocketTransport::connect(srv.addr()).unwrap();
+        let (rtx, rrx) = channel();
+        sock.send_gather(gather(vec![pg.global(0), pg.global(1)], 5), &rtx).unwrap();
+        let resp = rrx.recv().unwrap();
+        assert_eq!(resp.offsets.len(), 3);
+        sock.shutdown().unwrap();
+        srv.join();
+        assert!(!path.exists(), "socket file must be cleaned up on shutdown");
+    }
+
+    #[test]
+    fn concurrent_gathers_demultiplex_by_token() {
+        let pg = one_partition();
+        let srv = serve_partition(pg.clone(), "tcp:127.0.0.1:0", 11, 4).unwrap();
+        let sock = SocketTransport::connect(srv.addr()).unwrap();
+        // Fire many gathers with distinct salts before reading anything;
+        // each reply channel must get exactly its own response back.
+        let mut rxs = Vec::new();
+        for salt in 0..24u64 {
+            let (rtx, rrx) = channel();
+            sock.send_gather(gather((0..8).map(|i| pg.global(i)).collect(), salt), &rtx)
+                .unwrap();
+            rxs.push((salt, rrx));
+        }
+        // Ground truth straight from a local pool with the same seed.
+        let stats = Arc::new(ServerStats::with_workers(1));
+        let (tx, hs) = spawn_pool(pg.clone(), stats.clone(), 11, 1);
+        for (salt, rrx) in rxs {
+            let got = rrx.recv().expect("response for in-flight gather");
+            let (wtx, wrx) = channel();
+            tx.send(ServerMsg::Gather(
+                gather((0..8).map(|i| pg.global(i)).collect(), salt),
+                wtx,
+            ))
+            .unwrap();
+            let want = wrx.recv().unwrap();
+            assert_eq!(got.neighbors, want.neighbors, "salt {salt} response misrouted");
+        }
+        sock.shutdown().unwrap();
+        srv.join();
+        tx.send(ServerMsg::Shutdown).unwrap();
+        for h in hs {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn transport_errors_name_peer_address_and_partition() {
+        let pg = one_partition();
+        let srv = serve_partition(pg.clone(), "tcp:127.0.0.1:0", 5, 1).unwrap();
+        let addr = srv.addr().to_string();
+        let sock = SocketTransport::connect(&addr).unwrap();
+        sock.shutdown().unwrap();
+        srv.join();
+        // The connection is gone; every operation must say WHERE it died.
+        let err = sock.stats().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains(&addr), "error must name the peer address: {msg}");
+        assert!(msg.contains("partition 0"), "error must name the partition: {msg}");
+        // The reader thread is provably gone (stats() above failed on its
+        // dropped control channel), so a gather must fail fast — either at
+        // write time (broken pipe) or at the closed-connection check that
+        // covers OS-buffered writes — and the error must name the peer.
+        let (rtx, rrx) = channel();
+        match sock.send_gather(gather(vec![pg.global(0)], 1), &rtx) {
+            Err(e) => {
+                let msg = format!("{e:#}");
+                assert!(msg.contains(&addr), "gather error must name the peer: {msg}");
+                assert!(msg.contains("partition 0"), "gather error must name partition: {msg}");
+            }
+            Ok(()) => {
+                // Belt and braces: even if a send slipped through, the dead
+                // reader must already have dropped every pending sender.
+                drop(rtx);
+                assert!(rrx.recv().is_err(), "no response may arrive post-shutdown");
+            }
+        }
+        // Dialing a dead address names it too.
+        let err = SocketTransport::connect(&addr).unwrap_err();
+        assert!(format!("{err:#}").contains(&addr), "{err:#}");
+    }
+}

@@ -1,0 +1,577 @@
+//! Length-prefixed binary wire codec for the sampling protocol — the
+//! serialization half of running partition servers as separate processes
+//! (DESIGN.md §12). Transport-agnostic: the same frames flow over TCP and
+//! Unix sockets ([`crate::sampling::transport`]).
+//!
+//! # Frame layout (all integers little-endian)
+//!
+//! ```text
+//! u32 len | u8 version | u8 kind | body
+//! ```
+//!
+//! `len` counts every byte after the prefix (version + kind + body).
+//! Decoding follows the `harness::bench::from_json` drift-gate philosophy:
+//! strict, not lenient — a version byte other than [`WIRE_VERSION`], an
+//! unknown kind, a truncated body, or trailing bytes after the body are
+//! all hard errors, so a peer built from a different protocol revision
+//! fails loudly at the first frame instead of desynchronizing silently.
+//! Any layout change (field added, widened, reordered) must bump
+//! [`WIRE_VERSION`]; there is deliberately no "ignore what you don't
+//! know" path.
+
+use anyhow::{bail, Context, Result};
+use std::io::Read;
+
+use crate::graph::csr::VId;
+use crate::sampling::request::{Direction, GatherRequest, GatherResponse, SampleConfig};
+use crate::sampling::server::ServerStats;
+
+/// Bump on ANY layout change; both sides reject a mismatch.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Upper bound on `len` accepted by [`read_frame`] — a corrupt or hostile
+/// length prefix must not drive a multi-gigabyte allocation.
+pub const MAX_FRAME: usize = 256 << 20;
+
+/// Point-in-time copy of one partition server's [`ServerStats`] counters
+/// (plus its graph footprint), shippable across the wire. This is how
+/// `SamplingService::workload()`/`busy_secs()` work identically for
+/// in-process and remote servers.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StatsSnapshot {
+    pub part_id: u32,
+    pub requests: u64,
+    pub seeds: u64,
+    pub edges_scanned: u64,
+    pub neighbors_returned: u64,
+    pub busy_ns: u64,
+    /// Bytes of the server's compact partition structure (Table III).
+    pub graph_bytes: u64,
+    pub worker_requests: Vec<u64>,
+    pub worker_busy_ns: Vec<u64>,
+}
+
+impl StatsSnapshot {
+    /// Snapshot shared atomics (Relaxed — same ordering the in-process
+    /// readers use).
+    pub fn capture(part_id: usize, stats: &ServerStats, graph_bytes: usize) -> Self {
+        use std::sync::atomic::Ordering::Relaxed;
+        Self {
+            part_id: part_id as u32,
+            requests: stats.requests.load(Relaxed),
+            seeds: stats.seeds.load(Relaxed),
+            edges_scanned: stats.edges_scanned.load(Relaxed),
+            neighbors_returned: stats.neighbors_returned.load(Relaxed),
+            busy_ns: stats.busy_ns.load(Relaxed),
+            graph_bytes: graph_bytes as u64,
+            worker_requests: stats.worker_requests.iter().map(|w| w.load(Relaxed)).collect(),
+            worker_busy_ns: stats.worker_busy_ns.iter().map(|w| w.load(Relaxed)).collect(),
+        }
+    }
+}
+
+/// A partition server's identity card, fetched once per connection: which
+/// partition it serves, its pool size, and the sorted global vertex ids it
+/// replicates (what `SamplingService::connect` builds the membership
+/// matrix and `balanced_seeds` draws from).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MembersInfo {
+    pub part_id: u32,
+    pub workers: u32,
+    pub ids: Vec<VId>,
+}
+
+/// Every message of the sampling protocol. Gather/GatherResp carry a
+/// client-assigned `token` so concurrent gathers can share one connection;
+/// the control messages (Stats/Members/ResetStats/Shutdown) are simple
+/// one-at-a-time request/reply pairs.
+#[derive(Clone, Debug)]
+pub enum Frame {
+    Gather(GatherRequest),
+    GatherResp(GatherResponse),
+    Stats,
+    StatsResp(StatsSnapshot),
+    ResetStats,
+    /// Generic control acknowledgement (ResetStats, Shutdown).
+    Ack,
+    Members,
+    MembersResp(MembersInfo),
+    Shutdown,
+}
+
+// Frame kind bytes. Never reuse a retired value within a version.
+const K_GATHER: u8 = 1;
+const K_GATHER_RESP: u8 = 2;
+const K_STATS: u8 = 3;
+const K_STATS_RESP: u8 = 4;
+const K_RESET_STATS: u8 = 5;
+const K_ACK: u8 = 6;
+const K_MEMBERS: u8 = 7;
+const K_MEMBERS_RESP: u8 = 8;
+const K_SHUTDOWN: u8 = 9;
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32s(buf: &mut Vec<u8>, xs: &[u32]) {
+    put_u32(buf, xs.len() as u32);
+    for &x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_u64s(buf: &mut Vec<u8>, xs: &[u64]) {
+    put_u32(buf, xs.len() as u32);
+    for &x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_f64s(buf: &mut Vec<u8>, xs: &[f64]) {
+    put_u32(buf, xs.len() as u32);
+    for &x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Encode one frame into `buf` (cleared first — callers keep one scratch
+/// per connection, so steady-state encoding allocates nothing).
+pub fn encode_frame(buf: &mut Vec<u8>, f: &Frame) {
+    buf.clear();
+    buf.extend_from_slice(&[0, 0, 0, 0]); // length prefix back-patched below
+    buf.push(WIRE_VERSION);
+    match f {
+        Frame::Gather(r) => {
+            buf.push(K_GATHER);
+            put_u64(buf, r.token);
+            put_u64(buf, r.salt);
+            put_u64(buf, r.fanout as u64);
+            put_u32(buf, r.seed_offset);
+            buf.push(match r.cfg.direction {
+                Direction::Out => 0,
+                Direction::In => 1,
+            });
+            buf.push(r.cfg.weighted as u8);
+            match r.cfg.etype {
+                None => buf.extend_from_slice(&[0, 0]),
+                Some(t) => buf.extend_from_slice(&[1, t]),
+            }
+            put_u32s(buf, &r.seeds);
+        }
+        Frame::GatherResp(r) => {
+            buf.push(K_GATHER_RESP);
+            put_u64(buf, r.token);
+            put_u32(buf, r.part_id as u32);
+            put_u32(buf, r.seed_offset);
+            put_u64(buf, r.work_edges);
+            put_u32s(buf, &r.offsets);
+            put_u32s(buf, &r.neighbors);
+            put_f64s(buf, &r.scores);
+        }
+        Frame::Stats => buf.push(K_STATS),
+        Frame::StatsResp(s) => {
+            buf.push(K_STATS_RESP);
+            put_u32(buf, s.part_id);
+            put_u64(buf, s.requests);
+            put_u64(buf, s.seeds);
+            put_u64(buf, s.edges_scanned);
+            put_u64(buf, s.neighbors_returned);
+            put_u64(buf, s.busy_ns);
+            put_u64(buf, s.graph_bytes);
+            put_u64s(buf, &s.worker_requests);
+            put_u64s(buf, &s.worker_busy_ns);
+        }
+        Frame::ResetStats => buf.push(K_RESET_STATS),
+        Frame::Ack => buf.push(K_ACK),
+        Frame::Members => buf.push(K_MEMBERS),
+        Frame::MembersResp(m) => {
+            buf.push(K_MEMBERS_RESP);
+            put_u32(buf, m.part_id);
+            put_u32(buf, m.workers);
+            put_u32s(buf, &m.ids);
+        }
+        Frame::Shutdown => buf.push(K_SHUTDOWN),
+    }
+    let len = (buf.len() - 4) as u32;
+    buf[..4].copy_from_slice(&len.to_le_bytes());
+}
+
+/// Strict cursor over a frame payload: every read is bounds-checked, and
+/// [`Cursor::finish`] rejects trailing bytes.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            bail!(
+                "truncated frame: wanted {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n * 8)?;
+        Ok(raw.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n * 8)?;
+        Ok(raw.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn finish(self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("{} trailing bytes after frame body", self.buf.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+/// Decode one frame payload (the bytes after the u32 length prefix).
+/// Strict: version/kind/length mismatches and trailing bytes are errors.
+pub fn decode_frame(payload: &[u8]) -> Result<Frame> {
+    let mut c = Cursor { buf: payload, pos: 0 };
+    let v = c.u8().context("frame shorter than the version byte")?;
+    if v != WIRE_VERSION {
+        bail!("wire version {v} != supported {WIRE_VERSION} (rebuild both sides)");
+    }
+    let kind = c.u8().context("frame shorter than the kind byte")?;
+    let frame = match kind {
+        K_GATHER => {
+            let token = c.u64()?;
+            let salt = c.u64()?;
+            let fanout = c.u64()? as usize;
+            let seed_offset = c.u32()?;
+            let direction = match c.u8()? {
+                0 => Direction::Out,
+                1 => Direction::In,
+                d => bail!("bad direction byte {d}"),
+            };
+            let weighted = match c.u8()? {
+                0 => false,
+                1 => true,
+                w => bail!("bad weighted byte {w}"),
+            };
+            let etype = match (c.u8()?, c.u8()?) {
+                (0, 0) => None,
+                (1, t) => Some(t),
+                (tag, _) => bail!("bad etype tag {tag}"),
+            };
+            Frame::Gather(GatherRequest {
+                seeds: c.u32s()?,
+                fanout,
+                cfg: SampleConfig { direction, weighted, etype },
+                salt,
+                seed_offset,
+                token,
+            })
+        }
+        K_GATHER_RESP => {
+            let token = c.u64()?;
+            let part_id = c.u32()? as usize;
+            let seed_offset = c.u32()?;
+            let work_edges = c.u64()?;
+            Frame::GatherResp(GatherResponse {
+                part_id,
+                seed_offset,
+                offsets: c.u32s()?,
+                neighbors: c.u32s()?,
+                scores: c.f64s()?,
+                work_edges,
+                token,
+            })
+        }
+        K_STATS => Frame::Stats,
+        K_STATS_RESP => Frame::StatsResp(StatsSnapshot {
+            part_id: c.u32()?,
+            requests: c.u64()?,
+            seeds: c.u64()?,
+            edges_scanned: c.u64()?,
+            neighbors_returned: c.u64()?,
+            busy_ns: c.u64()?,
+            graph_bytes: c.u64()?,
+            worker_requests: c.u64s()?,
+            worker_busy_ns: c.u64s()?,
+        }),
+        K_RESET_STATS => Frame::ResetStats,
+        K_ACK => Frame::Ack,
+        K_MEMBERS => Frame::Members,
+        K_MEMBERS_RESP => Frame::MembersResp(MembersInfo {
+            part_id: c.u32()?,
+            workers: c.u32()?,
+            ids: c.u32s()?,
+        }),
+        K_SHUTDOWN => Frame::Shutdown,
+        k => bail!("unknown frame kind {k}"),
+    };
+    c.finish()?;
+    Ok(frame)
+}
+
+/// Read one frame off a blocking stream into the reusable `scratch`
+/// buffer. `Ok(None)` = clean EOF at a frame boundary (the peer closed the
+/// connection); EOF mid-frame is an error.
+pub fn read_frame<R: Read>(r: &mut R, scratch: &mut Vec<u8>) -> Result<Option<Frame>> {
+    let mut prefix = [0u8; 4];
+    // A clean close lands exactly between frames: zero bytes of the next
+    // length prefix.
+    let mut got = 0usize;
+    while got < 4 {
+        match r.read(&mut prefix[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => bail!("connection closed mid length-prefix ({got}/4 bytes)"),
+            Ok(k) => got += k,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e).context("reading frame length"),
+        }
+    }
+    let len = u32::from_le_bytes(prefix) as usize;
+    if len > MAX_FRAME {
+        bail!("frame length {len} exceeds cap {MAX_FRAME} (corrupt stream?)");
+    }
+    scratch.clear();
+    scratch.resize(len, 0);
+    r.read_exact(scratch).with_context(|| format!("reading {len}-byte frame body"))?;
+    decode_frame(scratch)
+        .map(Some)
+        .with_context(|| format!("decoding {len}-byte frame"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::prop_check;
+    use crate::util::rng::Rng;
+    use crate::{prop_assert, prop_assert_eq};
+
+    fn round_trip(f: &Frame) -> Frame {
+        let mut buf = Vec::new();
+        encode_frame(&mut buf, f);
+        let len = u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+        assert_eq!(len, buf.len() - 4, "length prefix must cover the payload");
+        decode_frame(&buf[4..]).expect("round trip decode")
+    }
+
+    fn arb_cfg(rng: &mut Rng) -> SampleConfig {
+        SampleConfig {
+            direction: if rng.usize(2) == 0 { Direction::Out } else { Direction::In },
+            weighted: rng.usize(2) == 1,
+            etype: match rng.usize(3) {
+                0 => None,
+                _ => Some(rng.usize(256) as u8),
+            },
+        }
+    }
+
+    #[test]
+    fn gather_request_round_trips() {
+        prop_check("gather request round trip", 120, |rng| {
+            // Empty seed lists and usize::MAX fanout are legal frames.
+            let n = [0, 1, 7, 300][rng.usize(4)];
+            let req = GatherRequest {
+                seeds: (0..n).map(|_| rng.next_u64() as VId).collect(),
+                fanout: if rng.usize(5) == 0 { usize::MAX } else { rng.usize(1 << 20) },
+                cfg: arb_cfg(rng),
+                salt: rng.next_u64(),
+                seed_offset: rng.next_u64() as u32,
+                token: rng.next_u64(),
+            };
+            let Frame::Gather(got) = round_trip(&Frame::Gather(req.clone())) else {
+                return Err("kind changed in flight".into());
+            };
+            prop_assert_eq!(got.seeds, req.seeds);
+            prop_assert_eq!(got.fanout, req.fanout);
+            prop_assert_eq!(got.salt, req.salt);
+            prop_assert_eq!(got.seed_offset, req.seed_offset);
+            prop_assert_eq!(got.token, req.token);
+            prop_assert_eq!(got.cfg.weighted, req.cfg.weighted);
+            prop_assert_eq!(got.cfg.etype, req.cfg.etype);
+            prop_assert!(got.cfg.direction == req.cfg.direction, "direction drifted");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gather_response_round_trips() {
+        prop_check("gather response round trip", 120, |rng| {
+            let seeds = rng.usize(40);
+            let mut offsets = vec![0u32];
+            for _ in 0..seeds {
+                offsets.push(offsets.last().unwrap() + rng.usize(6) as u32);
+            }
+            let total = *offsets.last().unwrap() as usize;
+            let weighted = rng.usize(2) == 1;
+            let resp = GatherResponse {
+                part_id: rng.usize(1 << 16),
+                seed_offset: rng.next_u64() as u32,
+                offsets,
+                neighbors: (0..total).map(|_| rng.next_u64() as VId).collect(),
+                scores: if weighted { (0..total).map(|_| rng.f64()).collect() } else { vec![] },
+                work_edges: rng.next_u64(),
+                token: rng.next_u64(),
+            };
+            let Frame::GatherResp(got) = round_trip(&Frame::GatherResp(resp.clone())) else {
+                return Err("kind changed in flight".into());
+            };
+            prop_assert_eq!(got.part_id, resp.part_id);
+            prop_assert_eq!(got.seed_offset, resp.seed_offset);
+            prop_assert_eq!(got.offsets, resp.offsets);
+            prop_assert_eq!(got.neighbors, resp.neighbors);
+            prop_assert_eq!(got.work_edges, resp.work_edges);
+            prop_assert_eq!(got.token, resp.token);
+            // Scores carry exact f64 bits (A-ES merge order depends on them).
+            prop_assert_eq!(
+                got.scores.iter().map(|s| s.to_bits()).collect::<Vec<_>>(),
+                resp.scores.iter().map(|s| s.to_bits()).collect::<Vec<_>>()
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn stats_and_members_round_trip() {
+        prop_check("stats/members round trip", 80, |rng| {
+            let workers = rng.usize(6);
+            let snap = StatsSnapshot {
+                part_id: rng.next_u64() as u32,
+                requests: rng.next_u64(),
+                seeds: rng.next_u64(),
+                edges_scanned: rng.next_u64(),
+                neighbors_returned: rng.next_u64(),
+                busy_ns: rng.next_u64(),
+                graph_bytes: rng.next_u64(),
+                worker_requests: (0..workers).map(|_| rng.next_u64()).collect(),
+                worker_busy_ns: (0..workers).map(|_| rng.next_u64()).collect(),
+            };
+            let Frame::StatsResp(got) = round_trip(&Frame::StatsResp(snap.clone())) else {
+                return Err("kind changed in flight".into());
+            };
+            prop_assert_eq!(got, snap);
+            let m = MembersInfo {
+                part_id: rng.next_u64() as u32,
+                workers: rng.next_u64() as u32,
+                ids: (0..rng.usize(200)).map(|_| rng.next_u64() as VId).collect(),
+            };
+            let Frame::MembersResp(got) = round_trip(&Frame::MembersResp(m.clone())) else {
+                return Err("kind changed in flight".into());
+            };
+            prop_assert_eq!(got, m);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn control_frames_round_trip() {
+        for f in [Frame::Stats, Frame::ResetStats, Frame::Ack, Frame::Members, Frame::Shutdown] {
+            let got = round_trip(&f);
+            assert_eq!(std::mem::discriminant(&got), std::mem::discriminant(&f));
+        }
+    }
+
+    #[test]
+    fn strict_decode_rejects_bad_version() {
+        let mut buf = Vec::new();
+        encode_frame(&mut buf, &Frame::Stats);
+        buf[4] = WIRE_VERSION + 1;
+        let err = decode_frame(&buf[4..]).unwrap_err();
+        assert!(format!("{err:#}").contains("wire version"), "{err:#}");
+    }
+
+    #[test]
+    fn strict_decode_rejects_unknown_kind() {
+        let err = decode_frame(&[WIRE_VERSION, 200]).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown frame kind"), "{err:#}");
+    }
+
+    #[test]
+    fn strict_decode_rejects_truncation_at_every_length() {
+        // Truncating a real Gather frame at ANY interior byte must fail —
+        // there is no prefix of the body that parses as a shorter frame.
+        let req = GatherRequest {
+            seeds: vec![5, 6, 7],
+            fanout: 4,
+            cfg: SampleConfig { weighted: true, ..Default::default() },
+            salt: 99,
+            seed_offset: 3,
+            token: 12,
+        };
+        let mut buf = Vec::new();
+        encode_frame(&mut buf, &Frame::Gather(req));
+        let payload = &buf[4..];
+        for cut in 0..payload.len() {
+            assert!(
+                decode_frame(&payload[..cut]).is_err(),
+                "truncation at {cut}/{} must not parse",
+                payload.len()
+            );
+        }
+    }
+
+    #[test]
+    fn strict_decode_rejects_trailing_garbage() {
+        let mut buf = Vec::new();
+        encode_frame(&mut buf, &Frame::Members);
+        let mut payload = buf[4..].to_vec();
+        payload.push(0xAB);
+        let err = decode_frame(&payload).unwrap_err();
+        assert!(format!("{err:#}").contains("trailing"), "{err:#}");
+    }
+
+    #[test]
+    fn read_frame_handles_streams_and_eof() {
+        use std::io::Cursor;
+        let mut buf = Vec::new();
+        let mut stream = Vec::new();
+        encode_frame(&mut buf, &Frame::Stats);
+        stream.extend_from_slice(&buf);
+        encode_frame(&mut buf, &Frame::Ack); // scratch reuse: same buf
+        stream.extend_from_slice(&buf);
+        let mut rd = Cursor::new(stream.clone());
+        let mut scratch = Vec::new();
+        assert!(matches!(read_frame(&mut rd, &mut scratch), Ok(Some(Frame::Stats))));
+        assert!(matches!(read_frame(&mut rd, &mut scratch), Ok(Some(Frame::Ack))));
+        // Clean EOF at a frame boundary.
+        assert!(matches!(read_frame(&mut rd, &mut scratch), Ok(None)));
+        // EOF mid-frame is an error, not a silent None.
+        let mut rd = Cursor::new(stream[..stream.len() - 2].to_vec());
+        assert!(matches!(read_frame(&mut rd, &mut scratch), Ok(Some(Frame::Stats))));
+        assert!(read_frame(&mut rd, &mut scratch).is_err());
+        // An absurd length prefix is rejected before allocating.
+        let mut rd = Cursor::new(u32::MAX.to_le_bytes().to_vec());
+        let err = read_frame(&mut rd, &mut scratch).unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds cap"), "{err:#}");
+    }
+}

@@ -1,0 +1,58 @@
+//! Tiny content digests for cross-process bit-equality checks. The wire
+//! CI job runs the same training workload in-process and against remote
+//! `glisp serve` partitions, then diffs one printed digest line per run —
+//! FNV-1a over the exact little-endian bytes, so a single flipped bit in
+//! any loss (or any sampled value upstream of it) changes the line.
+
+/// 64-bit FNV-1a over a byte stream.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Digest of an f32 sequence (e.g. a loss curve) over its exact bit
+/// patterns — equality means bit-identical values, not "close".
+pub fn f32_digest(xs: &[f32]) -> u64 {
+    let mut bytes = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    fnv1a(&bytes)
+}
+
+/// Digest of a u32 sequence (e.g. sampled tree levels).
+pub fn u32_digest(xs: &[u32]) -> u64 {
+    let mut bytes = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    fnv1a(&bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        // Published FNV-1a 64-bit test vectors.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn digests_are_bit_sensitive() {
+        let a = [0.5f32, 1.25, -3.0];
+        let mut b = a;
+        // Flip one mantissa bit.
+        b[1] = f32::from_bits(b[1].to_bits() ^ 1);
+        assert_ne!(f32_digest(&a), f32_digest(&b));
+        assert_eq!(f32_digest(&a), f32_digest(&a.to_vec()));
+        assert_ne!(u32_digest(&[1, 2, 3]), u32_digest(&[1, 2, 4]));
+    }
+}

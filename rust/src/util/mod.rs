@@ -3,6 +3,7 @@
 //! here exists because the build is offline-vendored (DESIGN.md §4).
 
 pub mod bitset;
+pub mod digest;
 pub mod json;
 pub mod proptest;
 pub mod rng;

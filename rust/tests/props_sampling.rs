@@ -215,7 +215,7 @@ fn workload_spreads_under_replica_routing() {
             sample_tree(&mut client, &seeds, &[10, 5], &SampleConfig::default())
                 .expect("sampling failed");
         }
-        let wl = svc.workload();
+        let wl = svc.workload().expect("stats snapshot failed");
         prop_assert!(wl.iter().all(|&w| w > 0), "an idle server: {wl:?}");
         svc.shutdown();
         Ok(())

@@ -1,0 +1,150 @@
+//! Loopback multi-process integration tests (DESIGN.md §12): partition
+//! servers behind real sockets must be observably identical — bit for bit
+//! — to the in-process channel pool, because the wire carries only
+//! (seeds, salt, seed_offset, config) and every sampled value is drawn
+//! from a per-seed RNG stream the transport never touches.
+//!
+//! The listeners here run as in-test threads (`serve_partition` is exactly
+//! what `glisp serve` wraps); the CI wire job repeats the same assertion
+//! with genuine separate processes by diffing digest lines.
+
+use glisp::coordinator::PipelineConfig;
+use glisp::graph::generator;
+use glisp::harness::workloads::{train_stack_cfg, train_stack_connect, train_stack_graph};
+use glisp::harness::workloads::stack_partitioner;
+use glisp::partition::{AdaDNE, Partitioner};
+use glisp::sampling::{
+    balanced_seeds, sample_tree, SampleConfig, SamplingService, ServiceConfig,
+};
+use glisp::util::rng::Rng;
+
+/// The ISSUE acceptance geometry: 4 partitions, each behind a 4-worker
+/// pool serving 16-seed shards, over TCP loopback. Uniform, weighted and
+/// edge-type-restricted one-hop sampling, the multi-level tree sampler,
+/// and the (deterministic) stats counters must all match the in-process
+/// reference exactly.
+#[test]
+fn four_server_tcp_fleet_matches_in_process_bit_for_bit() {
+    let mut rng = Rng::new(500);
+    let g = generator::heterogeneous_graph(900, 10_000, 2, 3, 2.2, &mut rng);
+    let parts = 4;
+    let ea = AdaDNE::default().partition(&g, parts, 1);
+    let cfg = ServiceConfig::new(4, 16);
+
+    let local = SamplingService::launch_cfg(&g, &ea, 1, cfg).unwrap();
+    let (remote, servers) = SamplingService::launch_remote(
+        &g,
+        &ea,
+        1,
+        cfg,
+        &vec!["tcp:127.0.0.1:0".to_string(); parts],
+    )
+    .unwrap();
+    assert_eq!(remote.num_partitions(), parts);
+
+    // One-hop matrix: uniform, weighted, single-edge-type.
+    let configs = [
+        SampleConfig::default(),
+        SampleConfig {
+            weighted: true,
+            ..Default::default()
+        },
+        SampleConfig {
+            etype: Some(1),
+            ..Default::default()
+        },
+    ];
+    for (k, scfg) in configs.iter().enumerate() {
+        let mut lrng = Rng::new(900 + k as u64);
+        let mut rrng = Rng::new(900 + k as u64);
+        let lseeds = balanced_seeds(&local, 12, &mut lrng);
+        let rseeds = balanced_seeds(&remote, 12, &mut rrng);
+        assert_eq!(lseeds, rseeds, "membership must round-trip the Members RPC");
+        let want = local.client(21 + k as u64).sample_one_hop(&lseeds, 7, scfg).unwrap();
+        let got = remote.client(21 + k as u64).sample_one_hop(&rseeds, 7, scfg).unwrap();
+        assert_eq!(got.offsets, want.offsets, "config {k}: offsets drifted over the wire");
+        assert_eq!(got.neighbors, want.neighbors, "config {k}: neighbors drifted over the wire");
+    }
+
+    // Multi-level tree.
+    let mut lrng = Rng::new(950);
+    let mut rrng = Rng::new(950);
+    let lseeds = balanced_seeds(&local, 16, &mut lrng);
+    let rseeds = balanced_seeds(&remote, 16, &mut rrng);
+    let want = sample_tree(&mut local.client(5), &lseeds, &[6, 4], &SampleConfig::default()).unwrap();
+    let got = sample_tree(&mut remote.client(5), &rseeds, &[6, 4], &SampleConfig::default()).unwrap();
+    assert_eq!(got.levels, want.levels);
+    assert_eq!(got.masks, want.masks);
+
+    // The traffic above was symmetric, so every *deterministic* counter
+    // must agree (busy_ns is wall time and excluded).
+    let ls = local.stats_snapshots().unwrap();
+    let rs = remote.stats_snapshots().unwrap();
+    for (l, r) in ls.iter().zip(&rs) {
+        assert_eq!((l.part_id, l.requests, l.seeds), (r.part_id, r.requests, r.seeds));
+        assert_eq!(l.edges_scanned, r.edges_scanned);
+        assert_eq!(l.neighbors_returned, r.neighbors_returned);
+        assert_eq!(l.graph_bytes, r.graph_bytes);
+    }
+
+    local.shutdown();
+    remote.shutdown();
+    for s in servers {
+        s.join();
+    }
+}
+
+/// Short pipelined training run against a Unix-socket fleet: the loss
+/// curve must replay the in-process run bit-for-bit (ordered pipeline,
+/// per-seed sampling streams, transport-independent trainer RNG).
+#[test]
+fn unix_socket_pipelined_training_replays_in_process_losses() {
+    let art = glisp::test_artifacts_dir();
+    let n = 3000;
+    let parts = 2;
+    let steps = 6;
+    let pcfg = PipelineConfig {
+        producers: 2,
+        queue_depth: 2,
+        ordered: true,
+    };
+
+    // In-process reference.
+    let stack = train_stack_cfg(n, parts, "sage", &art, ServiceConfig::new(1, 16)).unwrap();
+    let mut trainer = stack.trainer;
+    let mut batcher = stack.batcher;
+    let want = trainer.train_pipelined(&mut batcher, steps, &pcfg).unwrap();
+    drop(trainer);
+    stack.service.shutdown();
+
+    // The same stack behind Unix-socket partition servers.
+    let (g, _labels) = train_stack_graph(n);
+    let ea = stack_partitioner().partition(&g, parts, 1);
+    let listens: Vec<String> = (0..parts)
+        .map(|p| {
+            let path = std::env::temp_dir().join(format!("glisp_wire_train_{p}.sock"));
+            let _ = std::fs::remove_file(&path);
+            format!("unix:{}", path.display())
+        })
+        .collect();
+    let (svc, servers) =
+        SamplingService::launch_remote(&g, &ea, 1, ServiceConfig::new(1, 16), &listens).unwrap();
+    let addrs: Vec<String> = servers.iter().map(|s| s.addr().to_string()).collect();
+    // Drop the bootstrap connection; train over a fresh one exactly the way
+    // a separate client process would join the fleet.
+    svc.disconnect();
+
+    let stack = train_stack_connect(n, "sage", &art, &addrs, 16).unwrap();
+    let mut trainer = stack.trainer;
+    let mut batcher = stack.batcher;
+    let got = trainer.train_pipelined(&mut batcher, steps, &pcfg).unwrap();
+    drop(trainer);
+    stack.service.shutdown();
+    for s in servers {
+        s.join();
+    }
+
+    let want_bits: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
+    let got_bits: Vec<u32> = got.iter().map(|x| x.to_bits()).collect();
+    assert_eq!(got_bits, want_bits, "losses must be bit-identical across the wire");
+}
