@@ -7,6 +7,7 @@
 use crate::graph::csr::VId;
 use crate::sampling::request::PAD;
 use crate::util::rng::SplitMix64;
+use anyhow::Result;
 use std::sync::Arc;
 
 #[derive(Clone)]
@@ -83,6 +84,30 @@ impl FeatureStore {
             self.fill(v, &mut out[i * self.din..(i + 1) * self.din]);
         }
     }
+
+    /// Assemble the [n, din] matrix for `vids` chunk-by-chunk without ever
+    /// materializing it. `f` receives `(chunk_index, rows)` where `rows` is
+    /// the flattened `[rows_in_chunk, din]` slab for
+    /// `vids[chunk*chunk_rows ..]` (short final slab allowed). The resident
+    /// window is a single chunk buffer, reused across calls; both the
+    /// in-memory and the disk-spill inference paths feed their feature
+    /// ChunkStore through here, so the chunk bytes are identical by
+    /// construction.
+    pub fn for_each_chunk(
+        &self,
+        vids: &[VId],
+        chunk_rows: usize,
+        mut f: impl FnMut(usize, &[f32]) -> Result<()>,
+    ) -> Result<()> {
+        assert!(chunk_rows > 0);
+        let mut buf = vec![0f32; chunk_rows * self.din];
+        for (c, ids) in vids.chunks(chunk_rows).enumerate() {
+            let out = &mut buf[..ids.len() * self.din];
+            self.batch_into(ids, out);
+            f(c, out)?;
+        }
+        Ok(())
+    }
 }
 
 #[inline]
@@ -124,6 +149,23 @@ mod tests {
         // Same-class similarity must dominate cross-class.
         assert!(dot(0, 1) > dot(0, 2).abs() * 2.0);
         assert!(dot(2, 3) > dot(1, 2).abs() * 2.0);
+    }
+
+    #[test]
+    fn chunked_assembly_matches_batch() {
+        let fs = FeatureStore::unlabeled(5);
+        let vids: Vec<VId> = (0..23).map(|v| v as VId).collect();
+        let whole = fs.batch(&vids);
+        let mut rebuilt = Vec::new();
+        let mut chunks = Vec::new();
+        fs.for_each_chunk(&vids, 4, |c, rows| {
+            chunks.push(c);
+            rebuilt.extend_from_slice(rows);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(rebuilt, whole);
+        assert_eq!(chunks, (0..6).collect::<Vec<_>>()); // 23 rows / 4 → 6 slabs
     }
 
     #[test]

@@ -17,37 +17,44 @@
 //! * global out/in degrees are carried per local vertex — the distributed
 //!   uniform sampler needs `r = f · local_deg / global_deg`.
 
+use std::path::Path;
+
 use crate::graph::csr::{Graph, VId};
+use crate::graph::store::{PartBits, Section};
 use crate::util::bitset::BitMatrix;
 
+/// Every field array sits behind the storage seam ([`Section`]): heap
+/// `Vec`s when built or loaded by `HeapStore`, zero-copy windows into the
+/// saved file when opened by `MmapStore`. All read APIs go through
+/// `&[T]` deref, so the backing is invisible past this struct.
 #[derive(Clone, Debug)]
 pub struct PartitionGraph {
     pub part_id: usize,
     pub num_parts: usize,
     /// Sorted global IDs of the vertices present in this partition.
-    pub global_id: Vec<VId>,
+    pub global_id: Section<VId>,
     // --- out edges (CSR over local vertices, sorted by (etype, dst)) ---
-    pub out_indptr: Vec<u64>,
-    pub out_dst: Vec<VId>,
+    pub out_indptr: Section<u64>,
+    pub out_dst: Section<VId>,
     /// Edge weights aligned with out_dst (empty if unweighted).
-    pub out_weight: Vec<f32>,
+    pub out_weight: Section<f32>,
     // --- per-vertex edge-type run-length index ---
     /// Offsets into out_et_ids/out_et_end, len nv()+1.
-    pub out_et_indptr: Vec<u32>,
+    pub out_et_indptr: Section<u32>,
     /// Type ID of each run.
-    pub out_et_ids: Vec<u8>,
+    pub out_et_ids: Section<u8>,
     /// Pre-accumulated (exclusive-end) local-edge offset of each run within
     /// its vertex's edge list.
-    pub out_et_end: Vec<u32>,
+    pub out_et_end: Section<u32>,
     // --- in edges: (dst_local implicit) -> (src_global, local edge id) ---
-    pub in_indptr: Vec<u64>,
-    pub in_src: Vec<VId>,
-    pub in_eid: Vec<u32>,
+    pub in_indptr: Section<u64>,
+    pub in_src: Section<VId>,
+    pub in_eid: Section<u32>,
     // --- global degrees of local vertices ---
-    pub out_deg_global: Vec<u32>,
-    pub in_deg_global: Vec<u32>,
+    pub out_deg_global: Section<u32>,
+    pub in_deg_global: Section<u32>,
     /// Partition membership: row = local vertex, bit = partition id.
-    pub partition_set: BitMatrix,
+    pub partition_set: PartBits,
 }
 
 impl PartitionGraph {
@@ -211,6 +218,41 @@ impl PartitionGraph {
             + self.in_deg_global.len() * 4
             + self.partition_set.nbytes()
     }
+
+    /// Bytes of this structure resident on the heap — `nbytes()` for a
+    /// built/`HeapStore` partition, ~0 for an `MmapStore` one.
+    pub fn heap_bytes(&self) -> usize {
+        self.global_id.heap_bytes()
+            + self.out_indptr.heap_bytes()
+            + self.out_dst.heap_bytes()
+            + self.out_weight.heap_bytes()
+            + self.out_et_indptr.heap_bytes()
+            + self.out_et_ids.heap_bytes()
+            + self.out_et_end.heap_bytes()
+            + self.in_indptr.heap_bytes()
+            + self.in_src.heap_bytes()
+            + self.in_eid.heap_bytes()
+            + self.out_deg_global.heap_bytes()
+            + self.in_deg_global.heap_bytes()
+            + self.partition_set.heap_bytes()
+    }
+
+    /// Bytes addressed through a file mapping (kernel-cached, evictable).
+    pub fn mapped_bytes(&self) -> usize {
+        self.global_id.mapped_bytes()
+            + self.out_indptr.mapped_bytes()
+            + self.out_dst.mapped_bytes()
+            + self.out_weight.mapped_bytes()
+            + self.out_et_indptr.mapped_bytes()
+            + self.out_et_ids.mapped_bytes()
+            + self.out_et_end.mapped_bytes()
+            + self.in_indptr.mapped_bytes()
+            + self.in_src.mapped_bytes()
+            + self.in_eid.mapped_bytes()
+            + self.out_deg_global.mapped_bytes()
+            + self.in_deg_global.mapped_bytes()
+            + self.partition_set.mapped_bytes()
+    }
 }
 
 /// Build all partitions' compact structures from the full graph and a
@@ -238,19 +280,7 @@ pub fn build_partitions_threads(
     num_parts: usize,
     threads: usize,
 ) -> anyhow::Result<Vec<PartitionGraph>> {
-    if assign.len() != g.m() {
-        anyhow::bail!(
-            "edge assignment covers {} edges but the graph has {} — \
-             partition and graph are out of sync",
-            assign.len(),
-            g.m()
-        );
-    }
-    if let Some(&bad) = assign.iter().find(|&&p| p as usize >= num_parts) {
-        anyhow::bail!(
-            "edge assignment references partition {bad} but only {num_parts} partitions exist"
-        );
-    }
+    validate_assignment(g, assign, num_parts)?;
     let threads = threads.max(1);
     let out_deg = g.out_degrees();
     let in_deg = g.in_degrees();
@@ -277,6 +307,93 @@ pub fn build_partitions_threads(
         });
     }
     Ok(parts.into_iter().map(|p| p.expect("builder filled every slot")).collect())
+}
+
+fn validate_assignment(g: &Graph, assign: &[u16], num_parts: usize) -> anyhow::Result<()> {
+    if assign.len() != g.m() {
+        anyhow::bail!(
+            "edge assignment covers {} edges but the graph has {} — \
+             partition and graph are out of sync",
+            assign.len(),
+            g.m()
+        );
+    }
+    if let Some(&bad) = assign.iter().find(|&&p| p as usize >= num_parts) {
+        anyhow::bail!(
+            "edge assignment references partition {bad} but only {num_parts} partitions exist"
+        );
+    }
+    Ok(())
+}
+
+/// Build exactly one partition's structure without materializing the other
+/// `num_parts - 1` — the bounded-memory path a `glisp serve` process uses
+/// when it rebuilds its own partition: peak residency is one partition plus
+/// the shared membership matrix, not the whole set. Bit-identical to
+/// `build_partitions_threads(..)[part]` (same membership scan, same
+/// per-partition assembly).
+pub fn build_single_partition(
+    g: &Graph,
+    assign: &[u16],
+    part: usize,
+    num_parts: usize,
+    threads: usize,
+) -> anyhow::Result<PartitionGraph> {
+    validate_assignment(g, assign, num_parts)?;
+    if part >= num_parts {
+        anyhow::bail!("partition {part} out of range: only {num_parts} partitions exist");
+    }
+    let out_deg = g.out_degrees();
+    let in_deg = g.in_degrees();
+    let membership = membership_scan(g, assign, num_parts, threads.max(1));
+    Ok(build_one(g, assign, part, num_parts, &membership, &out_deg, &in_deg))
+}
+
+/// Build and save the whole partition set without ever holding it all:
+/// partitions are assembled `threads` at a time (same builder, so the
+/// files are bit-identical to save-after-build-all), written with
+/// `graph::io::save_partition`, and dropped before the next wave starts.
+/// Returns the peak partition-structure bytes resident across waves — the
+/// number the out-of-core budget scenario asserts against.
+pub fn build_and_save_partitions(
+    g: &Graph,
+    assign: &[u16],
+    num_parts: usize,
+    threads: usize,
+    dir: &Path,
+) -> anyhow::Result<usize> {
+    validate_assignment(g, assign, num_parts)?;
+    let threads = threads.max(1);
+    let out_deg = g.out_degrees();
+    let in_deg = g.in_degrees();
+    let membership = membership_scan(g, assign, num_parts, threads);
+    let mut peak = 0usize;
+    for wave in (0..num_parts).step_by(threads) {
+        let hi = (wave + threads).min(num_parts);
+        let built: Vec<PartitionGraph> = if hi - wave == 1 {
+            vec![build_one(g, assign, wave, num_parts, &membership, &out_deg, &in_deg)]
+        } else {
+            let (membership, out_deg, in_deg) = (&membership, &out_deg, &in_deg);
+            std::thread::scope(|s| {
+                let handles: Vec<_> = (wave..hi)
+                    .map(|p| {
+                        s.spawn(move || {
+                            build_one(g, assign, p, num_parts, membership, out_deg, in_deg)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("partition builder panicked"))
+                    .collect()
+            })
+        };
+        peak = peak.max(built.iter().map(|p| p.nbytes()).sum());
+        for p in &built {
+            crate::graph::io::save_partition(p, dir, &format!("part{}", p.part_id))?;
+        }
+    }
+    Ok(peak)
 }
 
 /// Which partitions does each global vertex touch? Sharded over contiguous
@@ -442,19 +559,19 @@ fn build_one(
     PartitionGraph {
         part_id: part,
         num_parts,
-        global_id,
-        out_indptr,
-        out_dst,
-        out_weight,
-        out_et_indptr,
-        out_et_ids,
-        out_et_end,
-        in_indptr,
-        in_src,
-        in_eid,
-        out_deg_global: odg,
-        in_deg_global: idg,
-        partition_set: pset,
+        global_id: global_id.into(),
+        out_indptr: out_indptr.into(),
+        out_dst: out_dst.into(),
+        out_weight: out_weight.into(),
+        out_et_indptr: out_et_indptr.into(),
+        out_et_ids: out_et_ids.into(),
+        out_et_end: out_et_end.into(),
+        in_indptr: in_indptr.into(),
+        in_src: in_src.into(),
+        in_eid: in_eid.into(),
+        out_deg_global: odg.into(),
+        in_deg_global: idg.into(),
+        partition_set: PartBits::from_matrix(pset),
     }
 }
 
@@ -672,6 +789,55 @@ mod tests {
                 assert_eq!(types, sorted, "types not grouped for v={v}");
             }
         }
+    }
+
+    /// `build_single_partition` must be a pure projection of the full
+    /// build — same membership scan, same assembly — so a serve process
+    /// rebuilding only its own partition serves identical bits.
+    #[test]
+    fn single_partition_build_matches_full_build() {
+        let mut rng = Rng::new(13);
+        let g = generator::heterogeneous_graph(600, 5000, 2, 3, 2.2, &mut rng);
+        let assign: Vec<u16> = (0..g.m()).map(|e| (e % 3) as u16).collect();
+        let all = build_partitions_threads(&g, &assign, 3, 2).unwrap();
+        for part in 0..3 {
+            let one = build_single_partition(&g, &assign, part, 3, 2).unwrap();
+            let full = &all[part];
+            assert_eq!(one.global_id, full.global_id);
+            assert_eq!(one.out_indptr, full.out_indptr);
+            assert_eq!(one.out_dst, full.out_dst);
+            assert_eq!(one.in_src, full.in_src);
+            assert_eq!(one.in_eid, full.in_eid);
+            assert_eq!(one.partition_set.raw(), full.partition_set.raw());
+        }
+        assert!(build_single_partition(&g, &assign, 3, 3, 1).is_err());
+    }
+
+    /// The wave-by-wave build+save path writes files bit-identical to
+    /// saving a full in-memory build, while never holding more than one
+    /// wave of structures.
+    #[test]
+    fn build_and_save_waves_match_full_build_files() {
+        use crate::graph::io::load_partition;
+        let mut rng = Rng::new(14);
+        let g = generator::heterogeneous_graph(500, 4000, 2, 3, 2.2, &mut rng);
+        let assign: Vec<u16> = (0..g.m()).map(|e| (e % 4) as u16).collect();
+        let all = build_partitions_threads(&g, &assign, 4, 2).unwrap();
+        let dir = std::env::temp_dir().join("glisp_hetero_wave_save");
+        let _ = std::fs::remove_dir_all(&dir);
+        let peak = build_and_save_partitions(&g, &assign, 4, 2, &dir).unwrap();
+        // Two builders per wave => peak is at most the two largest
+        // structures, strictly less than the whole set.
+        let total: usize = all.iter().map(|p| p.nbytes()).sum();
+        assert!(peak > 0 && peak < total, "peak {peak} vs total {total}");
+        for p in &all {
+            let loaded = load_partition(&dir, &format!("part{}", p.part_id)).unwrap();
+            assert_eq!(loaded.global_id, p.global_id);
+            assert_eq!(loaded.out_dst, p.out_dst);
+            assert_eq!(loaded.in_eid, p.in_eid);
+            assert_eq!(loaded.nbytes(), p.nbytes());
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -2,188 +2,391 @@
 //! contiguous binary layout, with the data size and type of each field being
 //! maintained in a separate meta file" (paper §III-C).
 //!
-//! `<name>.bin` holds the raw little-endian field arrays back-to-back;
-//! `<name>.meta.json` lists each field's name/dtype/element count plus the
-//! partition header, so loading is a sequence of exact-size reads into
-//! pre-allocated vectors — no parsing on the data path.
+//! Format v2 (DESIGN.md §13): `<name>.bin` opens with a magic header and a
+//! fixed-order section table (field id, dtype, 8-byte-aligned byte offset,
+//! element count), followed by the raw little-endian field arrays with zero
+//! padding between sections. The self-describing header is what lets
+//! `MmapStore` serve sections straight out of the mapped file with no
+//! copies, and it makes decoding strict the way `sampling::wire` is: bad
+//! magic, unknown version, truncation, misalignment or trailing bytes are
+//! hard errors, not garbage structures. `<name>.meta.json` is still written
+//! as the paper's human-readable sidecar, but loading reads only the `.bin`
+//! header.
 
 use std::fs::File;
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{BufWriter, Write};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
 use crate::graph::hetero::PartitionGraph;
-use crate::util::bitset::BitMatrix;
+use crate::graph::store::{MmapFile, PartBits, Section};
 use crate::util::json::{emit, Json};
 
-struct FieldMeta {
-    name: &'static str,
-    dtype: &'static str,
-    count: usize,
+/// First four bytes of every saved partition.
+pub const MAGIC: [u8; 4] = *b"GLSP";
+/// Bump on ANY layout change (field added/removed/reordered, dtype or
+/// header change) — old readers must reject new files and vice versa.
+pub const FORMAT_VERSION: u16 = 2;
+
+const NUM_SECTIONS: usize = 13;
+const HEADER_BYTES: usize = 24;
+const ENTRY_BYTES: usize = 24;
+/// Where the first section's payload starts (header + table, 8-aligned).
+const TABLE_END: usize = HEADER_BYTES + NUM_SECTIONS * ENTRY_BYTES;
+
+/// Dtype codes in the section table (match `store::Pod::DTYPE`).
+const DT_U8: u8 = 1;
+const DT_U32: u8 = 2;
+const DT_U64: u8 = 3;
+const DT_F32: u8 = 4;
+
+/// The 13 sections in their fixed on-disk order.
+const FIELDS: [(&str, u8); NUM_SECTIONS] = [
+    ("global_id", DT_U32),
+    ("out_indptr", DT_U64),
+    ("out_dst", DT_U32),
+    ("out_weight", DT_F32),
+    ("out_et_indptr", DT_U32),
+    ("out_et_ids", DT_U8),
+    ("out_et_end", DT_U32),
+    ("in_indptr", DT_U64),
+    ("in_src", DT_U32),
+    ("in_eid", DT_U32),
+    ("out_deg_global", DT_U32),
+    ("in_deg_global", DT_U32),
+    ("partition_set", DT_U64),
+];
+
+fn dtype_size(code: u8) -> usize {
+    match code {
+        DT_U8 => 1,
+        DT_U32 | DT_F32 => 4,
+        DT_U64 => 8,
+        _ => unreachable!("dtype codes are validated before sizing"),
+    }
 }
 
-fn fields_of(p: &PartitionGraph) -> Vec<(FieldMeta, Vec<u8>)> {
-    fn f32s(v: &[f32]) -> Vec<u8> {
-        v.iter().flat_map(|x| x.to_le_bytes()).collect()
+fn dtype_name(code: u8) -> &'static str {
+    match code {
+        DT_U8 => "u8",
+        DT_U32 => "u32",
+        DT_U64 => "u64",
+        DT_F32 => "f32",
+        _ => unreachable!(),
     }
-    fn u32s(v: &[u32]) -> Vec<u8> {
-        v.iter().flat_map(|x| x.to_le_bytes()).collect()
-    }
-    fn u64s(v: &[u64]) -> Vec<u8> {
-        v.iter().flat_map(|x| x.to_le_bytes()).collect()
-    }
-    vec![
-        (
-            FieldMeta { name: "global_id", dtype: "u32", count: p.global_id.len() },
-            u32s(&p.global_id),
-        ),
-        (
-            FieldMeta { name: "out_indptr", dtype: "u64", count: p.out_indptr.len() },
-            u64s(&p.out_indptr),
-        ),
-        (
-            FieldMeta { name: "out_dst", dtype: "u32", count: p.out_dst.len() },
-            u32s(&p.out_dst),
-        ),
-        (
-            FieldMeta { name: "out_weight", dtype: "f32", count: p.out_weight.len() },
-            f32s(&p.out_weight),
-        ),
-        (
-            FieldMeta { name: "out_et_indptr", dtype: "u32", count: p.out_et_indptr.len() },
-            u32s(&p.out_et_indptr),
-        ),
-        (
-            FieldMeta { name: "out_et_ids", dtype: "u8", count: p.out_et_ids.len() },
-            p.out_et_ids.clone(),
-        ),
-        (
-            FieldMeta { name: "out_et_end", dtype: "u32", count: p.out_et_end.len() },
-            u32s(&p.out_et_end),
-        ),
-        (
-            FieldMeta { name: "in_indptr", dtype: "u64", count: p.in_indptr.len() },
-            u64s(&p.in_indptr),
-        ),
-        (
-            FieldMeta { name: "in_src", dtype: "u32", count: p.in_src.len() },
-            u32s(&p.in_src),
-        ),
-        (
-            FieldMeta { name: "in_eid", dtype: "u32", count: p.in_eid.len() },
-            u32s(&p.in_eid),
-        ),
-        (
-            FieldMeta { name: "out_deg_global", dtype: "u32", count: p.out_deg_global.len() },
-            u32s(&p.out_deg_global),
-        ),
-        (
-            FieldMeta { name: "in_deg_global", dtype: "u32", count: p.in_deg_global.len() },
-            u32s(&p.in_deg_global),
-        ),
-        (
-            FieldMeta { name: "partition_set", dtype: "u64", count: p.partition_set.raw().len() },
-            u64s(p.partition_set.raw()),
-        ),
+}
+
+fn pad8(n: usize) -> usize {
+    n.div_ceil(8) * 8
+}
+
+fn field_counts(p: &PartitionGraph) -> [usize; NUM_SECTIONS] {
+    [
+        p.global_id.len(),
+        p.out_indptr.len(),
+        p.out_dst.len(),
+        p.out_weight.len(),
+        p.out_et_indptr.len(),
+        p.out_et_ids.len(),
+        p.out_et_end.len(),
+        p.in_indptr.len(),
+        p.in_src.len(),
+        p.in_eid.len(),
+        p.out_deg_global.len(),
+        p.in_deg_global.len(),
+        p.partition_set.raw().len(),
     ]
 }
 
 pub fn save_partition(p: &PartitionGraph, dir: &Path, name: &str) -> Result<()> {
     std::fs::create_dir_all(dir)?;
-    let fields = fields_of(p);
-    let mut meta_fields = Vec::new();
+    let counts = field_counts(p);
+    // Lay out the sections: contiguous, each start 8-byte aligned (zero
+    // padding), so every dtype maps alignment-safe at any offset.
+    let mut offs = [0usize; NUM_SECTIONS];
+    let mut off = TABLE_END;
+    for (i, &count) in counts.iter().enumerate() {
+        offs[i] = off;
+        off += pad8(count * dtype_size(FIELDS[i].1));
+    }
+    let total_len = off as u64;
+
     let bin_path = dir.join(format!("{name}.bin"));
     let mut w = BufWriter::new(File::create(&bin_path)?);
-    for (m, bytes) in &fields {
-        w.write_all(bytes)?;
-        let mut obj = std::collections::BTreeMap::new();
-        obj.insert("name".into(), Json::Str(m.name.into()));
-        obj.insert("dtype".into(), Json::Str(m.dtype.into()));
-        obj.insert("count".into(), Json::Num(m.count as f64));
-        meta_fields.push(Json::Obj(obj));
+    w.write_all(&MAGIC)?;
+    w.write_all(&FORMAT_VERSION.to_le_bytes())?;
+    w.write_all(&(NUM_SECTIONS as u16).to_le_bytes())?;
+    w.write_all(&(p.part_id as u32).to_le_bytes())?;
+    w.write_all(&(p.num_parts as u32).to_le_bytes())?;
+    w.write_all(&total_len.to_le_bytes())?;
+    for (i, &(_, dtype)) in FIELDS.iter().enumerate() {
+        w.write_all(&(i as u16).to_le_bytes())?;
+        w.write_all(&[dtype])?;
+        w.write_all(&[0u8; 5])?; // reserved
+        w.write_all(&(offs[i] as u64).to_le_bytes())?;
+        w.write_all(&(counts[i] as u64).to_le_bytes())?;
+    }
+
+    fn u32s(w: &mut impl Write, v: &[u32]) -> std::io::Result<()> {
+        for x in v {
+            w.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    }
+    fn u64s(w: &mut impl Write, v: &[u64]) -> std::io::Result<()> {
+        for x in v {
+            w.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    }
+    fn f32s(w: &mut impl Write, v: &[f32]) -> std::io::Result<()> {
+        for x in v {
+            w.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    }
+    fn pad(w: &mut impl Write, nbytes: usize) -> std::io::Result<()> {
+        w.write_all(&[0u8; 8][..nbytes])
+    }
+
+    for (i, &count) in counts.iter().enumerate() {
+        let nbytes = count * dtype_size(FIELDS[i].1);
+        match i {
+            0 => u32s(&mut w, &p.global_id)?,
+            1 => u64s(&mut w, &p.out_indptr)?,
+            2 => u32s(&mut w, &p.out_dst)?,
+            3 => f32s(&mut w, &p.out_weight)?,
+            4 => u32s(&mut w, &p.out_et_indptr)?,
+            5 => w.write_all(&p.out_et_ids)?,
+            6 => u32s(&mut w, &p.out_et_end)?,
+            7 => u64s(&mut w, &p.in_indptr)?,
+            8 => u32s(&mut w, &p.in_src)?,
+            9 => u32s(&mut w, &p.in_eid)?,
+            10 => u32s(&mut w, &p.out_deg_global)?,
+            11 => u32s(&mut w, &p.in_deg_global)?,
+            12 => u64s(&mut w, p.partition_set.raw())?,
+            _ => unreachable!(),
+        }
+        pad(&mut w, pad8(nbytes) - nbytes)?;
     }
     w.flush()?;
+
+    // Human-readable sidecar (paper §III-C); informational only — the
+    // loader trusts the binary header.
+    let mut meta_fields = Vec::new();
+    for (i, &(fname, dtype)) in FIELDS.iter().enumerate() {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("name".into(), Json::Str(fname.into()));
+        obj.insert("dtype".into(), Json::Str(dtype_name(dtype).into()));
+        obj.insert("count".into(), Json::Num(counts[i] as f64));
+        obj.insert("offset".into(), Json::Num(offs[i] as f64));
+        meta_fields.push(Json::Obj(obj));
+    }
     let mut meta = std::collections::BTreeMap::new();
+    meta.insert("format_version".into(), Json::Num(FORMAT_VERSION as f64));
     meta.insert("part_id".into(), Json::Num(p.part_id as f64));
     meta.insert("num_parts".into(), Json::Num(p.num_parts as f64));
     meta.insert("fields".into(), Json::Arr(meta_fields));
-    std::fs::write(
-        dir.join(format!("{name}.meta.json")),
-        emit(&Json::Obj(meta)),
-    )?;
+    std::fs::write(dir.join(format!("{name}.meta.json")), emit(&Json::Obj(meta)))?;
     Ok(())
 }
 
-pub fn load_partition(dir: &Path, name: &str) -> Result<PartitionGraph> {
-    let meta_raw = std::fs::read_to_string(dir.join(format!("{name}.meta.json")))
-        .with_context(|| format!("missing meta for {name}"))?;
-    let meta = Json::parse(&meta_raw).context("bad meta json")?;
-    let part_id = meta.get("part_id").and_then(Json::as_usize).context("part_id")?;
-    let num_parts = meta.get("num_parts").and_then(Json::as_usize).context("num_parts")?;
-    let mut r = BufReader::new(File::open(dir.join(format!("{name}.bin")))?);
+#[derive(Clone, Copy, Debug)]
+struct SectionDesc {
+    off: usize,
+    count: usize,
+}
 
-    fn read_u32s(r: &mut impl Read, n: usize) -> Result<Vec<u32>> {
-        let mut buf = vec![0u8; n * 4];
-        r.read_exact(&mut buf)?;
-        Ok(buf.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
-    }
-    fn read_u64s(r: &mut impl Read, n: usize) -> Result<Vec<u64>> {
-        let mut buf = vec![0u8; n * 8];
-        r.read_exact(&mut buf)?;
-        Ok(buf.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect())
-    }
-    fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
-        let mut buf = vec![0u8; n * 4];
-        r.read_exact(&mut buf)?;
-        Ok(buf.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
-    }
+struct Layout {
+    part_id: usize,
+    num_parts: usize,
+    sections: [SectionDesc; NUM_SECTIONS],
+}
 
-    let mut g = PartitionGraph {
+/// Strict header + section-table decode, shared by the heap and mmap
+/// loaders. `bytes` must be the entire file: truncation, trailing bytes,
+/// overlap, misalignment or nonzero padding all fail here, before any
+/// section is touched.
+fn parse_layout(bytes: &[u8], what: &str) -> Result<Layout> {
+    if bytes.len() < TABLE_END {
+        bail!("{what}: truncated — {} bytes, header+table need {TABLE_END}", bytes.len());
+    }
+    if bytes[0..4] != MAGIC {
+        bail!("{what}: bad magic {:02x?} (expected {:02x?} \"GLSP\")", &bytes[0..4], MAGIC);
+    }
+    let rd_u16 = |o: usize| u16::from_le_bytes(bytes[o..o + 2].try_into().unwrap());
+    let rd_u32 = |o: usize| u32::from_le_bytes(bytes[o..o + 4].try_into().unwrap());
+    let rd_u64 = |o: usize| u64::from_le_bytes(bytes[o..o + 8].try_into().unwrap());
+    let version = rd_u16(4);
+    if version != FORMAT_VERSION {
+        bail!("{what}: format version {version}, this build reads only {FORMAT_VERSION}");
+    }
+    let nsec = rd_u16(6) as usize;
+    if nsec != NUM_SECTIONS {
+        bail!("{what}: {nsec} sections, expected {NUM_SECTIONS}");
+    }
+    let part_id = rd_u32(8) as usize;
+    let num_parts = rd_u32(12) as usize;
+    if num_parts == 0 || part_id >= num_parts {
+        bail!("{what}: header claims part {part_id} of {num_parts}");
+    }
+    let total_len = rd_u64(16);
+    if total_len != bytes.len() as u64 {
+        bail!(
+            "{what}: header says {total_len} bytes but the file has {} — truncated or grown",
+            bytes.len()
+        );
+    }
+    if total_len % 8 != 0 {
+        bail!("{what}: total length {total_len} is not 8-byte aligned");
+    }
+    let mut sections = [SectionDesc { off: 0, count: 0 }; NUM_SECTIONS];
+    let mut expect_off = TABLE_END;
+    for (i, sec) in sections.iter_mut().enumerate() {
+        let e = HEADER_BYTES + i * ENTRY_BYTES;
+        let fid = rd_u16(e) as usize;
+        let dtype = bytes[e + 2];
+        if fid != i || dtype != FIELDS[i].1 {
+            bail!(
+                "{what}: section {i} is (field {fid}, dtype {dtype}), expected (field {i}, \
+                 dtype {}) [{}]",
+                FIELDS[i].1,
+                FIELDS[i].0
+            );
+        }
+        if bytes[e + 3..e + 8].iter().any(|&b| b != 0) {
+            bail!("{what}: section {i} has nonzero reserved bytes");
+        }
+        let off = rd_u64(e + 8) as usize;
+        let count = rd_u64(e + 16) as usize;
+        if off != expect_off {
+            bail!(
+                "{what}: section {i} ({}) at offset {off}, expected {expect_off} — \
+                 sections must be contiguous and 8-aligned",
+                FIELDS[i].0
+            );
+        }
+        let nbytes = count
+            .checked_mul(dtype_size(dtype))
+            .with_context(|| format!("{what}: section {i} size overflows"))?;
+        let end = off + nbytes;
+        if end > bytes.len() {
+            bail!("{what}: section {i} ({}) runs to {end}, past EOF", FIELDS[i].0);
+        }
+        if bytes[end..off + pad8(nbytes)].iter().any(|&b| b != 0) {
+            bail!("{what}: nonzero padding after section {i} ({})", FIELDS[i].0);
+        }
+        *sec = SectionDesc { off, count };
+        expect_off = off + pad8(nbytes);
+    }
+    if expect_off != bytes.len() {
+        bail!(
+            "{what}: {} trailing bytes after the last section",
+            bytes.len() - expect_off
+        );
+    }
+    Ok(Layout { part_id, num_parts, sections })
+}
+
+fn assemble(
+    part_id: usize,
+    num_parts: usize,
+    mut sec: impl FnMut(usize) -> Result<RawSection>,
+) -> Result<PartitionGraph> {
+    macro_rules! take {
+        ($i:expr, $variant:ident) => {
+            match sec($i)? {
+                RawSection::$variant(s) => s,
+                _ => unreachable!("dtype fixed by the validated table"),
+            }
+        };
+    }
+    Ok(PartitionGraph {
         part_id,
         num_parts,
-        global_id: Vec::new(),
-        out_indptr: Vec::new(),
-        out_dst: Vec::new(),
-        out_weight: Vec::new(),
-        out_et_indptr: Vec::new(),
-        out_et_ids: Vec::new(),
-        out_et_end: Vec::new(),
-        in_indptr: Vec::new(),
-        in_src: Vec::new(),
-        in_eid: Vec::new(),
-        out_deg_global: Vec::new(),
-        in_deg_global: Vec::new(),
-        partition_set: BitMatrix::new(0, num_parts),
-    };
-    for f in meta.get("fields").and_then(Json::as_arr).context("fields")? {
-        let name = f.get("name").and_then(Json::as_str).context("field name")?;
-        let count = f.get("count").and_then(Json::as_usize).context("field count")?;
-        match name {
-            "global_id" => g.global_id = read_u32s(&mut r, count)?,
-            "out_indptr" => g.out_indptr = read_u64s(&mut r, count)?,
-            "out_dst" => g.out_dst = read_u32s(&mut r, count)?,
-            "out_weight" => g.out_weight = read_f32s(&mut r, count)?,
-            "out_et_indptr" => g.out_et_indptr = read_u32s(&mut r, count)?,
-            "out_et_ids" => {
-                let mut buf = vec![0u8; count];
-                r.read_exact(&mut buf)?;
-                g.out_et_ids = buf;
-            }
-            "out_et_end" => g.out_et_end = read_u32s(&mut r, count)?,
-            "in_indptr" => g.in_indptr = read_u64s(&mut r, count)?,
-            "in_src" => g.in_src = read_u32s(&mut r, count)?,
-            "in_eid" => g.in_eid = read_u32s(&mut r, count)?,
-            "out_deg_global" => g.out_deg_global = read_u32s(&mut r, count)?,
-            "in_deg_global" => g.in_deg_global = read_u32s(&mut r, count)?,
-            "partition_set" => {
-                g.partition_set =
-                    BitMatrix::from_raw(read_u64s(&mut r, count)?, num_parts)
-            }
-            other => bail!("unknown field {other}"),
-        }
+        global_id: take!(0, U32),
+        out_indptr: take!(1, U64),
+        out_dst: take!(2, U32),
+        out_weight: take!(3, F32),
+        out_et_indptr: take!(4, U32),
+        out_et_ids: take!(5, U8),
+        out_et_end: take!(6, U32),
+        in_indptr: take!(7, U64),
+        in_src: take!(8, U32),
+        in_eid: take!(9, U32),
+        out_deg_global: take!(10, U32),
+        in_deg_global: take!(11, U32),
+        partition_set: PartBits::from_words(take!(12, U64), num_parts)?,
+    })
+}
+
+enum RawSection {
+    U8(Section<u8>),
+    U32(Section<u32>),
+    U64(Section<u64>),
+    F32(Section<f32>),
+}
+
+/// `HeapStore` open: strict-decode the file and copy every section into
+/// heap `Vec`s — the pre-seam loading behavior.
+pub fn load_partition(dir: &Path, name: &str) -> Result<PartitionGraph> {
+    let path = dir.join(format!("{name}.bin"));
+    let bytes = std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+    let what = path.display().to_string();
+    let layout = parse_layout(&bytes, &what)?;
+    assemble(layout.part_id, layout.num_parts, |i| {
+        let d = layout.sections[i];
+        let sz = dtype_size(FIELDS[i].1);
+        let raw = &bytes[d.off..d.off + d.count * sz];
+        Ok(match FIELDS[i].1 {
+            DT_U8 => RawSection::U8(raw.to_vec().into()),
+            DT_U32 => RawSection::U32(
+                raw.chunks_exact(4)
+                    .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+                    .collect::<Vec<_>>()
+                    .into(),
+            ),
+            DT_U64 => RawSection::U64(
+                raw.chunks_exact(8)
+                    .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+                    .collect::<Vec<_>>()
+                    .into(),
+            ),
+            DT_F32 => RawSection::F32(
+                raw.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect::<Vec<_>>()
+                    .into(),
+            ),
+            _ => unreachable!(),
+        })
+    })
+}
+
+/// `MmapStore` open: strict-decode the same header, then serve every
+/// section as a zero-copy window into the mapped file. Bit-identical to
+/// [`load_partition`] on any little-endian host (the only kind the raw
+/// layout targets; big-endian is rejected rather than silently byte-swapped
+/// on the heap path only).
+pub fn map_partition(dir: &Path, name: &str) -> Result<PartitionGraph> {
+    if cfg!(target_endian = "big") {
+        bail!("MmapStore reinterprets little-endian file bytes in place; use HeapStore here");
     }
-    Ok(g)
+    let path = dir.join(format!("{name}.bin"));
+    let map = MmapFile::open(&path)?;
+    let what = path.display().to_string();
+    let layout = parse_layout(map.bytes(), &what)?;
+    assemble(layout.part_id, layout.num_parts, |i| {
+        let d = layout.sections[i];
+        Ok(match FIELDS[i].1 {
+            DT_U8 => RawSection::U8(Section::mapped(map.clone(), d.off, d.count)?),
+            DT_U32 => RawSection::U32(Section::mapped(map.clone(), d.off, d.count)?),
+            DT_U64 => RawSection::U64(Section::mapped(map.clone(), d.off, d.count)?),
+            DT_F32 => RawSection::F32(Section::mapped(map.clone(), d.off, d.count)?),
+            _ => unreachable!(),
+        })
+    })
 }
 
 #[cfg(test)]
@@ -215,10 +418,102 @@ mod tests {
         std::fs::remove_dir_all(&dir).ok();
     }
 
+    /// Every section a mapped partition serves must be byte-equal to the
+    /// heap load, with zero heap residency for the structure itself.
     #[test]
-    fn missing_meta_errors() {
+    fn mapped_partition_serves_identical_sections() {
+        let mut rng = Rng::new(42);
+        let g = generator::heterogeneous_graph(700, 5000, 2, 3, 2.2, &mut rng);
+        let assign: Vec<u16> = (0..g.m()).map(|e| (e % 2) as u16).collect();
+        let parts = build_partitions(&g, &assign, 2).unwrap();
+        let dir = std::env::temp_dir().join("glisp_io_map_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        for p in &parts {
+            save_partition(p, &dir, &format!("part{}", p.part_id)).unwrap();
+            let mapped = map_partition(&dir, &format!("part{}", p.part_id)).unwrap();
+            assert_eq!(mapped.global_id, p.global_id);
+            assert_eq!(mapped.out_indptr, p.out_indptr);
+            assert_eq!(mapped.out_dst, p.out_dst);
+            assert_eq!(mapped.out_weight, p.out_weight);
+            assert_eq!(mapped.out_et_indptr, p.out_et_indptr);
+            assert_eq!(mapped.out_et_ids, p.out_et_ids);
+            assert_eq!(mapped.out_et_end, p.out_et_end);
+            assert_eq!(mapped.in_indptr, p.in_indptr);
+            assert_eq!(mapped.in_src, p.in_src);
+            assert_eq!(mapped.in_eid, p.in_eid);
+            assert_eq!(mapped.out_deg_global, p.out_deg_global);
+            assert_eq!(mapped.in_deg_global, p.in_deg_global);
+            assert_eq!(mapped.partition_set.raw(), p.partition_set.raw());
+            assert_eq!(mapped.nbytes(), p.nbytes());
+            assert_eq!(mapped.heap_bytes(), 0, "mapped structure must keep nothing on heap");
+            assert_eq!(mapped.mapped_bytes(), p.nbytes());
+            assert_eq!(p.heap_bytes(), p.nbytes());
+            assert_eq!(p.mapped_bytes(), 0);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_errors() {
         let dir = std::env::temp_dir().join("glisp_io_missing");
         assert!(load_partition(&dir, "nope").is_err());
+        assert!(map_partition(&dir, "nope").is_err());
+    }
+
+    /// Strict decode: bad magic, foreign version, truncation, bit-flipped
+    /// padding and trailing bytes are hard errors on BOTH load paths.
+    #[test]
+    fn format_rejection_is_strict_on_both_stores() {
+        let mut rng = Rng::new(43);
+        let g = generator::heterogeneous_graph(300, 2000, 2, 3, 2.2, &mut rng);
+        let assign: Vec<u16> = vec![0u16; g.m()];
+        let parts = build_partitions(&g, &assign, 1).unwrap();
+        let dir = std::env::temp_dir().join("glisp_io_reject");
+        let _ = std::fs::remove_dir_all(&dir);
+        save_partition(&parts[0], &dir, "good").unwrap();
+        let good = std::fs::read(dir.join("good.bin")).unwrap();
+
+        let write = |name: &str, bytes: &[u8]| {
+            std::fs::write(dir.join(format!("{name}.bin")), bytes).unwrap();
+        };
+        let rejected = |name: &str, why: &str| {
+            let h = load_partition(&dir, name);
+            let m = map_partition(&dir, name);
+            assert!(h.is_err(), "heap load accepted {why}");
+            assert!(m.is_err(), "mmap open accepted {why}");
+        };
+
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        write("magic", &bad);
+        rejected("magic", "bad magic");
+
+        let mut bad = good.clone();
+        bad[4] = 99; // version
+        write("version", &bad);
+        rejected("version", "foreign version");
+
+        write("trunc_header", &good[..10]);
+        rejected("trunc_header", "truncated header");
+
+        write("trunc_body", &good[..good.len() - 8]);
+        rejected("trunc_body", "truncated body");
+
+        let mut bad = good.clone();
+        bad.extend_from_slice(&[0u8; 8]);
+        write("trailing", &bad);
+        rejected("trailing", "trailing bytes");
+
+        let mut bad = good.clone();
+        bad[HEADER_BYTES + 3] = 1; // reserved byte of section 0
+        write("reserved", &bad);
+        rejected("reserved", "nonzero reserved bytes");
+
+        // The untouched file still loads — the rejections above are not
+        // false positives from the harness.
+        assert!(load_partition(&dir, "good").is_ok());
+        assert!(map_partition(&dir, "good").is_ok());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     /// The full offline→online contract: AdaDNE (parallel propose) →
@@ -265,6 +560,57 @@ mod tests {
             let tm = sample_tree(&mut mc, &seeds, &[6, 4], &scfg).unwrap();
             let td = sample_tree(&mut dc, &seeds, &[6, 4], &scfg).unwrap();
             assert_eq!(tm.levels, td.levels, "sampled ids drifted after save/load");
+            assert_eq!(tm.masks, td.masks);
+        }
+        mem.shutdown();
+        disk.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The same contract through the mmap seam: a pooled service over
+    /// `MmapStore` partitions samples bit-identically to the in-memory
+    /// build — the store serves identical array views, so the per-seed RNG
+    /// contract sees no difference (DESIGN.md §13).
+    #[test]
+    fn mapped_partitions_reproduce_in_memory_sample_bits() {
+        use crate::graph::hetero::build_partitions_threads;
+        use crate::graph::store::{open_partitions, StoreBackend};
+        use crate::partition::{AdaDNE, Partitioner};
+        use crate::sampling::{sample_tree, SampleConfig, SamplingService, ServiceConfig};
+
+        let mut rng = Rng::new(44);
+        let g = generator::heterogeneous_graph(900, 9000, 2, 3, 2.2, &mut rng);
+        let ea = AdaDNE {
+            threads: 2,
+            ..Default::default()
+        }
+        .partition(&g, 3, 1);
+        let parts = build_partitions_threads(&g, &ea.part_of_edge, 3, 2).unwrap();
+
+        let dir = std::env::temp_dir().join("glisp_io_mmap_sampling");
+        let _ = std::fs::remove_dir_all(&dir);
+        for p in &parts {
+            save_partition(p, &dir, &format!("part{}", p.part_id)).unwrap();
+        }
+        let mapped = open_partitions(&dir, StoreBackend::Mmap).unwrap();
+        assert!(mapped.iter().all(|p| p.heap_bytes() == 0));
+
+        let cfg = ServiceConfig::new(2, 8);
+        let mem = SamplingService::launch_with_partitions_cfg(g.n, parts, 1, cfg);
+        let disk = SamplingService::launch_with_partitions_cfg(g.n, mapped, 1, cfg);
+        let seeds: Vec<u32> = (0..64).collect();
+        for scfg in [
+            SampleConfig::default(),
+            SampleConfig {
+                weighted: true,
+                ..Default::default()
+            },
+        ] {
+            let mut mc = mem.client(9);
+            let mut dc = disk.client(9);
+            let tm = sample_tree(&mut mc, &seeds, &[6, 4], &scfg).unwrap();
+            let td = sample_tree(&mut dc, &seeds, &[6, 4], &scfg).unwrap();
+            assert_eq!(tm.levels, td.levels, "sampled ids drifted through the mmap seam");
             assert_eq!(tm.masks, td.masks);
         }
         mem.shutdown();

@@ -1,6 +1,7 @@
 //! Graph substrate: CSR storage, synthetic generators, the compact
 //! vertex-cut partition structure (paper Fig. 6), reorder algorithms,
-//! degree metrics, binary IO, and Table III memory models.
+//! degree metrics, binary IO, the out-of-core storage seam, and Table III
+//! memory models.
 
 pub mod csr;
 pub mod generator;
@@ -9,6 +10,11 @@ pub mod io;
 pub mod memfoot;
 pub mod metrics;
 pub mod reorder;
+pub mod store;
 
 pub use csr::{EId, Graph, VId};
-pub use hetero::{build_partitions, build_partitions_threads, PartitionGraph};
+pub use hetero::{
+    build_and_save_partitions, build_partitions, build_partitions_threads,
+    build_single_partition, PartitionGraph,
+};
+pub use store::{open_partitions, HeapStore, MmapStore, PartitionStore, Section, StoreBackend};

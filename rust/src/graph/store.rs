@@ -1,0 +1,582 @@
+//! The out-of-core storage seam: every array the compact partition
+//! structure owns is a [`Section`] — either a heap `Vec` (the layout the
+//! builders produce) or a window into a read-only `mmap` of the file
+//! `graph::io::save_partition` writes. `Section` derefs to `&[T]`, so the
+//! sampling servers, gather ops and inference engine read through the seam
+//! without knowing which backing they got — which is exactly why a run on
+//! [`MmapStore`] is bit-identical to one on [`HeapStore`] for any
+//! (threads, workers, shard_size, transport): the stores serve identical
+//! array views, and every random choice downstream is already pinned by
+//! the per-seed RNG contract (DESIGN.md §9, §13).
+//!
+//! The map is `PROT_READ`/`MAP_PRIVATE` via `libc` (no new dependencies);
+//! pages are faulted in by the kernel on demand and evicted under
+//! pressure, so the partition's heap residency is O(1) regardless of graph
+//! size — `memfoot::partition_residency` measures the split.
+
+use std::fmt;
+use std::fs::File;
+use std::marker::PhantomData;
+use std::ops::Deref;
+use std::os::unix::io::AsRawFd;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::graph::hetero::PartitionGraph;
+use crate::graph::io;
+use crate::util::bitset::BitMatrix;
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for u8 {}
+    impl Sealed for u32 {}
+    impl Sealed for u64 {}
+    impl Sealed for f32 {}
+}
+
+/// Element types a [`Section`] may hold: fixed-size scalars for which
+/// every bit pattern is a valid value, so reinterpreting mapped file bytes
+/// can never produce an invalid representation. Sealed — the on-disk
+/// format enumerates exactly these four dtypes.
+pub trait Pod: sealed::Sealed + Copy + Sized + 'static {
+    /// Dtype code in the on-disk section table (DESIGN.md §13).
+    const DTYPE: u8;
+    /// Dtype name in the human-readable meta.json sidecar.
+    const DTYPE_NAME: &'static str;
+}
+
+impl Pod for u8 {
+    const DTYPE: u8 = 1;
+    const DTYPE_NAME: &'static str = "u8";
+}
+impl Pod for u32 {
+    const DTYPE: u8 = 2;
+    const DTYPE_NAME: &'static str = "u32";
+}
+impl Pod for u64 {
+    const DTYPE: u8 = 3;
+    const DTYPE_NAME: &'static str = "u64";
+}
+impl Pod for f32 {
+    const DTYPE: u8 = 4;
+    const DTYPE_NAME: &'static str = "f32";
+}
+
+/// A whole file mapped read-only. Shared by every [`Section`] carved out
+/// of it; the mapping is released when the last section drops.
+pub struct MmapFile {
+    ptr: *mut libc::c_void,
+    len: usize,
+    path: PathBuf,
+}
+
+// SAFETY: the mapping is PROT_READ and never mutated or remapped after
+// construction, so shared references from any thread are fine.
+unsafe impl Send for MmapFile {}
+unsafe impl Sync for MmapFile {}
+
+impl MmapFile {
+    pub fn open(path: &Path) -> Result<Arc<MmapFile>> {
+        let file =
+            File::open(path).with_context(|| format!("opening {} to map", path.display()))?;
+        let len = file.metadata()?.len() as usize;
+        if len == 0 {
+            // mmap(len=0) is EINVAL; an empty file is a valid (if useless)
+            // zero-section map.
+            return Ok(Arc::new(MmapFile {
+                ptr: std::ptr::null_mut(),
+                len: 0,
+                path: path.to_path_buf(),
+            }));
+        }
+        // SAFETY: fresh read-only private mapping of a file we hold open;
+        // length matches the file, offset 0.
+        let ptr = unsafe {
+            libc::mmap(
+                std::ptr::null_mut(),
+                len,
+                libc::PROT_READ,
+                libc::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == libc::MAP_FAILED {
+            bail!(
+                "mmap of {} ({} bytes) failed: {}",
+                path.display(),
+                len,
+                std::io::Error::last_os_error()
+            );
+        }
+        Ok(Arc::new(MmapFile { ptr, len, path: path.to_path_buf() }))
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    #[inline]
+    pub fn bytes(&self) -> &[u8] {
+        if self.len == 0 {
+            &[]
+        } else {
+            // SAFETY: ptr/len describe a live PROT_READ mapping owned by
+            // self; the returned slice borrows self.
+            unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+        }
+    }
+}
+
+impl Drop for MmapFile {
+    fn drop(&mut self) {
+        if self.len != 0 {
+            // SAFETY: ptr/len came from a successful mmap and are unmapped
+            // exactly once.
+            unsafe {
+                libc::munmap(self.ptr, self.len);
+            }
+        }
+    }
+}
+
+impl fmt::Debug for MmapFile {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "MmapFile({}, {} bytes)", self.path.display(), self.len)
+    }
+}
+
+enum Back<T: Pod> {
+    Heap(Vec<T>),
+    Mapped {
+        file: Arc<MmapFile>,
+        byte_off: usize,
+        len: usize,
+        _marker: PhantomData<T>,
+    },
+}
+
+/// One field array of the partition structure, behind the storage seam.
+/// Derefs to `&[T]`, so all read paths are backend-oblivious; only
+/// construction and the residency accounting know the difference.
+pub struct Section<T: Pod> {
+    back: Back<T>,
+}
+
+impl<T: Pod> Section<T> {
+    /// A window of `len` elements at `byte_off` into a mapped file.
+    /// Validates bounds and alignment up front so `deref` is infallible.
+    pub fn mapped(file: Arc<MmapFile>, byte_off: usize, len: usize) -> Result<Section<T>> {
+        let nbytes = len
+            .checked_mul(std::mem::size_of::<T>())
+            .context("section byte length overflows")?;
+        let end = byte_off.checked_add(nbytes).context("section end overflows")?;
+        if end > file.len() {
+            bail!(
+                "section [{byte_off}, {end}) exceeds {} ({} bytes)",
+                file.path().display(),
+                file.len()
+            );
+        }
+        if byte_off % std::mem::align_of::<T>() != 0 {
+            bail!(
+                "section offset {byte_off} is not {}-byte aligned in {}",
+                std::mem::align_of::<T>(),
+                file.path().display()
+            );
+        }
+        Ok(Section {
+            back: Back::Mapped { file, byte_off, len, _marker: PhantomData },
+        })
+    }
+
+    #[inline]
+    pub fn is_mapped(&self) -> bool {
+        matches!(self.back, Back::Mapped { .. })
+    }
+
+    /// Bytes this section keeps resident on the heap (0 when mapped —
+    /// mapped pages are the kernel's to cache and evict).
+    pub fn heap_bytes(&self) -> usize {
+        match &self.back {
+            Back::Heap(v) => v.len() * std::mem::size_of::<T>(),
+            Back::Mapped { .. } => 0,
+        }
+    }
+
+    /// Bytes this section addresses through a file mapping.
+    pub fn mapped_bytes(&self) -> usize {
+        match &self.back {
+            Back::Heap(_) => 0,
+            Back::Mapped { len, .. } => len * std::mem::size_of::<T>(),
+        }
+    }
+}
+
+impl<T: Pod> Deref for Section<T> {
+    type Target = [T];
+
+    #[inline]
+    fn deref(&self) -> &[T] {
+        match &self.back {
+            Back::Heap(v) => v,
+            Back::Mapped { file, byte_off, len, .. } => {
+                if *len == 0 {
+                    return &[];
+                }
+                // SAFETY: bounds + alignment were validated in `mapped`;
+                // T is Pod (any bit pattern valid); the mapping is
+                // read-only and outlives the slice via the Arc.
+                unsafe {
+                    std::slice::from_raw_parts(
+                        file.bytes().as_ptr().add(*byte_off) as *const T,
+                        *len,
+                    )
+                }
+            }
+        }
+    }
+}
+
+impl<T: Pod> From<Vec<T>> for Section<T> {
+    fn from(v: Vec<T>) -> Section<T> {
+        Section { back: Back::Heap(v) }
+    }
+}
+
+impl<T: Pod> Default for Section<T> {
+    fn default() -> Section<T> {
+        Vec::new().into()
+    }
+}
+
+impl<T: Pod> Clone for Section<T> {
+    fn clone(&self) -> Section<T> {
+        match &self.back {
+            Back::Heap(v) => Section { back: Back::Heap(v.clone()) },
+            Back::Mapped { file, byte_off, len, .. } => Section {
+                back: Back::Mapped {
+                    file: Arc::clone(file),
+                    byte_off: *byte_off,
+                    len: *len,
+                    _marker: PhantomData,
+                },
+            },
+        }
+    }
+}
+
+impl<T: Pod + fmt::Debug> fmt::Debug for Section<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_list().entries(self.iter()).finish()
+    }
+}
+
+impl<T: Pod + PartialEq> PartialEq for Section<T> {
+    fn eq(&self, other: &Section<T>) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl<T: Pod + PartialEq> PartialEq<Vec<T>> for Section<T> {
+    fn eq(&self, other: &Vec<T>) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl<T: Pod + PartialEq> PartialEq<Section<T>> for Vec<T> {
+    fn eq(&self, other: &Section<T>) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl<'a, T: Pod> IntoIterator for &'a Section<T> {
+    type Item = &'a T;
+    type IntoIter = std::slice::Iter<'a, T>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        (**self).iter()
+    }
+}
+
+/// Read-only partition-membership bit matrix over a [`Section`] of words —
+/// the seam-aware twin of `util::bitset::BitMatrix` (which stays `Vec`
+/// -backed and mutable for the builders). Row = local vertex, bit =
+/// partition id.
+#[derive(Clone, Debug)]
+pub struct PartBits {
+    words: Section<u64>,
+    words_per_row: usize,
+    bits: usize,
+}
+
+impl PartBits {
+    /// Freeze a builder-produced matrix (heap words, zero copy).
+    pub fn from_matrix(m: BitMatrix) -> PartBits {
+        let bits = m.bits();
+        let words_per_row = bits.div_ceil(64).max(1);
+        PartBits { words: m.into_raw().into(), words_per_row, bits }
+    }
+
+    /// Wrap a word section (heap or mapped) as `bits`-wide rows.
+    pub fn from_words(words: Section<u64>, bits: usize) -> Result<PartBits> {
+        let words_per_row = bits.div_ceil(64).max(1);
+        if words.len() % words_per_row != 0 {
+            bail!(
+                "partition_set holds {} words, not a multiple of {words_per_row} ({bits} bits/row)",
+                words.len()
+            );
+        }
+        Ok(PartBits { words, words_per_row, bits })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.words.len() / self.words_per_row
+    }
+
+    pub fn bits(&self) -> usize {
+        self.bits
+    }
+
+    #[inline]
+    pub fn get(&self, row: usize, bit: usize) -> bool {
+        debug_assert!(bit < self.bits);
+        self.words[row * self.words_per_row + bit / 64] >> (bit % 64) & 1 == 1
+    }
+
+    pub fn row_count(&self, row: usize) -> usize {
+        let start = row * self.words_per_row;
+        self.words[start..start + self.words_per_row]
+            .iter()
+            .map(|w| w.count_ones() as usize)
+            .sum()
+    }
+
+    pub fn row_ones(&self, row: usize) -> impl Iterator<Item = usize> + '_ {
+        let start = row * self.words_per_row;
+        self.words[start..start + self.words_per_row]
+            .iter()
+            .enumerate()
+            .flat_map(|(wi, &w)| {
+                let mut w = w;
+                std::iter::from_fn(move || {
+                    if w == 0 {
+                        None
+                    } else {
+                        let b = w.trailing_zeros() as usize;
+                        w &= w - 1;
+                        Some(wi * 64 + b)
+                    }
+                })
+            })
+    }
+
+    /// Raw words — the serialized form in the binary layout.
+    pub fn raw(&self) -> &[u64] {
+        &self.words
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.words.len() * 8
+    }
+
+    pub fn heap_bytes(&self) -> usize {
+        self.words.heap_bytes()
+    }
+
+    pub fn mapped_bytes(&self) -> usize {
+        self.words.mapped_bytes()
+    }
+}
+
+/// Which backing [`open_partitions`] and `glisp serve --load` use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StoreBackend {
+    /// Decode the file into heap `Vec`s (the pre-seam behavior).
+    Heap,
+    /// Map the file and serve sections out of it, zero-copy.
+    Mmap,
+}
+
+impl StoreBackend {
+    pub fn name(self) -> &'static str {
+        match self {
+            StoreBackend::Heap => "heap",
+            StoreBackend::Mmap => "mmap",
+        }
+    }
+}
+
+/// The pluggable opener: one saved partition in, a `PartitionGraph` whose
+/// sections are backed per the store's policy out. Both stores decode the
+/// same v2 layout with the same strict checks; they differ only in where
+/// the section bytes live afterwards.
+pub trait PartitionStore: Send + Sync {
+    fn open(&self, dir: &Path, name: &str) -> Result<PartitionGraph>;
+    fn backend(&self) -> StoreBackend;
+}
+
+/// `Vec`-backed: every section copied onto the heap at open time.
+pub struct HeapStore;
+
+impl PartitionStore for HeapStore {
+    fn open(&self, dir: &Path, name: &str) -> Result<PartitionGraph> {
+        io::load_partition(dir, name)
+    }
+
+    fn backend(&self) -> StoreBackend {
+        StoreBackend::Heap
+    }
+}
+
+/// mmap-backed: sections are windows into the mapped file; heap residency
+/// of the structure is O(1) in the graph size.
+pub struct MmapStore;
+
+impl PartitionStore for MmapStore {
+    fn open(&self, dir: &Path, name: &str) -> Result<PartitionGraph> {
+        io::map_partition(dir, name)
+    }
+
+    fn backend(&self) -> StoreBackend {
+        StoreBackend::Mmap
+    }
+}
+
+/// The store singleton for a backend choice.
+pub fn store(backend: StoreBackend) -> &'static dyn PartitionStore {
+    match backend {
+        StoreBackend::Heap => &HeapStore,
+        StoreBackend::Mmap => &MmapStore,
+    }
+}
+
+/// Open every partition of a saved set (`part0..partN`), inferring N from
+/// part0's header and cross-checking each file's identity.
+pub fn open_partitions(dir: &Path, backend: StoreBackend) -> Result<Vec<PartitionGraph>> {
+    let s = store(backend);
+    let first = s
+        .open(dir, "part0")
+        .with_context(|| format!("opening partition set in {}", dir.display()))?;
+    if first.part_id != 0 {
+        bail!("part0 in {} claims part_id {}", dir.display(), first.part_id);
+    }
+    let num_parts = first.num_parts;
+    let mut parts = vec![first];
+    for p in 1..num_parts {
+        let g = s.open(dir, &format!("part{p}"))?;
+        if g.part_id != p || g.num_parts != num_parts {
+            bail!(
+                "part{p} in {} claims part_id {} of {} (expected {p} of {num_parts})",
+                dir.display(),
+                g.part_id,
+                g.num_parts
+            );
+        }
+        parts.push(g);
+    }
+    Ok(parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("glisp_store_{name}"))
+    }
+
+    #[test]
+    fn mmap_file_round_trips_bytes() {
+        let p = tmp("bytes.bin");
+        std::fs::write(&p, [1u8, 2, 3, 4, 5]).unwrap();
+        let m = MmapFile::open(&p).unwrap();
+        assert_eq!(m.bytes(), &[1, 2, 3, 4, 5]);
+        assert_eq!(m.len(), 5);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn mmap_of_empty_file_is_empty_not_an_error() {
+        let p = tmp("empty.bin");
+        std::fs::write(&p, []).unwrap();
+        let m = MmapFile::open(&p).unwrap();
+        assert!(m.is_empty());
+        assert_eq!(m.bytes(), &[] as &[u8]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn mapped_section_reads_little_endian_payload() {
+        let p = tmp("sec.bin");
+        let mut bytes = Vec::new();
+        for x in [7u32, 8, 9] {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        bytes.extend_from_slice(&1.5f32.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        let m = MmapFile::open(&p).unwrap();
+        let s = Section::<u32>::mapped(m.clone(), 0, 3).unwrap();
+        assert_eq!(s, vec![7u32, 8, 9]);
+        assert_eq!(s.heap_bytes(), 0);
+        assert_eq!(s.mapped_bytes(), 12);
+        let f = Section::<f32>::mapped(m, 12, 1).unwrap();
+        assert_eq!(f[0], 1.5);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn mapped_section_rejects_overrun_and_misalignment() {
+        let p = tmp("bad.bin");
+        std::fs::write(&p, [0u8; 16]).unwrap();
+        let m = MmapFile::open(&p).unwrap();
+        assert!(Section::<u64>::mapped(m.clone(), 0, 3).is_err(), "overrun");
+        assert!(Section::<u64>::mapped(m.clone(), 4, 1).is_err(), "misaligned");
+        assert!(Section::<u64>::mapped(m, 8, 1).is_ok());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn heap_and_mapped_sections_compare_and_iterate_alike() {
+        let heap: Section<u32> = vec![3u32, 1, 4].into();
+        assert!(!heap.is_mapped());
+        assert_eq!(heap.heap_bytes(), 12);
+        assert_eq!(heap.mapped_bytes(), 0);
+        let collected: Vec<u32> = (&heap).into_iter().copied().collect();
+        assert_eq!(collected, vec![3, 1, 4]);
+        assert_eq!(heap.clone(), heap);
+        assert_eq!(vec![3u32, 1, 4], heap);
+        assert_eq!(format!("{heap:?}"), "[3, 1, 4]");
+    }
+
+    #[test]
+    fn part_bits_matches_bit_matrix_semantics() {
+        let mut m = BitMatrix::new(3, 70);
+        m.set(0, 1);
+        m.set(1, 69);
+        m.set(1, 3);
+        let raw = m.raw().to_vec();
+        let pb = PartBits::from_matrix(m);
+        assert_eq!(pb.rows(), 3);
+        assert_eq!(pb.bits(), 70);
+        assert!(pb.get(0, 1) && pb.get(1, 69) && !pb.get(2, 5));
+        assert_eq!(pb.row_count(1), 2);
+        assert_eq!(pb.row_ones(1).collect::<Vec<_>>(), vec![3, 69]);
+        assert_eq!(pb.raw(), &raw[..]);
+        assert_eq!(pb.nbytes(), raw.len() * 8);
+        // Word count must tile into rows.
+        assert!(PartBits::from_words(vec![0u64; 3].into(), 70).is_err());
+    }
+}

@@ -56,6 +56,7 @@ pub struct ChunkStore {
     dir: PathBuf,
     pub chunk_size: usize,
     pub dim: usize,
+    pub n_rows: usize,
     pub num_chunks: usize,
     pub stats: StoreStats,
 }
@@ -67,9 +68,16 @@ impl ChunkStore {
             dir,
             chunk_size,
             dim,
+            n_rows,
             num_chunks: n_rows.div_ceil(chunk_size),
             stats: StoreStats::default(),
         })
+    }
+
+    /// Rows held by `chunk` (the final chunk may be short).
+    pub fn rows_in_chunk(&self, chunk: usize) -> usize {
+        debug_assert!(chunk < self.num_chunks);
+        (self.n_rows - chunk * self.chunk_size).min(self.chunk_size)
     }
 
     pub fn chunk_of_row(&self, row: usize) -> usize {
@@ -122,6 +130,93 @@ pub enum Tier {
     Static,
 }
 
+/// Peak resident footprint of a [`SpillScatter`] run: the largest number
+/// of partially-assembled chunks (and their exact buffer bytes) alive at
+/// any instant.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpillPeak {
+    pub bytes: usize,
+    pub chunks: usize,
+}
+
+/// Streaming row scatter into a [`ChunkStore`] with a bounded resident
+/// window — the disk-spill write path for layer embeddings (DESIGN.md
+/// §13). Rows arrive in any order (the engine's workers stream blocks
+/// concurrently); each chunk's buffer is allocated on first touch and
+/// flushed through [`ChunkStore::write_chunk`] the moment its last row
+/// lands, so the resident set is the partial-chunk frontier rather than
+/// the full [n, dim] matrix. The on-disk bytes are independent of arrival
+/// order, and flushing through `write_chunk` keeps the `writes` stat
+/// accounting identical to the in-memory path (one tick per chunk).
+pub struct SpillScatter<'a> {
+    store: &'a ChunkStore,
+    /// chunk → (row buffer, per-row seen bits, rows filled)
+    partial: std::collections::HashMap<usize, (Vec<f32>, crate::util::bitset::BitSet, usize)>,
+    rows_done: usize,
+    resident_bytes: usize,
+    peak: SpillPeak,
+}
+
+impl<'a> SpillScatter<'a> {
+    pub fn new(store: &'a ChunkStore) -> Self {
+        Self {
+            store,
+            partial: std::collections::HashMap::new(),
+            rows_done: 0,
+            resident_bytes: 0,
+            peak: SpillPeak::default(),
+        }
+    }
+
+    /// Place one row (len = dim). Errors on out-of-range rows and on a row
+    /// written twice — the engine's worker vertex sets are disjoint, so a
+    /// duplicate means a scatter-index bug, not a benign overwrite.
+    pub fn put_row(&mut self, row: usize, data: &[f32]) -> Result<()> {
+        anyhow::ensure!(data.len() == self.store.dim, "row width {} != dim {}", data.len(), self.store.dim);
+        anyhow::ensure!(row < self.store.n_rows, "row {row} out of range ({} rows)", self.store.n_rows);
+        let chunk = self.store.chunk_of_row(row);
+        let rows_here = self.store.rows_in_chunk(chunk);
+        let dim = self.store.dim;
+        if !self.partial.contains_key(&chunk) {
+            self.resident_bytes += rows_here * dim * 4;
+        }
+        let (buf, seen, filled) = self.partial.entry(chunk).or_insert_with(|| {
+            (vec![0f32; rows_here * dim], crate::util::bitset::BitSet::new(rows_here), 0)
+        });
+        let slot = row - chunk * self.store.chunk_size;
+        anyhow::ensure!(!seen.get(slot), "row {row} written twice (chunk {chunk})");
+        seen.set(slot);
+        buf[slot * dim..(slot + 1) * dim].copy_from_slice(data);
+        *filled += 1;
+        self.rows_done += 1;
+        if self.resident_bytes > self.peak.bytes {
+            self.peak.bytes = self.resident_bytes;
+        }
+        if self.partial.len() > self.peak.chunks {
+            self.peak.chunks = self.partial.len();
+        }
+        if *filled == rows_here {
+            let (buf, _, _) = self.partial.remove(&chunk).unwrap();
+            self.store.write_chunk(chunk, &buf)?;
+            self.resident_bytes -= rows_here * dim * 4;
+        }
+        Ok(())
+    }
+
+    /// Close the scatter: every row must have landed (so every chunk has
+    /// flushed). Returns the peak resident window.
+    pub fn finish(self) -> Result<SpillPeak> {
+        anyhow::ensure!(
+            self.partial.is_empty() && self.rows_done == self.store.n_rows,
+            "spill scatter incomplete: {}/{} rows, {} partial chunks",
+            self.rows_done,
+            self.store.n_rows,
+            self.partial.len()
+        );
+        Ok(self.peak)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -160,5 +255,76 @@ mod tests {
     fn missing_chunk_errors() {
         let cs = ChunkStore::create(tmp("miss"), 32, 16, 2).unwrap();
         assert!(cs.read_chunk(1, Tier::Remote).is_err());
+    }
+
+    /// Full matrix a chunk store holds, read back chunk-by-chunk.
+    fn read_all(cs: &ChunkStore) -> Vec<f32> {
+        let mut out = Vec::with_capacity(cs.n_rows * cs.dim);
+        for c in 0..cs.num_chunks {
+            out.extend(cs.read_chunk(c, Tier::Static).unwrap());
+        }
+        out
+    }
+
+    #[test]
+    fn spill_scatter_any_order_matches_dense_write() {
+        // Reference: write the dense [n, dim] matrix chunk-by-chunk.
+        let n = 23;
+        let dim = 3;
+        let dense: Vec<f32> = (0..n * dim).map(|i| i as f32 * 0.5).collect();
+        let a = ChunkStore::create(tmp("spill_a"), n, 4, dim).unwrap();
+        for c in 0..a.num_chunks {
+            let lo = c * 4 * dim;
+            let hi = ((c + 1) * 4 * dim).min(dense.len());
+            a.write_chunk(c, &dense[lo..hi]).unwrap();
+        }
+        // Spill path: same rows scattered in a shuffled order.
+        let b = ChunkStore::create(tmp("spill_b"), n, 4, dim).unwrap();
+        let mut order: Vec<usize> = (0..n).collect();
+        let mut rng = crate::util::rng::SplitMix64::new(9);
+        for i in (1..n).rev() {
+            order.swap(i, (rng.next_u64() % (i as u64 + 1)) as usize);
+        }
+        let mut sc = SpillScatter::new(&b);
+        for &r in &order {
+            sc.put_row(r, &dense[r * dim..(r + 1) * dim]).unwrap();
+        }
+        let peak = sc.finish().unwrap();
+        assert_eq!(read_all(&a), read_all(&b));
+        // writes stat ticks once per chunk on both paths.
+        assert_eq!(
+            b.stats.writes.load(Ordering::Relaxed),
+            a.stats.writes.load(Ordering::Relaxed)
+        );
+        // Shuffled arrival touches several chunks at once but the window
+        // stays bounded by the chunk count and its exact buffer bytes.
+        assert!(peak.chunks >= 1 && peak.chunks <= b.num_chunks);
+        assert!(peak.bytes <= b.num_chunks * 4 * dim * 4);
+    }
+
+    #[test]
+    fn spill_scatter_sequential_window_is_one_chunk() {
+        let n = 64;
+        let dim = 2;
+        let cs = ChunkStore::create(tmp("spill_seq"), n, 8, dim).unwrap();
+        let mut sc = SpillScatter::new(&cs);
+        for r in 0..n {
+            sc.put_row(r, &[r as f32, -(r as f32)]).unwrap();
+        }
+        let peak = sc.finish().unwrap();
+        assert_eq!(peak.chunks, 1);
+        assert_eq!(peak.bytes, 8 * dim * 4);
+        assert_eq!(cs.stats.writes.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn spill_scatter_rejects_misuse() {
+        let cs = ChunkStore::create(tmp("spill_err"), 8, 4, 2).unwrap();
+        let mut sc = SpillScatter::new(&cs);
+        assert!(sc.put_row(0, &[1.0]).is_err()); // wrong width
+        assert!(sc.put_row(8, &[1.0, 2.0]).is_err()); // out of range
+        sc.put_row(0, &[1.0, 2.0]).unwrap();
+        assert!(sc.put_row(0, &[3.0, 4.0]).is_err()); // double write
+        assert!(sc.finish().is_err()); // incomplete
     }
 }

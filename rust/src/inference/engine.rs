@@ -25,7 +25,7 @@ use std::sync::Arc;
 use crate::coordinator::features::FeatureStore;
 use crate::graph::csr::{Graph, VId};
 use crate::graph::reorder::{rank_of, reorder, ReorderAlgo};
-use crate::inference::chunk_store::ChunkStore;
+use crate::inference::chunk_store::{ChunkStore, SpillPeak, SpillScatter};
 use crate::inference::dynamic_cache::EvictPolicy;
 use crate::inference::static_cache::CacheSystem;
 use crate::partition::{primary_partition, EdgeAssignment};
@@ -165,6 +165,11 @@ pub struct EngineReport {
     /// Per-worker breakdown (empty for link prediction, which runs a
     /// single reader over the final store).
     pub workers: Vec<WorkerReport>,
+    /// Disk-spill mode only: peak bytes (and chunk count) of
+    /// partially-assembled output chunks resident at any instant, maxed
+    /// across the K slices. 0 for the in-memory path.
+    pub spill_peak_bytes: usize,
+    pub spill_peak_chunks: usize,
 }
 
 impl EngineReport {
@@ -214,8 +219,15 @@ fn worker_chunk_set(
 /// execute the slice artifact block by block. Pure function of the shared
 /// read-only state — the parallel and sequential paths both call this, so
 /// their outputs agree bit-for-bit by construction.
+///
+/// Output rows stream through `emit(start, rows)` as each block finishes:
+/// `rows` is the flattened `[block_len, hidden]` result for
+/// `verts[start..start + block_len]`. The in-memory path copies them into
+/// a worker-local matrix ([`sweep_worker`]); the disk-spill path forwards
+/// them straight to a [`SpillScatter`], so no worker ever holds more than
+/// one block of output.
 #[allow(clippy::too_many_arguments)]
-fn sweep_worker(
+fn sweep_worker_stream(
     runtime: &mut Runtime,
     cfg: &EngineConfig,
     artifact: &str,
@@ -229,7 +241,8 @@ fn sweep_worker(
     block_rows: usize,
     hidden: usize,
     params: &[HostTensor],
-) -> Result<WorkerOutput> {
+    mut emit: impl FnMut(usize, &[f32]) -> Result<()>,
+) -> Result<WorkerReport> {
     let mut rep = WorkerReport {
         worker,
         ..Default::default()
@@ -248,7 +261,6 @@ fn sweep_worker(
     rep.fill_secs = t_fill.secs();
 
     let t_model = Timer::start();
-    let mut local = vec![0f32; verts.len() * hidden];
     for (bi, block) in verts.chunks(block_rows).enumerate() {
         // Tail blocks execute at their true size (`execute_rows`), not
         // zero-padded to `block_rows`: no garbage rows through the
@@ -281,14 +293,43 @@ fn sweep_worker(
         inputs.extend(params.iter().cloned());
         // First 3 inputs (h_self, h_neigh, mask) are row-shaped.
         let out = runtime.execute_rows(artifact, rows, 3, &inputs)?;
-        local[bi * block_rows * hidden..][..rows * hidden]
-            .copy_from_slice(&out[0].as_f32()[..rows * hidden]);
+        emit(bi * block_rows, &out[0].as_f32()[..rows * hidden])?;
         rep.vertices_computed += rows as u64;
     }
     rep.model_secs = t_model.secs();
     let (hits, misses) = cache.dynamic_counts();
     rep.dynamic_hits = hits;
     rep.dynamic_misses = misses;
+    Ok(rep)
+}
+
+/// In-memory sweep: accumulate the streamed blocks into one
+/// `[verts.len(), hidden]` worker-local matrix.
+#[allow(clippy::too_many_arguments)]
+fn sweep_worker(
+    runtime: &mut Runtime,
+    cfg: &EngineConfig,
+    artifact: &str,
+    worker: usize,
+    verts: &[VId],
+    in_store: &ChunkStore,
+    in_dim: usize,
+    rank: &[u32],
+    nbrs: &[VId],
+    fanout: usize,
+    block_rows: usize,
+    hidden: usize,
+    params: &[HostTensor],
+) -> Result<WorkerOutput> {
+    let mut local = vec![0f32; verts.len() * hidden];
+    let rep = sweep_worker_stream(
+        runtime, cfg, artifact, worker, verts, in_store, in_dim, rank, nbrs, fanout, block_rows,
+        hidden, params,
+        |start, rows| {
+            local[start * hidden..start * hidden + rows.len()].copy_from_slice(rows);
+            Ok(())
+        },
+    )?;
     Ok(WorkerOutput {
         worker,
         local,
@@ -509,6 +550,120 @@ impl LayerwiseEngine {
         })
     }
 
+    /// One slice's partition sweeps with disk-spilled output: workers
+    /// stream finished blocks into a shared [`SpillScatter`] over
+    /// `out_store` (a chunk flushes the moment its last row lands — rows
+    /// cross partition boundaries, so the scatter is shared across
+    /// workers, not per-worker). In the parallel mode blocks travel over a
+    /// bounded channel (≤2 in flight per worker) and the main thread
+    /// scatters; the on-disk bytes are arrival-order independent, so this
+    /// is bit-identical to the sequential fallback and to the in-memory
+    /// sweep.
+    #[allow(clippy::too_many_arguments)]
+    fn sweep_layer_spilled(
+        runtime: &mut Runtime,
+        cfg: &EngineConfig,
+        artifact: &str,
+        params: &[HostTensor],
+        worker_verts: &[Vec<VId>],
+        in_store: &ChunkStore,
+        in_dim: usize,
+        out_store: &ChunkStore,
+        rank: &[u32],
+        nbrs: &[VId],
+        fanout: usize,
+        block: usize,
+        hidden: usize,
+    ) -> Result<(Vec<WorkerReport>, SpillPeak)> {
+        let active: Vec<usize> = (0..worker_verts.len())
+            .filter(|&w| !worker_verts[w].is_empty())
+            .collect();
+        let mut spill = SpillScatter::new(out_store);
+        let mut reports = Vec::with_capacity(active.len());
+
+        let split_runtimes: Option<Vec<Runtime>> = if cfg.parallel && active.len() > 1 {
+            let handles: Vec<Runtime> = active.iter().filter_map(|_| runtime.split()).collect();
+            (handles.len() == active.len()).then_some(handles)
+        } else {
+            None
+        };
+
+        let Some(runtimes) = split_runtimes else {
+            for &w in &active {
+                let verts = worker_verts[w].as_slice();
+                reports.push(sweep_worker_stream(
+                    runtime,
+                    cfg,
+                    artifact,
+                    w,
+                    verts,
+                    in_store,
+                    in_dim,
+                    rank,
+                    nbrs,
+                    fanout,
+                    block,
+                    hidden,
+                    params,
+                    |start, rows| {
+                        for (i, row) in rows.chunks(hidden).enumerate() {
+                            let r = rank[verts[start + i] as usize] as usize;
+                            spill.put_row(r, row)?;
+                        }
+                        Ok(())
+                    },
+                )?);
+            }
+            let peak = spill.finish()?;
+            return Ok((reports, peak));
+        };
+
+        // Bounded channel: at most 2 blocks per worker in flight, so the
+        // streamed-output window is O(workers · block · hidden), never
+        // O(n · hidden). Dropping the receiver on a scatter error unblocks
+        // any sender, which then surfaces the error through its join.
+        let (tx, rx) =
+            std::sync::mpsc::sync_channel::<(usize, usize, Vec<f32>)>(2 * active.len());
+        std::thread::scope(|s| -> Result<()> {
+            let mut handles = Vec::with_capacity(active.len());
+            for (mut rt, &w) in runtimes.into_iter().zip(&active) {
+                let verts = worker_verts[w].as_slice();
+                let tx = tx.clone();
+                handles.push(s.spawn(move || -> Result<(WorkerReport, u64)> {
+                    let rep = sweep_worker_stream(
+                        &mut rt, cfg, artifact, w, verts, in_store, in_dim, rank, nbrs,
+                        fanout, block, hidden, params,
+                        |start, rows| {
+                            tx.send((w, start, rows.to_vec()))
+                                .map_err(|_| anyhow::anyhow!("spill scatter receiver gone"))
+                        },
+                    )?;
+                    let execs = rt.executions.load(std::sync::atomic::Ordering::Relaxed);
+                    Ok((rep, execs))
+                }));
+            }
+            drop(tx);
+            for (w, start, rows) in rx {
+                for (i, row) in rows.chunks(hidden).enumerate() {
+                    let r = rank[worker_verts[w][start + i] as usize] as usize;
+                    spill.put_row(r, row)?;
+                }
+            }
+            for h in handles {
+                let (rep, execs) = h
+                    .join()
+                    .map_err(|_| anyhow::anyhow!("inference worker thread panicked"))??;
+                runtime
+                    .executions
+                    .fetch_add(execs, std::sync::atomic::Ordering::Relaxed);
+                reports.push(rep);
+            }
+            Ok(())
+        })?;
+        let peak = spill.finish()?;
+        Ok((reports, peak))
+    }
+
     /// Full-graph vertex-embedding inference. Returns (final embeddings
     /// indexed by RANK, report).
     pub fn run_vertex_embedding(&mut self) -> Result<(Vec<f32>, EngineReport)> {
@@ -531,12 +686,14 @@ impl LayerwiseEngine {
             self.cfg.chunk_size,
             din,
         )?;
-        let feats_by_rank: Vec<f32> = {
-            let vs: Vec<VId> = self.order.clone();
-            self.features.batch(&vs)
-        };
-        self.write_all_chunks(&f_store, &feats_by_rank)?;
-        drop(feats_by_rank);
+        // Chunked assembly: features are a pure function of the vertex id,
+        // so the [n, din] matrix is derived one chunk at a time — the
+        // resident window is a single chunk buffer in both this and the
+        // spilled mode, and the chunk bytes are identical by construction.
+        self.features
+            .for_each_chunk(&self.order, self.cfg.chunk_size, |c, rows| {
+                f_store.write_chunk(c, rows)
+            })?;
 
         // One intermediate store per slice boundary: `layer_h{k}` holds
         // the activations entering slice k.
@@ -604,6 +761,96 @@ impl LayerwiseEngine {
         report.dynamic_hit_ratio =
             report.dynamic_hits as f64 / (report.dynamic_hits + report.chunk_reads).max(1) as f64;
         Ok((h_out, report))
+    }
+
+    /// Disk-spill variant of [`run_vertex_embedding`]: every layer's
+    /// activations — including the final one — live in ChunkStore files,
+    /// and no `[n, hidden]` matrix is ever resident. Worker blocks stream
+    /// into a [`SpillScatter`] per slice; the peak partial-chunk window is
+    /// reported in `spill_peak_bytes`/`spill_peak_chunks`. Bit-identical
+    /// to the in-memory path: the returned store (`layer_h{K}`) holds
+    /// exactly the bytes `run_vertex_embedding` returns, chunked.
+    pub fn run_vertex_embedding_spilled(&mut self) -> Result<(ChunkStore, EngineReport)> {
+        let mut report = EngineReport {
+            workers: (0..self.num_parts)
+                .map(|w| WorkerReport {
+                    worker: w,
+                    ..Default::default()
+                })
+                .collect(),
+            ..Default::default()
+        };
+        let din = self.features.din;
+        let k_layers = self.cfg.layers;
+
+        let f_store = ChunkStore::create(
+            self.work_dir.join("layer_f"),
+            self.n,
+            self.cfg.chunk_size,
+            din,
+        )?;
+        self.features
+            .for_each_chunk(&self.order, self.cfg.chunk_size, |c, rows| {
+                f_store.write_chunk(c, rows)
+            })?;
+
+        // One store per slice OUTPUT: slice k writes `layer_h{k+1}`; the
+        // last one is the returned final-embedding store (the same
+        // directory `run_link_prediction` would build from a dense
+        // `h_final`).
+        let mut h_stores: Vec<ChunkStore> = (1..=k_layers)
+            .map(|k| {
+                ChunkStore::create(
+                    self.work_dir.join(format!("layer_h{k}")),
+                    self.n,
+                    self.cfg.chunk_size,
+                    self.hidden,
+                )
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let worker_verts: Vec<Vec<VId>> =
+            (0..self.num_parts).map(|w| self.worker_vertices(w)).collect();
+
+        for layer in 0..k_layers {
+            let (in_store, in_dim): (&ChunkStore, usize) = if layer == 0 {
+                (&f_store, din)
+            } else {
+                (&h_stores[layer - 1], self.hidden)
+            };
+            let artifact = format!("sage_infer_layer{layer}");
+            let (reps, peak) = Self::sweep_layer_spilled(
+                &mut self.runtime,
+                &self.cfg,
+                &artifact,
+                &self.enc_params[layer * 3..layer * 3 + 3],
+                &worker_verts,
+                in_store,
+                in_dim,
+                &h_stores[layer],
+                &self.rank,
+                &self.nbrs,
+                self.fanout,
+                self.block,
+                self.hidden,
+            )?;
+            for rep in &reps {
+                report.absorb(rep);
+            }
+            report.spill_peak_bytes = report.spill_peak_bytes.max(peak.bytes);
+            report.spill_peak_chunks = report.spill_peak_chunks.max(peak.chunks);
+        }
+
+        for store in std::iter::once(&f_store).chain(h_stores.iter()) {
+            let st = &store.stats;
+            report.chunk_reads += st.chunk_reads();
+            report.dynamic_hits += st.dynamic_hits.load(std::sync::atomic::Ordering::Relaxed);
+            report.virtual_cost += st.total_cost();
+        }
+        report.dynamic_hit_ratio =
+            report.dynamic_hits as f64 / (report.dynamic_hits + report.chunk_reads).max(1) as f64;
+        let final_store = h_stores.pop().expect("layers >= 1");
+        Ok((final_store, report))
     }
 
     /// Link prediction over `edges` using cached final embeddings
@@ -872,6 +1119,44 @@ mod tests {
             prev_dim = eng.hidden;
         }
         assert_eq!(h, prev, "engine output must bit-match the dense forward");
+    }
+
+    #[test]
+    fn spilled_run_is_bit_identical_to_in_memory() {
+        let (g, ea, dir) = setup("spill");
+        let mut mem = engine(&g, &ea, dir.join("mem"));
+        let (h, _) = mem.run_vertex_embedding().unwrap();
+
+        let read_back = |store: &ChunkStore| -> Vec<f32> {
+            let mut out = Vec::with_capacity(store.n_rows * store.dim);
+            for c in 0..store.num_chunks {
+                out.extend(
+                    store
+                        .read_chunk(c, crate::inference::chunk_store::Tier::Static)
+                        .unwrap(),
+                );
+            }
+            out
+        };
+
+        // Parallel spilled run: final store bytes == in-memory output.
+        let mut sp = engine(&g, &ea, dir.join("sp"));
+        let (store, rep) = sp.run_vertex_embedding_spilled().unwrap();
+        assert_eq!(h, read_back(&store), "spilled bytes must bit-match");
+        assert_eq!(rep.vertices_computed, 2 * g.n as u64);
+        // The resident window never approached the full [n, hidden] matrix.
+        assert!(rep.spill_peak_bytes > 0);
+        assert!(
+            rep.spill_peak_bytes < g.n * 128 * 4 / 2,
+            "spill window {} should stay well below the {}-byte dense matrix",
+            rep.spill_peak_bytes,
+            g.n * 128 * 4
+        );
+
+        // Sequential spilled run agrees too (arrival-order independence).
+        let mut sq = engine_k(&g, &ea, dir.join("sq"), 2, false);
+        let (store_sq, _) = sq.run_vertex_embedding_spilled().unwrap();
+        assert_eq!(h, read_back(&store_sq));
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //! glisp infer     --n 20000 --parts 4 --layers 3 --task both [--seq]
 //! glisp serve     --partition 0 --listen unix:/tmp/glisp0.sock
 //!                 (--graph train|infer|quickstart [--n N] | --dataset wiki-s
-//!                  | --load DIR) --parts 4 [--workers 4] [--service-seed 1]
+//!                  | --load DIR [--mmap]) --parts 4 [--workers 4] [--service-seed 1]
 //! glisp datasets
 //! glisp bench     [fig13 table5 ...] [--all] [--list] [--report] [--check]
 //!                 [--diff OLD.json --against NEW.json]
@@ -39,7 +39,9 @@
 //! client builds locally: `--graph train` pairs with `glisp train`,
 //! `--graph infer` with `glisp infer --connect`, `--graph quickstart`
 //! with the quickstart example, `--dataset NAME` with `glisp sample`, and
-//! `--load DIR` serves partitions saved by `glisp partition --save`.
+//! `--load DIR` serves partitions saved by `glisp partition --save`;
+//! adding `--mmap` maps the file read-only instead of decoding it onto the
+//! heap — same served bits, near-zero heap residency (DESIGN.md §13).
 
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
@@ -318,25 +320,27 @@ fn cmd_partition(args: &Args) -> Result<()> {
     t.print();
     // --save DIR: assemble the compact structures for the last algorithm
     // in the list (with the same thread knob) and write the binary
-    // layouts, completing the offline partition → build → save path.
+    // layouts wave-by-wave — at most `threads` partition structures are
+    // ever resident, completing the out-of-core offline path.
     if let (Some(dir), Some(ea)) = (args.get("save"), last) {
         let dir = std::path::PathBuf::from(dir);
         let timer = Timer::start();
-        let pgs =
-            glisp::graph::build_partitions_threads(&g, &ea.part_of_edge, parts, threads)?;
-        let build_secs = timer.secs();
-        let timer = Timer::start();
-        for pg in &pgs {
-            glisp::graph::io::save_partition(pg, &dir, &format!("part{}", pg.part_id))?;
-        }
-        let bytes: usize = pgs.iter().map(|p| p.nbytes()).sum();
+        let peak =
+            glisp::graph::build_and_save_partitions(&g, &ea.part_of_edge, parts, threads, &dir)?;
+        let saved: u64 = (0..parts)
+            .map(|i| {
+                std::fs::metadata(dir.join(format!("part{i}.bin")))
+                    .map(|m| m.len())
+                    .unwrap_or(0)
+            })
+            .sum();
         println!(
-            "built {parts} partitions in {} ({threads} threads), \
-             saved {:.1} MiB to {} in {}",
-            fmt_duration(build_secs),
-            bytes as f64 / (1024.0 * 1024.0),
+            "built+saved {parts} partitions to {} in {} ({threads} threads, \
+             {:.1} MiB on disk, wave peak {:.1} MiB resident)",
             dir.display(),
-            fmt_duration(timer.secs())
+            fmt_duration(timer.secs()),
+            saved as f64 / (1024.0 * 1024.0),
+            peak as f64 / (1024.0 * 1024.0)
         );
     }
     Ok(())
@@ -670,10 +674,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let service_seed = args.get_u64("service-seed", 1);
 
     let part = if let Some(dir) = args.get("load") {
-        glisp::graph::io::load_partition(
-            std::path::Path::new(dir),
-            &format!("part{part_id}"),
-        )?
+        // Storage seam: `--mmap` maps the saved file read-only instead of
+        // decoding it onto the heap — the served bits are identical
+        // (DESIGN.md §13), only residency changes.
+        let backend = if args.has("mmap") {
+            glisp::graph::StoreBackend::Mmap
+        } else {
+            glisp::graph::StoreBackend::Heap
+        };
+        let part = glisp::graph::store::store(backend)
+            .open(std::path::Path::new(dir), &format!("part{part_id}"))?;
+        println!(
+            "loaded partition {part_id} from {dir} ({} backend, {} heap / {} mapped bytes)",
+            backend.name(),
+            part.heap_bytes(),
+            part.mapped_bytes()
+        );
+        part
     } else {
         let parts = args.get_usize("parts", 4);
         let seed = args.get_u64("seed", 1);
@@ -702,14 +719,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
         };
         let ea = AdaDNE::default().partition(&g, parts, 1);
-        let mut pgs = glisp::graph::build_partitions_threads(
+        // Build ONLY this process's partition: the membership scan covers
+        // the full graph, but just one compact structure is assembled —
+        // a serve fleet never holds all P structures anywhere.
+        glisp::graph::build_single_partition(
             &g,
             &ea.part_of_edge,
+            part_id,
             parts,
             workers.max(1),
-        )?;
-        anyhow::ensure!(part_id < pgs.len(), "--partition {part_id} out of range 0..{parts}");
-        pgs.swap_remove(part_id)
+        )?
     };
     anyhow::ensure!(
         part.part_id == part_id,

@@ -19,6 +19,7 @@ use std::sync::Arc;
 
 use crate::graph::csr::{Graph, VId};
 use crate::graph::hetero::{build_partitions_threads, PartitionGraph};
+use crate::graph::store::StoreBackend;
 use crate::partition::EdgeAssignment;
 use crate::sampling::client::{RouteMode, SamplingClient};
 use crate::sampling::server::{spawn_pool, ServerStats};
@@ -177,6 +178,26 @@ impl SamplingService {
             members,
             handles,
         }
+    }
+
+    /// Launch the service over a saved partition set (`part0..partN` in
+    /// `dir`), through the storage seam: `StoreBackend::Heap` decodes onto
+    /// the heap, `StoreBackend::Mmap` serves the structures straight out
+    /// of the mapped files. Either way the sampled bits are identical to a
+    /// fresh in-memory build of the same partitions (DESIGN.md §13).
+    pub fn launch_from_dir(
+        dir: &std::path::Path,
+        seed: u64,
+        cfg: ServiceConfig,
+        backend: StoreBackend,
+    ) -> Result<Self> {
+        let parts = crate::graph::store::open_partitions(dir, backend)?;
+        let n = parts
+            .iter()
+            .filter_map(|p| p.global_id.last().map(|&g| g as usize + 1))
+            .max()
+            .unwrap_or(0);
+        Ok(Self::launch_with_partitions_cfg(n, parts, seed, cfg))
     }
 
     /// Partition `g`, then run every partition server behind a socket

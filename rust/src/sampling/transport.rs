@@ -117,7 +117,7 @@ impl Transport for ChannelTransport {
         Ok(MembersInfo {
             part_id: self.part_id as u32,
             workers: self.workers as u32,
-            ids: self.graph.global_id.clone(),
+            ids: self.graph.global_id.to_vec(),
         })
     }
 
@@ -646,7 +646,7 @@ fn handle_conn(conn: Conn, ctx: ConnCtx) {
                 let m = MembersInfo {
                     part_id: ctx.graph.part_id as u32,
                     workers: ctx.workers as u32,
-                    ids: ctx.graph.global_id.clone(),
+                    ids: ctx.graph.global_id.to_vec(),
                 };
                 if !write_frame_locked(&wr, &Frame::MembersResp(m)) {
                     break;

@@ -168,6 +168,12 @@ impl BitMatrix {
         &self.data
     }
 
+    /// Consume the matrix into its raw words — how `graph::store::PartBits`
+    /// freezes a builder-produced membership matrix without a copy.
+    pub fn into_raw(self) -> Vec<u64> {
+        self.data
+    }
+
     pub fn from_raw(data: Vec<u64>, bits: usize) -> Self {
         let wpr = bits.div_ceil(64).max(1);
         assert_eq!(data.len() % wpr, 0);

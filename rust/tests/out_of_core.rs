@@ -1,0 +1,206 @@
+//! Out-of-core budget scenario (DESIGN.md §13): a synthetic workload
+//! whose structure + features + layer embeddings exceed a heap budget by
+//! ≥4× runs the full partition → build+save → serve → train → layerwise
+//! infer pipeline with every large array either file-mapped (partitions)
+//! or chunk-spilled (embeddings), and every digest — sampled ids, train
+//! losses, final embeddings — is bit-identical to the all-in-memory run,
+//! for both the channel and the socket transport.
+//!
+//! The budget comes from `GLISP_MEM_BUDGET` (bytes; default 2_000_000 —
+//! the CI `out-of-core` job pins it). Assertions use the deterministic
+//! residency numbers (`memfoot::partition_residency`, wave-build peak,
+//! `EngineReport::spill_peak_bytes`), not process RSS.
+
+use glisp::coordinator::{Batcher, FeatureStore, PipelineConfig, Trainer, TrainerConfig};
+use glisp::graph::memfoot;
+use glisp::graph::store::{open_partitions, StoreBackend};
+use glisp::graph::{build_and_save_partitions, build_single_partition};
+use glisp::harness::workloads::train_stack_graph;
+use glisp::inference::{init_encoder_params, EngineConfig, LayerwiseEngine};
+use glisp::partition::{AdaDNE, Partitioner};
+use glisp::runtime::Runtime;
+use glisp::sampling::{
+    sample_tree, serve_partition, SampleConfig, SamplingService, ServiceConfig,
+};
+use glisp::util::digest::{f32_digest, u32_digest};
+use std::sync::Arc;
+
+const N: usize = 6_000;
+const PARTS: usize = 4;
+const DIN: usize = 64;
+const HIDDEN: usize = 128;
+const K_LAYERS: usize = 2;
+
+fn budget() -> usize {
+    memfoot::mem_budget().unwrap_or(2_000_000)
+}
+
+#[test]
+fn budget_scenario_runs_out_of_core_bit_identical_to_in_memory() {
+    let art = glisp::test_artifacts_dir();
+    let budget = budget();
+    let (g, labels) = train_stack_graph(N);
+    let ea = AdaDNE::default().partition(&g, PARTS, 1);
+
+    // ---- Offline: wave-synchronous build+save, peak residency bounded.
+    let dir = std::env::temp_dir().join("glisp_ooc_parts");
+    let _ = std::fs::remove_dir_all(&dir);
+    let peak = build_and_save_partitions(&g, &ea.part_of_edge, PARTS, 2, &dir).unwrap();
+    assert!(
+        peak > 0 && peak < budget,
+        "wave-build peak {peak} must stay under the {budget}-byte budget"
+    );
+
+    // ---- The workload genuinely exceeds the budget: structure + feature
+    // matrix + one embedding matrix per layer, measured not modeled.
+    let heap_parts = open_partitions(&dir, StoreBackend::Heap).unwrap();
+    let structure: usize = heap_parts.iter().map(|p| p.nbytes()).sum();
+    let total = structure + N * DIN * 4 + K_LAYERS * N * HIDDEN * 4;
+    assert!(
+        total >= 4 * budget,
+        "scenario holds {total} bytes of graph data but must exceed 4x the {budget} budget"
+    );
+    // The single dense matrix the spill path avoids is itself over budget.
+    assert!(N * HIDDEN * 4 > budget);
+
+    // ---- Mapped partitions: zero heap residency, full bytes file-backed.
+    let mapped = open_partitions(&dir, StoreBackend::Mmap).unwrap();
+    let res = memfoot::partition_residency(&mapped);
+    assert_eq!(res.heap_bytes, 0, "mmap-opened partitions must not touch the heap");
+    assert_eq!(res.mapped_bytes, structure);
+
+    // ---- Sampling digests across backend x transport.
+    let cfg = ServiceConfig::new(2, 8);
+    let heap_svc = SamplingService::launch_with_partitions_cfg(g.n, heap_parts, 1, cfg);
+    let mmap_svc = SamplingService::launch_with_partitions_cfg(g.n, mapped, 1, cfg);
+    // Socket fleet over a second mapping of the same files — the
+    // `glisp serve --load DIR --mmap` deployment, in-process.
+    let wire_parts = open_partitions(&dir, StoreBackend::Mmap).unwrap();
+    let mut servers = Vec::new();
+    let mut addrs = Vec::new();
+    for p in wire_parts {
+        let path = std::env::temp_dir().join(format!("glisp_ooc_{}.sock", p.part_id));
+        let _ = std::fs::remove_file(&path);
+        let srv =
+            serve_partition(Arc::new(p), &format!("unix:{}", path.display()), 1, 2).unwrap();
+        addrs.push(srv.addr().to_string());
+        servers.push(srv);
+    }
+    let wire_svc = SamplingService::connect(&addrs, g.n, cfg).unwrap();
+
+    let seeds: Vec<u32> = (0..128).collect();
+    let sample_digest = |svc: &SamplingService| -> (u64, u64) {
+        let t = sample_tree(&mut svc.client(9), &seeds, &[10, 5], &SampleConfig::default())
+            .unwrap();
+        let ids: Vec<u32> = t.levels.iter().flatten().copied().collect();
+        let mk: Vec<f32> = t.masks.iter().flatten().copied().collect();
+        (u32_digest(&ids), f32_digest(&mk))
+    };
+    let want = sample_digest(&heap_svc);
+    assert_eq!(sample_digest(&mmap_svc), want, "sample digest drifted heap→mmap");
+    assert_eq!(sample_digest(&wire_svc), want, "sample digest drifted channel→socket");
+
+    // ---- Training digests: same trainer stack over each service.
+    let train = |svc: &SamplingService| -> u64 {
+        let features = FeatureStore::labeled(DIN, labels.clone(), 8, 0.6);
+        let mut trainer = Trainer::new(
+            &art,
+            svc.client(2),
+            features,
+            TrainerConfig {
+                model: "sage".into(),
+                lr: 0.1,
+            },
+            7,
+        )
+        .unwrap();
+        let split = (N * 8) / 10;
+        let train_seeds: Vec<u32> = (0..split as u32).collect();
+        let train_labels: Vec<u16> =
+            train_seeds.iter().map(|&v| labels[v as usize]).collect();
+        let mut batcher = Batcher::new(train_seeds, train_labels, trainer.batch, 5).unwrap();
+        let pcfg = PipelineConfig {
+            producers: 2,
+            queue_depth: 2,
+            ordered: true,
+        };
+        let losses = trainer.train_pipelined(&mut batcher, 6, &pcfg).unwrap();
+        assert!(losses.iter().all(|l| l.is_finite()));
+        f32_digest(&losses)
+    };
+    let loss_want = train(&heap_svc);
+    assert_eq!(train(&mmap_svc), loss_want, "loss digest drifted heap→mmap");
+    assert_eq!(train(&wire_svc), loss_want, "loss digest drifted channel→socket");
+
+    heap_svc.shutdown();
+    mmap_svc.shutdown();
+    wire_svc.shutdown();
+    for s in servers {
+        s.join();
+    }
+
+    // ---- Layerwise inference: disk-spill vs in-memory, bit-identical,
+    // with the spill window far under budget.
+    let work = std::env::temp_dir().join("glisp_ooc_infer");
+    let _ = std::fs::remove_dir_all(&work);
+    let mk_engine = |sub: &str| -> LayerwiseEngine {
+        let runtime = Runtime::load(&art).unwrap();
+        let enc = init_encoder_params(&runtime, 3).unwrap();
+        LayerwiseEngine::new(
+            &g,
+            &ea,
+            runtime,
+            FeatureStore::unlabeled(DIN),
+            enc,
+            EngineConfig::default(),
+            work.join(sub),
+        )
+        .unwrap()
+    };
+    let (h, _) = mk_engine("mem").run_vertex_embedding().unwrap();
+    let (store, rep) = mk_engine("spill").run_vertex_embedding_spilled().unwrap();
+    let mut h_spill = Vec::with_capacity(N * HIDDEN);
+    for c in 0..store.num_chunks {
+        h_spill.extend(
+            store
+                .read_chunk(c, glisp::inference::chunk_store::Tier::Static)
+                .unwrap(),
+        );
+    }
+    assert_eq!(
+        f32_digest(&h),
+        f32_digest(&h_spill),
+        "embedding digest drifted in-memory→spilled"
+    );
+    assert_eq!(h, h_spill);
+    assert!(
+        rep.spill_peak_bytes > 0 && rep.spill_peak_bytes < budget,
+        "spill window {} must stay under the {budget}-byte budget",
+        rep.spill_peak_bytes
+    );
+
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&work).ok();
+}
+
+/// The serve-side rebuild path: one partition built alone must equal the
+/// same partition out of a full build — `glisp serve` without `--load`
+/// never assembles all P structures.
+#[test]
+fn single_partition_build_matches_saved_files() {
+    let (g, _labels) = train_stack_graph(1500);
+    let ea = AdaDNE::default().partition(&g, 3, 1);
+    let dir = std::env::temp_dir().join("glisp_ooc_single");
+    let _ = std::fs::remove_dir_all(&dir);
+    build_and_save_partitions(&g, &ea.part_of_edge, 3, 2, &dir).unwrap();
+    for part in 0..3 {
+        let alone = build_single_partition(&g, &ea.part_of_edge, part, 3, 2).unwrap();
+        let loaded =
+            glisp::graph::io::load_partition(&dir, &format!("part{part}")).unwrap();
+        assert_eq!(alone.global_id, loaded.global_id);
+        assert_eq!(alone.out_dst, loaded.out_dst);
+        assert_eq!(alone.in_eid, loaded.in_eid);
+        assert_eq!(alone.nbytes(), loaded.nbytes());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,128 @@
+//! Property tests over the out-of-core storage seam (util::proptest
+//! mini-framework; replay failures with GLISP_PROP_SEED): for arbitrary
+//! graphs an `MmapStore`-opened partition must be indistinguishable from
+//! the `HeapStore` one — identical array views, identical residency
+//! split, and identical sampled bits through every deployment shape
+//! (pooled in-process and socket fleet), per DESIGN.md §13.
+
+use glisp::graph::generator;
+use glisp::graph::hetero::build_partitions_threads;
+use glisp::graph::store::{open_partitions, StoreBackend};
+use glisp::partition::{AdaDNE, Partitioner};
+use glisp::sampling::{
+    sample_tree, serve_partition, SampleConfig, SamplingService, ServiceConfig,
+};
+use glisp::util::proptest::prop_check;
+use glisp::{prop_assert, prop_assert_eq};
+use std::sync::Arc;
+
+#[test]
+fn mapped_sections_equal_heap_sections_for_arbitrary_graphs() {
+    prop_check("store section equality", 10, |rng| {
+        let n = rng.range(80, 900);
+        let g = generator::heterogeneous_graph(n, n * rng.range(4, 10), 2, 4, 2.1, rng);
+        let parts = rng.range(1, 5);
+        let ea = AdaDNE::default().partition(&g, parts, rng.next_u64());
+        let built =
+            build_partitions_threads(&g, &ea.part_of_edge, parts, rng.range(1, 4)).unwrap();
+        let dir = std::env::temp_dir().join(format!("glisp_prop_store_{}", rng.next_u64()));
+        let _ = std::fs::remove_dir_all(&dir);
+        for p in &built {
+            glisp::graph::io::save_partition(p, &dir, &format!("part{}", p.part_id)).unwrap();
+        }
+        let heap = open_partitions(&dir, StoreBackend::Heap).unwrap();
+        let mapped = open_partitions(&dir, StoreBackend::Mmap).unwrap();
+        prop_assert_eq!(heap.len(), built.len());
+        prop_assert_eq!(mapped.len(), built.len());
+        for ((b, h), m) in built.iter().zip(&heap).zip(&mapped) {
+            prop_assert_eq!(b.part_id, m.part_id);
+            prop_assert_eq!(b.num_parts, m.num_parts);
+            // Every section, bit for bit, through the mapping.
+            prop_assert_eq!(b.global_id.clone(), m.global_id.clone());
+            prop_assert_eq!(b.out_indptr.clone(), m.out_indptr.clone());
+            prop_assert_eq!(b.out_dst.clone(), m.out_dst.clone());
+            prop_assert_eq!(b.out_weight.clone(), m.out_weight.clone());
+            prop_assert_eq!(b.out_et_indptr.clone(), m.out_et_indptr.clone());
+            prop_assert_eq!(b.out_et_ids.clone(), m.out_et_ids.clone());
+            prop_assert_eq!(b.out_et_end.clone(), m.out_et_end.clone());
+            prop_assert_eq!(b.in_indptr.clone(), m.in_indptr.clone());
+            prop_assert_eq!(b.in_src.clone(), m.in_src.clone());
+            prop_assert_eq!(b.in_eid.clone(), m.in_eid.clone());
+            prop_assert_eq!(b.out_deg_global.clone(), m.out_deg_global.clone());
+            prop_assert_eq!(b.in_deg_global.clone(), m.in_deg_global.clone());
+            prop_assert_eq!(
+                b.partition_set.raw().to_vec(),
+                m.partition_set.raw().to_vec()
+            );
+            // Residency split: heap-opened is all heap, mapped is all file.
+            prop_assert_eq!(h.nbytes(), m.nbytes());
+            prop_assert_eq!(h.heap_bytes(), h.nbytes());
+            prop_assert_eq!(h.mapped_bytes(), 0);
+            prop_assert_eq!(m.heap_bytes(), 0);
+            prop_assert_eq!(m.mapped_bytes(), m.nbytes());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+        Ok(())
+    });
+}
+
+#[test]
+fn mapped_store_samples_bit_identically_across_transports() {
+    prop_check("store sampling bits", 4, |rng| {
+        let n = rng.range(300, 1200);
+        let g = generator::heterogeneous_graph(n, n * 8, 2, 3, 2.2, rng);
+        let parts = rng.range(2, 4);
+        let ea = AdaDNE::default().partition(&g, parts, 1);
+        let built = build_partitions_threads(&g, &ea.part_of_edge, parts, 2).unwrap();
+        let dir = std::env::temp_dir().join(format!("glisp_prop_wire_{}", rng.next_u64()));
+        let _ = std::fs::remove_dir_all(&dir);
+        for p in &built {
+            glisp::graph::io::save_partition(p, &dir, &format!("part{}", p.part_id)).unwrap();
+        }
+        let mapped = open_partitions(&dir, StoreBackend::Mmap).unwrap();
+        prop_assert!(mapped.iter().all(|p| p.heap_bytes() == 0));
+
+        // Pooled in-process services: heap-built vs mapped partitions.
+        let cfg = ServiceConfig::new(2, 8);
+        let mem = SamplingService::launch_with_partitions_cfg(g.n, built, 1, cfg);
+        let disk = SamplingService::launch_with_partitions_cfg(g.n, mapped, 1, cfg);
+
+        // Socket fleet over a SECOND mapping of the same files: one server
+        // process-equivalent per partition, same service seed 1.
+        let wire_parts = open_partitions(&dir, StoreBackend::Mmap).unwrap();
+        let mut servers = Vec::new();
+        let mut addrs = Vec::new();
+        for p in wire_parts {
+            let srv = serve_partition(Arc::new(p), "tcp:127.0.0.1:0", 1, 2).unwrap();
+            addrs.push(srv.addr().to_string());
+            servers.push(srv);
+        }
+        let wire = SamplingService::connect(&addrs, g.n, cfg).unwrap();
+
+        let seeds: Vec<u32> = (0..48).collect();
+        let fanouts = [rng.range(2, 8), rng.range(2, 6)];
+        for scfg in [
+            SampleConfig::default(),
+            SampleConfig {
+                weighted: true,
+                ..Default::default()
+            },
+        ] {
+            let tm = sample_tree(&mut mem.client(9), &seeds, &fanouts, &scfg).unwrap();
+            let td = sample_tree(&mut disk.client(9), &seeds, &fanouts, &scfg).unwrap();
+            let tw = sample_tree(&mut wire.client(9), &seeds, &fanouts, &scfg).unwrap();
+            prop_assert_eq!(tm.levels.clone(), td.levels);
+            prop_assert_eq!(tm.masks.clone(), td.masks);
+            prop_assert_eq!(tm.levels.clone(), tw.levels);
+            prop_assert_eq!(tm.masks, tw.masks);
+        }
+        mem.shutdown();
+        disk.shutdown();
+        wire.shutdown(); // stops the socket servers too
+        for s in servers {
+            s.join();
+        }
+        std::fs::remove_dir_all(&dir).ok();
+        Ok(())
+    });
+}
