@@ -31,7 +31,7 @@ use anyhow::Result;
 use crate::coordinator::batcher::Batcher;
 use crate::coordinator::features::FeatureStore;
 use crate::graph::csr::VId;
-use crate::runtime::tensor::HostTensor;
+use crate::runtime::tensor::{HostTensor, TensorPool};
 use crate::sampling::client::SamplingClient;
 use crate::sampling::request::SampleConfig;
 use crate::sampling::subgraph::sample_tree;
@@ -199,9 +199,41 @@ pub fn assemble_tensors(
     (feats, ms)
 }
 
+/// [`assemble_tensors`] without the per-batch heap traffic: mask vectors
+/// are *moved* into their tensors (the tree is consumed anyway) and
+/// feature buffers are drawn from a [`TensorPool`] that the trainer
+/// refills with consumed batches. Output values are bit-identical to the
+/// unpooled path — `TensorPool::get` zero-fills and `batch_into`
+/// overwrites every slot, so buffer provenance cannot leak.
+pub fn assemble_tensors_pooled(
+    levels: &[Vec<VId>],
+    masks: &mut [Vec<f32>],
+    features: &FeatureStore,
+    pool: &TensorPool,
+) -> (Vec<HostTensor>, Vec<HostTensor>) {
+    let din = features.din;
+    let feats = levels
+        .iter()
+        .map(|lvl| {
+            let mut buf = pool.get(lvl.len() * din);
+            features.batch_into(lvl, &mut buf);
+            HostTensor::f32(vec![lvl.len(), din], buf)
+        })
+        .collect();
+    let ms = masks
+        .iter_mut()
+        .map(|m| {
+            let data = std::mem::take(m);
+            HostTensor::f32(vec![data.len()], data)
+        })
+        .collect();
+    (feats, ms)
+}
+
 /// Sample + assemble one feed item into a [`ReadyBatch`] — the producer
 /// body. The client's RNG is re-derived from the batch index, so any
-/// producer building any index gets the same tree.
+/// producer building any index gets the same tree. With `pool`, tensor
+/// backing buffers are recycled via [`assemble_tensors_pooled`].
 pub fn produce_batch(
     client: &mut SamplingClient,
     features: &FeatureStore,
@@ -209,10 +241,14 @@ pub fn produce_batch(
     cfg: &SampleConfig,
     sample_seed: u64,
     item: FeedItem,
+    pool: Option<&TensorPool>,
 ) -> Result<ReadyBatch> {
     client.rng = batch_rng(sample_seed, item.index as u64);
-    let tree = sample_tree(client, &item.seeds, fanouts, cfg)?;
-    let (features_t, masks_t) = assemble_tensors(&tree.levels, &tree.masks, features);
+    let mut tree = sample_tree(client, &item.seeds, fanouts, cfg)?;
+    let (features_t, masks_t) = match pool {
+        Some(p) => assemble_tensors_pooled(&tree.levels, &mut tree.masks, features, p),
+        None => assemble_tensors(&tree.levels, &tree.masks, features),
+    };
     Ok(ReadyBatch {
         index: item.index,
         epoch: item.epoch,
@@ -365,5 +401,38 @@ mod tests {
         assert_eq!(feats[0].as_f32(), &fs.batch(&levels[0])[..]);
         assert_eq!(feats[1].as_f32(), &fs.batch(&levels[1])[..]);
         assert_eq!(ms[0].as_f32(), &[1.0f32, 0.0][..]);
+    }
+
+    #[test]
+    fn pooled_assembly_matches_unpooled_and_stops_allocating() {
+        let fs = FeatureStore::unlabeled(8);
+        let pool = TensorPool::new(16);
+        let mut warm_misses = 0;
+        for round in 0..6 {
+            let levels: Vec<Vec<VId>> =
+                vec![vec![1, 2, 3], vec![4, crate::sampling::request::PAD, 5, 6]];
+            let mut masks = vec![vec![1.0f32, 0.0, 1.0, 1.0]];
+            let (f0, m0) = assemble_tensors(&levels, &masks, &fs);
+            let (f1, m1) = assemble_tensors_pooled(&levels, &mut masks, &fs, &pool);
+            for (a, b) in f0.iter().zip(f1.iter()).chain(m0.iter().zip(m1.iter())) {
+                assert_eq!(a.shape(), b.shape());
+                assert_eq!(a.as_f32(), b.as_f32());
+            }
+            assert!(
+                masks.iter().all(|m| m.is_empty()),
+                "mask vectors are moved into tensors, not copied"
+            );
+            // The consumer hands every backing buffer back, as the trainer
+            // does after a step — from the second round on, assembly must
+            // be served entirely from the pool.
+            for t in f1.into_iter().chain(m1) {
+                pool.put(t.into_f32());
+            }
+            match round {
+                0 => warm_misses = pool.misses(),
+                _ => assert_eq!(pool.misses(), warm_misses, "steady state must not allocate"),
+            }
+        }
+        assert!(pool.hits() > 0);
     }
 }

@@ -23,7 +23,7 @@ use crate::coordinator::pipeline::{
     assemble_tensors, batch_rng, produce_batch, BatchFeed, PipelineConfig, ReadyBatch, Reorder,
 };
 use crate::graph::csr::VId;
-use crate::runtime::tensor::HostTensor;
+use crate::runtime::tensor::{HostTensor, TensorPool};
 use crate::runtime::Runtime;
 use crate::sampling::client::SamplingClient;
 use crate::sampling::request::SampleConfig;
@@ -170,6 +170,14 @@ impl Trainer {
     /// ready tensors after the current parameters (moved, not copied — the
     /// batch is on the hot path), run, apply.
     pub fn execute_ready(&mut self, rb: ReadyBatch) -> Result<f32> {
+        self.execute_ready_pooled(rb, None)
+    }
+
+    /// [`Trainer::execute_ready`] plus the return half of the tensor
+    /// recycle loop (DESIGN.md §14): after the step, the batch's f32
+    /// feature/mask backing buffers go back into `pool` for the producers
+    /// to reuse. The i32 labels and the length-1 lr scalar stay out.
+    pub fn execute_ready_pooled(&mut self, rb: ReadyBatch, pool: Option<&TensorPool>) -> Result<f32> {
         let mut inputs: Vec<HostTensor> = self.params.tensors.clone();
         inputs.extend(rb.features);
         inputs.extend(rb.masks);
@@ -181,6 +189,15 @@ impl Trainer {
             .execute(&format!("{}_train", self.cfg.model), &inputs)?;
         let loss = out.remove(0).as_f32()[0];
         self.params.replace(out)?;
+        if let Some(pool) = pool {
+            for t in inputs.drain(self.n_params..) {
+                if let HostTensor::F32 { data, .. } = t {
+                    if data.len() > 1 {
+                        pool.put(data);
+                    }
+                }
+            }
+        }
         Ok(loss)
     }
 
@@ -214,6 +231,12 @@ impl Trainer {
         // the rest of the epoch.
         let window = producers * (depth + 1);
         let feed = BatchFeed::new(batcher, base, steps, window);
+        // Tensor recycle loop (DESIGN.md §14): the consumer returns each
+        // executed batch's f32 buffers here, producers draw from it for
+        // the next assembly. Capacity covers every buffer a full window of
+        // batches can hold (levels + masks), so steady-state training
+        // allocates no per-batch tensors.
+        let pool = TensorPool::new(window * (2 * fanouts.len() + 2));
 
         std::thread::scope(|scope| -> Result<Vec<f32>> {
             // The channel lives inside the scope so that on an early error
@@ -227,6 +250,7 @@ impl Trainer {
                 let fanouts = &fanouts;
                 let sample_cfg = &sample_cfg;
                 let features = features.clone();
+                let pool = &pool;
                 scope.spawn(move || {
                     while let Some(item) = feed.next() {
                         let index = item.index;
@@ -237,6 +261,7 @@ impl Trainer {
                             sample_cfg,
                             sample_seed,
                             item,
+                            Some(pool),
                         );
                         let failed = out.is_err();
                         if tx.send((index, out)).is_err() || failed {
@@ -254,7 +279,7 @@ impl Trainer {
                 while losses.len() < steps {
                     if pcfg.ordered {
                         if let Some(rb) = reorder.pop_ready() {
-                            losses.push(trainer.execute_ready(rb)?);
+                            losses.push(trainer.execute_ready_pooled(rb, Some(&pool))?);
                             feed.mark_consumed();
                             continue;
                         }
@@ -266,7 +291,7 @@ impl Trainer {
                     if pcfg.ordered {
                         reorder.push(index, rb);
                     } else {
-                        losses.push(trainer.execute_ready(rb)?);
+                        losses.push(trainer.execute_ready_pooled(rb, Some(&pool))?);
                         feed.mark_consumed();
                     }
                 }

@@ -53,6 +53,7 @@ pub const BENCHES: &[(&str, &str, &str)] = &[
     ("table4", "table4_accuracy", "Table IV — test accuracy parity via the full stack"),
     ("table5", "table5_cache_fill", "Table V — static cache fill vs model inference"),
     ("pipeline", "pipeline_throughput", "DESIGN.md §7/§9 — pipelined vs sync training"),
+    ("hotpath", "bench_hotpath", "DESIGN.md §14 — gather arena + pooled assembly hot path"),
 ];
 
 /// Resolve a short or full bench name to its cargo bench target.
@@ -898,7 +899,8 @@ mod tests {
         assert_eq!(resolve_bench("fig13"), Some("fig13_inference"));
         assert_eq!(resolve_bench("fig13_inference"), Some("fig13_inference"));
         assert_eq!(resolve_bench("nope"), None);
-        assert_eq!(BENCHES.len(), 13);
+        assert_eq!(resolve_bench("hotpath"), Some("bench_hotpath"));
+        assert_eq!(BENCHES.len(), 14);
     }
 
     /// CI's schema-validation step: every artifact emitted by the sweep

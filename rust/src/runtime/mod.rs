@@ -16,4 +16,4 @@ pub use backend::ExecutorBackend;
 pub use executor::Runtime;
 pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
 pub use reference::ReferenceBackend;
-pub use tensor::{DType, HostTensor};
+pub use tensor::{DType, HostTensor, TensorPool};

@@ -3,6 +3,8 @@
 //! additionally convert to/from `xla::Literal`.
 
 use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DType {
@@ -123,6 +125,84 @@ impl HostTensor {
     }
 }
 
+/// Bounded recycle pool for `f32` tensor backing buffers (DESIGN.md §14).
+/// The pipelined trainer returns a consumed batch's feature/mask buffers
+/// here; producers draw from it when assembling the next batch, so
+/// steady-state training allocates no per-batch tensors. Contents are
+/// opaque scratch — `get` zero-fills to the requested length and every
+/// assembly path overwrites what it uses, so pooling cannot change values.
+/// `put` drops buffers beyond `cap` (bounded memory under producer skew).
+pub struct TensorPool {
+    bufs: Mutex<Vec<Vec<f32>>>,
+    cap: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl TensorPool {
+    pub fn new(cap: usize) -> Self {
+        Self {
+            bufs: Mutex::new(Vec::new()),
+            cap: cap.max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// A zero-filled buffer of exactly `len` elements: the best-fit pooled
+    /// buffer whose capacity already covers `len` (a *hit* — no heap
+    /// traffic), or a fresh allocation (a *miss*).
+    pub fn get(&self, len: usize) -> Vec<f32> {
+        let mut q = self.bufs.lock().unwrap();
+        let mut best: Option<usize> = None;
+        for (i, b) in q.iter().enumerate() {
+            if b.capacity() >= len && best.map_or(true, |j| b.capacity() < q[j].capacity()) {
+                best = Some(i);
+            }
+        }
+        if let Some(i) = best {
+            let mut buf = q.swap_remove(i);
+            drop(q);
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            buf.clear();
+            buf.resize(len, 0.0);
+            buf
+        } else {
+            drop(q);
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            vec![0.0; len]
+        }
+    }
+
+    /// Return a buffer for reuse; dropped if the pool is at capacity.
+    pub fn put(&self, mut buf: Vec<f32>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        let mut q = self.bufs.lock().unwrap();
+        if q.len() < self.cap {
+            buf.clear();
+            q.push(buf);
+        }
+    }
+
+    /// `get` calls served from the pool.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// `get` calls that had to allocate — flat in steady state, which is
+    /// exactly what the `pooled_assembly_allocs_zero` bench check asserts.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Buffers currently parked in the pool.
+    pub fn pooled(&self) -> usize {
+        self.bufs.lock().unwrap().len()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -163,5 +243,28 @@ mod tests {
     #[should_panic]
     fn shape_mismatch_panics() {
         HostTensor::f32(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn pool_reuses_buffers_and_bounds_memory() {
+        let pool = TensorPool::new(2);
+        let a = pool.get(8);
+        assert_eq!((pool.hits(), pool.misses()), (0, 1));
+        pool.put(a);
+        // Best fit: a request of 4 reuses the 8-capacity buffer, zero-filled.
+        let b = pool.get(4);
+        assert_eq!((pool.hits(), pool.misses()), (1, 1));
+        assert_eq!(b.len(), 4);
+        assert!(b.iter().all(|&x| x == 0.0));
+        pool.put(b);
+        pool.put(vec![1.0; 16]);
+        pool.put(vec![1.0; 16]); // over cap → dropped
+        assert_eq!(pool.pooled(), 2);
+        // Only the 16-capacity buffer fits a request of 10, and reuse must
+        // not leak the old contents.
+        let c = pool.get(10);
+        assert_eq!(c.len(), 10);
+        assert!(c.iter().all(|&x| x == 0.0));
+        assert_eq!((pool.hits(), pool.misses()), (2, 1));
     }
 }

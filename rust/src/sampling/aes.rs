@@ -8,13 +8,61 @@
 use crate::util::rng::Rng;
 use crate::util::topk::TopK;
 
-/// Score one item. Weights ≤ 0 are treated as impossible (score 0).
+/// Score one item. Weights that are not strictly positive — zero, negative,
+/// or NaN — are treated as impossible (score 0) and consume no RNG draw.
 #[inline]
 pub fn score(rng: &mut Rng, weight: f32) -> f64 {
-    if weight <= 0.0 {
+    if !(weight > 0.0) {
         return 0.0;
     }
     rng.f64_open().powf(1.0 / weight as f64)
+}
+
+/// Smallest weight the block-scored fast path accepts. `f64_open()` is at
+/// least 2^-53 (ln u ≥ −36.74), and `u^(1/w)` can only underflow to 0 when
+/// `ln(u)/w < ln(2^-1075) ≈ −745`, i.e. when `w < 36.74/745 ≈ 0.0493`. With
+/// every weight ≥ 2^-4 the score is therefore always strictly positive, so
+/// the tiebreak draw that follows each uniform in [`score`]'s caller loop is
+/// unconditional and the whole draw sequence is statically known.
+pub const W_MIN: f32 = 0.0625;
+
+/// Score a whole candidate block, reproducing bit-for-bit the draw sequence
+/// of the scalar loop `{ s = score(rng, w); if s > 0 { t = rng.next_u64() } }`
+/// per candidate. When every weight is ≥ [`W_MIN`] (the common case — graph
+/// weights are sampled in [0.1, 1]) the uniforms and tiebreaks are pre-drawn
+/// in one pass and `u^(1/w)` is computed densely over the slice with
+/// precomputed reciprocal weights; otherwise it falls back to the scalar
+/// lockstep reference, so candidates with non-positive (or NaN) weights get
+/// score 0 and no tiebreak draw, exactly as before. Entries with score 0
+/// carry tiebreak 0 and must not be pushed.
+pub fn score_block(
+    rng: &mut Rng,
+    weights: &[f32],
+    inv: &mut Vec<f64>,
+    scores: &mut Vec<f64>,
+    tiebreaks: &mut Vec<u64>,
+) {
+    scores.clear();
+    tiebreaks.clear();
+    if weights.iter().all(|&w| w >= W_MIN) {
+        inv.clear();
+        inv.extend(weights.iter().map(|&w| 1.0 / (w as f64)));
+        scores.reserve(weights.len());
+        tiebreaks.reserve(weights.len());
+        for _ in 0..weights.len() {
+            scores.push(rng.f64_open());
+            tiebreaks.push(rng.next_u64());
+        }
+        for (s, &r) in scores.iter_mut().zip(inv.iter()) {
+            *s = s.powf(r);
+        }
+    } else {
+        for &w in weights {
+            let s = score(rng, w);
+            scores.push(s);
+            tiebreaks.push(if s > 0.0 { rng.next_u64() } else { 0 });
+        }
+    }
 }
 
 /// Sample up to k items without replacement with probability proportional
@@ -124,6 +172,45 @@ mod tests {
             let pc = count_central[i] as f64 / trials as f64;
             let pd = count_dist[i] as f64 / trials as f64;
             assert!((pc - pd).abs() < 0.02, "item {i}: central {pc} dist {pd}");
+        }
+    }
+
+    #[test]
+    fn nan_and_negative_weights_score_zero_without_draws() {
+        let mut rng = Rng::new(990);
+        let mut twin = rng.clone();
+        assert_eq!(score(&mut rng, f32::NAN), 0.0);
+        assert_eq!(score(&mut rng, -1.0), 0.0);
+        assert_eq!(score(&mut rng, 0.0), 0.0);
+        // None of the above consumed a draw: the streams still agree.
+        assert_eq!(rng.next_u64(), twin.next_u64());
+    }
+
+    /// The block scorer must replay the scalar loop's exact draw sequence —
+    /// both on the dense fast path (all weights ≥ W_MIN) and on the scalar
+    /// fallback (a below-threshold or non-positive weight present).
+    #[test]
+    fn score_block_matches_scalar_lockstep() {
+        let cases: Vec<Vec<f32>> = vec![
+            vec![1.0, 0.5, 0.25, 0.9, 0.0625], // fast path
+            (0..200).map(|i| 0.1 + (i % 10) as f32 * 0.09).collect(),
+            vec![1.0, 0.01, 0.7],     // sub-W_MIN → fallback
+            vec![0.5, 0.0, -2.0, 0.8] // non-positive → fallback
+        ];
+        for (case, weights) in cases.iter().enumerate() {
+            let mut a = Rng::new(7000 + case as u64);
+            let mut b = a.clone();
+            let mut scalar: Vec<(f64, u64)> = Vec::new();
+            for &w in weights {
+                let s = score(&mut a, w);
+                scalar.push((s, if s > 0.0 { a.next_u64() } else { 0 }));
+            }
+            let (mut inv, mut scores, mut ties) = (Vec::new(), Vec::new(), Vec::new());
+            score_block(&mut b, weights, &mut inv, &mut scores, &mut ties);
+            let block: Vec<(f64, u64)> = scores.iter().copied().zip(ties.iter().copied()).collect();
+            assert_eq!(scalar, block, "case {case}");
+            // and the RNGs end in the same state
+            assert_eq!(a.next_u64(), b.next_u64(), "case {case}");
         }
     }
 

@@ -11,26 +11,37 @@ use crate::util::rng::Rng;
 
 /// Sample k distinct indices from [0, n), returned in increasing order.
 pub fn sample(rng: &mut Rng, n: usize, k: usize) -> Vec<usize> {
+    let mut out = Vec::with_capacity(k);
+    sample_into(rng, n, k, &mut out);
+    out
+}
+
+/// [`sample`] into a caller-owned buffer (cleared first) — identical draws,
+/// no allocation when the buffer's capacity already fits k. The gather
+/// arena (DESIGN.md §14) reuses one buffer across every uniform gather a
+/// pool worker serves.
+pub fn sample_into(rng: &mut Rng, n: usize, k: usize, out: &mut Vec<usize>) {
     assert!(k <= n, "k={k} > n={n}");
+    out.clear();
     if k == 0 {
-        return Vec::new();
+        return;
     }
     if k == n {
-        return (0..n).collect();
+        out.extend(0..n);
+        return;
     }
     // Vitter's crossover: Method D pays off when n/k is large.
     const ALPHA_INV: usize = 13;
     if n >= ALPHA_INV * k {
-        method_d(rng, n, k)
+        method_d(rng, n, k, out)
     } else {
-        method_a(rng, n, k)
+        method_a(rng, n, k, out)
     }
 }
 
 /// Method A: scan records, selecting each with the exact conditional
 /// probability k_remaining / n_remaining. O(n), tiny constant.
-fn method_a(rng: &mut Rng, n: usize, k: usize) -> Vec<usize> {
-    let mut out = Vec::with_capacity(k);
+fn method_a(rng: &mut Rng, n: usize, k: usize, out: &mut Vec<usize>) {
     let mut need = k;
     let mut remaining = n;
     let mut idx = 0usize;
@@ -42,14 +53,12 @@ fn method_a(rng: &mut Rng, n: usize, k: usize) -> Vec<usize> {
         idx += 1;
         remaining -= 1;
     }
-    out
 }
 
 /// Method D: generate skips S via rejection from the exact skip
 /// distribution. Expected O(k) time independent of n. Direct transcription
 /// of Vitter's Program D (TOMS'87, §6).
-fn method_d(rng: &mut Rng, n: usize, k: usize) -> Vec<usize> {
-    let mut out = Vec::with_capacity(k);
+fn method_d(rng: &mut Rng, n: usize, k: usize, out: &mut Vec<usize>) {
     let mut cur = 0usize; // absolute index of the next candidate record
     let mut nn = n as f64; // N: records remaining
     let mut kk = k as f64; // n: samples remaining
@@ -110,7 +119,6 @@ fn method_d(rng: &mut Rng, n: usize, k: usize) -> Vec<usize> {
     // kk == 1: the last record is uniform over the remainder.
     let s = (nn * vprime).floor().min(nn - 1.0).max(0.0) as usize;
     out.push(cur + s);
-    out
 }
 
 #[cfg(test)]
@@ -173,6 +181,19 @@ mod tests {
             let s: usize = chunk.iter().sum();
             let e = expected * 200.0;
             assert!((s as f64 - e).abs() < e * 0.07, "bucket {s} vs {e}");
+        }
+    }
+
+    #[test]
+    fn sample_into_reuse_matches_fresh() {
+        let mut buf = Vec::new();
+        for seed in 0..5u64 {
+            let mut a = Rng::new(seed);
+            let mut b = Rng::new(seed);
+            for &(n, k) in &[(10usize, 3usize), (1000, 5), (100_000, 7), (50, 50), (7, 0)] {
+                sample_into(&mut a, n, k, &mut buf);
+                assert_eq!(buf, sample(&mut b, n, k), "n={n} k={k}");
+            }
         }
     }
 

@@ -22,11 +22,43 @@ use anyhow::{bail, Result};
 use std::sync::Arc;
 
 use crate::graph::csr::VId;
-use crate::sampling::request::{GatherRequest, GatherResponse, SampleConfig};
+use crate::sampling::request::{seed_stream_key, GatherRequest, GatherResponse, SampleConfig};
 use crate::sampling::transport::Transport;
 use crate::util::bitset::BitMatrix;
 use crate::util::rng::Rng;
 use crate::util::topk::TopK;
+
+/// Per-client request scratch (DESIGN.md §14): the bucketing, seat, shard
+/// and response-slot buffers `sample_one_hop` needs, reused across calls so
+/// the K hops of a tree (and every batch a pipelined producer assembles)
+/// re-run the Gather/Apply round without re-allocating its spines. Purely
+/// structural scratch — every entry is cleared or overwritten before use and
+/// no RNG state lives here, so reuse cannot change sampled bits.
+#[derive(Clone)]
+pub struct ClientScratch {
+    /// Seed occurrences bucketed by server (spine + inner buffers reused).
+    per_server_seeds: Vec<Vec<VId>>,
+    /// seat[i] = (server, index within that server's request) per replica.
+    seat: Vec<Vec<(usize, u32)>>,
+    /// Shards sent per server this round.
+    shards_of: Vec<usize>,
+    /// Response slots, indexed [server][shard].
+    responses: Vec<Vec<Option<GatherResponse>>>,
+    /// Weighted Apply heap, `reset` per seed.
+    tk: TopK<VId>,
+}
+
+impl Default for ClientScratch {
+    fn default() -> Self {
+        Self {
+            per_server_seeds: Vec::new(),
+            seat: Vec::new(),
+            shards_of: Vec::new(),
+            responses: Vec::new(),
+            tk: TopK::new(0),
+        }
+    }
+}
 
 #[derive(Clone)]
 pub enum RouteMode {
@@ -64,6 +96,8 @@ pub struct SamplingClient {
     /// `seed_offset`) that a server pool executes concurrently.
     /// `usize::MAX` or 0 (normalized at use) disables splitting.
     pub shard_size: usize,
+    /// Reused request scratch (see [`ClientScratch`]).
+    pub scratch: ClientScratch,
 }
 
 impl SamplingClient {
@@ -88,11 +122,21 @@ impl SamplingClient {
         cfg: &SampleConfig,
     ) -> Result<OneHopSample> {
         // --- Gather: bucket seed occurrences by server. Membership bits
-        // are iterated in place — no per-seed route Vec allocation. ---
+        // are iterated in place — no per-seed route Vec allocation; the
+        // bucketing/seat/slot buffers come from the reused scratch. ---
         let p = self.servers.len();
-        let mut per_server_seeds: Vec<Vec<VId>> = vec![Vec::new(); p];
-        // seat[i] = list of (server, index within that server's request)
-        let mut seat: Vec<Vec<(usize, u32)>> = vec![Vec::new(); seeds.len()];
+        let sc = &mut self.scratch;
+        for b in sc.per_server_seeds.iter_mut() {
+            b.clear();
+        }
+        sc.per_server_seeds.resize_with(p, Vec::new);
+        for s in sc.seat.iter_mut() {
+            s.clear();
+        }
+        if sc.seat.len() < seeds.len() {
+            sc.seat.resize_with(seeds.len(), Vec::new);
+        }
+        let (seat, per_server_seeds) = (&mut sc.seat, &mut sc.per_server_seeds);
         for (i, &s) in seeds.iter().enumerate() {
             let mut take = |srv: usize| {
                 seat[i].push((srv, per_server_seeds[srv].len() as u32));
@@ -117,9 +161,10 @@ impl SamplingClient {
         };
         let (tx, rx) = std::sync::mpsc::channel();
         // shards_of[srv] = number of shards sent to that server (0 = none).
-        let mut shards_of: Vec<usize> = vec![0; p];
+        sc.shards_of.clear();
+        sc.shards_of.resize(p, 0);
         let mut total_sent = 0usize;
-        for (srv, sv_seeds) in per_server_seeds.into_iter().enumerate() {
+        for (srv, sv_seeds) in sc.per_server_seeds.iter().enumerate() {
             if sv_seeds.is_empty() {
                 continue;
             }
@@ -128,15 +173,17 @@ impl SamplingClient {
             // shard size, and all shards of one request share the salt.
             let salt = self.rng.next_u64();
             let n_shards = sv_seeds.len().div_ceil(shard);
-            shards_of[srv] = n_shards;
+            sc.shards_of[srv] = n_shards;
             total_sent += n_shards;
             // Transport errors already name the partition and its peer
-            // address (socket) or channel (in-process).
+            // address (socket) or channel (in-process). Requests own their
+            // seed Vec (it travels on the wire), so shards copy out of the
+            // reused bucket instead of consuming it.
             let send_shard =
                 |req: GatherRequest| -> Result<()> { self.servers[srv].send_gather(req, &tx) };
             if n_shards == 1 {
                 send_shard(GatherRequest {
-                    seeds: sv_seeds,
+                    seeds: sv_seeds.clone(),
                     fanout,
                     cfg: cfg.clone(),
                     salt,
@@ -158,9 +205,18 @@ impl SamplingClient {
         }
         drop(tx);
         // responses[srv][shard] slots, filled as shards come back in any
-        // order (the echoed seed_offset identifies the slot).
-        let mut responses: Vec<Vec<Option<GatherResponse>>> =
-            shards_of.iter().map(|&n| vec![None; n]).collect();
+        // order (the echoed seed_offset identifies the slot). The slot
+        // spines are reused; each slot is overwritten before it is read.
+        for (b, &n) in sc.responses.iter_mut().zip(sc.shards_of.iter()) {
+            b.clear();
+            b.resize(n, None);
+        }
+        if sc.responses.len() < p {
+            let start = sc.responses.len();
+            sc.responses
+                .extend(sc.shards_of[start..].iter().map(|&n| vec![None; n]));
+        }
+        let responses = &mut sc.responses;
         for _ in 0..total_sent {
             match rx.recv() {
                 Ok(r) => {
@@ -194,16 +250,18 @@ impl SamplingClient {
             neighbors: Vec::new(),
         };
         out.offsets.push(0);
-        // One reusable top-k scratch for the whole batch: the weighted merge
-        // reads (neighbor, score) straight off the response slices instead
-        // of materializing per-seed Vec<Vec<_>> lists.
-        let mut tk: TopK<VId> = TopK::new(fanout);
-        for seats in &seat {
+        // One reusable top-k scratch for the whole client: the weighted
+        // merge reads (neighbor, score) straight off the response slices
+        // instead of materializing per-seed Vec<Vec<_>> lists. (`sc.seat`
+        // may be longer than this batch — only the first seeds.len()
+        // entries were filled above.)
+        let tk = &mut sc.tk;
+        for seats in &sc.seat[..seeds.len()] {
             if cfg.weighted {
                 tk.reset(fanout);
                 let mut tiebreak = 0u64;
                 for &(srv, pos) in seats {
-                    if let Some((r, j)) = slice_of(&responses, shard, srv, pos) {
+                    if let Some((r, j)) = slice_of(responses, shard, srv, pos) {
                         let nbrs = r.neighbors_of(j);
                         let scores = r.scores_of(j);
                         for (&n, &s) in nbrs.iter().zip(scores) {
@@ -236,6 +294,61 @@ impl SamplingClient {
             out.offsets.push(out.neighbors.len() as u32);
         }
         Ok(out)
+    }
+
+    /// Uniform **negative sampling** over the global vertex space — the
+    /// unsupervised-training primitive (GLE's `negative_sampler`). Entirely
+    /// client-local: the membership matrix already knows the global vertex
+    /// count, so no wire round-trip is needed. For each seed occurrence,
+    /// up to `k` distinct vertices are drawn uniformly from `[0, n)`,
+    /// excluding the seed itself and (when `positives` is given, e.g. the
+    /// `sample_one_hop` result for the same seed list) that occurrence's
+    /// positive neighbor set.
+    ///
+    /// Determinism: one salt is drawn from the client RNG per call, and
+    /// each occurrence samples from its own `(salt, index)`-derived stream
+    /// — the same keying as the servers' per-seed streams — so results
+    /// depend only on the client's RNG position, never on batch splits.
+    pub fn sample_negatives(
+        &mut self,
+        seeds: &[VId],
+        k: usize,
+        positives: Option<&OneHopSample>,
+    ) -> OneHopSample {
+        if let Some(p) = positives {
+            debug_assert_eq!(p.offsets.len(), seeds.len() + 1);
+        }
+        let n = self.membership.rows();
+        let salt = self.rng.next_u64();
+        let mut out = OneHopSample {
+            offsets: Vec::with_capacity(seeds.len() + 1),
+            neighbors: Vec::with_capacity(seeds.len() * k),
+        };
+        out.offsets.push(0);
+        for (i, &seed) in seeds.iter().enumerate() {
+            let mut rng = Rng::new(seed_stream_key(salt, i as u64));
+            let pos = positives.map_or(&[][..], |p| p.neighbors_of(i));
+            let start = out.neighbors.len();
+            // Rejection sampling: the excluded set (seed + positives +
+            // already-drawn negatives) is tiny next to n, so a bounded
+            // number of rounds nearly always fills k; degenerate graphs
+            // where it cannot just return fewer negatives.
+            let mut attempts = 0usize;
+            let budget = 16 * k + 64;
+            while out.neighbors.len() - start < k && attempts < budget {
+                attempts += 1;
+                let v = rng.usize(n) as VId;
+                if v == seed
+                    || pos.contains(&v)
+                    || out.neighbors[start..].contains(&v)
+                {
+                    continue;
+                }
+                out.neighbors.push(v);
+            }
+            out.offsets.push(out.neighbors.len() as u32);
+        }
+        out
     }
 }
 
@@ -294,6 +407,7 @@ mod tests {
             mode: RouteMode::AllReplicas,
             rng: Rng::new(77),
             shard_size,
+            scratch: ClientScratch::default(),
         };
         (client, servers)
     }
@@ -398,6 +512,62 @@ mod tests {
         let b2 = c2.sample_one_hop(&batch_b, 5, &SampleConfig::default()).unwrap();
         assert_eq!(a1.neighbors, a2.neighbors);
         assert_eq!(b1.neighbors, b2.neighbors);
+    }
+
+    #[test]
+    fn negative_sampling_deterministic_and_excludes_positives() {
+        let (client, _s) = launch_small(); // 600-vertex graph
+        let mut c1 = client.split(5);
+        let mut c2 = client.split(5);
+        let seeds: Vec<VId> = (0..32).collect();
+        let pos1 = c1.sample_one_hop(&seeds, 5, &SampleConfig::default()).unwrap();
+        let neg1 = c1.sample_negatives(&seeds, 6, Some(&pos1));
+        let pos2 = c2.sample_one_hop(&seeds, 5, &SampleConfig::default()).unwrap();
+        let neg2 = c2.sample_negatives(&seeds, 6, Some(&pos2));
+        assert_eq!(neg1.offsets, neg2.offsets, "negatives must reproduce");
+        assert_eq!(neg1.neighbors, neg2.neighbors);
+        for (i, &seed) in seeds.iter().enumerate() {
+            let negs = neg1.neighbors_of(i);
+            assert_eq!(negs.len(), 6, "n=600 dwarfs the excluded set");
+            let mut distinct = negs.to_vec();
+            distinct.sort_unstable();
+            distinct.dedup();
+            assert_eq!(distinct.len(), negs.len(), "negatives must be distinct");
+            for &v in negs {
+                assert!((v as usize) < 600);
+                assert_ne!(v, seed, "seed sampled as its own negative");
+                assert!(
+                    !pos1.neighbors_of(i).contains(&v),
+                    "positive {v} leaked into negatives of seed {seed}"
+                );
+            }
+        }
+    }
+
+    /// The reused scratch must not leak state between batches of different
+    /// sizes: a big batch followed by a small one must produce exactly
+    /// small.len() seats (a stale-seat bug would append ghost offsets).
+    #[test]
+    fn scratch_survives_shrinking_batches() {
+        let (client, _s) = launch_small_sized(2, 7);
+        let mut c = client.split(11);
+        let big: Vec<VId> = (0..80).collect();
+        c.sample_one_hop(&big, 5, &SampleConfig::default()).unwrap();
+        let small: Vec<VId> = (3..11).collect();
+        let got = c
+            .sample_one_hop(
+                &small,
+                4,
+                &SampleConfig {
+                    weighted: true,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        assert_eq!(got.offsets.len(), small.len() + 1);
+        for i in 0..small.len() {
+            assert!(got.neighbors_of(i).len() <= 4);
+        }
     }
 
     #[test]

@@ -17,7 +17,7 @@ pub mod subgraph;
 pub mod transport;
 pub mod wire;
 
-pub use client::{OneHopSample, RouteMode, SamplingClient};
+pub use client::{ClientScratch, OneHopSample, RouteMode, SamplingClient};
 pub use request::{Direction, GatherRequest, GatherResponse, SampleConfig, PAD};
 pub use service::{balanced_seeds, SamplingService, ServiceConfig};
 pub use subgraph::{sample_tree, TreeSample};

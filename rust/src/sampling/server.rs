@@ -81,6 +81,43 @@ pub fn thread_cpu_ns() -> u64 {
     ts.tv_sec as u64 * 1_000_000_000 + ts.tv_nsec as u64
 }
 
+/// Per-worker gather arena (DESIGN.md §14): every buffer the gather ops
+/// need, reused across all requests a pool worker serves so steady-state
+/// gathering allocates nothing per seed. Strictly computational scratch —
+/// each field is cleared (or fully overwritten) before use within one seed,
+/// and no RNG state lives here, so reuse cannot change sampled bits.
+pub struct GatherScratch {
+    /// Weighted Apply heap, `reset` per seed (allocation kept).
+    tk: crate::util::topk::TopK<VId>,
+    /// Candidate edge weights gathered for block scoring.
+    weights: Vec<f32>,
+    /// `aes::score_block` internals: reciprocal weights, scores, tiebreaks.
+    inv: Vec<f64>,
+    scores: Vec<f64>,
+    tiebreaks: Vec<u64>,
+    /// Uniform path: Algorithm D output indices (`sample_into`).
+    picks: Vec<usize>,
+}
+
+impl GatherScratch {
+    pub fn new() -> Self {
+        Self {
+            tk: crate::util::topk::TopK::new(0),
+            weights: Vec::new(),
+            inv: Vec::new(),
+            scores: Vec::new(),
+            tiebreaks: Vec::new(),
+            picks: Vec::new(),
+        }
+    }
+}
+
+impl Default for GatherScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 pub struct PartitionServer {
     pub graph: Arc<PartitionGraph>,
     pub stats: Arc<ServerStats>,
@@ -92,6 +129,8 @@ pub struct PartitionServer {
     seed: u64,
     /// Pool slot for worker-attributed stats (0 for single-thread servers).
     worker: usize,
+    /// This worker's gather arena.
+    scratch: GatherScratch,
 }
 
 impl PartitionServer {
@@ -112,6 +151,7 @@ impl PartitionServer {
             stats,
             seed: seed ^ part.wrapping_mul(0x9E3779B97F4A7C15),
             worker,
+            scratch: GatherScratch::new(),
         }
     }
 
@@ -185,9 +225,25 @@ impl PartitionServer {
             if let Some(local) = g.local_id(seed) {
                 let mut rng = self.seed_stream(req.salt, req.seed_offset as u64 + i as u64);
                 if req.cfg.weighted {
-                    self.gather_weighted(&mut rng, local, req.fanout, &req.cfg, &mut resp);
+                    Self::gather_weighted(
+                        &g,
+                        &mut rng,
+                        local,
+                        req.fanout,
+                        &req.cfg,
+                        &mut resp,
+                        &mut self.scratch,
+                    );
                 } else {
-                    self.gather_uniform(&mut rng, local, req.fanout, &req.cfg, &mut resp);
+                    Self::gather_uniform(
+                        &g,
+                        &mut rng,
+                        local,
+                        req.fanout,
+                        &req.cfg,
+                        &mut resp,
+                        &mut self.scratch,
+                    );
                 }
             }
             resp.offsets.push(resp.neighbors.len() as u32);
@@ -245,14 +301,14 @@ impl PartitionServer {
     /// `r = fanout · local_deg / global_deg` of its local neighbors with
     /// Algorithm D. Stochastic rounding keeps E[Σ r over servers] = fanout.
     fn gather_uniform(
-        &self,
+        g: &PartitionGraph,
         rng: &mut Rng,
         local: u32,
         fanout: usize,
         cfg: &SampleConfig,
         resp: &mut GatherResponse,
+        sc: &mut GatherScratch,
     ) {
-        let g = &self.graph;
         let (cands, _) = Self::candidates(g, local, cfg);
         let local_deg = cands.len();
         if local_deg == 0 {
@@ -276,7 +332,8 @@ impl PartitionServer {
         if r == local_deg {
             resp.neighbors.extend_from_slice(cands);
         } else {
-            for i in algo_d::sample(rng, local_deg, r) {
+            algo_d::sample_into(rng, local_deg, r, &mut sc.picks);
+            for &i in &sc.picks {
                 resp.neighbors.push(cands[i]);
             }
         }
@@ -284,37 +341,54 @@ impl PartitionServer {
 
     /// WeightedGatherOp (Algorithm 3): A-ES scores for local neighbors,
     /// keep the local top-fanout, ship (neighbor, score) to the client.
+    /// Weights are gathered into the arena once, block-scored
+    /// (`aes::score_block` — bit-identical to the scalar loop), and pushed
+    /// through the arena's reused heap.
     fn gather_weighted(
-        &self,
+        g: &PartitionGraph,
         rng: &mut Rng,
         local: u32,
         fanout: usize,
         cfg: &SampleConfig,
         resp: &mut GatherResponse,
+        sc: &mut GatherScratch,
     ) {
-        let g = &self.graph;
         let (cands, first_edge) = Self::candidates(g, local, cfg);
         if cands.is_empty() {
             return;
         }
         resp.work_edges += cands.len() as u64;
-        let mut tk = crate::util::topk::TopK::new(fanout.min(cands.len()));
-        for (i, &nbr) in cands.iter().enumerate() {
-            // In-edges reference the owning out-edge for weight lookup (the
-            // paper's (dst, edge_id) trick).
-            let w = match cfg.direction {
-                Direction::Out => g.edge_weight((first_edge + i) as u32),
-                Direction::In => {
-                    let (a, _) = g.in_range(local);
-                    g.edge_weight(g.in_eid[a + i])
+        sc.weights.clear();
+        match cfg.direction {
+            Direction::Out => {
+                for i in 0..cands.len() {
+                    sc.weights.push(g.edge_weight((first_edge + i) as u32));
                 }
-            };
-            let s = crate::sampling::aes::score(rng, w);
-            if s > 0.0 {
-                tk.push(s, rng.next_u64(), nbr);
+            }
+            Direction::In => {
+                // In-edges reference the owning out-edge for weight lookup
+                // (the paper's (dst, edge_id) trick).
+                let (a, _) = g.in_range(local);
+                for i in 0..cands.len() {
+                    sc.weights.push(g.edge_weight(g.in_eid[a + i]));
+                }
             }
         }
-        for (s, nbr) in tk.into_sorted() {
+        crate::sampling::aes::score_block(
+            rng,
+            &sc.weights,
+            &mut sc.inv,
+            &mut sc.scores,
+            &mut sc.tiebreaks,
+        );
+        sc.tk.reset(fanout.min(cands.len()));
+        for (i, &nbr) in cands.iter().enumerate() {
+            let s = sc.scores[i];
+            if s > 0.0 {
+                sc.tk.push(s, sc.tiebreaks[i], nbr);
+            }
+        }
+        for (s, nbr) in sc.tk.drain_sorted() {
             resp.neighbors.push(nbr);
             resp.scores.push(s);
         }

@@ -311,6 +311,7 @@ impl SamplingService {
             mode: RouteMode::AllReplicas,
             rng: Rng::new(seed),
             shard_size: self.config.shard_size,
+            scratch: Default::default(),
         }
     }
 
@@ -322,6 +323,7 @@ impl SamplingService {
             mode: RouteMode::Owner(owner),
             rng: Rng::new(seed),
             shard_size: self.config.shard_size,
+            scratch: Default::default(),
         }
     }
 

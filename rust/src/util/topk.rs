@@ -45,9 +45,17 @@ impl<T> TopK<T> {
         if self.heap.len() < self.k {
             self.heap.push((score, tiebreak, item));
             self.sift_up(self.heap.len() - 1);
-        } else if Self::gt(score, tiebreak, self.heap[0].0, self.heap[0].1) {
-            self.heap[0] = (score, tiebreak, item);
-            self.sift_down(0);
+        } else {
+            // Fast reject: once full, a strictly smaller score can never
+            // enter — on power-law candidate lists this is the common case,
+            // and it skips the tiebreak compare and all sift work.
+            if score < self.heap[0].0 {
+                return;
+            }
+            if Self::gt(score, tiebreak, self.heap[0].0, self.heap[0].1) {
+                self.heap[0] = (score, tiebreak, item);
+                self.sift_down(0);
+            }
         }
     }
 
@@ -92,10 +100,13 @@ impl<T> TopK<T> {
         }
     }
 
-    /// Drain in descending score order.
+    /// Drain in descending score order. `total_cmp` keeps the sort total
+    /// even for NaN scores (which sort last instead of panicking); for the
+    /// non-NaN, non-negative scores A-ES produces it orders identically to
+    /// the old `partial_cmp().unwrap()`.
     pub fn into_sorted(mut self) -> Vec<(f64, T)> {
         self.heap
-            .sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(b.1.cmp(&a.1)));
+            .sort_unstable_by(|a, b| b.0.total_cmp(&a.0).then(b.1.cmp(&a.1)));
         self.heap.into_iter().map(|(s, _, t)| (s, t)).collect()
     }
 
@@ -113,7 +124,7 @@ impl<T> TopK<T> {
     /// allocation intact (pair with [`TopK::reset`]).
     pub fn drain_sorted(&mut self) -> impl Iterator<Item = (f64, T)> + '_ {
         self.heap
-            .sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(b.1.cmp(&a.1)));
+            .sort_unstable_by(|a, b| b.0.total_cmp(&a.0).then(b.1.cmp(&a.1)));
         self.heap.drain(..).map(|(s, _, t)| (s, t))
     }
 }
@@ -186,6 +197,37 @@ mod tests {
             assert_eq!(a, b);
             assert!(reused.is_empty());
         }
+    }
+
+    #[test]
+    fn nan_scores_do_not_panic_and_sort_last() {
+        let mut tk = TopK::new(4);
+        tk.push(0.5, 0, 0usize);
+        tk.push(f64::NAN, 1, 1);
+        tk.push(0.9, 2, 2);
+        let out = tk.into_sorted();
+        // total_cmp orders NaN above every finite value, so descending
+        // order puts it first — the point is the sort no longer panics and
+        // real scores keep their relative order.
+        let finite: Vec<f64> = out.iter().map(|x| x.0).filter(|s| !s.is_nan()).collect();
+        assert_eq!(finite, vec![0.9, 0.5]);
+        let mut tk = TopK::new(2);
+        tk.push(f64::NAN, 0, 0usize);
+        tk.push(1.0, 1, 1);
+        let _ = tk.drain_sorted().collect::<Vec<_>>(); // must not panic
+    }
+
+    #[test]
+    fn full_heap_rejects_below_threshold() {
+        let mut tk = TopK::new(2);
+        tk.push(5.0, 0, 0usize);
+        tk.push(7.0, 1, 1);
+        let thr = tk.threshold().unwrap();
+        assert_eq!(thr, 5.0);
+        tk.push(4.9, 2, 2); // strictly below threshold — fast-rejected
+        tk.push(5.0, 3, 3); // tie with threshold, larger tiebreak — replaces
+        let out = tk.into_sorted();
+        assert_eq!(out.iter().map(|x| x.1).collect::<Vec<_>>(), vec![1, 3]);
     }
 
     #[test]

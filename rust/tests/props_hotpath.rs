@@ -1,0 +1,220 @@
+//! Property tests for the gather→tensor hot path (DESIGN.md §14): arena
+//! reuse, client scratch reuse, block-scored A-ES and pooled assembly are
+//! all *bit-transparent* — warm reused state must reproduce cold
+//! fresh-allocation runs exactly, across `(workers, shard_size)` pool
+//! geometries and channel/socket transports. Checks are FNV digests over
+//! the exact little-endian bytes (props_store.rs style), so one flipped
+//! bit anywhere in offsets, neighbors, wire scores, masks or losses fails
+//! the property. Replay failures with GLISP_PROP_SEED.
+
+use glisp::coordinator::PipelineConfig;
+use glisp::graph::generator;
+use glisp::graph::hetero::build_partitions;
+use glisp::harness::workloads::train_stack_cfg;
+use glisp::partition::{AdaDNE, Partitioner};
+use glisp::prop_assert_eq;
+use glisp::sampling::server::{PartitionServer, ServerStats};
+use glisp::sampling::subgraph::TreeSample;
+use glisp::sampling::{
+    sample_tree, GatherRequest, GatherResponse, SampleConfig, SamplingClient, SamplingService,
+    ServiceConfig,
+};
+use glisp::util::digest::{f32_digest, fnv1a};
+use glisp::util::proptest::prop_check;
+use glisp::util::rng::Rng;
+use std::sync::Arc;
+
+fn fold_resp(bytes: &mut Vec<u8>, r: &GatherResponse) {
+    for x in &r.offsets {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    for x in &r.neighbors {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    for s in &r.scores {
+        bytes.extend_from_slice(&s.to_le_bytes());
+    }
+}
+
+fn fold_tree(bytes: &mut Vec<u8>, t: &TreeSample) {
+    for lvl in &t.levels {
+        for v in lvl {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    for m in &t.masks {
+        for x in m {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+/// Warm server arenas (one `PartitionServer` reused across every request,
+/// as pool workers run) must reproduce cold fresh-server gathers — offsets,
+/// neighbors AND wire scores — bit-for-bit on arbitrary graphs.
+#[test]
+fn warm_gather_arena_bit_identical_to_cold_servers() {
+    prop_check("warm gather arena bits", 6, |rng| {
+        let n = rng.range(200, 700);
+        let g = generator::heterogeneous_graph(n, n * 6, 2, 3, 2.2, rng);
+        let parts = rng.range(1, 4);
+        let ea = AdaDNE::default().partition(&g, parts, rng.next_u64());
+        let built = build_partitions(&g, &ea.part_of_edge, parts).unwrap();
+        let seed = rng.next_u64();
+        for cfg in [
+            SampleConfig::default(),
+            SampleConfig {
+                weighted: true,
+                ..Default::default()
+            },
+        ] {
+            for pg in &built {
+                let pg = Arc::new(pg.clone());
+                let mut reqs = Vec::new();
+                for b in 0..5u64 {
+                    // Duplicate-heavy seed lists to exercise the per-seed
+                    // stream indexing under arena reuse.
+                    let len = rng.range(4, 40);
+                    let seeds: Vec<u32> = (0..len)
+                        .map(|_| pg.global(rng.usize(pg.nv()) as u32))
+                        .collect();
+                    reqs.push(GatherRequest {
+                        seeds,
+                        fanout: rng.range(2, 9),
+                        salt: rng.next_u64(),
+                        cfg: cfg.clone(),
+                        seed_offset: rng.usize(64) as u32,
+                        token: b,
+                    });
+                }
+                let mut warm_bytes = Vec::new();
+                let mut srv =
+                    PartitionServer::new(pg.clone(), Arc::new(ServerStats::default()), seed);
+                for req in &reqs {
+                    fold_resp(&mut warm_bytes, &srv.gather(req));
+                }
+                let mut cold_bytes = Vec::new();
+                for req in &reqs {
+                    let mut cold =
+                        PartitionServer::new(pg.clone(), Arc::new(ServerStats::default()), seed);
+                    fold_resp(&mut cold_bytes, &cold.gather(req));
+                }
+                prop_assert_eq!(fnv1a(&warm_bytes), fnv1a(&cold_bytes));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// One digest per deployment shape — pool geometries (workers, shard) and
+/// the TCP socket transport — over multi-batch K-hop trees sampled both
+/// with a warm reused client (scratch carried across batches) and cold
+/// per-batch clients. All digests must agree.
+#[test]
+fn hotpath_bits_invariant_across_geometries_and_transports() {
+    prop_check("hotpath geometry/transport bits", 3, |rng| {
+        let n = rng.range(300, 900);
+        let g = generator::heterogeneous_graph(n, n * 8, 2, 3, 2.2, rng);
+        let parts = rng.range(2, 4);
+        let ea = AdaDNE::default().partition(&g, parts, 1);
+        let fanouts = [rng.range(2, 7), rng.range(2, 5)];
+        let batches: Vec<Vec<u32>> = (0..3)
+            .map(|b| {
+                (0..32)
+                    .map(|i| ((b * 97 + i * 13) % g.n) as u32)
+                    .collect()
+            })
+            .collect();
+
+        let digest_of = |mut warm: SamplingClient,
+                         fresh: &dyn Fn() -> SamplingClient|
+         -> Result<u64, String> {
+            let mut bytes = Vec::new();
+            for cfg in [
+                SampleConfig::default(),
+                SampleConfig {
+                    weighted: true,
+                    ..Default::default()
+                },
+            ] {
+                let mut warm_bytes = Vec::new();
+                for (b, seeds) in batches.iter().enumerate() {
+                    warm.rng = Rng::new(0xA11CE ^ b as u64);
+                    let t = sample_tree(&mut warm, seeds, &fanouts, &cfg).unwrap();
+                    fold_tree(&mut warm_bytes, &t);
+                }
+                // Cold clients: fresh scratch per batch, same RNG stream.
+                let mut cold_bytes = Vec::new();
+                for (b, seeds) in batches.iter().enumerate() {
+                    let mut c = fresh();
+                    c.rng = Rng::new(0xA11CE ^ b as u64);
+                    let t = sample_tree(&mut c, seeds, &fanouts, &cfg).unwrap();
+                    fold_tree(&mut cold_bytes, &t);
+                }
+                prop_assert_eq!(fnv1a(&warm_bytes), fnv1a(&cold_bytes));
+                bytes.extend_from_slice(&warm_bytes);
+            }
+            Ok(fnv1a(&bytes))
+        };
+
+        let mut digests = Vec::new();
+        for (workers, shard) in [(1usize, 0usize), (2, 16), (4, 7)] {
+            let svc =
+                SamplingService::launch_cfg(&g, &ea, 1, ServiceConfig::new(workers, shard))
+                    .unwrap();
+            digests.push(digest_of(svc.client(9), &|| svc.client(9))?);
+            svc.shutdown();
+        }
+        let (svc, servers) = SamplingService::launch_remote(
+            &g,
+            &ea,
+            1,
+            ServiceConfig::new(2, 16),
+            &vec!["tcp:127.0.0.1:0".to_string(); parts],
+        )
+        .unwrap();
+        digests.push(digest_of(svc.client(9), &|| svc.client(9))?);
+        svc.shutdown();
+        for s in servers {
+            s.join();
+        }
+        for d in &digests[1..] {
+            prop_assert_eq!(*d, digests[0]);
+        }
+        Ok(())
+    });
+}
+
+/// Golden-digest end-to-end check: the pipelined trainer — pooled tensor
+/// assembly, client scratch reuse, warm server arenas, block-scored A-ES —
+/// must reproduce the plain synchronous path's loss curve and parameters
+/// bit-for-bit, compared as FNV digests over exact f32 bit patterns.
+#[test]
+fn golden_digest_pipelined_pooled_training_matches_sync() {
+    let art = glisp::test_artifacts_dir();
+    let mut sync = train_stack_cfg(2_000, 2, "sage", &art, ServiceConfig::default()).unwrap();
+    let sync_losses = sync.trainer.train(&mut sync.batcher, 6).unwrap();
+    let sync_params = sync.trainer.params.tensors[0].as_f32().to_vec();
+    sync.service.shutdown();
+
+    let mut pipe = train_stack_cfg(2_000, 2, "sage", &art, ServiceConfig::new(2, 16)).unwrap();
+    let pcfg = PipelineConfig {
+        producers: 3,
+        queue_depth: 2,
+        ordered: true,
+    };
+    let pipe_losses = pipe.trainer.train_pipelined(&mut pipe.batcher, 6, &pcfg).unwrap();
+    let pipe_params = pipe.trainer.params.tensors[0].as_f32().to_vec();
+    pipe.service.shutdown();
+
+    assert_eq!(
+        f32_digest(&sync_losses),
+        f32_digest(&pipe_losses),
+        "pooled pipelined losses diverged from sync: {sync_losses:?} vs {pipe_losses:?}"
+    );
+    assert_eq!(
+        f32_digest(&sync_params),
+        f32_digest(&pipe_params),
+        "pooled pipelined parameters diverged from sync"
+    );
+}
