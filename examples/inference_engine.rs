@@ -14,12 +14,13 @@
 //! DESIGN.md §8) plus `--producers` for the samplewise pipelined path.
 //!
 //! Run: `cargo run --release --example inference_engine [-- --n 8000
-//!       --parts 4 --layers 3 --seq --layerwise-only --producers 2]`
+//!       --parts 4 --layers 3 --seq --layerwise-only --producers 2
+//!       --evict fifo|lru --dyn-cache-frac 0.1]`
 
 use glisp::cli::Args;
 use glisp::coordinator::{FeatureStore, PipelineConfig};
 use glisp::harness::infer_stack;
-use glisp::inference::{init_decode_params, EngineConfig, SamplewiseRunner};
+use glisp::inference::{init_decode_params, EngineConfig, EvictPolicy, SamplewiseRunner};
 use glisp::runtime::Runtime;
 use glisp::util::timer::Timer;
 
@@ -28,6 +29,13 @@ fn main() -> anyhow::Result<()> {
     let n = args.get_usize("n", 8_000);
     let parts = args.get_usize("parts", 4);
     let layers = args.get_usize("layers", 2);
+    // --evict / --dyn-cache-frac: the hybrid cache's dynamic-tier knobs
+    // (DESIGN.md §5) — watch the per-tier hit ratios move.
+    let policy = match args.get_str("evict", "fifo") {
+        "lru" => EvictPolicy::Lru,
+        _ => EvictPolicy::Fifo,
+    };
+    let dyn_cache_frac = args.get_f64("dyn-cache-frac", 0.1);
     // --seq: single-threaded partition sweeps (the pre-parallel engine).
     let parallel = !args.has("seq");
     // --layerwise-only: skip the samplewise baselines (at K>=3 their
@@ -44,6 +52,8 @@ fn main() -> anyhow::Result<()> {
         EngineConfig {
             layers,
             parallel,
+            policy,
+            dyn_cache_frac,
             ..Default::default()
         },
     )?;
@@ -65,6 +75,13 @@ fn main() -> anyhow::Result<()> {
         "[layerwise ] vertex embedding {lw:>7.2}s  computations={:<8} chunk reads={} \
          dyn hits={} (ratio {:.3})",
         rep.vertices_computed, rep.chunk_reads, rep.dynamic_hits, rep.dynamic_hit_ratio
+    );
+    println!(
+        "             per tier: static hit {:.3}, dynamic hit {:.3}, {} remote reads \
+         (evict {policy:?}, dyn frac {dyn_cache_frac})",
+        rep.static_hit_ratio(),
+        rep.dynamic_hit_ratio,
+        rep.remote_reads
     );
     for w in &rep.workers {
         if w.vertices_computed == 0 {

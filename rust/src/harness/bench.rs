@@ -54,6 +54,7 @@ pub const BENCHES: &[(&str, &str, &str)] = &[
     ("table5", "table5_cache_fill", "Table V — static cache fill vs model inference"),
     ("pipeline", "pipeline_throughput", "DESIGN.md §7/§9 — pipelined vs sync training"),
     ("hotpath", "bench_hotpath", "DESIGN.md §14 — gather arena + pooled assembly hot path"),
+    ("serving", "bench_serving", "DESIGN.md §15 — online serving under power-law traffic"),
 ];
 
 /// Resolve a short or full bench name to its cargo bench target.
@@ -900,7 +901,8 @@ mod tests {
         assert_eq!(resolve_bench("fig13_inference"), Some("fig13_inference"));
         assert_eq!(resolve_bench("nope"), None);
         assert_eq!(resolve_bench("hotpath"), Some("bench_hotpath"));
-        assert_eq!(BENCHES.len(), 14);
+        assert_eq!(resolve_bench("serving"), Some("bench_serving"));
+        assert_eq!(BENCHES.len(), 15);
     }
 
     /// CI's schema-validation step: every artifact emitted by the sweep

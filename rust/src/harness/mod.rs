@@ -1,7 +1,7 @@
 //! Bench harness: artifact recording, table/figure rendering, and the shared
 //! synthetic workload suite (criterion substitute; see DESIGN.md §4).
 //!
-//! Three layers, each consumed by the 13 bench binaries in `rust/benches/`:
+//! Three layers, each consumed by the 15 bench binaries in `rust/benches/`:
 //!
 //! - [`workloads`] builds the deterministic synthetic graph/training stacks
 //!   every bench runs against. The determinism contract (DESIGN.md §7–§10)
@@ -24,6 +24,7 @@ pub mod workloads;
 pub use bench::{BenchRecorder, BenchTable, Cell};
 pub use report::{bar_chart, f2, f3, ix, speedup, Table};
 pub use workloads::{
-    infer_stack, partition_threads, stack_partitioner, train_stack, train_stack_cfg,
-    train_stack_connect, train_stack_graph, InferStack, TrainStack,
+    infer_stack, partition_threads, percentile_us, power_law_trace, run_closed_loop,
+    run_open_loop, serving_fleet, serving_stack, stack_partitioner, train_stack, train_stack_cfg,
+    train_stack_connect, train_stack_graph, InferStack, ServeLoadReport, ServingStack, TrainStack,
 };

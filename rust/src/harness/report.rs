@@ -188,6 +188,18 @@ const CLAIMS: &[Claim] = &[
         expected: ">=1.50x at 4 threads on a >=4-core host",
         threshold: 1.5,
     },
+    Claim {
+        label: "Warmed serving outpaces cold under power-law load",
+        origin: "PR 10",
+        bench: "bench_serving",
+        section: "warm_vs_cold",
+        row_col: "metric",
+        row_val: "closed-loop",
+        num_col: "warm_vs_cold_qps",
+        den_col: None,
+        expected: ">=1.00x QPS, served bytes bit-equal to the offline sweep",
+        threshold: 1.0,
+    },
 ];
 
 fn claim_measured(c: &Claim, artifacts: &[BenchArtifact]) -> Option<f64> {
@@ -483,7 +495,7 @@ mod tests {
         for (_, target, _) in BENCHES {
             assert!(body.contains(&format!("`{target}`")), "missing {target}");
         }
-        // All five claims render with a pending measured column.
+        // Every registered claim renders with a pending measured column.
         assert_eq!(body.matches("| pending |").count(), CLAIMS.len() + BENCHES.len());
     }
 

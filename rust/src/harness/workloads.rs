@@ -26,16 +26,20 @@
 //! `BENCH_*.json` assertion outcomes ([`crate::harness::bench`]) make the
 //! equality claims machine-checkable.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::coordinator::{Batcher, FeatureStore, Trainer, TrainerConfig};
-use crate::graph::csr::Graph;
+use crate::graph::csr::{Graph, VId};
 use crate::graph::generator::{self, DatasetSpec, GenKind};
+use crate::graph::StoreBackend;
 use crate::inference::{init_encoder_params, EngineConfig, LayerwiseEngine};
 use crate::partition::{AdaDNE, EdgeAssignment, Partitioner};
 use crate::runtime::Runtime;
-use crate::sampling::{SamplingService, ServiceConfig};
+use crate::sampling::{serve_partition, RemoteServer, SamplingService, ServiceConfig};
+use crate::serving::{ServingConfig, ServingEngine};
+use crate::util::digest::f32_digest;
 use crate::util::rng::Rng;
+use crate::util::timer::Timer;
 
 /// Global size multiplier for the synthetic suite (GLISP_BENCH_SCALE,
 /// default 1.0). Scaling changes the graphs, so artifacts are only
@@ -234,6 +238,199 @@ pub fn infer_stack(
     Ok(InferStack { g, ea, engine })
 }
 
+/// The online-serving stack (DESIGN.md §15): the [`infer_stack`] graph and
+/// engine wrapped in a [`ServingEngine`] — same generator, same seeds, so
+/// `glisp serve --graph infer --n N` hosts exactly this graph and the
+/// offline layerwise sweep over the same stack is the byte-level reference
+/// for every served embedding.
+pub struct ServingStack {
+    pub g: Graph,
+    pub ea: EdgeAssignment,
+    pub serving: ServingEngine,
+}
+
+/// Build a [`ServingStack`] over a fresh work dir.
+pub fn serving_stack(
+    n: usize,
+    parts: usize,
+    artifacts: &std::path::Path,
+    work_dir: std::path::PathBuf,
+    cfg: EngineConfig,
+    scfg: ServingConfig,
+) -> anyhow::Result<ServingStack> {
+    let InferStack { g, ea, engine } = infer_stack(n, parts, artifacts, work_dir, cfg)?;
+    Ok(ServingStack {
+        g,
+        ea,
+        serving: ServingEngine::new(engine, scfg)?,
+    })
+}
+
+/// Launch the sampling fleet for a serving deployment in one of the four
+/// storage × transport configurations bench_serving sweeps: partitions are
+/// saved to `save_dir` once (reused if present), then served either
+/// in-process over [`crate::sampling::ChannelTransport`] or as loopback
+/// socket processes, with structures decoded to the heap or mapped from
+/// the saved files. Samples are bit-identical across all four
+/// (DESIGN.md §12–§13).
+pub fn serving_fleet(
+    g: &Graph,
+    ea: &EdgeAssignment,
+    save_dir: &std::path::Path,
+    backend: StoreBackend,
+    socket: bool,
+    svc_cfg: ServiceConfig,
+) -> anyhow::Result<(SamplingService, Vec<RemoteServer>)> {
+    if !save_dir.join("part0.bin").exists() {
+        crate::graph::build_and_save_partitions(
+            g,
+            &ea.part_of_edge,
+            ea.num_parts,
+            partition_threads(),
+            save_dir,
+        )?;
+    }
+    if socket {
+        let parts = crate::graph::open_partitions(save_dir, backend)?;
+        let mut servers = Vec::new();
+        for p in parts {
+            servers.push(serve_partition(
+                Arc::new(p),
+                "tcp:127.0.0.1:0",
+                1,
+                svc_cfg.workers.max(1),
+            )?);
+        }
+        let addrs: Vec<String> = servers.iter().map(|s| s.addr().to_string()).collect();
+        let svc = SamplingService::connect(&addrs, g.n, svc_cfg)?;
+        Ok((svc, servers))
+    } else {
+        let svc = SamplingService::launch_from_dir(save_dir, 1, svc_cfg, backend)?;
+        Ok((svc, Vec::new()))
+    }
+}
+
+/// Power-law request trace: vertex v is drawn with probability
+/// ∝ out_degree(v) + 1, so the Chung-Lu degree skew of the serving graph
+/// carries straight into request popularity — the hot head a warm cache
+/// should absorb. Same `(graph, len, seed)` → same trace, bit-for-bit.
+pub fn power_law_trace(g: &Graph, len: usize, seed: u64) -> Vec<VId> {
+    let mut cum: Vec<u64> = Vec::with_capacity(g.n);
+    let mut acc = 0u64;
+    for v in 0..g.n {
+        acc += g.out_neighbors(v as VId).len() as u64 + 1;
+        cum.push(acc);
+    }
+    let mut rng = Rng::new(seed);
+    (0..len)
+        .map(|_| {
+            let t = (rng.f64() * acc as f64) as u64;
+            cum.partition_point(|&c| c <= t).min(g.n - 1) as VId
+        })
+        .collect()
+}
+
+/// Nearest-rank percentile (`p` in 0..=100) over nanosecond latency
+/// samples, reported in microseconds. Sorts in place.
+pub fn percentile_us(lat_ns: &mut [u64], p: f64) -> f64 {
+    if lat_ns.is_empty() {
+        return 0.0;
+    }
+    lat_ns.sort_unstable();
+    let idx = ((p / 100.0) * (lat_ns.len() - 1) as f64).round() as usize;
+    lat_ns[idx.min(lat_ns.len() - 1)] as f64 / 1_000.0
+}
+
+/// What one load-generator run measured.
+#[derive(Clone, Debug)]
+pub struct ServeLoadReport {
+    /// Embedding requests issued (trace length / batch, across clients).
+    pub requests: usize,
+    pub wall_secs: f64,
+    /// Requests per second over the whole run.
+    pub qps: f64,
+    /// Request latency percentiles in µs — for `clients > 1` these include
+    /// the time queueing on the engine, which is the closed-loop point.
+    pub p50_us: f64,
+    pub p99_us: f64,
+    /// FNV fold over every response's `f32_digest`, per client in issue
+    /// order, then across clients in client order — deterministic for a
+    /// fixed `(trace, clients, batch)` regardless of thread interleaving,
+    /// because served bytes are interleaving-independent.
+    pub digest: u64,
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Closed-loop load generator: `clients` threads each own a contiguous
+/// shard of `trace` and issue `batch`-vertex embedding requests
+/// back-to-back (one outstanding request per client) against the shared
+/// serving engine. With `clients == 1` this degenerates to the open-loop
+/// single-stream probe: no queueing, latencies are pure service times
+/// ([`run_open_loop`]).
+pub fn run_closed_loop(
+    serving: &mut ServingEngine,
+    trace: &[VId],
+    clients: usize,
+    batch: usize,
+) -> anyhow::Result<ServeLoadReport> {
+    let clients = clients.max(1);
+    let batch = batch.max(1);
+    let engine = Mutex::new(serving);
+    let per = trace.len().div_ceil(clients);
+    let wall = Timer::start();
+    let per_client: Vec<(Vec<u64>, u64)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let engine = &engine;
+                let shard = &trace[(c * per).min(trace.len())..((c + 1) * per).min(trace.len())];
+                s.spawn(move || -> anyhow::Result<(Vec<u64>, u64)> {
+                    let mut lat_ns = Vec::with_capacity(shard.len() / batch + 1);
+                    let mut acc = FNV_OFFSET;
+                    for req in shard.chunks(batch) {
+                        let t = Timer::start();
+                        let out = engine.lock().unwrap().embed(req)?;
+                        lat_ns.push((t.secs() * 1e9) as u64);
+                        acc = (acc ^ f32_digest(&out)).wrapping_mul(FNV_PRIME);
+                    }
+                    Ok((lat_ns, acc))
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("load client panicked"))
+            .collect::<anyhow::Result<Vec<_>>>()
+    })?;
+    let wall_secs = wall.secs();
+    let mut lat_ns: Vec<u64> = Vec::new();
+    let mut digest = FNV_OFFSET;
+    for (lats, d) in per_client {
+        lat_ns.extend(lats);
+        digest = (digest ^ d).wrapping_mul(FNV_PRIME);
+    }
+    let requests = lat_ns.len();
+    Ok(ServeLoadReport {
+        requests,
+        wall_secs,
+        qps: requests as f64 / wall_secs.max(1e-9),
+        p50_us: percentile_us(&mut lat_ns, 50.0),
+        p99_us: percentile_us(&mut lat_ns, 99.0),
+        digest,
+    })
+}
+
+/// Open-loop single-stream probe: [`run_closed_loop`] with one client —
+/// per-request service time with no queueing component.
+pub fn run_open_loop(
+    serving: &mut ServingEngine,
+    trace: &[VId],
+    batch: usize,
+) -> anyhow::Result<ServeLoadReport> {
+    run_closed_loop(serving, trace, 1, batch)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -256,6 +453,50 @@ mod tests {
         assert_eq!(h.len(), stack.g.n * 128);
         assert_eq!(rep.vertices_computed, 3 * stack.g.n as u64);
         assert_eq!(stack.ea.num_parts, 3);
+    }
+
+    #[test]
+    fn power_law_trace_is_deterministic_and_skewed() {
+        let mut rng = Rng::new(1);
+        let g = generator::chung_lu(2000, 14_000, 2.1, &mut rng);
+        let a = power_law_trace(&g, 500, 9);
+        let b = power_law_trace(&g, 500, 9);
+        assert_eq!(a, b);
+        // Degree-proportional sampling concentrates on the head: the most
+        // popular vertex must appear well above the uniform expectation.
+        let mut freq = vec![0usize; g.n];
+        for &v in &a {
+            freq[v as usize] += 1;
+        }
+        let top = freq.iter().max().copied().unwrap();
+        assert!(top * g.n > 4 * a.len(), "trace looks uniform (top={top})");
+    }
+
+    #[test]
+    fn closed_loop_digest_is_interleaving_independent() {
+        let art = crate::test_artifacts_dir();
+        let mk = |tag: &str| {
+            serving_stack(
+                700,
+                2,
+                &art,
+                std::env::temp_dir().join(format!("glisp_srv_stack_{tag}")),
+                EngineConfig::default(),
+                ServingConfig::default(),
+            )
+            .unwrap()
+        };
+        let mut s1 = mk("a");
+        let trace = power_law_trace(&s1.g, 64, 5);
+        let r1 = run_closed_loop(&mut s1.serving, &trace, 4, 4).unwrap();
+        // A fresh identical stack under the same (trace, clients, batch)
+        // must serve the same bytes whatever the thread interleaving did
+        // to the cache state.
+        let mut s2 = mk("b");
+        let r2 = run_closed_loop(&mut s2.serving, &trace, 4, 4).unwrap();
+        assert_eq!(r1.digest, r2.digest);
+        assert_eq!(r1.requests, r2.requests);
+        assert!(r1.p99_us >= r1.p50_us);
     }
 
     #[test]

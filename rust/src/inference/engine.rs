@@ -151,6 +151,10 @@ impl WorkerReport {
 #[derive(Clone, Debug, Default)]
 pub struct EngineReport {
     pub chunk_reads: u64,
+    /// Chunk reads served by the static tier (subset of `chunk_reads`).
+    pub static_reads: u64,
+    /// Chunk reads that went remote (subset of `chunk_reads`).
+    pub remote_reads: u64,
     pub dynamic_hits: u64,
     pub virtual_cost: u64,
     pub fill_cost: u64,
@@ -173,6 +177,28 @@ pub struct EngineReport {
 }
 
 impl EngineReport {
+    /// Fraction of all cache accesses (chunk reads + dynamic hits) served
+    /// by the static tier.
+    pub fn static_hit_ratio(&self) -> f64 {
+        let total = self.chunk_reads + self.dynamic_hits;
+        if total == 0 {
+            0.0
+        } else {
+            self.static_reads as f64 / total as f64
+        }
+    }
+
+    /// Absorb one store's tier counters (shared by the sweep variants and
+    /// the link path).
+    fn absorb_store(&mut self, st: &crate::inference::chunk_store::StoreStats) {
+        use std::sync::atomic::Ordering::Relaxed;
+        self.chunk_reads += st.chunk_reads();
+        self.static_reads += st.static_reads.load(Relaxed);
+        self.remote_reads += st.remote_reads.load(Relaxed);
+        self.dynamic_hits += st.dynamic_hits.load(Relaxed);
+        self.virtual_cost += st.total_cost();
+    }
+
     fn absorb(&mut self, rep: &WorkerReport) {
         self.fill_cost += rep.fill_cost;
         self.fill_chunks += rep.fill_chunks;
@@ -457,7 +483,40 @@ impl LayerwiseEngine {
             .collect()
     }
 
-    fn write_all_chunks(&self, store: &ChunkStore, data: &[f32]) -> Result<()> {
+    /// Rows per `execute_rows` block, from the artifact geometry.
+    pub fn block_rows(&self) -> usize {
+        self.block
+    }
+
+    /// Pre-sampled neighbor fanout per vertex.
+    pub fn fanout(&self) -> usize {
+        self.fanout
+    }
+
+    /// Uniform hidden width of every slice.
+    pub fn hidden(&self) -> usize {
+        self.hidden
+    }
+
+    /// Global vertex count.
+    pub fn num_vertices(&self) -> usize {
+        self.n
+    }
+
+    /// The pre-sampled one-hop neighbor snapshot (global ids, PAD-padded,
+    /// `fanout` slots per vertex) every slice of this engine reads — the
+    /// serving path follows the same snapshot so its per-row math is
+    /// bit-identical to the offline sweep.
+    pub fn neighbor_snapshot(&self) -> &[VId] {
+        &self.nbrs
+    }
+
+    /// The engine's working directory (chunk stores live under it).
+    pub fn work_dir(&self) -> &std::path::Path {
+        &self.work_dir
+    }
+
+    pub(crate) fn write_all_chunks(&self, store: &ChunkStore, data: &[f32]) -> Result<()> {
         let per = store.chunk_size * store.dim;
         for c in 0..store.num_chunks {
             let a = c * per;
@@ -667,6 +726,20 @@ impl LayerwiseEngine {
     /// Full-graph vertex-embedding inference. Returns (final embeddings
     /// indexed by RANK, report).
     pub fn run_vertex_embedding(&mut self) -> Result<(Vec<f32>, EngineReport)> {
+        self.run_vertex_embedding_with(|_, _| Ok(()))
+    }
+
+    /// [`Self::run_vertex_embedding`] with a per-layer observer: after each
+    /// slice's layer barrier, `on_layer(k, h)` receives slice k's complete
+    /// rank-indexed `[n, hidden]` output (every layer, including the last).
+    /// The sweep itself is unchanged — a no-op observer reproduces
+    /// `run_vertex_embedding` exactly. The serving path uses this as its
+    /// cache-warmup seam: every intermediate layer's activations pre-populate
+    /// the per-layer serving slabs.
+    pub fn run_vertex_embedding_with(
+        &mut self,
+        mut on_layer: impl FnMut(usize, &[f32]) -> Result<()>,
+    ) -> Result<(Vec<f32>, EngineReport)> {
         let mut report = EngineReport {
             workers: (0..self.num_parts)
                 .map(|w| WorkerReport {
@@ -744,6 +817,7 @@ impl LayerwiseEngine {
                 }
                 report.absorb(&out.rep);
             }
+            on_layer(layer, &h_out)?;
             // Layer barrier: the next slice's input chunks are published
             // only after every worker finished this slice.
             if layer + 1 < k_layers {
@@ -753,10 +827,7 @@ impl LayerwiseEngine {
 
         // Aggregate store stats (feature + every intermediate layer).
         for store in std::iter::once(&f_store).chain(h_stores.iter()) {
-            let st = &store.stats;
-            report.chunk_reads += st.chunk_reads();
-            report.dynamic_hits += st.dynamic_hits.load(std::sync::atomic::Ordering::Relaxed);
-            report.virtual_cost += st.total_cost();
+            report.absorb_store(&store.stats);
         }
         report.dynamic_hit_ratio =
             report.dynamic_hits as f64 / (report.dynamic_hits + report.chunk_reads).max(1) as f64;
@@ -842,10 +913,7 @@ impl LayerwiseEngine {
         }
 
         for store in std::iter::once(&f_store).chain(h_stores.iter()) {
-            let st = &store.stats;
-            report.chunk_reads += st.chunk_reads();
-            report.dynamic_hits += st.dynamic_hits.load(std::sync::atomic::Ordering::Relaxed);
-            report.virtual_cost += st.total_cost();
+            report.absorb_store(&store.stats);
         }
         report.dynamic_hit_ratio =
             report.dynamic_hits as f64 / (report.dynamic_hits + report.chunk_reads).max(1) as f64;
@@ -907,12 +975,7 @@ impl LayerwiseEngine {
             scores.extend_from_slice(out[0].as_f32());
         }
         report.model_secs = t_model.secs();
-        report.chunk_reads = h_store.stats.chunk_reads();
-        report.dynamic_hits = h_store
-            .stats
-            .dynamic_hits
-            .load(std::sync::atomic::Ordering::Relaxed);
-        report.virtual_cost = h_store.stats.total_cost();
+        report.absorb_store(&h_store.stats);
         report.dynamic_hit_ratio =
             report.dynamic_hits as f64 / (report.dynamic_hits + report.chunk_reads).max(1) as f64;
         Ok((scores, report))

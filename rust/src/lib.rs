@@ -7,8 +7,9 @@
 //! * **Layer 3 (this crate)** — the distributed systems contribution:
 //!   [`partition`] (AdaDNE vertex-cut partitioner + baselines), [`sampling`]
 //!   (Gather-Apply K-hop neighbor sampling service), [`inference`]
-//!   (layerwise inference engine with the two-level embedding cache), and
-//!   the [`coordinator`] training loop.
+//!   (layerwise inference engine with the two-level embedding cache),
+//!   [`serving`] (request-driven online serving over the K-slice engine),
+//!   and the [`coordinator`] training loop.
 //! * **Layer 2/1 (python/, build-time only)** — GNN models and Pallas
 //!   kernels, AOT-lowered to HLO text. Python never runs on the request
 //!   path.
@@ -27,6 +28,7 @@ pub mod inference;
 pub mod partition;
 pub mod runtime;
 pub mod sampling;
+pub mod serving;
 pub mod util;
 
 /// Artifacts directory for tests, benches and examples, resolved relative

@@ -9,6 +9,11 @@
 //! glisp train     --model sage --steps 200 --parts 2 [--eval]
 //!                 [--server-workers 4 --shard-size 16]
 //! glisp infer     --n 20000 --parts 4 --layers 3 --task both [--seq]
+//!                 [--evict fifo|lru --dyn-cache-frac 0.1]
+//! glisp serve-infer --n 10000 --parts 4 [--warmup] [--evict fifo|lru]
+//!                 [--link-evict fifo|lru] [--dyn-cache-frac 0.1]
+//!                 [--requests 200 --clients 4 --batch 6]
+//!                 [--listen a,b,... | --connect a,b,...]
 //! glisp serve     --partition 0 --listen unix:/tmp/glisp0.sock
 //!                 (--graph train|infer|quickstart [--n N] | --dataset wiki-s
 //!                  | --load DIR [--mmap]) --parts 4 [--workers 4] [--service-seed 1]
@@ -49,16 +54,21 @@ use std::sync::Arc;
 use glisp::cli::Args;
 use glisp::coordinator::{Batcher, FeatureStore, PipelineConfig, Trainer, TrainerConfig};
 use glisp::graph::{generator, metrics};
-use glisp::harness::{f2, f3, ix, Table};
-use glisp::inference::{
-    init_decode_params, init_encoder_params, EngineConfig, LayerwiseEngine, SamplewiseRunner,
+use glisp::harness::{
+    f2, f3, infer_stack, ix, power_law_trace, run_closed_loop, serving_stack, Table,
 };
+use glisp::inference::{
+    init_decode_params, init_encoder_params, EngineConfig, EvictPolicy, LayerwiseEngine,
+    SamplewiseRunner,
+};
+use glisp::serving::ServingConfig;
 use glisp::partition::{
     quality, AdaDNE, DistributedNE, EdgeCutLDG, Hash1D, Hash2D, Partitioner,
 };
 use glisp::runtime::Runtime;
 use glisp::sampling::{
     balanced_seeds, sample_tree, serve_partition, SampleConfig, SamplingService, ServiceConfig,
+    PAD,
 };
 use glisp::util::digest::{f32_digest, u32_digest};
 use glisp::util::rng::Rng;
@@ -71,12 +81,13 @@ fn main() {
         Some("sample") => cmd_sample(&args),
         Some("train") => cmd_train(&args),
         Some("infer") => cmd_infer(&args),
+        Some("serve-infer") => cmd_serve_infer(&args),
         Some("serve") => cmd_serve(&args),
         Some("datasets") => cmd_datasets(&args),
         Some("bench") => cmd_bench(&args),
         _ => {
             eprintln!(
-                "usage: glisp <partition|sample|train|infer|serve|datasets|bench> [--flags]\n\
+                "usage: glisp <partition|sample|train|infer|serve-infer|serve|datasets|bench> [--flags]\n\
                  see rust/src/main.rs for per-command flags"
             );
             std::process::exit(2);
@@ -364,6 +375,15 @@ fn connect_addrs(args: &Args) -> Option<Vec<String>> {
     })
 }
 
+/// `--evict fifo|lru` (and `--link-evict`) parsed into a cache policy.
+fn evict_policy(name: &str) -> Result<EvictPolicy> {
+    Ok(match name {
+        "fifo" => EvictPolicy::Fifo,
+        "lru" => EvictPolicy::Lru,
+        other => bail!("unknown eviction policy {other} (fifo|lru)"),
+    })
+}
+
 fn cmd_sample(args: &Args) -> Result<()> {
     let fanouts: Vec<usize> = args
         .get_str("fanouts", "15,10,5")
@@ -549,6 +569,10 @@ fn cmd_infer(args: &Args) -> Result<()> {
             // --seq: single-threaded partition sweeps (bit-identical,
             // slower; the fig13 baseline).
             parallel: !args.has("seq"),
+            // Dynamic-tier knobs (same served bits for any setting; pure
+            // hit-ratio/cost knobs).
+            policy: evict_policy(args.get_str("evict", "fifo"))?,
+            dyn_cache_frac: args.get_f64("dyn-cache-frac", 0.1),
             ..Default::default()
         },
         dir,
@@ -564,6 +588,15 @@ fn cmd_infer(args: &Args) -> Result<()> {
         report.dynamic_hits,
         report.dynamic_hit_ratio,
         report.virtual_cost
+    );
+    println!(
+        "  per tier: static hit {:.3}, dynamic hit {:.3}, {} remote reads \
+         (policy {:?}, dyn frac {})",
+        report.static_hit_ratio(),
+        report.dynamic_hit_ratio,
+        report.remote_reads,
+        engine.cfg.policy,
+        engine.cfg.dyn_cache_frac
     );
     for w in &report.workers {
         if w.vertices_computed > 0 {
@@ -602,10 +635,12 @@ fn cmd_infer(args: &Args) -> Result<()> {
         let timer = Timer::start();
         let (_, rep) = engine.run_link_prediction(&h, &edges, &dec)?;
         println!(
-            "layerwise link prediction over {} edges: {:.2}s, {} chunk reads, hit ratio {:.3}",
+            "layerwise link prediction over {} edges: {:.2}s, {} chunk reads, \
+             static hit {:.3}, dynamic hit {:.3}",
             edges.len(),
             timer.secs(),
             rep.chunk_reads,
+            rep.static_hit_ratio(),
             rep.dynamic_hit_ratio
         );
     }
@@ -650,6 +685,132 @@ fn cmd_infer_connect(args: &Args, addrs: &[String]) -> Result<()> {
         svc.shutdown();
     } else {
         svc.disconnect();
+    }
+    Ok(())
+}
+
+/// `glisp serve-infer`: online embedding/link-score serving over the
+/// request-driven K-slice engine (DESIGN.md §15). Builds the `infer` stack,
+/// optionally warms every serving slab from one offline layerwise pass
+/// (`--warmup`), then drives a closed-loop power-law workload with
+/// concurrent clients and reports p50/p99/QPS plus the per-tier hit
+/// ratios. Link candidates are sampled through the fleet: in-process
+/// channels by default, `--listen a,b,...` spins up loopback socket
+/// servers (one address per partition), `--connect a,b,...` joins an
+/// already-running `glisp serve --graph infer` fleet. The `online digest`
+/// line must equal the `offline digest` line — CI diffs them.
+fn cmd_serve_infer(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 10_000);
+    let parts = args.get_usize("parts", 4);
+    let layers = args.get_usize("layers", 2);
+    let requests = args.get_usize("requests", 200);
+    let clients = args.get_usize("clients", 4);
+    let batch = args.get_usize("batch", 6);
+    let embed_policy = evict_policy(args.get_str("evict", "fifo"))?;
+    let scfg = ServingConfig {
+        embed_policy,
+        link_policy: match args.get("link-evict") {
+            Some(name) => evict_policy(name)?,
+            None => embed_policy,
+        },
+        dyn_cache_frac: args.get_f64("dyn-cache-frac", 0.1),
+    };
+    let ecfg = EngineConfig {
+        layers,
+        parallel: !args.has("seq"),
+        ..Default::default()
+    };
+    let root = std::env::temp_dir().join("glisp_serve_infer_cli");
+    let _ = std::fs::remove_dir_all(&root);
+    let art = Runtime::default_dir();
+
+    // Offline reference sweep over the identical stack — the byte-level
+    // ground truth for every served embedding.
+    let mut off = infer_stack(n, parts, &art, root.join("off"), ecfg.clone())?;
+    let (h, _) = off.engine.run_vertex_embedding()?;
+    let hidden = off.engine.hidden();
+    let trace = power_law_trace(&off.g, requests * batch, args.get_u64("trace-seed", 23));
+    let mut offline_rows = Vec::with_capacity(trace.len() * hidden);
+    for &v in &trace {
+        let r = off.engine.rank[v as usize] as usize;
+        offline_rows.extend_from_slice(&h[r * hidden..(r + 1) * hidden]);
+    }
+
+    let mut stack = serving_stack(n, parts, &art, root.join("srv"), ecfg, scfg)?;
+    if args.has("warmup") {
+        let t = Timer::start();
+        stack.serving.warm()?;
+        println!("warmup (one offline layerwise pass): {}", fmt_duration(t.secs()));
+    }
+    let rep = run_closed_loop(&mut stack.serving, &trace, clients, batch)?;
+    println!(
+        "served {} requests ({} clients, batch {}): p50 {:.1}µs, p99 {:.1}µs, {:.0} QPS",
+        rep.requests, clients, batch, rep.p50_us, rep.p99_us, rep.qps
+    );
+    let st = stack.serving.stats();
+    println!(
+        "cache tiers: static hit {:.3}, dynamic hit {:.3}, {} remote reads — \
+         {} rows computed, {} frontier truncations (evict {:?}/{:?}, dyn frac {})",
+        st.static_hit_ratio(),
+        st.dynamic_hit_ratio(),
+        st.remote_reads,
+        st.rows_computed,
+        st.rows_truncated,
+        scfg.embed_policy,
+        scfg.link_policy,
+        scfg.dyn_cache_frac
+    );
+    println!("online digest: {:016x}", f32_digest(&stack.serving.embed(&trace)?));
+    println!("offline digest: {:016x}", f32_digest(&offline_rows));
+
+    // Link-score path: candidates from the sampling fleet (the transport
+    // axis), endpoint embeddings from the serving slabs.
+    let connected = connect_addrs(args);
+    let (svc, servers) = if let Some(addrs) = &connected {
+        (
+            SamplingService::connect(addrs, stack.g.n, service_config(args))?,
+            Vec::new(),
+        )
+    } else if let Some(listens) = args.get("listen") {
+        let listens: Vec<String> = listens
+            .split(',')
+            .filter(|a| !a.is_empty())
+            .map(str::to_string)
+            .collect();
+        SamplingService::launch_remote(&stack.g, &stack.ea, 1, service_config(args), &listens)?
+    } else {
+        (
+            SamplingService::launch_cfg(&stack.g, &stack.ea, 1, service_config(args))?,
+            Vec::new(),
+        )
+    };
+    let mut client = svc.client(7);
+    let mut link_seeds: Vec<u32> = trace[..trace.len().min(48)].to_vec();
+    link_seeds.sort_unstable();
+    link_seeds.dedup();
+    let sample = client.sample_topk(&link_seeds, 5, &SampleConfig::default())?;
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    for (i, &s) in link_seeds.iter().enumerate() {
+        for &nb in sample.neighbors_of(i) {
+            if nb != PAD {
+                edges.push((s, nb));
+            }
+        }
+    }
+    let dec = init_decode_params(&stack.serving.engine.runtime, 9)?;
+    let scores = stack.serving.link_scores(&edges, &dec)?;
+    println!(
+        "link scores over {} fleet-sampled candidates — link digest: {:016x}",
+        edges.len(),
+        f32_digest(&scores)
+    );
+    if connected.is_some() && !args.has("shutdown-remote") {
+        svc.disconnect();
+    } else {
+        svc.shutdown();
+    }
+    for s in servers {
+        s.join();
     }
     Ok(())
 }

@@ -22,7 +22,9 @@ use anyhow::{bail, Result};
 use std::sync::Arc;
 
 use crate::graph::csr::VId;
-use crate::sampling::request::{seed_stream_key, GatherRequest, GatherResponse, SampleConfig};
+use crate::sampling::request::{
+    seed_stream_key, GatherOp, GatherRequest, GatherResponse, SampleConfig,
+};
 use crate::sampling::transport::Transport;
 use crate::util::bitset::BitMatrix;
 use crate::util::rng::Rng;
@@ -257,7 +259,7 @@ impl SamplingClient {
         // entries were filled above.)
         let tk = &mut sc.tk;
         for seats in &sc.seat[..seeds.len()] {
-            if cfg.weighted {
+            if cfg.scored() {
                 tk.reset(fanout);
                 let mut tiebreak = 0u64;
                 for &(srv, pos) in seats {
@@ -294,6 +296,42 @@ impl SamplingClient {
             out.offsets.push(out.neighbors.len() as u32);
         }
         Ok(out)
+    }
+
+    /// Deterministic top-`fanout` neighbors by edge weight per seed
+    /// ([`GatherOp::TopK`]): the servers rank their local edges RNG-free
+    /// and the Apply phase merges the shipped weights globally, so the
+    /// result is a pure function of the graph — identical across pool
+    /// sizes, shard splits, and transports. The serving path uses this for
+    /// link-candidate retrieval.
+    pub fn sample_topk(
+        &mut self,
+        seeds: &[VId],
+        fanout: usize,
+        base: &SampleConfig,
+    ) -> Result<OneHopSample> {
+        let cfg = SampleConfig {
+            op: GatherOp::TopK,
+            ..base.clone()
+        };
+        self.sample_one_hop(seeds, fanout, &cfg)
+    }
+
+    /// In-degree-proportional weighted sampling without replacement per
+    /// seed ([`GatherOp::InDegree`]): neighbor pick probability follows the
+    /// candidate's global in-degree (the "popular destination" prior).
+    /// Same per-seed RNG stream contract as the other sampled operators.
+    pub fn sample_in_degree(
+        &mut self,
+        seeds: &[VId],
+        fanout: usize,
+        base: &SampleConfig,
+    ) -> Result<OneHopSample> {
+        let cfg = SampleConfig {
+            op: GatherOp::InDegree,
+            ..base.clone()
+        };
+        self.sample_one_hop(seeds, fanout, &cfg)
     }
 
     /// Uniform **negative sampling** over the global vertex space — the
@@ -462,6 +500,42 @@ mod tests {
     }
 
     #[test]
+    fn topk_operator_is_client_seed_invariant() {
+        // TopK is RNG-free end to end: two clients on decorrelated RNG
+        // streams must produce identical results, and the convenience
+        // wrapper must match sample_one_hop with the op set explicitly.
+        let (client, _s) = launch_small();
+        let mut c1 = client.split(1);
+        let mut c2 = client.split(2);
+        let seeds: Vec<VId> = (0..48).collect();
+        let a = c1.sample_topk(&seeds, 4, &SampleConfig::default()).unwrap();
+        let b = c2.sample_topk(&seeds, 4, &SampleConfig::default()).unwrap();
+        assert_eq!(a.offsets, b.offsets);
+        assert_eq!(a.neighbors, b.neighbors, "TopK must not depend on client RNG");
+        let cfg = SampleConfig {
+            op: GatherOp::TopK,
+            ..Default::default()
+        };
+        let c = c1.sample_one_hop(&seeds, 4, &cfg).unwrap();
+        assert_eq!(a.neighbors, c.neighbors);
+    }
+
+    #[test]
+    fn in_degree_operator_reproduces_across_split_clients() {
+        let (client, _s) = launch_small();
+        let mut c1 = client.split(4);
+        let mut c2 = client.split(4);
+        let seeds: Vec<VId> = (0..48).collect();
+        let a = c1.sample_in_degree(&seeds, 5, &SampleConfig::default()).unwrap();
+        let b = c2.sample_in_degree(&seeds, 5, &SampleConfig::default()).unwrap();
+        assert_eq!(a.offsets, b.offsets);
+        assert_eq!(a.neighbors, b.neighbors);
+        for i in 0..seeds.len() {
+            assert!(a.neighbors_of(i).len() <= 5);
+        }
+    }
+
+    #[test]
     fn dead_server_is_an_error_naming_the_partition() {
         let (mut client, servers) = launch_small();
         // Kill partition 1's server; sampling must fail with a message that
@@ -581,6 +655,14 @@ mod tests {
             SampleConfig::default(),
             SampleConfig {
                 weighted: true,
+                ..Default::default()
+            },
+            SampleConfig {
+                op: GatherOp::TopK,
+                ..Default::default()
+            },
+            SampleConfig {
+                op: GatherOp::InDegree,
                 ..Default::default()
             },
         ] {

@@ -18,7 +18,7 @@ pub mod transport;
 pub mod wire;
 
 pub use client::{ClientScratch, OneHopSample, RouteMode, SamplingClient};
-pub use request::{Direction, GatherRequest, GatherResponse, SampleConfig, PAD};
+pub use request::{Direction, GatherOp, GatherRequest, GatherResponse, SampleConfig, PAD};
 pub use service::{balanced_seeds, SamplingService, ServiceConfig};
 pub use subgraph::{sample_tree, TreeSample};
 pub use transport::{

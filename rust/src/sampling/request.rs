@@ -16,12 +16,32 @@ pub enum Direction {
     In,
 }
 
+/// One-hop gather operator (ROADMAP item 5 operator surface). `Auto`
+/// preserves the original two-operator dispatch on
+/// [`SampleConfig::weighted`]; the named operators override it.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum GatherOp {
+    /// Dispatch on `weighted`: uniform Algorithm D, or A-ES on edge weight.
+    #[default]
+    Auto,
+    /// Deterministic top-`fanout` neighbors by edge weight (RNG-free;
+    /// ties broken by edge index, so the pick is unique and shard/pool
+    /// invariant by construction).
+    TopK,
+    /// Weighted sampling without replacement with probability proportional
+    /// to each candidate's *global in-degree* — the "popular destination"
+    /// prior of recommendation-style link scoring.
+    InDegree,
+}
+
 #[derive(Clone, Debug)]
 pub struct SampleConfig {
     pub direction: Direction,
     pub weighted: bool,
     /// Restrict to one edge type (heterogeneous metapath-style sampling).
     pub etype: Option<u8>,
+    /// Operator override; `Auto` keeps the legacy `weighted` dispatch.
+    pub op: GatherOp,
 }
 
 impl Default for SampleConfig {
@@ -30,7 +50,16 @@ impl Default for SampleConfig {
             direction: Direction::Out,
             weighted: false,
             etype: None,
+            op: GatherOp::Auto,
         }
+    }
+}
+
+impl SampleConfig {
+    /// Whether responses carry per-neighbor scores the Apply phase must
+    /// merge on (instead of concatenating + uniform subsampling).
+    pub fn scored(&self) -> bool {
+        self.weighted || self.op != GatherOp::Auto
     }
 }
 

@@ -16,7 +16,7 @@ use crate::graph::csr::VId;
 use crate::graph::hetero::PartitionGraph;
 use crate::sampling::algo_d;
 use crate::sampling::request::{
-    seed_stream_key, Direction, GatherRequest, GatherResponse, SampleConfig, ServerMsg,
+    seed_stream_key, Direction, GatherOp, GatherRequest, GatherResponse, SampleConfig, ServerMsg,
 };
 use crate::util::rng::Rng;
 
@@ -201,8 +201,9 @@ impl PartitionServer {
         }
     }
 
-    /// One-hop gather over the local partition: UniformGatherOp /
-    /// WeightedGatherOp depending on cfg.weighted.
+    /// One-hop gather over the local partition. `GatherOp::Auto` keeps the
+    /// legacy dispatch (UniformGatherOp / WeightedGatherOp on cfg.weighted);
+    /// the named operators (TopK, InDegree) override it.
     pub fn gather(&mut self, req: &GatherRequest) -> GatherResponse {
         let t_busy = thread_cpu_ns();
         let g = self.graph.clone();
@@ -212,7 +213,7 @@ impl PartitionServer {
             seed_offset: req.seed_offset,
             offsets: Vec::with_capacity(req.seeds.len() + 1),
             neighbors: Vec::with_capacity(cap),
-            scores: if req.cfg.weighted {
+            scores: if req.cfg.scored() {
                 Vec::with_capacity(cap)
             } else {
                 Vec::new()
@@ -224,8 +225,16 @@ impl PartitionServer {
         for (i, &seed) in req.seeds.iter().enumerate() {
             if let Some(local) = g.local_id(seed) {
                 let mut rng = self.seed_stream(req.salt, req.seed_offset as u64 + i as u64);
-                if req.cfg.weighted {
-                    Self::gather_weighted(
+                match req.cfg.op {
+                    GatherOp::TopK => Self::gather_topk(
+                        &g,
+                        local,
+                        req.fanout,
+                        &req.cfg,
+                        &mut resp,
+                        &mut self.scratch,
+                    ),
+                    GatherOp::InDegree => Self::gather_in_degree(
                         &g,
                         &mut rng,
                         local,
@@ -233,9 +242,8 @@ impl PartitionServer {
                         &req.cfg,
                         &mut resp,
                         &mut self.scratch,
-                    );
-                } else {
-                    Self::gather_uniform(
+                    ),
+                    GatherOp::Auto if req.cfg.weighted => Self::gather_weighted(
                         &g,
                         &mut rng,
                         local,
@@ -243,7 +251,16 @@ impl PartitionServer {
                         &req.cfg,
                         &mut resp,
                         &mut self.scratch,
-                    );
+                    ),
+                    GatherOp::Auto => Self::gather_uniform(
+                        &g,
+                        &mut rng,
+                        local,
+                        req.fanout,
+                        &req.cfg,
+                        &mut resp,
+                        &mut self.scratch,
+                    ),
                 }
             }
             resp.offsets.push(resp.neighbors.len() as u32);
@@ -358,21 +375,110 @@ impl PartitionServer {
             return;
         }
         resp.work_edges += cands.len() as u64;
-        sc.weights.clear();
+        Self::collect_edge_weights(g, local, cands.len(), first_edge, cfg, &mut sc.weights);
+        crate::sampling::aes::score_block(
+            rng,
+            &sc.weights,
+            &mut sc.inv,
+            &mut sc.scores,
+            &mut sc.tiebreaks,
+        );
+        sc.tk.reset(fanout.min(cands.len()));
+        for (i, &nbr) in cands.iter().enumerate() {
+            let s = sc.scores[i];
+            if s > 0.0 {
+                sc.tk.push(s, sc.tiebreaks[i], nbr);
+            }
+        }
+        for (s, nbr) in sc.tk.drain_sorted() {
+            resp.neighbors.push(nbr);
+            resp.scores.push(s);
+        }
+    }
+
+    /// Local edge weights for `cands`, honoring direction (in-edges
+    /// reference the owning out-edge for weight lookup — the paper's
+    /// (dst, edge_id) trick).
+    fn collect_edge_weights(
+        g: &PartitionGraph,
+        local: u32,
+        n_cands: usize,
+        first_edge: usize,
+        cfg: &SampleConfig,
+        out: &mut Vec<f32>,
+    ) {
+        out.clear();
         match cfg.direction {
             Direction::Out => {
-                for i in 0..cands.len() {
-                    sc.weights.push(g.edge_weight((first_edge + i) as u32));
+                for i in 0..n_cands {
+                    out.push(g.edge_weight((first_edge + i) as u32));
                 }
             }
             Direction::In => {
-                // In-edges reference the owning out-edge for weight lookup
-                // (the paper's (dst, edge_id) trick).
                 let (a, _) = g.in_range(local);
-                for i in 0..cands.len() {
-                    sc.weights.push(g.edge_weight(g.in_eid[a + i]));
+                for i in 0..n_cands {
+                    out.push(g.edge_weight(g.in_eid[a + i]));
                 }
             }
+        }
+    }
+
+    /// TopKGatherOp: deterministic local top-`fanout` by edge weight, ties
+    /// broken toward the lower edge index. RNG-free, so shard/pool
+    /// invariance holds by construction; the shipped score is the weight
+    /// itself, which the Apply phase merges exactly like A-ES scores.
+    fn gather_topk(
+        g: &PartitionGraph,
+        local: u32,
+        fanout: usize,
+        cfg: &SampleConfig,
+        resp: &mut GatherResponse,
+        sc: &mut GatherScratch,
+    ) {
+        let (cands, first_edge) = Self::candidates(g, local, cfg);
+        if cands.is_empty() {
+            return;
+        }
+        resp.work_edges += cands.len() as u64;
+        Self::collect_edge_weights(g, local, cands.len(), first_edge, cfg, &mut sc.weights);
+        sc.tk.reset(fanout.min(cands.len()));
+        for (i, &nbr) in cands.iter().enumerate() {
+            // TopK keeps the larger tiebreak on equal scores, so negating
+            // the index prefers the earlier edge.
+            sc.tk.push(sc.weights[i] as f64, !(i as u64), nbr);
+        }
+        for (s, nbr) in sc.tk.drain_sorted() {
+            resp.neighbors.push(nbr);
+            resp.scores.push(s);
+        }
+    }
+
+    /// InDegreeGatherOp: A-ES weighted sampling without replacement with
+    /// probability proportional to each candidate's *global* in-degree (the
+    /// "popular destination" prior of link scoring). Vertex-cut partitions
+    /// replicate both endpoints of every local edge, so the candidate's
+    /// global in-degree is always resolvable locally; the defensive
+    /// fallback weight is 1.
+    fn gather_in_degree(
+        g: &PartitionGraph,
+        rng: &mut Rng,
+        local: u32,
+        fanout: usize,
+        cfg: &SampleConfig,
+        resp: &mut GatherResponse,
+        sc: &mut GatherScratch,
+    ) {
+        let (cands, _) = Self::candidates(g, local, cfg);
+        if cands.is_empty() {
+            return;
+        }
+        resp.work_edges += cands.len() as u64;
+        sc.weights.clear();
+        for &nbr in cands {
+            let w = g
+                .local_id(nbr)
+                .map_or(1.0, |l| g.in_deg_global[l as usize] as f32);
+            sc.weights.push(w.max(1.0));
         }
         crate::sampling::aes::score_block(
             rng,
@@ -516,6 +622,65 @@ mod tests {
     }
 
     #[test]
+    fn topk_matches_full_sort_and_is_rng_free() {
+        // The deterministic operator must return exactly the fanout
+        // heaviest local edges (ties toward the earlier edge index),
+        // independent of the server seed.
+        let pg = one_partition();
+        let seeds: Vec<VId> = (0..60).map(|i| pg.global(i)).collect();
+        let cfg = SampleConfig {
+            op: GatherOp::TopK,
+            ..Default::default()
+        };
+        let mut a = PartitionServer::new(pg.clone(), Arc::new(ServerStats::default()), 1);
+        let mut b = PartitionServer::new(pg.clone(), Arc::new(ServerStats::default()), 999);
+        let ra = a.gather(&req(seeds.clone(), 4, 11, cfg.clone()));
+        let rb = b.gather(&req(seeds.clone(), 4, 22, cfg.clone()));
+        assert_eq!(ra.neighbors, rb.neighbors, "TopK must ignore seed+salt");
+        assert_eq!(ra.scores, rb.scores);
+        for (i, &s) in seeds.iter().enumerate() {
+            let l = pg.local_id(s).unwrap();
+            let (first, _) = pg.out_range(l);
+            let mut ranked: Vec<(f32, usize, VId)> = pg
+                .out_neighbors(l)
+                .iter()
+                .enumerate()
+                .map(|(j, &n)| (pg.edge_weight((first + j) as u32), j, n))
+                .collect();
+            ranked.sort_by(|x, y| y.0.total_cmp(&x.0).then(x.1.cmp(&y.1)));
+            let want: Vec<VId> = ranked.iter().take(4).map(|r| r.2).collect();
+            assert_eq!(ra.neighbors_of(i), &want[..], "seed {s}");
+        }
+    }
+
+    #[test]
+    fn in_degree_op_returns_scores_and_respects_fanout() {
+        let pg = one_partition();
+        let mut srv = PartitionServer::new(pg.clone(), Arc::new(ServerStats::default()), 8);
+        let seeds: Vec<VId> = (0..40).map(|i| pg.global(i)).collect();
+        let resp = srv.gather(&req(
+            seeds.clone(),
+            5,
+            88,
+            SampleConfig {
+                op: GatherOp::InDegree,
+                ..Default::default()
+            },
+        ));
+        assert_eq!(resp.scores.len(), resp.neighbors.len());
+        for (i, &s) in seeds.iter().enumerate() {
+            let l = pg.local_id(s).unwrap();
+            assert!(resp.neighbors_of(i).len() <= 5.min(pg.local_out_degree(l)));
+            for n in resp.neighbors_of(i) {
+                assert!(pg.out_neighbors(l).contains(n));
+            }
+            for w in resp.scores_of(i).windows(2) {
+                assert!(w[0] >= w[1], "scores not descending");
+            }
+        }
+    }
+
+    #[test]
     fn etype_filter_respected() {
         let pg = one_partition();
         let mut srv =
@@ -615,6 +780,19 @@ mod tests {
                 ..Default::default()
             },
             SampleConfig {
+                direction: Direction::In,
+                ..Default::default()
+            },
+            SampleConfig {
+                op: GatherOp::TopK,
+                ..Default::default()
+            },
+            SampleConfig {
+                op: GatherOp::InDegree,
+                ..Default::default()
+            },
+            SampleConfig {
+                op: GatherOp::InDegree,
                 direction: Direction::In,
                 ..Default::default()
             },

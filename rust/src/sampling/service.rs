@@ -580,6 +580,14 @@ mod tests {
                 direction: Direction::In,
                 ..Default::default()
             },
+            SampleConfig {
+                op: crate::sampling::request::GatherOp::TopK,
+                ..Default::default()
+            },
+            SampleConfig {
+                op: crate::sampling::request::GatherOp::InDegree,
+                ..Default::default()
+            },
         ];
         // Balanced seeds + a duplicated hub run straddling shard bounds.
         let base = SamplingService::launch(&g, &ea, 1).unwrap();

@@ -23,11 +23,13 @@ use anyhow::{bail, Context, Result};
 use std::io::Read;
 
 use crate::graph::csr::VId;
-use crate::sampling::request::{Direction, GatherRequest, GatherResponse, SampleConfig};
+use crate::sampling::request::{Direction, GatherOp, GatherRequest, GatherResponse, SampleConfig};
 use crate::sampling::server::ServerStats;
 
 /// Bump on ANY layout change; both sides reject a mismatch.
-pub const WIRE_VERSION: u8 = 1;
+/// v2: Gather carries a one-byte operator tag ([`GatherOp`]) between the
+/// weighted byte and the etype pair.
+pub const WIRE_VERSION: u8 = 2;
 
 /// Upper bound on `len` accepted by [`read_frame`] — a corrupt or hostile
 /// length prefix must not drive a multi-gigabyte allocation.
@@ -157,6 +159,11 @@ pub fn encode_frame(buf: &mut Vec<u8>, f: &Frame) {
                 Direction::In => 1,
             });
             buf.push(r.cfg.weighted as u8);
+            buf.push(match r.cfg.op {
+                GatherOp::Auto => 0,
+                GatherOp::TopK => 1,
+                GatherOp::InDegree => 2,
+            });
             match r.cfg.etype {
                 None => buf.extend_from_slice(&[0, 0]),
                 Some(t) => buf.extend_from_slice(&[1, t]),
@@ -285,6 +292,12 @@ pub fn decode_frame(payload: &[u8]) -> Result<Frame> {
                 1 => true,
                 w => bail!("bad weighted byte {w}"),
             };
+            let op = match c.u8()? {
+                0 => GatherOp::Auto,
+                1 => GatherOp::TopK,
+                2 => GatherOp::InDegree,
+                b => bail!("bad op byte {b}"),
+            };
             let etype = match (c.u8()?, c.u8()?) {
                 (0, 0) => None,
                 (1, t) => Some(t),
@@ -293,7 +306,7 @@ pub fn decode_frame(payload: &[u8]) -> Result<Frame> {
             Frame::Gather(GatherRequest {
                 seeds: c.u32s()?,
                 fanout,
-                cfg: SampleConfig { direction, weighted, etype },
+                cfg: SampleConfig { direction, weighted, etype, op },
                 salt,
                 seed_offset,
                 token,
@@ -393,6 +406,7 @@ mod tests {
                 0 => None,
                 _ => Some(rng.usize(256) as u8),
             },
+            op: [GatherOp::Auto, GatherOp::TopK, GatherOp::InDegree][rng.usize(3)],
         }
     }
 
@@ -419,6 +433,7 @@ mod tests {
             prop_assert_eq!(got.token, req.token);
             prop_assert_eq!(got.cfg.weighted, req.cfg.weighted);
             prop_assert_eq!(got.cfg.etype, req.cfg.etype);
+            prop_assert_eq!(got.cfg.op, req.cfg.op);
             prop_assert!(got.cfg.direction == req.cfg.direction, "direction drifted");
             Ok(())
         });

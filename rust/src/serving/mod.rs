@@ -1,0 +1,755 @@
+//! Online inference serving (DESIGN.md §15): a request-driven front end
+//! over the layerwise K-slice engine. Offline, the engine sweeps every
+//! vertex once per slice; online, a request for a handful of vertices must
+//! not pay a full sweep — so the serving engine keeps one *slab* per slice
+//! (chunk store + [`CacheSystem`] + validity bitmap) and resolves each
+//! request by expanding its K-hop need-set top-down, **truncating the
+//! frontier at every row a slab already holds**, then executing only the
+//! uncached remainder bottom-up through the same `sage_infer_layer{k}`
+//! artifacts the offline sweep runs.
+//!
+//! Determinism contract: the serving path follows the engine's pre-sampled
+//! one-hop [`LayerwiseEngine::neighbor_snapshot`] and executes the same
+//! per-row math (`execute_rows` output is independent of how rows are
+//! blocked — the engine's tail-block test pins this), so every served
+//! embedding is bit-identical to the offline sweep's row for the same
+//! snapshot, cold or warm, whatever the request order.
+//!
+//! Cache warmup: [`ServingEngine::warm`] runs the offline pass once through
+//! the [`LayerwiseEngine::run_vertex_embedding_with`] observer seam; every
+//! slice's activations land in the slabs, all chunks are flushed, and the
+//! static tier is pre-populated — after which requests are pure cache reads
+//! (`rows_computed == 0`). Cold slabs fill on demand instead: computed rows
+//! live in the slab arena (counted as dynamic hits) until their chunk
+//! completes and graduates to the store's static/dynamic read path.
+//!
+//! Eviction is per request class ([`ServingConfig`]): embedding resolution
+//! reads through each slab's own cache under `embed_policy`, while link
+//! scoring reads final embeddings through a dedicated cache under
+//! `link_policy` — the two traffic classes never thrash each other.
+
+use anyhow::{Context, Result};
+
+use crate::graph::csr::VId;
+use crate::inference::chunk_store::ChunkStore;
+use crate::inference::dynamic_cache::EvictPolicy;
+use crate::inference::engine::{EngineReport, LayerwiseEngine};
+use crate::inference::static_cache::CacheSystem;
+use crate::runtime::tensor::HostTensor;
+use crate::sampling::request::PAD;
+use crate::util::bitset::BitSet;
+
+/// Serving knobs: the dynamic-tier eviction policy per request class and
+/// the cache sizing fraction (mirrors `EngineConfig::dyn_cache_frac`).
+#[derive(Clone, Copy, Debug)]
+pub struct ServingConfig {
+    /// Eviction policy of every slab cache on the embedding-resolution path.
+    pub embed_policy: EvictPolicy,
+    /// Eviction policy of the dedicated final-embedding cache the
+    /// link-scoring path reads through.
+    pub link_policy: EvictPolicy,
+    /// Fraction of a slab's chunks held by its dynamic tier (floored at 4).
+    pub dyn_cache_frac: f64,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        Self {
+            embed_policy: EvictPolicy::Fifo,
+            link_policy: EvictPolicy::Fifo,
+            dyn_cache_frac: 0.1,
+        }
+    }
+}
+
+/// Cumulative serving counters plus the per-tier read totals aggregated
+/// across the feature store and every slab store.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServingStats {
+    /// `embed`/`link_scores` calls served.
+    pub requests: u64,
+    /// Vertices whose final embedding was returned.
+    pub vertices_served: u64,
+    /// Vertex-slice computations executed (the online redundancy metric —
+    /// 0 once warm).
+    pub rows_computed: u64,
+    /// Need-set expansions stopped at an already-valid slab row (the
+    /// frontier-truncation counter).
+    pub rows_truncated: u64,
+    pub remote_reads: u64,
+    pub static_reads: u64,
+    pub dynamic_hits: u64,
+}
+
+impl ServingStats {
+    fn total_reads(&self) -> u64 {
+        self.remote_reads + self.static_reads + self.dynamic_hits
+    }
+
+    /// Fraction of reads served by the static tier.
+    pub fn static_hit_ratio(&self) -> f64 {
+        let t = self.total_reads();
+        if t == 0 {
+            0.0
+        } else {
+            self.static_reads as f64 / t as f64
+        }
+    }
+
+    /// Fraction of reads served from memory (dynamic tier + slab arena).
+    pub fn dynamic_hit_ratio(&self) -> f64 {
+        let t = self.total_reads();
+        if t == 0 {
+            0.0
+        } else {
+            self.dynamic_hits as f64 / t as f64
+        }
+    }
+}
+
+/// One slice's serving state: the `serve_h{k}` chunk store, its two-tier
+/// cache, the rank-indexed validity bitmap, and the resident arena holding
+/// rows whose chunk has not completed yet.
+struct LayerSlab {
+    store: ChunkStore,
+    cache: CacheSystem,
+    /// Rank-indexed rows materialized (by a request or by warmup).
+    valid: BitSet,
+    /// Chunks written to the store (complete — readable through the cache).
+    flushed: BitSet,
+    /// Rank-indexed `[n, dim]` arena; a row is meaningful iff `valid`.
+    host: Vec<f32>,
+}
+
+impl LayerSlab {
+    fn new(
+        dir: std::path::PathBuf,
+        n: usize,
+        chunk_size: usize,
+        dim: usize,
+        dyn_cap: usize,
+        policy: EvictPolicy,
+    ) -> Result<Self> {
+        let store = ChunkStore::create(dir, n, chunk_size, dim)?;
+        let num_chunks = store.num_chunks;
+        Ok(Self {
+            store,
+            cache: CacheSystem::new(num_chunks, dyn_cap, policy),
+            valid: BitSet::new(n),
+            flushed: BitSet::new(num_chunks),
+            host: vec![0f32; n * dim],
+        })
+    }
+
+    /// Read one valid row: through the cache hierarchy when its chunk has
+    /// been flushed, else straight from the arena (a memory read, counted
+    /// as a dynamic hit like the engine's block-memo reuse).
+    fn read_row(&mut self, r: usize, out: &mut [f32]) -> Result<()> {
+        debug_assert!(self.valid.get(r), "read of unmaterialized row {r}");
+        let dim = self.store.dim;
+        let c = self.store.chunk_of_row(r);
+        if self.flushed.get(c) {
+            let data = self.cache.get_chunk(&self.store, c)?;
+            let off = (r - c * self.store.chunk_size) * dim;
+            out.copy_from_slice(&data[off..off + dim]);
+        } else {
+            self.store.note_dynamic_hit();
+            out.copy_from_slice(&self.host[r * dim..(r + 1) * dim]);
+        }
+        Ok(())
+    }
+
+    /// Land freshly-computed rows (`data` is `[rows.len(), dim]` in `rows`
+    /// order, ascending): copy into the arena, mark valid, and flush any
+    /// chunk whose rows are now all valid — from then on it is served
+    /// through the store's tiered read path.
+    fn put_rows(&mut self, rows: &[usize], data: &[f32]) -> Result<()> {
+        let dim = self.store.dim;
+        debug_assert_eq!(data.len(), rows.len() * dim);
+        let mut touched: Vec<usize> = Vec::new();
+        for (i, &r) in rows.iter().enumerate() {
+            self.host[r * dim..(r + 1) * dim].copy_from_slice(&data[i * dim..(i + 1) * dim]);
+            self.valid.set(r);
+            let c = self.store.chunk_of_row(r);
+            if touched.last() != Some(&c) {
+                touched.push(c);
+            }
+        }
+        for c in touched {
+            if self.flushed.get(c) {
+                continue;
+            }
+            let lo = c * self.store.chunk_size;
+            let hi = (lo + self.store.chunk_size).min(self.store.n_rows);
+            if (lo..hi).all(|r| self.valid.get(r)) {
+                self.store.write_chunk(c, &self.host[lo * dim..hi * dim])?;
+                self.flushed.set(c);
+            }
+        }
+        Ok(())
+    }
+
+    /// Warmup: absorb a complete rank-indexed `[n, dim]` slice output —
+    /// every row valid, every chunk flushed and pinned in the static tier.
+    fn absorb_full(&mut self, h: &[f32]) -> Result<()> {
+        let dim = self.store.dim;
+        debug_assert_eq!(h.len(), self.store.n_rows * dim);
+        self.host.copy_from_slice(h);
+        for r in 0..self.store.n_rows {
+            self.valid.set(r);
+        }
+        for c in 0..self.store.num_chunks {
+            let lo = c * self.store.chunk_size;
+            let hi = (lo + self.store.chunk_size).min(self.store.n_rows);
+            self.store.write_chunk(c, &self.host[lo * dim..hi * dim])?;
+            self.flushed.set(c);
+        }
+        self.cache.fill_static(0..self.store.num_chunks);
+        Ok(())
+    }
+}
+
+/// Request-driven serving front end over a [`LayerwiseEngine`]. Owns the
+/// engine (snapshot, runtime, params) plus one [`LayerSlab`] per slice;
+/// slab k holds slice k's output, so slab K−1 is the final embedding tier.
+pub struct ServingEngine {
+    pub engine: LayerwiseEngine,
+    pub cfg: ServingConfig,
+    /// Layer-0 input: the feature matrix by rank, fully materialized at
+    /// construction (features are a pure function of the vertex id) and
+    /// pinned static — the base tier every cold request bottoms out on.
+    f_store: ChunkStore,
+    f_cache: CacheSystem,
+    slabs: Vec<LayerSlab>,
+    /// The link-scoring class's own cache over the final slab's store.
+    link_cache: CacheSystem,
+    warmed: bool,
+    requests: u64,
+    vertices_served: u64,
+    rows_computed: u64,
+    rows_truncated: u64,
+}
+
+impl ServingEngine {
+    pub fn new(engine: LayerwiseEngine, cfg: ServingConfig) -> Result<Self> {
+        let n = engine.num_vertices();
+        let hidden = engine.hidden();
+        let chunk_size = engine.cfg.chunk_size;
+        let din = engine.features.din;
+
+        let f_store = ChunkStore::create(engine.work_dir().join("serve_f"), n, chunk_size, din)?;
+        engine
+            .features
+            .for_each_chunk(&engine.order, chunk_size, |c, rows| {
+                f_store.write_chunk(c, rows)
+            })?;
+        let dyn_cap = |chunks: usize| -> usize {
+            ((chunks as f64 * cfg.dyn_cache_frac).ceil() as usize).max(4)
+        };
+        let mut f_cache =
+            CacheSystem::new(f_store.num_chunks, dyn_cap(f_store.num_chunks), cfg.embed_policy);
+        f_cache.fill_static(0..f_store.num_chunks);
+
+        let slabs = (0..engine.cfg.layers)
+            .map(|k| {
+                LayerSlab::new(
+                    engine.work_dir().join(format!("serve_h{k}")),
+                    n,
+                    chunk_size,
+                    hidden,
+                    dyn_cap(n.div_ceil(chunk_size)),
+                    cfg.embed_policy,
+                )
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let num_chunks = n.div_ceil(chunk_size);
+        let link_cache = CacheSystem::new(num_chunks, dyn_cap(num_chunks), cfg.link_policy);
+        Ok(Self {
+            engine,
+            cfg,
+            f_store,
+            f_cache,
+            slabs,
+            link_cache,
+            warmed: false,
+            requests: 0,
+            vertices_served: 0,
+            rows_computed: 0,
+            rows_truncated: 0,
+        })
+    }
+
+    /// Whether [`Self::warm`] has run.
+    pub fn warmed(&self) -> bool {
+        self.warmed
+    }
+
+    /// Final embedding width.
+    pub fn hidden(&self) -> usize {
+        self.engine.hidden()
+    }
+
+    /// Pre-populate every slab from one offline layerwise pass: each
+    /// slice's full activations land via the engine's per-layer observer,
+    /// chunks flush, and the static tiers fill. Subsequent requests compute
+    /// nothing (`rows_computed` stays flat) and serve pure cache reads.
+    pub fn warm(&mut self) -> Result<EngineReport> {
+        let slabs = &mut self.slabs;
+        let (_, rep) = self
+            .engine
+            .run_vertex_embedding_with(|layer, h| slabs[layer].absorb_full(h))?;
+        self.warmed = true;
+        Ok(rep)
+    }
+
+    /// Serve final embeddings for `verts` (request order), resolving the
+    /// uncached frontier first. Bytes are bit-identical to the offline
+    /// sweep's rows for the same engine snapshot.
+    pub fn embed(&mut self, verts: &[VId]) -> Result<Vec<f32>> {
+        self.ensure(verts)?;
+        let hidden = self.engine.hidden();
+        let last = self.engine.cfg.layers - 1;
+        let mut out = vec![0f32; verts.len() * hidden];
+        for (i, &v) in verts.iter().enumerate() {
+            let r = self.engine.rank[v as usize] as usize;
+            self.slabs[last].read_row(r, &mut out[i * hidden..(i + 1) * hidden])?;
+        }
+        self.requests += 1;
+        self.vertices_served += verts.len() as u64;
+        Ok(out)
+    }
+
+    /// Score candidate edges `(u, v)` with the `link_decode` artifact:
+    /// endpoint embeddings resolve through the slabs, then read through the
+    /// link class's dedicated cache. Bit-identical to
+    /// [`LayerwiseEngine::run_link_prediction`] over the offline embeddings.
+    pub fn link_scores(
+        &mut self,
+        edges: &[(VId, VId)],
+        decode_params: &[HostTensor],
+    ) -> Result<Vec<f32>> {
+        let mut uniq: Vec<VId> = edges.iter().flat_map(|&(a, b)| [a, b]).collect();
+        uniq.sort_unstable();
+        uniq.dedup();
+        self.ensure(&uniq)?;
+
+        let hidden = self.engine.hidden();
+        let spec = self.engine.runtime.spec("link_decode")?;
+        let batch = spec.meta_usize("batch").context("meta.batch")?;
+        let mut scores = Vec::with_capacity(edges.len());
+        for chunk in edges.chunks(batch) {
+            let rows = chunk.len();
+            let mut u = vec![0f32; rows * hidden];
+            let mut v = vec![0f32; rows * hidden];
+            for (i, &(a, b)) in chunk.iter().enumerate() {
+                self.read_final_row(a, &mut u[i * hidden..(i + 1) * hidden])?;
+                self.read_final_row(b, &mut v[i * hidden..(i + 1) * hidden])?;
+            }
+            let mut inputs = vec![
+                HostTensor::f32(vec![rows, hidden], u),
+                HostTensor::f32(vec![rows, hidden], v),
+            ];
+            inputs.extend(decode_params.iter().cloned());
+            // Only emb_u/emb_v are row-shaped (matches the engine's decode).
+            let out = self.engine.runtime.execute_rows("link_decode", rows, 2, &inputs)?;
+            scores.extend_from_slice(out[0].as_f32());
+        }
+        self.requests += 1;
+        Ok(scores)
+    }
+
+    /// Final-row read on the link-scoring class: same store as slab K−1,
+    /// but through the dedicated `link_policy` cache.
+    fn read_final_row(&mut self, v: VId, out: &mut [f32]) -> Result<()> {
+        let last = self.engine.cfg.layers - 1;
+        let r = self.engine.rank[v as usize] as usize;
+        let slab = &mut self.slabs[last];
+        let dim = slab.store.dim;
+        let c = slab.store.chunk_of_row(r);
+        if slab.flushed.get(c) {
+            let data = self.link_cache.get_chunk(&slab.store, c)?;
+            let off = (r - c * slab.store.chunk_size) * dim;
+            out.copy_from_slice(&data[off..off + dim]);
+        } else {
+            slab.store.note_dynamic_hit();
+            out.copy_from_slice(&slab.host[r * dim..(r + 1) * dim]);
+        }
+        Ok(())
+    }
+
+    /// Resolve the request's K-hop need-set: expand top-down along the
+    /// engine's pre-sampled neighbor snapshot, truncating at every row a
+    /// slab already holds, then execute the remaining rows bottom-up slice
+    /// by slice (each slice's inputs are complete by construction).
+    fn ensure(&mut self, verts: &[VId]) -> Result<()> {
+        let k_layers = self.engine.cfg.layers;
+        let n = self.engine.num_vertices();
+        let fanout = self.engine.fanout();
+
+        let mut need: Vec<BitSet> = (0..k_layers).map(|_| BitSet::new(n)).collect();
+        for &v in verts {
+            let r = self.engine.rank[v as usize] as usize;
+            if self.slabs[k_layers - 1].valid.get(r) {
+                self.rows_truncated += 1;
+            } else {
+                need[k_layers - 1].set(r);
+            }
+        }
+        for k in (1..k_layers).rev() {
+            let rows: Vec<usize> = need[k].iter_ones().collect();
+            let nbrs = self.engine.neighbor_snapshot();
+            for r in rows {
+                let v = self.engine.order[r] as usize;
+                // Slice k reads slice k−1's rows for v and its snapshot
+                // neighbors; a valid row is the truncated frontier.
+                if self.slabs[k - 1].valid.get(r) {
+                    self.rows_truncated += 1;
+                } else {
+                    need[k - 1].set(r);
+                }
+                for s in 0..fanout {
+                    let nb = nbrs[v * fanout + s];
+                    if nb == PAD {
+                        continue;
+                    }
+                    let nr = self.engine.rank[nb as usize] as usize;
+                    if self.slabs[k - 1].valid.get(nr) {
+                        self.rows_truncated += 1;
+                    } else {
+                        need[k - 1].set(nr);
+                    }
+                }
+            }
+        }
+        for (k, need_k) in need.iter().enumerate() {
+            let rows: Vec<usize> = need_k.iter_ones().collect();
+            if rows.is_empty() {
+                continue;
+            }
+            self.compute_slice(k, &rows)?;
+            self.rows_computed += rows.len() as u64;
+        }
+        Ok(())
+    }
+
+    /// Execute slice k for `rows` (ascending ranks): assemble h_self /
+    /// h_neigh / mask from the slice's input tier, run the artifact in
+    /// engine-sized blocks (`execute_rows` output is block-composition
+    /// independent), and land the rows in slab k.
+    fn compute_slice(&mut self, k: usize, rows: &[usize]) -> Result<()> {
+        let in_dim = if k == 0 {
+            self.engine.features.din
+        } else {
+            self.engine.hidden()
+        };
+        let hidden = self.engine.hidden();
+        let fanout = self.engine.fanout();
+        let block = self.engine.block_rows();
+        let artifact = format!("sage_infer_layer{k}");
+        let mut out_all = Vec::with_capacity(rows.len() * hidden);
+        for blk in rows.chunks(block) {
+            let nrows = blk.len();
+            let mut h_self = vec![0f32; nrows * in_dim];
+            let mut h_neigh = vec![0f32; nrows * fanout * in_dim];
+            let mut mask = vec![0f32; nrows * fanout];
+            {
+                let nbrs = self.engine.neighbor_snapshot();
+                for (i, &r) in blk.iter().enumerate() {
+                    let v = self.engine.order[r] as usize;
+                    let dst = &mut h_self[i * in_dim..(i + 1) * in_dim];
+                    if k == 0 {
+                        read_cached_row(&mut self.f_cache, &self.f_store, r, dst)?;
+                    } else {
+                        self.slabs[k - 1].read_row(r, dst)?;
+                    }
+                    for s in 0..fanout {
+                        let nb = nbrs[v * fanout + s];
+                        if nb == PAD {
+                            continue;
+                        }
+                        let nr = self.engine.rank[nb as usize] as usize;
+                        let off = (i * fanout + s) * in_dim;
+                        let dst = &mut h_neigh[off..off + in_dim];
+                        if k == 0 {
+                            read_cached_row(&mut self.f_cache, &self.f_store, nr, dst)?;
+                        } else {
+                            self.slabs[k - 1].read_row(nr, dst)?;
+                        }
+                        mask[i * fanout + s] = 1.0;
+                    }
+                }
+            }
+            let mut inputs = vec![
+                HostTensor::f32(vec![nrows, in_dim], h_self),
+                HostTensor::f32(vec![nrows, fanout, in_dim], h_neigh),
+                HostTensor::f32(vec![nrows, fanout], mask),
+            ];
+            inputs.extend(self.engine.enc_params[k * 3..k * 3 + 3].iter().cloned());
+            let out = self.engine.runtime.execute_rows(&artifact, nrows, 3, &inputs)?;
+            out_all.extend_from_slice(&out[0].as_f32()[..nrows * hidden]);
+        }
+        self.slabs[k].put_rows(rows, &out_all)
+    }
+
+    /// Cumulative counters plus per-tier read totals across the feature
+    /// store and every slab store (the link cache reads the final slab's
+    /// store, so its traffic is included).
+    pub fn stats(&self) -> ServingStats {
+        use std::sync::atomic::Ordering::Relaxed;
+        let mut s = ServingStats {
+            requests: self.requests,
+            vertices_served: self.vertices_served,
+            rows_computed: self.rows_computed,
+            rows_truncated: self.rows_truncated,
+            ..Default::default()
+        };
+        for store in std::iter::once(&self.f_store).chain(self.slabs.iter().map(|sl| &sl.store)) {
+            s.remote_reads += store.stats.remote_reads.load(Relaxed);
+            s.static_reads += store.stats.static_reads.load(Relaxed);
+            s.dynamic_hits += store.stats.dynamic_hits.load(Relaxed);
+        }
+        s
+    }
+}
+
+/// One-row read through a cache over a fully-flushed store (the feature
+/// tier and the link path share this shape).
+fn read_cached_row(
+    cache: &mut CacheSystem,
+    store: &ChunkStore,
+    r: usize,
+    out: &mut [f32],
+) -> Result<()> {
+    let c = store.chunk_of_row(r);
+    let data = cache.get_chunk(store, c)?;
+    let off = (r - c * store.chunk_size) * store.dim;
+    out.copy_from_slice(&data[off..off + store.dim]);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::FeatureStore;
+    use crate::graph::csr::Graph;
+    use crate::graph::generator;
+    use crate::inference::engine::{init_decode_params, init_encoder_params};
+    use crate::inference::EngineConfig;
+    use crate::partition::{AdaDNE, EdgeAssignment, Partitioner};
+    use crate::runtime::Runtime;
+    use crate::util::digest::f32_digest;
+    use crate::util::rng::Rng;
+
+    fn setup(name: &str) -> (Graph, EdgeAssignment, std::path::PathBuf) {
+        let mut rng = Rng::new(310);
+        let g = generator::chung_lu(900, 6300, 2.1, &mut rng);
+        let ea = AdaDNE::default().partition(&g, 2, 0);
+        let dir = std::env::temp_dir().join(format!("glisp_serving_{name}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        (g, ea, dir)
+    }
+
+    fn engine(g: &Graph, ea: &EdgeAssignment, dir: std::path::PathBuf) -> LayerwiseEngine {
+        let runtime = Runtime::load(crate::test_artifacts_dir()).unwrap();
+        let enc = init_encoder_params(&runtime, 3).unwrap();
+        LayerwiseEngine::new(
+            g,
+            ea,
+            runtime,
+            FeatureStore::unlabeled(64),
+            enc,
+            EngineConfig::default(),
+            dir,
+        )
+        .unwrap()
+    }
+
+    /// Offline rank-indexed rows gathered in request order — the reference
+    /// bytes every serving read must reproduce.
+    fn offline_rows(h: &[f32], eng: &LayerwiseEngine, verts: &[VId]) -> Vec<f32> {
+        let hid = eng.hidden();
+        let mut out = Vec::with_capacity(verts.len() * hid);
+        for &v in verts {
+            let r = eng.rank[v as usize] as usize;
+            out.extend_from_slice(&h[r * hid..(r + 1) * hid]);
+        }
+        out
+    }
+
+    #[test]
+    fn cold_serving_is_bit_identical_to_offline() {
+        let (g, ea, dir) = setup("cold");
+        let mut off = engine(&g, &ea, dir.join("off"));
+        let (h, _) = off.run_vertex_embedding().unwrap();
+
+        let mut srv = ServingEngine::new(engine(&g, &ea, dir.join("on")), Default::default())
+            .unwrap();
+        let verts: Vec<VId> = (0..g.n as VId).step_by(7).collect();
+        let got = srv.embed(&verts).unwrap();
+        let want = offline_rows(&h, &off, &verts);
+        assert_eq!(
+            f32_digest(&got),
+            f32_digest(&want),
+            "cold-served bytes must bit-match the offline sweep"
+        );
+        assert_eq!(got, want);
+        let st = srv.stats();
+        assert!(st.rows_computed > 0, "cold path must execute the frontier");
+        assert_eq!(st.vertices_served, verts.len() as u64);
+    }
+
+    #[test]
+    fn warm_serving_matches_cold_and_computes_nothing() {
+        let (g, ea, dir) = setup("warm");
+        let mut off = engine(&g, &ea, dir.join("off"));
+        let (h, _) = off.run_vertex_embedding().unwrap();
+
+        let mut srv = ServingEngine::new(engine(&g, &ea, dir.join("on")), Default::default())
+            .unwrap();
+        srv.warm().unwrap();
+        assert!(srv.warmed());
+        let verts: Vec<VId> = (0..g.n as VId).step_by(3).collect();
+        let got = srv.embed(&verts).unwrap();
+        assert_eq!(got, offline_rows(&h, &off, &verts), "warm reads must serve offline bytes");
+        let st = srv.stats();
+        assert_eq!(st.rows_computed, 0, "a warmed engine computes nothing");
+        assert!(st.rows_truncated >= verts.len() as u64);
+        assert!(st.static_reads + st.dynamic_hits > 0);
+        assert_eq!(st.remote_reads, 0, "warm tier covers every chunk");
+    }
+
+    #[test]
+    fn frontier_truncation_makes_repeats_free() {
+        let (g, ea, dir) = setup("trunc");
+        let mut srv = ServingEngine::new(engine(&g, &ea, dir), Default::default()).unwrap();
+        let verts: Vec<VId> = (0..40).collect();
+        let first = srv.embed(&verts).unwrap();
+        let computed_once = srv.stats().rows_computed;
+        assert!(computed_once > 0);
+        let second = srv.embed(&verts).unwrap();
+        assert_eq!(first, second, "repeat requests serve identical bytes");
+        assert_eq!(
+            srv.stats().rows_computed,
+            computed_once,
+            "a fully-cached repeat request executes zero rows"
+        );
+        assert!(srv.stats().rows_truncated >= verts.len() as u64);
+    }
+
+    #[test]
+    fn link_scores_match_offline_link_prediction_per_policy() {
+        let (g, ea, dir) = setup("link");
+        let mut off = engine(&g, &ea, dir.join("off"));
+        let (h, _) = off.run_vertex_embedding().unwrap();
+        let dec = init_decode_params(&off.runtime, 9).unwrap();
+        let edges: Vec<(VId, VId)> = (0..g.n.min(200))
+            .filter(|&u| !g.out_neighbors(u as VId).is_empty())
+            .map(|u| (u as VId, g.out_neighbors(u as VId)[0]))
+            .collect();
+        let (want, _) = off.run_link_prediction(&h, &edges, &dec).unwrap();
+
+        for policy in [EvictPolicy::Fifo, EvictPolicy::Lru] {
+            let cfg = ServingConfig {
+                link_policy: policy,
+                ..Default::default()
+            };
+            let sub = if policy == EvictPolicy::Fifo { "fifo" } else { "lru" };
+            let mut srv =
+                ServingEngine::new(engine(&g, &ea, dir.join(format!("on_{sub}"))), cfg).unwrap();
+            let got = srv.link_scores(&edges, &dec).unwrap();
+            assert_eq!(got, want, "online link scores must bit-match offline ({policy:?})");
+        }
+    }
+
+    /// Property: warming the static tier changes only the fill/hit
+    /// counters — never a served byte. Over arbitrary Chung-Lu graphs,
+    /// engine geometries (chunk size, eviction, dynamic-tier fraction,
+    /// parallel vs sequential sweep) and sampling-pool `(workers,
+    /// shard_size)` geometries for the link-candidate fleet, a warm and a
+    /// cold engine on the same snapshot serve digest-equal embeddings and
+    /// link scores, while the warm one computes zero rows remotely.
+    #[test]
+    fn prop_warm_tier_changes_counters_never_bytes() {
+        use crate::sampling::{SampleConfig, SamplingService, ServiceConfig, PAD};
+        use crate::util::proptest::prop_check;
+
+        prop_check("warm tier never changes served bytes", 3, |rng| {
+            let n = 220 + rng.usize(200);
+            let m = n * 4 + rng.usize(n * 3);
+            let g = generator::chung_lu(n, m, 1.9 + rng.f64() * 0.5, rng);
+            let parts = 1 + rng.usize(3);
+            let ea = AdaDNE::default().partition(&g, parts, 0);
+            let dir = std::env::temp_dir().join(format!("glisp_serving_prop_{}", rng.next_u64()));
+            let _ = std::fs::remove_dir_all(&dir);
+
+            let ecfg = EngineConfig {
+                parallel: rng.usize(2) == 0,
+                chunk_size: [48, 96, 160][rng.usize(3)],
+                dyn_cache_frac: 0.05 + rng.f64() * 0.25,
+                policy: if rng.usize(2) == 0 { EvictPolicy::Fifo } else { EvictPolicy::Lru },
+                ..Default::default()
+            };
+            let build = |sub: &str| {
+                let runtime = Runtime::load(crate::test_artifacts_dir()).unwrap();
+                let enc = init_encoder_params(&runtime, 3).unwrap();
+                let eng = LayerwiseEngine::new(
+                    &g,
+                    &ea,
+                    runtime,
+                    FeatureStore::unlabeled(64),
+                    enc,
+                    ecfg.clone(),
+                    dir.join(sub),
+                )
+                .unwrap();
+                ServingEngine::new(eng, ServingConfig::default()).unwrap()
+            };
+            let mut cold = build("cold");
+            let mut warm = build("warm");
+            warm.warm().map_err(|e| e.to_string())?;
+
+            // A short skewed trace with repeats, through both engines.
+            let trace: Vec<VId> = (0..60).map(|_| rng.usize(n.min(80)) as VId).collect();
+            let a = cold.embed(&trace).map_err(|e| e.to_string())?;
+            let b = warm.embed(&trace).map_err(|e| e.to_string())?;
+            crate::prop_assert_eq!(f32_digest(&a), f32_digest(&b));
+            crate::prop_assert_eq!(a, b);
+
+            // Link candidates through an arbitrary (workers, shard_size)
+            // pool geometry; scores must agree byte-for-byte too.
+            let scfg = ServiceConfig::new(1 + rng.usize(3), [8, 64, 256][rng.usize(3)]);
+            let svc = SamplingService::launch_cfg(&g, &ea, 1, scfg).map_err(|e| e.to_string())?;
+            let mut client = svc.client(7);
+            let seeds: Vec<VId> = (0..16.min(n) as VId).collect();
+            let sample = client
+                .sample_topk(&seeds, 4, &SampleConfig::default())
+                .map_err(|e| e.to_string())?;
+            let mut edges = Vec::new();
+            for (i, &s) in seeds.iter().enumerate() {
+                for &nb in sample.neighbors_of(i) {
+                    if nb != PAD {
+                        edges.push((s, nb));
+                    }
+                }
+            }
+            svc.shutdown();
+            let dec = init_decode_params(&cold.engine.runtime, 9).unwrap();
+            let sa = cold.link_scores(&edges, &dec).map_err(|e| e.to_string())?;
+            let sb = warm.link_scores(&edges, &dec).map_err(|e| e.to_string())?;
+            crate::prop_assert_eq!(f32_digest(&sa), f32_digest(&sb));
+
+            // Only the counters may differ: the cold engine had to execute
+            // its request frontiers, the warm one served pure cache reads.
+            let (cs, ws) = (cold.stats(), warm.stats());
+            crate::prop_assert!(cs.rows_computed > 0, "cold path executed nothing");
+            crate::prop_assert_eq!(ws.rows_computed, 0u64);
+            crate::prop_assert_eq!(ws.remote_reads, 0u64);
+            crate::prop_assert!(
+                ws.static_reads + ws.dynamic_hits > 0,
+                "warm reads must be tier hits"
+            );
+            let _ = std::fs::remove_dir_all(&dir);
+            Ok(())
+        });
+    }
+}
